@@ -1,0 +1,114 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Sampler** — MVS vs GOSS vs uniform (SGB) at equal f (paper
+//!    §2.4's comparison: MVS ≥ GOSS ≥ SGB at low f).
+//! 2. **Naive streaming vs compaction** — Algorithm 6 vs Algorithm 7
+//!    (paper §3.3: the naive path "performed badly").
+//! 3. **ELLPACK page size** — the 32 MiB choice (scaled).
+//! 4. **Prefetch depth** — backpressure sweep 0/1/2/4.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use oocgb::config::{ExecMode, SamplingMethod};
+use oocgb::data::synthetic;
+
+fn ablate_sampler() {
+    header("Ablation 1 — sampler at equal f (device-ooc, f = 0.2)");
+    let rows = scaled(40_000);
+    let rounds = ((30.0 * scale()) as usize).max(8);
+    println!("| Sampler | final AUC | time (s) |");
+    println!("|---------|-----------|----------|");
+    for (name, method) in [
+        ("MVS", SamplingMethod::Mvs),
+        ("GOSS", SamplingMethod::Goss),
+        ("SGB (uniform)", SamplingMethod::Uniform),
+    ] {
+        let mut cfg = table2_cfg(ExecMode::DeviceOutOfCore);
+        cfg.n_rounds = rounds;
+        cfg.eval_every = rounds;
+        cfg.max_depth = 6;
+        cfg.goss_top_rate = 0.1;
+        cfg = with_sampling(cfg, method, 0.2);
+        let (out, wall) = run(synthetic::higgs_like(rows, 13), cfg).expect(name);
+        let auc = out.eval_history.last().unwrap().1;
+        println!("| {name} | {auc:.4} | {wall:.2} |");
+    }
+    println!("\nexpected: MVS ≥ GOSS ≥ SGB at this f (paper §2.4).");
+}
+
+fn ablate_naive_vs_compacted() {
+    header("Ablation 2 — Algorithm 6 (naive streaming) vs Algorithm 7 (compaction)");
+    let rows = scaled(40_000);
+    let rounds = ((10.0 * scale()) as usize).max(3);
+    println!("| Strategy | time (s) | h2d bytes | simulated PCIe (s) |");
+    println!("|----------|----------|-----------|---------------------|");
+    let mut naive = table2_cfg(ExecMode::DeviceOutOfCoreNaive);
+    naive.n_rounds = rounds;
+    naive.max_depth = 6;
+    let (out_n, wall_n) = run(synthetic::higgs_like(rows, 14), naive).unwrap();
+    let ln = out_n.link_stats.unwrap();
+    println!(
+        "| naive (Alg 6) | {wall_n:.2} | {} | {:.3} |",
+        ln.h2d_bytes, ln.sim_seconds
+    );
+    let mut comp = table2_cfg(ExecMode::DeviceOutOfCore);
+    comp.n_rounds = rounds;
+    comp.max_depth = 6;
+    comp = with_sampling(comp, SamplingMethod::Mvs, 1.0);
+    let (out_c, wall_c) = run(synthetic::higgs_like(rows, 14), comp).unwrap();
+    let lc = out_c.link_stats.unwrap();
+    println!(
+        "| compacted (Alg 7, f=1.0) | {wall_c:.2} | {} | {:.3} |",
+        lc.h2d_bytes, lc.sim_seconds
+    );
+    let factor = ln.h2d_bytes as f64 / lc.h2d_bytes as f64;
+    println!(
+        "\nnaive moves {factor:.1}× the bytes across the link (one full \
+         matrix per tree level vs one per round) — §3.3's bottleneck."
+    );
+    assert!(factor > 2.0);
+}
+
+fn ablate_page_size() {
+    header("Ablation 3 — ELLPACK page size (cpu-ooc)");
+    let rows = scaled(60_000);
+    println!("| page size | pages | time (s) |");
+    println!("|-----------|-------|----------|");
+    for mib in [0.25f64, 1.0, 4.0, 16.0] {
+        let mut cfg = table2_cfg(ExecMode::CpuOutOfCore);
+        cfg.n_rounds = ((10.0 * scale()) as usize).max(3);
+        cfg.max_depth = 6;
+        cfg.page_size_bytes = (mib * 1024.0 * 1024.0) as usize;
+        let (out, wall) = run(synthetic::higgs_like(rows, 15), cfg).unwrap();
+        let _ = out;
+        println!("| {mib:>5.2} MiB | — | {wall:.2} |");
+    }
+    println!("\nsmaller pages = more I/O calls + checksum overhead; larger pages = more peak host memory.");
+}
+
+fn ablate_prefetch_depth() {
+    header("Ablation 4 — prefetcher depth (cpu-ooc backpressure)");
+    let rows = scaled(60_000);
+    println!("| depth | time (s) |");
+    println!("|-------|----------|");
+    for depth in [0usize, 1, 2, 4] {
+        let mut cfg = table2_cfg(ExecMode::CpuOutOfCore);
+        cfg.n_rounds = ((10.0 * scale()) as usize).max(3);
+        cfg.max_depth = 6;
+        cfg.page_size_bytes = 512 * 1024;
+        cfg.prefetch_depth = depth;
+        let (_, wall) = run(synthetic::higgs_like(rows, 16), cfg).unwrap();
+        println!("| {depth} | {wall:.2} |");
+    }
+    println!("\ndepth 0 = synchronous rendezvous reads; ≥1 overlaps disk with compute.");
+}
+
+fn main() {
+    println!("# Ablations");
+    ablate_sampler();
+    ablate_naive_vs_compacted();
+    ablate_page_size();
+    ablate_prefetch_depth();
+}

@@ -1,0 +1,169 @@
+//! Component microbenches — the profile the §Perf optimization pass
+//! works from.  Reports per-component throughput with warmup + median.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use common::*;
+use oocgb::data::synthetic::{make_classification, ClassificationSpec};
+use oocgb::device::DeviceContext;
+use oocgb::ellpack::builder::convert_in_core;
+use oocgb::runtime::Runtime;
+use oocgb::sketch::HistogramCuts;
+use oocgb::tree::builder::HistBackend;
+use oocgb::tree::hist_cpu::CpuHistBackend;
+use oocgb::tree::hist_device::DeviceHistBackend;
+use oocgb::tree::partitioner::RowPartitioner;
+use oocgb::tree::source::InMemorySource;
+use oocgb::tree::{Tree, TreeParams};
+use oocgb::util::rng::Rng;
+use oocgb::util::timer::Stopwatch;
+
+fn main() {
+    println!("# Microbenches (median of 5, warmup 2)");
+    let rows = scaled(100_000);
+    let cols = 28;
+    let spec = ClassificationSpec {
+        n_rows: rows,
+        n_cols: cols,
+        n_informative: 8,
+        n_redundant: 6,
+        seed: 21,
+        ..Default::default()
+    };
+    let data = make_classification(spec);
+
+    // Quantile sketch.
+    let s = measure(2, 5, || {
+        let sw = Stopwatch::start();
+        let _ = HistogramCuts::build(data.pages(), cols, 64).unwrap();
+        sw.elapsed_secs()
+    });
+    let melems = rows as f64 * cols as f64 / 1e6;
+    println!(
+        "sketch:           {:>8.1} M elems/s  (median {:.3}s)",
+        melems / s.median,
+        s.median
+    );
+
+    let cuts = HistogramCuts::build(data.pages(), cols, 64).unwrap();
+
+    // ELLPACK conversion.
+    let s = measure(2, 5, || {
+        let sw = Stopwatch::start();
+        let _ = convert_in_core(data.pages(), &cuts, cols, true);
+        sw.elapsed_secs()
+    });
+    println!(
+        "ellpack convert:  {:>8.1} M elems/s  (median {:.3}s)",
+        melems / s.median,
+        s.median
+    );
+
+    let page = convert_in_core(data.pages(), &cuts, cols, true);
+
+    // Gradients + a root histogram pass, CPU backend.
+    let mut rng = Rng::new(4);
+    let grads: Vec<[f32; 2]> =
+        (0..rows).map(|_| [rng.normal() as f32, rng.next_f32()]).collect();
+    let tg: f64 = grads.iter().map(|g| g[0] as f64).sum();
+    let th: f64 = grads.iter().map(|g| g[1] as f64).sum();
+    let params = TreeParams::default();
+    let tree = Tree::single_leaf(0.0);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let s = measure(2, 5, || {
+        let mut source = InMemorySource::new(vec![page.clone()]);
+        let mut part = RowPartitioner::new(rows);
+        let mut be = CpuHistBackend::new(threads);
+        let sw = Stopwatch::start();
+        let _ = be
+            .best_splits(&mut source, &grads, &mut part, &tree, &cuts, &params,
+                         &[0], 0, None, &[(tg, th)])
+            .unwrap();
+        sw.elapsed_secs()
+    });
+    println!(
+        "cpu root hist:    {:>8.1} M elems/s  (median {:.3}s, {threads} threads)",
+        melems / s.median,
+        s.median
+    );
+
+    // Same root pass through the device (PJRT) backend, if artifacts are
+    // built.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = Arc::new(Runtime::load(std::path::Path::new("artifacts")).unwrap());
+        rt.warm_up().unwrap();
+        let ctx = DeviceContext::new(1 << 30);
+        let s = measure(1, 3, || {
+            let mut source = InMemorySource::new(vec![page.clone()]);
+            let mut part = RowPartitioner::new(rows);
+            let mut be = DeviceHistBackend::new(rt.clone(), ctx.clone(), 64).unwrap();
+            let sw = Stopwatch::start();
+            let _ = be
+                .best_splits(&mut source, &grads, &mut part, &tree, &cuts, &params,
+                             &[0], 0, None, &[(tg, th)])
+                .unwrap();
+            sw.elapsed_secs()
+        });
+        println!(
+            "device root hist: {:>8.1} M elems/s  (median {:.3}s, PJRT scatter kernel)",
+            melems / s.median,
+            s.median
+        );
+    } else {
+        println!("device root hist: skipped (run `make artifacts`)");
+    }
+
+    // Compaction.
+    let mask: Vec<bool> = (0..rows).map(|i| i % 10 == 0).collect();
+    let n_sel = mask.iter().filter(|&&m| m).count();
+    let n_symbols = cuts.ptrs.last().unwrap() + 1;
+    let s = measure(2, 5, || {
+        let sw = Stopwatch::start();
+        let mut c = oocgb::ellpack::compact::Compactor::new(
+            &mask, n_sel, cols, n_symbols, true);
+        c.push_page(&page);
+        let _ = c.finish();
+        sw.elapsed_secs()
+    });
+    println!(
+        "compaction:       {:>8.1} M rows/s   (median {:.3}s, f=0.1)",
+        rows as f64 / 1e6 / s.median,
+        s.median
+    );
+
+    // Page store write+read.
+    let dir = std::env::temp_dir().join(format!("oocgb-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.pages");
+    let s = measure(1, 3, || {
+        let sw = Stopwatch::start();
+        let mut w = oocgb::page::PageFileWriter::create(&path).unwrap();
+        w.write_page(&page).unwrap();
+        let f = w.finish().unwrap();
+        let _ = f.read_page(0).unwrap();
+        sw.elapsed_secs()
+    });
+    let mib = page.memory_bytes() as f64 / (1024.0 * 1024.0);
+    println!(
+        "page store rt:    {:>8.1} MiB/s     (median {:.3}s, {mib:.1} MiB page)",
+        2.0 * mib / s.median,
+        s.median
+    );
+    std::fs::remove_dir_all(&dir).ok();
+
+    // AUC.
+    let scores: Vec<f32> = (0..rows).map(|_| rng.next_f32()).collect();
+    let s = measure(2, 5, || {
+        let sw = Stopwatch::start();
+        let _ = oocgb::util::stats::auc(&scores, data.labels());
+        sw.elapsed_secs()
+    });
+    println!(
+        "auc:              {:>8.1} M rows/s   (median {:.3}s)",
+        rows as f64 / 1e6 / s.median,
+        s.median
+    );
+}

@@ -1,0 +1,90 @@
+//! **Table 1 — Maximum Data Size.**
+//!
+//! Paper: 500-column sklearn synthetic dataset on a 16 GiB V100; max
+//! rows before OOM: in-core 9M, out-of-core 13M, out-of-core f=0.1 85M.
+//!
+//! Here the device budget is scaled to the testbed (default 24 MiB;
+//! `OOCGB_T1_BUDGET_MIB` overrides) and the sweep finds the max rows per
+//! mode by doubling + bisection, streaming the data so the host never
+//! materializes it.  The claim under test is the *ordering and the
+//! sampling multiplier*, not absolute row counts.
+
+#[path = "common.rs"]
+mod common;
+
+use oocgb::config::{ExecMode, SamplingMethod, TrainConfig};
+use oocgb::coordinator::TrainSession;
+use oocgb::data::synthetic::{ClassificationSpec, ClassificationStream};
+use oocgb::util::fmt_bytes;
+
+fn fits(mode: ExecMode, f: Option<f32>, rows: usize, budget: u64) -> bool {
+    let mut cfg = TrainConfig::default();
+    cfg.mode = mode;
+    cfg.n_rounds = 1;
+    cfg.max_depth = 4;
+    cfg.max_bin = 64;
+    cfg.device_memory_bytes = budget;
+    cfg.page_size_bytes = 1024 * 1024;
+    cfg.seed = 3;
+    if let Some(f) = f {
+        cfg.sampling_method = SamplingMethod::Mvs;
+        cfg.subsample = f;
+    }
+    let stream = ClassificationStream::new(ClassificationSpec::table1(rows, 9), 2048);
+    match TrainSession::from_page_stream(stream, cfg).and_then(|s| s.train()) {
+        Ok(_) => true,
+        Err(e) if e.is_device_oom() => false,
+        Err(e) => panic!("unexpected error at {rows} rows: {e}"),
+    }
+}
+
+fn max_rows(mode: ExecMode, f: Option<f32>, budget: u64) -> usize {
+    let mut lo = 512usize;
+    if !fits(mode, f, lo, budget) {
+        return 0;
+    }
+    let mut hi = lo * 2;
+    while fits(mode, f, hi, budget) {
+        lo = hi;
+        hi *= 2;
+    }
+    // Bisect to ~6% precision (each probe regenerates + retrains).
+    while hi - lo > lo / 16 + 64 {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mode, f, mid, budget) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+fn main() {
+    let budget_mib: u64 = std::env::var("OOCGB_T1_BUDGET_MIB")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24);
+    let budget = budget_mib * 1024 * 1024;
+    println!(
+        "# Table 1 — maximum data size (500 columns, device budget {})",
+        fmt_bytes(budget)
+    );
+    println!("\n| Mode | # Rows | vs in-core |");
+    println!("|------|--------|------------|");
+    let incore = max_rows(ExecMode::DeviceInCore, None, budget);
+    println!("| In-core GPU | {incore} | 1.0× |");
+    let ooc = max_rows(ExecMode::DeviceOutOfCore, Some(1.0), budget);
+    println!("| Out-of-core GPU | {ooc} | {:.1}× |", ooc as f64 / incore as f64);
+    let sampled = max_rows(ExecMode::DeviceOutOfCore, Some(0.1), budget);
+    println!(
+        "| Out-of-core GPU, f = 0.1 | {sampled} | {:.1}× |",
+        sampled as f64 / incore as f64
+    );
+    println!(
+        "\npaper (16 GiB): 9M / 13M (1.4×) / 85M (9.4×).  Ordering must match; \
+         our multipliers are larger because this reproduction's out-of-core \
+         working set is leaner than XGBoost's (see EXPERIMENTS.md §Table 1)."
+    );
+    assert!(incore < ooc && ooc < sampled, "Table 1 ordering violated");
+}

@@ -1,0 +1,91 @@
+//! **Table 2 — Training Time on the Higgs(-like) Dataset.**
+//!
+//! Paper setup: Higgs, 0.95/0.05 split, defaults except max_depth=8 and
+//! learning_rate=0.1, 500 iterations, Titan V 12 GiB.  This harness runs
+//! the same six modes on the seeded Higgs-like generator against the
+//! simulated device; rows/rounds are scaled to the testbed (absolute
+//! numbers differ; the *ordering and rough factors* are the claim).
+//!
+//! Paper rows: CPU in-core 1309.64 s / CPU OOC 1228.53 s / GPU in-core
+//! 241.52 s / GPU OOC f=1.0 211.91 s / f=0.5 427.41 s / f=0.3 421.59 s,
+//! all at AUC ≈ 0.839.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use oocgb::config::{ExecMode, SamplingMethod};
+use oocgb::data::synthetic;
+
+fn main() {
+    let rows = scaled(80_000);
+    let rounds = ((40.0 * scale()) as usize).max(5);
+    println!("# Table 2 — end-to-end training time ({rows} rows, {rounds} rounds, depth 8)");
+
+    let mk = || synthetic::higgs_like(rows, 11);
+    let base = |mode| {
+        let mut c = table2_cfg(mode);
+        c.n_rounds = rounds;
+        c.eval_every = rounds; // single final eval for the AUC column
+        c
+    };
+    let runs: Vec<(&str, oocgb::config::TrainConfig)> = vec![
+        ("CPU In-core", base(ExecMode::CpuInCore)),
+        ("CPU Out-of-core", base(ExecMode::CpuOutOfCore)),
+        ("GPU In-core", base(ExecMode::DeviceInCore)),
+        (
+            "GPU Out-of-core, f = 1.0",
+            with_sampling(base(ExecMode::DeviceOutOfCore), SamplingMethod::Mvs, 1.0),
+        ),
+        (
+            "GPU Out-of-core, f = 0.5",
+            with_sampling(base(ExecMode::DeviceOutOfCore), SamplingMethod::Mvs, 0.5),
+        ),
+        (
+            "GPU Out-of-core, f = 0.3",
+            with_sampling(base(ExecMode::DeviceOutOfCore), SamplingMethod::Mvs, 0.3),
+        ),
+    ];
+
+    // Two time columns (DESIGN.md §Hardware-Adaptation): *wall* is what
+    // this box (a single CPU core emulating the device through PJRT)
+    // measures; *device-model* is the paper-comparable column — CPU rows
+    // run on the real device (the CPU), so wall == model there, while
+    // GPU rows use the V100 kernel-bandwidth + PCIe models.
+    println!("\n| Mode | Wall (s) | Device-model (s) | AUC |");
+    println!("|------|----------|------------------|-----|");
+    let mut modeled = Vec::new();
+    for (name, cfg) in runs {
+        let is_device = cfg.mode.is_device();
+        let (out, wall) = run(mk(), cfg).expect(name);
+        let sim_link = out.link_stats.as_ref().map(|l| l.sim_seconds).unwrap_or(0.0);
+        let sim_compute = out.compute_stats.map(|(s, _)| s).unwrap_or(0.0);
+        // Host-side phases that exist in every implementation (sketching,
+        // margin update bookkeeping) still count at wall rate for device
+        // modes; the histogram/eval/gradient phases are replaced by the
+        // model.
+        let host_phases = out.timers.get("sketch")
+            + out.timers.get("ellpack")
+            + out.timers.get("sample")
+            + out.timers.get("predict");
+        let model_time = if is_device {
+            host_phases + sim_link + sim_compute
+        } else {
+            wall
+        };
+        let auc = out.eval_history.last().map(|(_, a)| *a).unwrap_or(f64::NAN);
+        println!("| {name} | {wall:.2} | {model_time:.2} | {auc:.4} |");
+        modeled.push((name, model_time));
+    }
+    println!(
+        "\npaper: CPU 1309.64 / 1228.53; GPU 241.52 / 211.91 (f=1.0) / \
+         427.41 (f=0.5) / 421.59 (f=0.3); AUC ≈ 0.839 everywhere."
+    );
+    let cpu = modeled[0].1;
+    let gpu = modeled[2].1;
+    println!(
+        "\nshape check: device-model GPU in-core is {:.1}× faster than CPU \
+         in-core (paper: 5.4×).",
+        cpu / gpu
+    );
+}

@@ -1,0 +1,66 @@
+//! Shared bench plumbing (criterion is not in the vendored dependency
+//! set — benches are plain `harness = false` binaries that print
+//! Markdown tables and per-phase stats).
+
+#![allow(dead_code)]
+
+use oocgb::config::{ExecMode, SamplingMethod, TrainConfig};
+use oocgb::coordinator::{TrainOutcome, TrainSession};
+use oocgb::data::DMatrix;
+use oocgb::util::stats::Summary;
+use oocgb::util::timer::Stopwatch;
+
+/// Global scale knob: `OOCGB_BENCH_SCALE=0.2 cargo bench` shrinks every
+/// workload for smoke runs.
+pub fn scale() -> f64 {
+    std::env::var("OOCGB_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()) as usize).max(64)
+}
+
+/// Paper Table 2 base configuration (defaults except max_depth=8,
+/// eta=0.1, 0.95/0.05 split), adapted to the simulated testbed.
+pub fn table2_cfg(mode: ExecMode) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.mode = mode;
+    cfg.max_depth = 8;
+    cfg.learning_rate = 0.1;
+    cfg.max_bin = 64;
+    cfg.eval_fraction = 0.05;
+    cfg.eval_every = 0; // timing runs skip eval; AUC measured separately
+    cfg.seed = 2020;
+    cfg.device_memory_bytes = 256 * 1024 * 1024;
+    cfg.page_size_bytes = 2 * 1024 * 1024;
+    cfg
+}
+
+pub fn with_sampling(mut cfg: TrainConfig, method: SamplingMethod, f: f32) -> TrainConfig {
+    cfg.sampling_method = method;
+    cfg.subsample = f;
+    cfg
+}
+
+/// Train once and return (outcome, wall seconds).
+pub fn run(data: DMatrix, cfg: TrainConfig) -> oocgb::Result<(TrainOutcome, f64)> {
+    let sw = Stopwatch::start();
+    let out = TrainSession::from_memory(data, cfg)?.train()?;
+    Ok((out, sw.elapsed_secs()))
+}
+
+/// Repeat a measurement closure and summarize.
+pub fn measure(warmup: usize, reps: usize, mut f: impl FnMut() -> f64) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<f64> = (0..reps).map(|_| f()).collect();
+    Summary::of(&samples)
+}
+
+pub fn header(title: &str) {
+    println!("\n## {title}\n");
+}

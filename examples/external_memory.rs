@@ -1,0 +1,86 @@
+//! External-memory walkthrough: the paper's full out-of-core pipeline on
+//! a simulated 16 MiB device.
+//!
+//! Shows the three Table-1 regimes side by side on the same dataset:
+//! in-core (OOMs), naive streaming (Algorithm 6 — works but pays the
+//! interconnect), and gradient-based sampling with compaction
+//! (Algorithm 7 — works and is fast).
+//!
+//! ```text
+//! cargo run --release --example external_memory
+//! ```
+
+use oocgb::config::{ExecMode, SamplingMethod, TrainConfig};
+use oocgb::coordinator::TrainSession;
+use oocgb::data::synthetic::{ClassificationSpec, ClassificationStream};
+use oocgb::util::fmt_bytes;
+
+fn base_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.n_rounds = 5;
+    cfg.max_depth = 5;
+    cfg.max_bin = 64;
+    cfg.device_memory_bytes = 16 * 1024 * 1024;
+    cfg.page_size_bytes = 1024 * 1024;
+    cfg.seed = 1;
+    cfg
+}
+
+fn run(mode: ExecMode, sampling: Option<f32>, rows: usize) -> oocgb::Result<()> {
+    let mut cfg = base_cfg();
+    cfg.mode = mode;
+    if let Some(f) = sampling {
+        cfg.sampling_method = SamplingMethod::Mvs;
+        cfg.subsample = f;
+    }
+    let spec = ClassificationSpec {
+        n_rows: rows,
+        n_cols: 100,
+        n_informative: 10,
+        n_redundant: 10,
+        seed: 5,
+        ..Default::default()
+    };
+    // Stream pages so the host never materializes the full matrix either.
+    let stream = ClassificationStream::new(spec, 4096);
+    let label = format!(
+        "{:<26} f={:<4}",
+        mode.name(),
+        sampling.map(|f| f.to_string()).unwrap_or_else(|| "-".into())
+    );
+    match TrainSession::from_page_stream(stream, cfg).and_then(|s| s.train()) {
+        Ok(out) => {
+            let link = out.link_stats.unwrap();
+            println!(
+                "{label}  OK    {:>6.2}s wall  {:>9} h2d  {:>7.3}s simulated-PCIe  peak {}",
+                out.train_seconds,
+                fmt_bytes(link.h2d_bytes),
+                link.sim_seconds,
+                fmt_bytes(out.mem_peak.unwrap()),
+            );
+        }
+        Err(e) if e.is_device_oom() => {
+            println!("{label}  OOM   ({e})");
+        }
+        Err(e) => return Err(e),
+    }
+    Ok(())
+}
+
+fn main() -> oocgb::Result<()> {
+    let rows = 60_000;
+    println!(
+        "dataset: {rows} rows × 100 cols; simulated device: 16 MiB, PCIe 3.0 x16\n"
+    );
+    run(ExecMode::DeviceInCore, None, rows)?;
+    run(ExecMode::DeviceOutOfCoreNaive, None, rows)?;
+    run(ExecMode::DeviceOutOfCore, Some(1.0), rows)?;
+    run(ExecMode::DeviceOutOfCore, Some(0.1), rows)?;
+    println!(
+        "\nThe in-core run cannot even finish quantization (raw staging \
+         exceeds the budget);\nthe naive streamer re-transfers every page \
+         for every tree level (watch simulated-PCIe);\nsampled compaction \
+         (Algorithm 7) holds only ~f of the matrix on device."
+    );
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! End-to-end driver (DESIGN.md §End-to-end validation): train the
+//! Higgs-like workload through the full three-layer stack — Rust
+//! coordinator → PJRT → AOT-compiled JAX/Pallas artifacts — in the
+//! paper's Table 2 configuration (max_depth=8, learning_rate=0.1,
+//! 0.95/0.05 split), and log the AUC curve.
+//!
+//! ```text
+//! cargo run --release --example train_higgs -- [rows] [rounds] [mode] [f]
+//! # defaults: 100000 rows, 60 rounds, device-ooc, f=0.3
+//! ```
+//!
+//! The curve is written to `train_higgs_curve.csv` (round,auc) — the
+//! loss-curve record EXPERIMENTS.md cites.
+
+use oocgb::config::{ExecMode, SamplingMethod, TrainConfig};
+use oocgb::coordinator::TrainSession;
+use oocgb::data::synthetic;
+use oocgb::util::fmt_bytes;
+
+fn main() -> oocgb::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rows: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(100_000);
+    let rounds: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(60);
+    let mode = ExecMode::parse(args.get(2).map(String::as_str).unwrap_or("device-ooc"))?;
+    let f: f32 = args.get(3).and_then(|a| a.parse().ok()).unwrap_or(0.3);
+
+    // Paper Table 2 settings: defaults except max_depth=8, eta=0.1,
+    // 0.95/0.05 split.
+    let mut cfg = TrainConfig::default();
+    cfg.mode = mode;
+    cfg.n_rounds = rounds;
+    cfg.max_depth = 8;
+    cfg.learning_rate = 0.1;
+    cfg.max_bin = 64;
+    cfg.eval_fraction = 0.05;
+    cfg.eval_every = 1;
+    cfg.seed = 2020;
+    cfg.device_memory_bytes = 256 * 1024 * 1024;
+    cfg.page_size_bytes = 4 * 1024 * 1024;
+    if mode == ExecMode::DeviceOutOfCore {
+        cfg.sampling_method = SamplingMethod::Mvs;
+        cfg.subsample = f;
+    }
+
+    eprintln!(
+        "end-to-end: {rows} rows × 28 cols, {rounds} rounds, mode={}, f={f}",
+        mode.name()
+    );
+    let data = synthetic::higgs_like(rows, 11);
+    let session = TrainSession::from_memory(data, cfg)?;
+    let outcome = session.train()?;
+
+    let mut csv = String::from("round,auc\n");
+    for (round, auc) in &outcome.eval_history {
+        csv.push_str(&format!("{round},{auc:.6}\n"));
+    }
+    std::fs::write("train_higgs_curve.csv", &csv)?;
+
+    let (_, final_auc) = outcome.eval_history.last().copied().unwrap_or((0, 0.0));
+    eprintln!(
+        "\n{} trees in {:.2}s  (final AUC {final_auc:.4}); curve → train_higgs_curve.csv",
+        outcome.model.trees.len(),
+        outcome.train_seconds
+    );
+    eprint!("{}", outcome.timers.report());
+    if let Some(link) = &outcome.link_stats {
+        eprintln!(
+            "simulated link: h2d {} ({} transfers), d2h {}, {:.3}s simulated",
+            fmt_bytes(link.h2d_bytes),
+            link.h2d_transfers,
+            fmt_bytes(link.d2h_bytes),
+            link.sim_seconds
+        );
+    }
+    if let (Some(p), Some(c)) = (outcome.mem_peak, outcome.mem_capacity) {
+        eprintln!("device memory peak {} / {}", fmt_bytes(p), fmt_bytes(c));
+    }
+    // Sanity gate so CI-style runs fail loudly if learning broke.
+    assert!(final_auc > 0.70, "end-to-end AUC regressed: {final_auc}");
+    Ok(())
+}

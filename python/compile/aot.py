@@ -1,0 +1,138 @@
+"""AOT compiler: lower every L2 graph to HLO *text* + a manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime
+(rust/src/runtime) loads the emitted ``*.hlo.txt`` via
+``HloModuleProto::from_text_file`` and executes them on the PJRT CPU
+client.  Python is never on the request path.
+
+Why HLO text and not ``lowered.compile().serialize()``: the image's
+xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit instruction
+ids, ``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Every artifact is listed in ``artifacts/manifest.json`` with its kind,
+static parameters and I/O signature; the Rust side is entirely
+manifest-driven (no shape constants duplicated in Rust).
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Compiled shape variants.  B = row batch; the Rust runtime pads the tail
+# batch with zero-gradient rows (exact, see kernels/histogram.py) and picks
+# the largest variant <= the work size, so both a small variant (tests,
+# tiny datasets) and a big one (bench workloads) are emitted.
+HIST_BATCHES = (4096, 16384)
+GRAD_BATCHES = (8192, 65536)
+N_NODES = 32     # node slots per histogram/eval call (level chunking)
+F_TILE = 32      # feature tile width
+N_BINS = 64      # max_bin (paper default 256; 64 keeps the CPU-backend
+                 # runtime practical — ablation artifact uses 256)
+N_BINS_ABLATION = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(specs):
+    return [{"dtype": str(s.dtype), "shape": list(s.shape)} for s in specs]
+
+
+def build_artifacts():
+    """Yield (name, kind, params, fn, input_specs) for every artifact."""
+    for b in HIST_BATCHES:
+        for nb in (N_BINS, N_BINS_ABLATION):
+            name = f"hist_b{b}_f{F_TILE}_n{N_NODES}_bin{nb}"
+            # row_block = min(b, 8192): fewer grid steps per call beat
+            # smaller VMEM tiles on this backend (§Perf L1 iteration 3);
+            # 8192×32×4 B = 1 MiB block + the 0.5 MiB histogram stays
+            # far inside the 16 MiB VMEM model.
+            fn = partial(model.histogram_step, n_nodes=N_NODES, n_bins=nb,
+                         row_block=min(b, 8192))
+            specs = (
+                _spec((b, F_TILE), jnp.int32),   # bins
+                _spec((b, 2), jnp.float32),      # grads
+                _spec((b,), jnp.int32),          # node ids
+            )
+            yield (name, "histogram",
+                   {"batch": b, "features": F_TILE, "nodes": N_NODES,
+                    "bins": nb}, fn, specs)
+
+    for b in GRAD_BATCHES:
+        for obj, tag in (("binary:logistic", "logistic"),
+                         ("reg:squarederror", "squared")):
+            name = f"grad_{tag}_b{b}"
+            fn = partial(model.gradient_step, objective=obj)
+            specs = (_spec((b,), jnp.float32), _spec((b,), jnp.float32))
+            yield (name, "gradient", {"batch": b, "objective": obj}, fn,
+                   specs)
+
+    for b in GRAD_BATCHES:
+        name = f"mvs_b{b}"
+        specs = (_spec((b, 2), jnp.float32), _spec((1,), jnp.float32))
+        yield (name, "mvs", {"batch": b}, model.mvs_step, specs)
+
+    for nb in (N_BINS, N_BINS_ABLATION):
+        name = f"eval_splits_n{N_NODES}_f{F_TILE}_bin{nb}"
+        specs = (
+            _spec((N_NODES, F_TILE, nb, 2), jnp.float32),  # hist
+            _spec((3,), jnp.float32),                      # λ, γ, mcw
+        )
+        yield (name, "eval_splits",
+               {"nodes": N_NODES, "features": F_TILE, "bins": nb},
+               model.evaluate_splits, specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "artifacts": []}
+    for name, kind, params, fn, specs in build_artifacts():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = lowered.out_info
+        out_sig = [{"dtype": str(o.dtype), "shape": list(o.shape)}
+                   for o in jax.tree_util.tree_leaves(outs)]
+        manifest["artifacts"].append({
+            "name": name,
+            "file": fname,
+            "kind": kind,
+            "params": params,
+            "inputs": _sig(specs),
+            "outputs": out_sig,
+        })
+        print(f"  {fname}  ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json "
+          f"to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for out-of-core gradient boosting.
+
+Every kernel here is authored with ``jax.experimental.pallas`` and lowered
+with ``interpret=True`` so the resulting HLO runs on any PJRT backend
+(including the Rust-driven CPU client).  On a real TPU the same kernels
+would lower to Mosaic; the BlockSpec tiling below is written against a
+16 MiB VMEM budget (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .histogram import (  # noqa: F401
+    build_histogram_scatter,
+    build_histogram_onehot,
+)
+from .gradients import logistic_gradients, squared_gradients  # noqa: F401
+from .mvs import mvs_scores  # noqa: F401

@@ -1,0 +1,66 @@
+"""Elementwise gradient-pair Pallas kernels.
+
+Each boosting iteration starts by computing first/second-order gradients of
+the loss at the current margin (paper Eq. 5).  These are elementwise over
+rows, so the kernels are simple VPU (vector-unit) tiles: rows stream
+HBM→VMEM in ``row_block`` chunks, one fused multiply-add chain per element.
+
+Outputs are packed ``float32[rows, 2]`` as ``(g, h)`` — the exact layout the
+histogram kernels and the Rust coordinator consume.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _logistic_kernel(preds_ref, labels_ref, out_ref):
+    """binary:logistic — g = σ(margin) − y,  h = σ(margin)(1 − σ(margin))."""
+    margin = preds_ref[...]
+    y = labels_ref[...]
+    p = jax.nn.sigmoid(margin)
+    g = p - y
+    h = jnp.maximum(p * (1.0 - p), 1e-16)  # XGBoost clamps the hessian
+    out_ref[...] = jnp.stack([g, h], axis=-1)
+
+
+def _squared_kernel(preds_ref, labels_ref, out_ref):
+    """reg:squarederror — g = pred − y,  h = 1."""
+    pred = preds_ref[...]
+    y = labels_ref[...]
+    out_ref[...] = jnp.stack([pred - y, jnp.ones_like(pred)], axis=-1)
+
+
+def _elementwise_call(kernel, preds, labels, row_block):
+    rows, = preds.shape
+    assert rows % row_block == 0, (rows, row_block)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // row_block,),
+        in_specs=[
+            pl.BlockSpec((row_block,), lambda i: (i,)),
+            pl.BlockSpec((row_block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((row_block, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 2), jnp.float32),
+        interpret=True,
+    )(preds, labels)
+
+
+def logistic_gradients(preds, labels, *, row_block=8192):
+    """Gradient pairs for binary logistic loss.
+
+    Args:
+      preds: float32[rows] raw margins (pre-sigmoid).
+      labels: float32[rows] in {0, 1}.
+    Returns:
+      float32[rows, 2] packed (g, h).
+    """
+    return _elementwise_call(_logistic_kernel, preds, labels, row_block)
+
+
+def squared_gradients(preds, labels, *, row_block=8192):
+    """Gradient pairs for squared-error regression."""
+    return _elementwise_call(_squared_kernel, preds, labels, row_block)

@@ -1,0 +1,163 @@
+"""Gradient-histogram Pallas kernels — the compute hot-spot of GBDT.
+
+XGBoost's ``gpu_hist`` builds, for every tree node, a per-(feature, bin)
+histogram of gradient pairs.  The CUDA implementation the paper builds on
+uses shared-memory atomics per threadblock.  Neither atomics nor
+shared-memory are the right primitive on a TPU, so we reformulate
+(DESIGN.md §Hardware-Adaptation):
+
+* ``build_histogram_scatter`` — the *deployment* kernel: one scatter-add
+  per (row, feature) into a flattened ``[nodes * features * bins]`` table.
+  Lowered under ``interpret=True`` this becomes a plain HLO scatter, which
+  the XLA *CPU* backend executes in O(rows · features) — this is what the
+  Rust runtime actually runs.
+
+* ``build_histogram_onehot`` — the *MXU* formulation: the bin lookup is
+  expressed as ``one_hot(bins)ᵀ · grads`` so a real TPU would feed the
+  128×128 systolic array with a dense matmul instead of scattering.  It is
+  numerically identical (tested against the scatter kernel and ``ref.py``)
+  and is what we would ship for TPU hardware; we keep tiles small enough
+  that the one-hot block fits VMEM.
+
+Both kernels tile rows with a Pallas grid: the row dimension is split into
+``row_block`` chunks streamed HBM→VMEM by ``BlockSpec``, while the output
+histogram stays resident in VMEM across grid steps (the classic
+revisited-output accumulation pattern; this is the Pallas analogue of the
+paper's CUDA persistent-histogram-in-shared-memory).
+
+Conventions shared with the Rust coordinator (rust/src/runtime):
+
+* ``bins``:  ``int32[rows, features]`` quantized feature matrix (ELLPACK
+  page contents), values in ``[0, n_bins)``.
+* ``grads``: ``float32[rows, 2]`` — ``(g_i, h_i)`` pairs.  **Padding rows
+  must carry zero gradients**; they may point at any (node, bin) and still
+  contribute exactly nothing, which is why Rust-side padding is exact.
+* ``node_ids``: ``int32[rows]`` in ``[0, n_nodes)`` — the tree-level node
+  each row currently sits in (level-wise construction builds one whole
+  tree level per data pass).
+* output: ``float32[n_nodes, features, n_bins, 2]``.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_scatter_kernel(bins_ref, grads_ref, nodes_ref, out_ref, *, n_nodes,
+                         n_features, n_bins):
+    """One grid step: scatter-add a row block into the resident histogram."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bins = bins_ref[...]  # [RB, F] int32
+    grads = grads_ref[...]  # [RB, 2] f32
+    nodes = nodes_ref[...]  # [RB] int32
+
+    rb, f = bins.shape
+    # Flattened destination index for every (row, feature) update:
+    #   idx = (node * F + feature) * NB + bin
+    feat = jax.lax.broadcasted_iota(jnp.int32, (rb, f), 1)
+    idx = (nodes[:, None] * n_features + feat) * n_bins + bins  # [RB, F]
+    upd = jnp.broadcast_to(grads[:, None, :], (rb, f, 2))  # [RB, F, 2]
+
+    flat = out_ref[...].reshape(n_nodes * n_features * n_bins, 2)
+    flat = flat.at[idx.reshape(-1)].add(upd.reshape(-1, 2))
+    out_ref[...] = flat.reshape(out_ref.shape)
+
+
+def build_histogram_scatter(bins, grads, node_ids, *, n_nodes, n_bins,
+                            row_block=4096):
+    """Level-wise gradient histogram via Pallas scatter-add.
+
+    Args:
+      bins: int32[rows, features], quantized features.
+      grads: float32[rows, 2], (g, h) pairs; zero rows are inert padding.
+      node_ids: int32[rows], node slot per row in [0, n_nodes).
+      n_nodes: number of node slots in this level chunk.
+      n_bins: quantization width (max_bin).
+      row_block: rows per grid step (VMEM tile height).
+
+    Returns:
+      float32[n_nodes, features, n_bins, 2].
+    """
+    rows, features = bins.shape
+    assert rows % row_block == 0, (rows, row_block)
+    grid = rows // row_block
+    kernel = partial(_hist_scatter_kernel, n_nodes=n_nodes,
+                     n_features=features, n_bins=n_bins)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((row_block, features), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, 2), lambda i: (i, 0)),
+            pl.BlockSpec((row_block,), lambda i: (i,)),
+        ],
+        # Output block is the whole histogram, revisited by every grid step.
+        out_specs=pl.BlockSpec((n_nodes, features, n_bins, 2),
+                               lambda i: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_nodes, features, n_bins, 2),
+                                       jnp.float32),
+        interpret=True,
+    )(bins, grads, node_ids)
+
+
+def _hist_onehot_kernel(bins_ref, grads_ref, nodes_ref, out_ref, *, n_nodes,
+                        n_bins):
+    """MXU formulation: one-hot(node⊗bin) matmul per feature column.
+
+    For each feature f the update is
+        out[:, f, :, k] += one_hot(node*NB + bin_f)ᵀ · grads[:, k]
+    i.e. a ``[NN*NB, RB] × [RB, 2]`` matmul — systolic-array food.  The
+    feature loop is unrolled by the grid's second axis.
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bins = bins_ref[...]  # [RB, 1] int32 (single feature column)
+    grads = grads_ref[...]  # [RB, 2] f32
+    nodes = nodes_ref[...]  # [RB] int32
+
+    rb = grads.shape[0]
+    slot = nodes * n_bins + bins[:, 0]  # [RB]
+    oh = (slot[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (rb, n_nodes * n_bins), 1)).astype(jnp.float32)
+    # [NN*NB, RB] @ [RB, 2] -> [NN*NB, 2]
+    acc = jnp.dot(oh.T, grads, preferred_element_type=jnp.float32)
+    out_ref[...] = out_ref[...] + acc.reshape(n_nodes, 1, n_bins, 2)
+
+
+def build_histogram_onehot(bins, grads, node_ids, *, n_nodes, n_bins,
+                           row_block=1024):
+    """Same contract as :func:`build_histogram_scatter`, MXU-shaped.
+
+    VMEM model per grid step (f32): one-hot block ``RB × NN·NB`` plus the
+    feature's histogram slab ``NN·NB × 2``.  With RB=1024, NN=32, NB=64 the
+    one-hot block is 1024×2048×4 B = 8 MiB — inside a 16 MiB VMEM budget.
+    """
+    rows, features = bins.shape
+    assert rows % row_block == 0, (rows, row_block)
+    grid = (rows // row_block, features)
+    kernel = partial(_hist_onehot_kernel, n_nodes=n_nodes, n_bins=n_bins)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((row_block, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((row_block,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n_nodes, 1, n_bins, 2),
+                               lambda i, j: (0, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_nodes, features, n_bins, 2),
+                                       jnp.float32),
+        interpret=True,
+    )(bins, grads, node_ids)

@@ -1,0 +1,49 @@
+"""Minimal Variance Sampling score kernel (paper Eq. 9).
+
+MVS samples each row with probability proportional to the *regularized
+absolute gradient*::
+
+    ĝ_i = sqrt(g_i² + λ h_i²)
+
+The score computation is the device-side half of the sampler (elementwise,
+one pass over the gradient pairs); the threshold search and the Bernoulli /
+Poisson draws stay in the Rust coordinator, which is exactly how the paper's
+implementation splits the work between GPU kernels and host logic.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mvs_kernel(grads_ref, lam_ref, out_ref):
+    g = grads_ref[..., 0]
+    h = grads_ref[..., 1]
+    lam = lam_ref[0]
+    out_ref[...] = jnp.sqrt(g * g + lam * h * h)
+
+
+def mvs_scores(grads, lam, *, row_block=8192):
+    """Regularized absolute gradients ĝ for MVS.
+
+    Args:
+      grads: float32[rows, 2] packed (g, h).
+      lam: float32[1] regularization λ (hyperparameter, or estimated from
+        the squared mean of the initial leaf value — the estimate happens
+        host-side).
+    Returns:
+      float32[rows] sampling scores.
+    """
+    rows = grads.shape[0]
+    assert rows % row_block == 0, (rows, row_block)
+    return pl.pallas_call(
+        _mvs_kernel,
+        grid=(rows // row_block,),
+        in_specs=[
+            pl.BlockSpec((row_block, 2), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((row_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=True,
+    )(grads, lam)

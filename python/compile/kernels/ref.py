@@ -1,0 +1,90 @@
+"""Pure-jnp/numpy reference oracles for every L1 kernel and L2 graph.
+
+These are deliberately written in the most obvious way possible (explicit
+loops where that is clearest) — they are the correctness ground truth that
+pytest/hypothesis compare the Pallas kernels and the lowered HLO against.
+They are never lowered or shipped.
+"""
+
+import numpy as np
+
+
+def histogram_ref(bins, grads, node_ids, n_nodes, n_bins):
+    """O(rows·features) loop-free numpy histogram — the ground truth.
+
+    Args/shapes match ``kernels.histogram``: bins int[rows, F],
+    grads f32[rows, 2], node_ids int[rows] → f32[n_nodes, F, n_bins, 2].
+    """
+    rows, features = bins.shape
+    out = np.zeros((n_nodes, features, n_bins, 2), dtype=np.float64)
+    feat = np.broadcast_to(np.arange(features)[None, :], (rows, features))
+    nid = np.broadcast_to(np.asarray(node_ids)[:, None], (rows, features))
+    flat = (nid * features + feat) * n_bins + np.asarray(bins)
+    upd = np.broadcast_to(np.asarray(grads)[:, None, :], (rows, features, 2))
+    np.add.at(out.reshape(-1, 2), flat.reshape(-1), upd.reshape(-1, 2))
+    return out.reshape(n_nodes, features, n_bins, 2).astype(np.float32)
+
+
+def logistic_gradients_ref(preds, labels):
+    p = 1.0 / (1.0 + np.exp(-np.asarray(preds, dtype=np.float64)))
+    g = p - np.asarray(labels, dtype=np.float64)
+    h = np.maximum(p * (1.0 - p), 1e-16)
+    return np.stack([g, h], axis=-1).astype(np.float32)
+
+
+def squared_gradients_ref(preds, labels):
+    g = np.asarray(preds, dtype=np.float64) - np.asarray(labels,
+                                                         dtype=np.float64)
+    return np.stack([g, np.ones_like(g)], axis=-1).astype(np.float32)
+
+
+def mvs_scores_ref(grads, lam):
+    g = np.asarray(grads, dtype=np.float64)
+    return np.sqrt(g[:, 0] ** 2 + float(lam) * g[:, 1] ** 2).astype(
+        np.float32)
+
+
+def evaluate_splits_ref(hist, lam, gamma, min_child_weight):
+    """Best split per node from its histogram (paper Eq. 8), numpy loops.
+
+    Args:
+      hist: f32[n_nodes, F, n_bins, 2].
+      lam, gamma, min_child_weight: floats (XGBoost λ, γ, min hessian sum).
+    Returns dict of arrays (all length n_nodes):
+      gain f32, feature i32, split_bin i32, left_sum f32[,2], total f32[,2].
+      feature == -1 when no split improves the loss.
+    A split at bin b sends rows with ``bin <= b`` left.
+    """
+    hist = np.asarray(hist, dtype=np.float64)
+    n_nodes, features, n_bins, _ = hist.shape
+    gain = np.zeros(n_nodes, dtype=np.float64)
+    best_f = np.full(n_nodes, -1, dtype=np.int32)
+    best_b = np.full(n_nodes, -1, dtype=np.int32)
+    left_sum = np.zeros((n_nodes, 2), dtype=np.float64)
+    total = np.zeros((n_nodes, 2), dtype=np.float64)
+    for n in range(n_nodes):
+        tot = hist[n, 0].sum(axis=0)  # total (g,h) is same for every feature
+        total[n] = tot
+        parent = tot[0] ** 2 / (tot[1] + lam)
+        for f in range(features):
+            gl, hl = 0.0, 0.0
+            for b in range(n_bins - 1):  # last bin left = no split
+                gl += hist[n, f, b, 0]
+                hl += hist[n, f, b, 1]
+                gr, hr = tot[0] - gl, tot[1] - hl
+                if hl < min_child_weight or hr < min_child_weight:
+                    continue
+                g_split = 0.5 * (gl ** 2 / (hl + lam) + gr ** 2 / (hr + lam)
+                                 - parent) - gamma
+                if g_split > gain[n] + 1e-12:
+                    gain[n] = g_split
+                    best_f[n] = f
+                    best_b[n] = b
+                    left_sum[n] = (gl, hl)
+    return {
+        "gain": gain.astype(np.float32),
+        "feature": best_f,
+        "split_bin": best_b,
+        "left_sum": left_sum.astype(np.float32),
+        "total": total.astype(np.float32),
+    }

@@ -1,0 +1,109 @@
+"""Layer-2 JAX compute graphs for out-of-core gradient boosting.
+
+These are the functions that get AOT-lowered (``aot.py``) to HLO text and
+executed from the Rust coordinator via PJRT.  Each one composes the L1
+Pallas kernels with whatever surrounding jnp math the step needs, so the
+kernel and its glue fuse into a single XLA module — one device dispatch per
+logical step on the Rust hot path.
+
+Graphs
+------
+* ``histogram_step``     — level-wise gradient histogram (Alg. 1/7 inner loop)
+* ``gradient_step``      — loss gradients for an objective
+* ``mvs_step``           — MVS sampling scores + their sum (Eq. 9)
+* ``evaluate_splits``    — best split per node from histograms (Eq. 8)
+
+Shape discipline: everything is fixed-shape (HLO requirement).  The Rust
+runtime pads the tail batch with zero-gradient rows (exactly inert for
+histograms/gradients, see kernels/histogram.py) and slices the outputs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    build_histogram_scatter,
+    logistic_gradients,
+    squared_gradients,
+    mvs_scores,
+)
+
+
+def histogram_step(bins, grads, node_ids, *, n_nodes, n_bins,
+                   row_block=4096):
+    """Build the gradient histogram for one batch of rows.
+
+    Returns f32[n_nodes, features, n_bins, 2]; the Rust side accumulates
+    across batches (fp32 add, order-independent across pages up to fp
+    rounding; EXPERIMENTS.md quantifies the tolerance).
+    """
+    return (build_histogram_scatter(bins, grads, node_ids, n_nodes=n_nodes,
+                                    n_bins=n_bins, row_block=row_block),)
+
+
+def gradient_step(preds, labels, *, objective):
+    """Gradient pairs for one batch of rows under the given objective."""
+    if objective == "binary:logistic":
+        return (logistic_gradients(preds, labels),)
+    if objective == "reg:squarederror":
+        return (squared_gradients(preds, labels),)
+    raise ValueError(f"unknown objective: {objective}")
+
+
+def mvs_step(grads, lam):
+    """MVS scores ĝ plus their sum (the host threshold search needs Σĝ)."""
+    scores = mvs_scores(grads, lam)
+    return (scores, jnp.sum(scores, dtype=jnp.float32))
+
+
+def evaluate_splits(hist, params):
+    """Best split per node from its histogram — vectorized Eq. 8.
+
+    Args:
+      hist: f32[n_nodes, F, n_bins, 2] accumulated gradient histograms.
+      params: f32[3] = (λ, γ, min_child_weight).
+
+    Returns (all per node):
+      gain f32[N], feature i32[N] (−1 = leaf), split_bin i32[N],
+      left_sum f32[N, 2], total f32[N, 2].
+
+    Split semantics: rows with ``bin <= split_bin`` go left.  The scan over
+    candidate bins is a cumulative sum along the bin axis; the final bin is
+    excluded (it would send everything left).  Ties resolve to the lowest
+    (feature, bin) — matching the Rust CPU evaluator bit-for-bit is tested
+    in rust/tests/.
+    """
+    lam, gamma, min_child_weight = params[0], params[1], params[2]
+    # Totals are identical across features; use feature 0.
+    total = jnp.sum(hist[:, 0, :, :], axis=1)  # [N, 2]
+    parent = total[:, 0] ** 2 / (total[:, 1] + lam)  # [N]
+
+    cum = jnp.cumsum(hist, axis=2)  # [N, F, B, 2]
+    gl, hl = cum[..., 0], cum[..., 1]  # [N, F, B]
+    gr = total[:, None, None, 0] - gl
+    hr = total[:, None, None, 1] - hl
+
+    gain = 0.5 * (gl ** 2 / (hl + lam) + gr ** 2 / (hr + lam)
+                  - parent[:, None, None]) - gamma  # [N, F, B]
+    valid = (hl >= min_child_weight) & (hr >= min_child_weight)
+    # Exclude the last bin (no-op split).
+    n_bins = hist.shape[2]
+    bin_idx = jax.lax.broadcasted_iota(jnp.int32, gain.shape, 2)
+    valid = valid & (bin_idx < n_bins - 1)
+    gain = jnp.where(valid, gain, -jnp.inf)
+
+    flat = gain.reshape(gain.shape[0], -1)  # [N, F*B]
+    best = jnp.argmax(flat, axis=1).astype(jnp.int32)  # first max wins
+    best_gain = jnp.take_along_axis(flat, best[:, None], axis=1)[:, 0]
+    has_split = best_gain > 0.0
+    feature = jnp.where(has_split, best // n_bins, -1).astype(jnp.int32)
+    split_bin = jnp.where(has_split, best % n_bins, -1).astype(jnp.int32)
+
+    nf = hist.shape[1]
+    safe_f = jnp.clip(feature, 0, nf - 1)
+    safe_b = jnp.clip(split_bin, 0, n_bins - 1)
+    left = cum[jnp.arange(hist.shape[0]), safe_f, safe_b, :]  # [N, 2]
+    left = jnp.where(has_split[:, None], left, 0.0)
+    best_gain = jnp.where(has_split, best_gain, 0.0)
+    return (best_gain.astype(jnp.float32), feature, split_bin,
+            left.astype(jnp.float32), total.astype(jnp.float32))

@@ -1,0 +1,40 @@
+"""Render the paper's Figure 1 (training curves vs sampling rate) from
+the CSV emitted by `cargo bench --bench bench_figure1`.
+
+Usage:
+    python python/plot_figure1.py [figure1_curves.csv] [figure1.png]
+"""
+
+import csv
+import sys
+
+
+def main() -> None:
+    src = sys.argv[1] if len(sys.argv) > 1 else "figure1_curves.csv"
+    dst = sys.argv[2] if len(sys.argv) > 2 else "figure1.png"
+    with open(src) as f:
+        reader = csv.reader(f)
+        header = next(reader)
+        rows = [[float(x) for x in row] for row in reader]
+    rounds = [r[0] for r in rows]
+
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(7, 4.5))
+    for i, label in enumerate(header[1:], start=1):
+        ax.plot(rounds, [r[i] for r in rows], label=label.replace("f", "f = "))
+    ax.set_xlabel("iteration")
+    ax.set_ylabel("eval AUC")
+    ax.set_title("Training curves on the Higgs-like dataset (paper Figure 1)")
+    ax.legend(loc="lower right")
+    ax.grid(alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(dst, dpi=150)
+    print(f"wrote {dst}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""AOT pipeline tests: every artifact lowers, the HLO text parses as HLO
+(sanity), the manifest is complete/consistent, and regeneration is
+deterministic (so `make artifacts` is reproducible)."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    entries = []
+    for name, kind, params, fn, specs in aot.build_artifacts():
+        entries.append((name, kind, params, fn, specs))
+    return out, entries
+
+
+def test_artifact_inventory(built):
+    _, entries = built
+    kinds = {}
+    for name, kind, *_ in entries:
+        kinds.setdefault(kind, []).append(name)
+    assert len(kinds["histogram"]) == 4       # 2 batches × 2 bin widths
+    assert len(kinds["gradient"]) == 4        # 2 batches × 2 objectives
+    assert len(kinds["mvs"]) == 2
+    assert len(kinds["eval_splits"]) == 2
+    names = [n for n, *_ in entries]
+    assert len(names) == len(set(names)), "artifact names must be unique"
+
+
+def test_each_artifact_lowers_to_hlo_text(built):
+    import jax
+    _, entries = built
+    for name, kind, params, fn, specs in entries:
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_lowering_is_deterministic():
+    """Same graph → same HLO text (reproducible builds)."""
+    import jax
+    entry = next(iter(aot.build_artifacts()))
+    _, _, _, fn, specs = entry
+    t1 = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    t2 = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert t1 == t2
+
+
+def test_main_writes_manifest_and_files(tmp_path, monkeypatch):
+    out = str(tmp_path / "a")
+    monkeypatch.setattr("sys.argv", ["aot", "--out-dir", out])
+    aot.main()
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == 1
+    assert len(manifest["artifacts"]) == 12
+    for art in manifest["artifacts"]:
+        path = os.path.join(out, art["file"])
+        assert os.path.exists(path), art["file"]
+        with open(path) as f:
+            assert f.read(9) == "HloModule"
+        # Signature sanity: histogram takes 3 inputs, returns 1 output.
+        if art["kind"] == "histogram":
+            assert len(art["inputs"]) == 3
+            assert len(art["outputs"]) == 1
+            b = art["params"]["batch"]
+            assert art["inputs"][0]["shape"] == [b, art["params"]["features"]]
+            assert art["outputs"][0]["shape"] == [
+                art["params"]["nodes"], art["params"]["features"],
+                art["params"]["bins"], 2]
+        if art["kind"] == "mvs":
+            assert len(art["outputs"]) == 2  # scores + sum
+
+
+def test_repo_manifest_matches_inventory():
+    """The checked-in artifacts/ dir (if built) agrees with build_artifacts."""
+    here = os.path.dirname(os.path.dirname(os.path.dirname(__file__)))
+    manifest_path = os.path.join(here, "artifacts", "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts/ not built yet")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    built_names = {n for n, *_ in aot.build_artifacts()}
+    manifest_names = {a["name"] for a in manifest["artifacts"]}
+    assert built_names == manifest_names

@@ -1,0 +1,186 @@
+"""L1 kernel correctness: Pallas kernels vs pure-numpy oracles (ref.py).
+
+Hypothesis sweeps shapes/dtypes/value ranges; fixed-seed cases pin the
+exact configurations the AOT artifacts are compiled with.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    build_histogram_scatter,
+    build_histogram_onehot,
+    logistic_gradients,
+    squared_gradients,
+    mvs_scores,
+)
+from compile.kernels import ref
+
+HIST_TOL = dict(rtol=1e-4, atol=1e-4)
+ELEM_TOL = dict(rtol=1e-5, atol=1e-6)
+
+
+def _hist_case(seed, rows, features, n_nodes, n_bins, zero_frac=0.0):
+    rng = np.random.default_rng(seed)
+    bins = rng.integers(0, n_bins, (rows, features)).astype(np.int32)
+    grads = rng.normal(size=(rows, 2)).astype(np.float32)
+    if zero_frac:
+        mask = rng.random(rows) < zero_frac
+        grads[mask] = 0.0
+    nids = rng.integers(0, n_nodes, rows).astype(np.int32)
+    return bins, grads, nids
+
+
+class TestHistogramScatter:
+    @pytest.mark.parametrize("rows,rb", [(1024, 256), (2048, 2048),
+                                         (4096, 1024)])
+    def test_matches_ref(self, rows, rb):
+        bins, grads, nids = _hist_case(0, rows, 8, 4, 16)
+        out = build_histogram_scatter(jnp.array(bins), jnp.array(grads),
+                                      jnp.array(nids), n_nodes=4, n_bins=16,
+                                      row_block=rb)
+        expect = ref.histogram_ref(bins, grads, nids, 4, 16)
+        np.testing.assert_allclose(np.asarray(out), expect, **HIST_TOL)
+
+    def test_zero_grad_rows_are_inert(self):
+        """Padding contract: zero-gradient rows contribute nothing."""
+        bins, grads, nids = _hist_case(1, 1024, 4, 4, 16)
+        grads[512:] = 0.0
+        full = build_histogram_scatter(jnp.array(bins), jnp.array(grads),
+                                       jnp.array(nids), n_nodes=4, n_bins=16,
+                                       row_block=256)
+        expect = ref.histogram_ref(bins[:512], grads[:512], nids[:512], 4, 16)
+        np.testing.assert_allclose(np.asarray(full), expect, **HIST_TOL)
+
+    def test_single_node(self):
+        bins, grads, _ = _hist_case(2, 512, 4, 1, 8)
+        nids = np.zeros(512, dtype=np.int32)
+        out = build_histogram_scatter(jnp.array(bins), jnp.array(grads),
+                                      jnp.array(nids), n_nodes=1, n_bins=8,
+                                      row_block=512)
+        expect = ref.histogram_ref(bins, grads, nids, 1, 8)
+        np.testing.assert_allclose(np.asarray(out), expect, **HIST_TOL)
+
+    def test_histogram_sums_to_gradient_total(self):
+        """Invariant: Σ over (node, bin) of hist[..., k] = Σ grads[:, k] per
+        feature."""
+        bins, grads, nids = _hist_case(3, 2048, 6, 8, 32)
+        out = np.asarray(build_histogram_scatter(
+            jnp.array(bins), jnp.array(grads), jnp.array(nids), n_nodes=8,
+            n_bins=32, row_block=512))
+        per_feature = out.sum(axis=(0, 2))  # [F, 2]
+        total = grads.sum(axis=0)
+        for f in range(6):
+            np.testing.assert_allclose(per_feature[f], total, rtol=1e-3,
+                                       atol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        log_rows=st.integers(7, 11),
+        features=st.integers(1, 12),
+        n_nodes=st.sampled_from([1, 2, 4, 8, 32]),
+        n_bins=st.sampled_from([2, 8, 16, 64]),
+        zero_frac=st.sampled_from([0.0, 0.25, 1.0]),
+    )
+    def test_property_sweep(self, seed, log_rows, features, n_nodes, n_bins,
+                            zero_frac):
+        rows = 2 ** log_rows
+        bins, grads, nids = _hist_case(seed, rows, features, n_nodes, n_bins,
+                                       zero_frac)
+        out = build_histogram_scatter(jnp.array(bins), jnp.array(grads),
+                                      jnp.array(nids), n_nodes=n_nodes,
+                                      n_bins=n_bins, row_block=128)
+        expect = ref.histogram_ref(bins, grads, nids, n_nodes, n_bins)
+        np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-3,
+                                   atol=1e-3)
+
+
+class TestHistogramOnehot:
+    """The MXU (one-hot matmul) formulation must equal the scatter kernel."""
+
+    @pytest.mark.parametrize("n_nodes,n_bins", [(1, 16), (4, 16), (8, 32)])
+    def test_matches_ref(self, n_nodes, n_bins):
+        bins, grads, nids = _hist_case(4, 1024, 6, n_nodes, n_bins)
+        out = build_histogram_onehot(jnp.array(bins), jnp.array(grads),
+                                     jnp.array(nids), n_nodes=n_nodes,
+                                     n_bins=n_bins, row_block=256)
+        expect = ref.histogram_ref(bins, grads, nids, n_nodes, n_bins)
+        np.testing.assert_allclose(np.asarray(out), expect, **HIST_TOL)
+
+    def test_equals_scatter_kernel(self):
+        bins, grads, nids = _hist_case(5, 2048, 4, 4, 16)
+        a = build_histogram_onehot(jnp.array(bins), jnp.array(grads),
+                                   jnp.array(nids), n_nodes=4, n_bins=16,
+                                   row_block=512)
+        b = build_histogram_scatter(jnp.array(bins), jnp.array(grads),
+                                    jnp.array(nids), n_nodes=4, n_bins=16,
+                                    row_block=512)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-4)
+
+
+class TestGradients:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), log_rows=st.integers(7, 13),
+           scale=st.sampled_from([0.1, 1.0, 10.0]))
+    def test_logistic_sweep(self, seed, log_rows, scale):
+        rows = 2 ** log_rows
+        rng = np.random.default_rng(seed)
+        preds = (rng.normal(size=rows) * scale).astype(np.float32)
+        labels = (rng.random(rows) < 0.5).astype(np.float32)
+        out = logistic_gradients(jnp.array(preds), jnp.array(labels),
+                                 row_block=128)
+        np.testing.assert_allclose(np.asarray(out),
+                                   ref.logistic_gradients_ref(preds, labels),
+                                   **ELEM_TOL)
+
+    def test_logistic_extreme_margins_hessian_clamped(self):
+        preds = np.array([-40.0, 40.0, 0.0, -1e3, 1e3], dtype=np.float32)
+        preds = np.tile(preds, 26)[:128]
+        labels = np.zeros(128, dtype=np.float32)
+        out = np.asarray(logistic_gradients(jnp.array(preds),
+                                            jnp.array(labels),
+                                            row_block=128))
+        assert np.all(out[:, 1] >= 1e-16)
+        assert np.all(np.isfinite(out))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), log_rows=st.integers(7, 12))
+    def test_squared_sweep(self, seed, log_rows):
+        rows = 2 ** log_rows
+        rng = np.random.default_rng(seed)
+        preds = rng.normal(size=rows).astype(np.float32)
+        labels = rng.normal(size=rows).astype(np.float32)
+        out = squared_gradients(jnp.array(preds), jnp.array(labels),
+                                row_block=128)
+        np.testing.assert_allclose(np.asarray(out),
+                                   ref.squared_gradients_ref(preds, labels),
+                                   **ELEM_TOL)
+
+
+class TestMvs:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), log_rows=st.integers(7, 12),
+           lam=st.sampled_from([0.0, 0.1, 1.0, 10.0]))
+    def test_scores_sweep(self, seed, log_rows, lam):
+        rows = 2 ** log_rows
+        rng = np.random.default_rng(seed)
+        grads = rng.normal(size=(rows, 2)).astype(np.float32)
+        out = mvs_scores(jnp.array(grads),
+                         jnp.array([lam], dtype=np.float32), row_block=128)
+        np.testing.assert_allclose(np.asarray(out),
+                                   ref.mvs_scores_ref(grads, lam), **ELEM_TOL)
+
+    def test_scores_nonnegative_and_monotone_in_gradient(self):
+        g = np.linspace(-5, 5, 128, dtype=np.float32)
+        grads = np.stack([g, np.ones_like(g)], axis=-1)
+        out = np.asarray(mvs_scores(jnp.array(grads),
+                                    jnp.array([1.0], dtype=np.float32),
+                                    row_block=128))
+        assert np.all(out >= 1.0 - 1e-6)  # sqrt(g² + 1) ≥ 1
+        assert np.all(np.diff(out[:64]) <= 1e-6)  # |g| decreasing half
+        assert np.all(np.diff(out[64:]) >= -1e-6)

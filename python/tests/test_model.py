@@ -1,0 +1,158 @@
+"""L2 graph correctness: model.py vs ref.py, plus split-evaluator edge
+cases that the Rust coordinator relies on."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _params(lam=1.0, gamma=0.0, mcw=1.0):
+    return jnp.array([lam, gamma, mcw], dtype=jnp.float32)
+
+
+def _hist_from_data(seed, rows, features, n_nodes, n_bins):
+    """Build a *consistent* histogram (as real training produces) so that
+    per-feature totals agree."""
+    rng = np.random.default_rng(seed)
+    bins = rng.integers(0, n_bins, (rows, features)).astype(np.int32)
+    grads = rng.normal(size=(rows, 2)).astype(np.float32)
+    grads[:, 1] = np.abs(grads[:, 1]) + 0.05  # hessians positive
+    nids = rng.integers(0, n_nodes, rows).astype(np.int32)
+    return ref.histogram_ref(bins, grads, nids, n_nodes, n_bins)
+
+
+class TestEvaluateSplits:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           n_nodes=st.sampled_from([1, 2, 8]),
+           features=st.sampled_from([1, 4, 11]),
+           n_bins=st.sampled_from([4, 16, 64]),
+           lam=st.sampled_from([0.5, 1.0, 5.0]),
+           gamma=st.sampled_from([0.0, 0.5]))
+    def test_matches_ref(self, seed, n_nodes, features, n_bins, lam, gamma):
+        hist = _hist_from_data(seed, 512, features, n_nodes, n_bins)
+        gain, feat, sbin, left, total = model.evaluate_splits(
+            jnp.array(hist), _params(lam, gamma, 1.0))
+        r = ref.evaluate_splits_ref(hist, lam, gamma, 1.0)
+        np.testing.assert_allclose(np.asarray(gain), r["gain"], rtol=1e-3,
+                                   atol=1e-3)
+        # Ties may fall either way under fp reassociation; when the chosen
+        # (feature, bin) differ, the gains must still agree.
+        same = np.asarray(feat) == r["feature"]
+        np.testing.assert_array_equal(np.asarray(sbin)[same],
+                                      r["split_bin"][same])
+        np.testing.assert_allclose(np.asarray(total), r["total"], rtol=1e-3,
+                                   atol=1e-3)
+
+    def test_pure_node_has_no_split(self):
+        """A node whose gradient mass sits in a single bin can't split."""
+        n_bins = 8
+        hist = np.zeros((1, 2, n_bins, 2), dtype=np.float32)
+        hist[0, :, 3, 0] = -4.0
+        hist[0, :, 3, 1] = 5.0
+        gain, feat, sbin, left, total = model.evaluate_splits(
+            jnp.array(hist), _params())
+        assert np.asarray(feat)[0] == -1
+        assert np.asarray(gain)[0] == 0.0
+        np.testing.assert_allclose(np.asarray(total)[0], [-4.0, 5.0])
+
+    def test_perfectly_separable_splits_at_boundary(self):
+        """Negative gradients in low bins, positive in high bins → the
+        evaluator must split exactly between them."""
+        n_bins = 16
+        hist = np.zeros((1, 1, n_bins, 2), dtype=np.float32)
+        hist[0, 0, :8, 0] = -1.0
+        hist[0, 0, 8:, 0] = 1.0
+        hist[0, 0, :, 1] = 1.0
+        gain, feat, sbin, left, total = model.evaluate_splits(
+            jnp.array(hist), _params(lam=1.0, gamma=0.0, mcw=1.0))
+        assert np.asarray(feat)[0] == 0
+        assert np.asarray(sbin)[0] == 7
+        np.testing.assert_allclose(np.asarray(left)[0], [-8.0, 8.0])
+
+    def test_min_child_weight_blocks_small_children(self):
+        n_bins = 8
+        hist = np.zeros((1, 1, n_bins, 2), dtype=np.float32)
+        hist[0, 0, 0] = (-1.0, 0.5)   # tiny left child
+        hist[0, 0, 7] = (10.0, 20.0)
+        gain, feat, _, _, _ = model.evaluate_splits(
+            jnp.array(hist), _params(lam=1.0, gamma=0.0, mcw=1.0))
+        assert np.asarray(feat)[0] == -1  # hl=0.5 < mcw for every cut
+
+    def test_gamma_penalty_suppresses_weak_splits(self):
+        hist = _hist_from_data(7, 256, 3, 1, 16)
+        g0 = np.asarray(model.evaluate_splits(jnp.array(hist),
+                                              _params(gamma=0.0))[0])
+        g_big = model.evaluate_splits(jnp.array(hist),
+                                      _params(gamma=float(g0[0] + 1.0)))
+        assert np.asarray(g_big[1])[0] == -1
+
+    def test_padded_feature_in_last_bin_never_selected(self):
+        """Rust pads features to the tile width with bin = n_bins-1; such
+        a column must never win a split."""
+        n_bins = 8
+        hist = _hist_from_data(9, 512, 2, 1, n_bins)
+        padded = np.zeros((1, 1, n_bins, 2), dtype=np.float32)
+        padded[0, 0, n_bins - 1] = hist[0, 0].sum(axis=0)
+        full = np.concatenate([hist, padded], axis=1)
+        _, feat, _, _, _ = model.evaluate_splits(jnp.array(full), _params())
+        assert np.asarray(feat)[0] != 2
+
+    def test_empty_node_slots_are_leaves(self):
+        """Node slots with no rows (zero histogram) must return no split."""
+        hist = np.zeros((4, 2, 8, 2), dtype=np.float32)
+        hist[0] = _hist_from_data(11, 256, 2, 1, 8)[0]
+        _, feat, _, _, _ = model.evaluate_splits(jnp.array(hist), _params())
+        assert np.all(np.asarray(feat)[1:] == -1)
+
+
+class TestHistogramStep:
+    def test_wraps_kernel(self):
+        rng = np.random.default_rng(3)
+        bins = rng.integers(0, 16, (512, 4)).astype(np.int32)
+        grads = rng.normal(size=(512, 2)).astype(np.float32)
+        nids = rng.integers(0, 4, 512).astype(np.int32)
+        (out,) = model.histogram_step(jnp.array(bins), jnp.array(grads),
+                                      jnp.array(nids), n_nodes=4, n_bins=16,
+                                      row_block=128)
+        np.testing.assert_allclose(np.asarray(out),
+                                   ref.histogram_ref(bins, grads, nids, 4,
+                                                     16),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestGradientStep:
+    @pytest.mark.parametrize("objective,oracle", [
+        ("binary:logistic", ref.logistic_gradients_ref),
+        ("reg:squarederror", ref.squared_gradients_ref),
+    ])
+    def test_objectives(self, objective, oracle):
+        rng = np.random.default_rng(4)
+        preds = rng.normal(size=8192).astype(np.float32)
+        labels = (rng.random(8192) < 0.4).astype(np.float32)
+        (out,) = model.gradient_step(jnp.array(preds), jnp.array(labels),
+                                     objective=objective)
+        np.testing.assert_allclose(np.asarray(out), oracle(preds, labels),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_unknown_objective_raises(self):
+        with pytest.raises(ValueError):
+            model.gradient_step(jnp.zeros(8192), jnp.zeros(8192),
+                                objective="rank:pairwise")
+
+
+class TestMvsStep:
+    def test_scores_and_sum(self):
+        rng = np.random.default_rng(5)
+        grads = rng.normal(size=(8192, 2)).astype(np.float32)
+        scores, total = model.mvs_step(jnp.array(grads),
+                                       jnp.array([0.7], dtype=np.float32))
+        expect = ref.mvs_scores_ref(grads, 0.7)
+        np.testing.assert_allclose(np.asarray(scores), expect, rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_allclose(float(total), expect.sum(), rtol=1e-4)

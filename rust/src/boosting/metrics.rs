@@ -1,0 +1,124 @@
+//! Evaluation metrics (Table 2 reports AUC; the others cover the
+//! regression objective and sanity logging).
+
+use crate::error::{Error, Result};
+use crate::util::stats;
+
+/// Supported evaluation metrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Auc,
+    LogLoss,
+    Rmse,
+    /// Binary classification error at p=0.5.
+    ErrorRate,
+}
+
+impl Metric {
+    pub fn parse(name: &str) -> Result<Metric> {
+        match name {
+            "auc" => Ok(Metric::Auc),
+            "logloss" => Ok(Metric::LogLoss),
+            "rmse" => Ok(Metric::Rmse),
+            "error" => Ok(Metric::ErrorRate),
+            _ => Err(Error::config(format!("unknown metric `{name}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Auc => "auc",
+            Metric::LogLoss => "logloss",
+            Metric::Rmse => "rmse",
+            Metric::ErrorRate => "error",
+        }
+    }
+
+    /// Default metric for an objective (XGBoost convention).
+    pub fn default_for(obj: crate::boosting::Objective) -> Metric {
+        match obj {
+            crate::boosting::Objective::Logistic => Metric::Auc,
+            crate::boosting::Objective::Squared => Metric::Rmse,
+        }
+    }
+
+    /// Higher-is-better?
+    pub fn maximize(&self) -> bool {
+        matches!(self, Metric::Auc)
+    }
+
+    /// Evaluate on transformed predictions (probabilities for logistic,
+    /// raw for regression).
+    pub fn compute(&self, preds: &[f32], labels: &[f32]) -> f64 {
+        assert_eq!(preds.len(), labels.len());
+        assert!(!preds.is_empty());
+        match self {
+            Metric::Auc => stats::auc(preds, labels),
+            Metric::LogLoss => {
+                let mut s = 0.0f64;
+                for (p, y) in preds.iter().zip(labels) {
+                    let p = (*p as f64).clamp(1e-15, 1.0 - 1e-15);
+                    s -= if *y > 0.5 { p.ln() } else { (1.0 - p).ln() };
+                }
+                s / preds.len() as f64
+            }
+            Metric::Rmse => {
+                let s: f64 = preds
+                    .iter()
+                    .zip(labels)
+                    .map(|(p, y)| ((p - y) as f64).powi(2))
+                    .sum();
+                (s / preds.len() as f64).sqrt()
+            }
+            Metric::ErrorRate => {
+                let wrong = preds
+                    .iter()
+                    .zip(labels)
+                    .filter(|(p, y)| (**p >= 0.5) != (**y > 0.5))
+                    .count();
+                wrong as f64 / preds.len() as f64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all() {
+        for m in [Metric::Auc, Metric::LogLoss, Metric::Rmse, Metric::ErrorRate] {
+            assert_eq!(Metric::parse(m.name()).unwrap(), m);
+        }
+        assert!(Metric::parse("ndcg").is_err());
+    }
+
+    #[test]
+    fn logloss_perfect_and_bad() {
+        let good = Metric::LogLoss.compute(&[0.999, 0.001], &[1.0, 0.0]);
+        let bad = Metric::LogLoss.compute(&[0.001, 0.999], &[1.0, 0.0]);
+        assert!(good < 0.01);
+        assert!(bad > 4.0);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        let v = Metric::Rmse.compute(&[1.0, 3.0], &[0.0, 0.0]);
+        assert!((v - (5.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn error_rate() {
+        let v = Metric::ErrorRate.compute(&[0.9, 0.2, 0.6, 0.4], &[1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(v, 0.5);
+    }
+
+    #[test]
+    fn auc_wired_through() {
+        let v = Metric::Auc.compute(&[0.1, 0.9], &[0.0, 1.0]);
+        assert_eq!(v, 1.0);
+        assert!(Metric::Auc.maximize());
+        assert!(!Metric::Rmse.maximize());
+    }
+}

@@ -1,0 +1,13 @@
+//! Boosting layer: objectives, evaluation metrics, the trained model,
+//! and raw-feature prediction.
+//!
+//! The training *loop* lives in [`crate::coordinator`] (it owns the
+//! mode-specific plumbing); this module is the pure math around it.
+
+pub mod metrics;
+pub mod model;
+pub mod objective;
+
+pub use metrics::Metric;
+pub use model::GbtModel;
+pub use objective::Objective;

@@ -1,0 +1,238 @@
+//! The trained ensemble: trees + base margin, with batch prediction and
+//! JSON (de)serialization.
+
+use crate::boosting::objective::Objective;
+use crate::data::DMatrix;
+use crate::error::{Error, Result};
+use crate::tree::Tree;
+use crate::util::json::{arr, num, obj, s, Value};
+
+/// A gradient-boosted tree ensemble.
+#[derive(Clone, Debug)]
+pub struct GbtModel {
+    pub objective: Objective,
+    pub base_margin: f32,
+    pub trees: Vec<Tree>,
+    pub n_features: usize,
+}
+
+impl GbtModel {
+    pub fn new(objective: Objective, n_features: usize) -> GbtModel {
+        GbtModel {
+            objective,
+            base_margin: objective.base_margin(),
+            trees: Vec::new(),
+            n_features,
+        }
+    }
+
+    /// Raw margin for one dense feature row.
+    pub fn predict_margin_row(&self, features: &[f32]) -> f32 {
+        let mut m = self.base_margin;
+        for t in &self.trees {
+            m += t.predict_raw(features);
+        }
+        m
+    }
+
+    /// Transformed predictions for a whole DMatrix (densifies each row;
+    /// absent entries are missing = NaN → default-left).
+    pub fn predict(&self, data: &DMatrix) -> Vec<f32> {
+        let mut dense = vec![f32::NAN; self.n_features];
+        let mut out = Vec::with_capacity(data.n_rows());
+        for r in 0..data.n_rows() {
+            dense.iter_mut().for_each(|v| *v = f32::NAN);
+            let (cols, vals) = data.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                dense[*c as usize] = *v;
+            }
+            out.push(self.objective.transform(self.predict_margin_row(&dense)));
+        }
+        out
+    }
+
+    /// Gain-based feature importance (XGBoost's `total_gain`),
+    /// normalized to sum to 1 (all-zero when the model has no splits).
+    pub fn feature_importance(&self) -> Vec<f64> {
+        let mut imp = vec![0f64; self.n_features];
+        for t in &self.trees {
+            for n in &t.nodes {
+                if !n.is_leaf() {
+                    imp[n.split_feature as usize] += n.gain as f64;
+                }
+            }
+        }
+        let total: f64 = imp.iter().sum();
+        if total > 0.0 {
+            for v in imp.iter_mut() {
+                *v /= total;
+            }
+        }
+        imp
+    }
+
+    /// Model dump (XGBoost-flavoured JSON).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("objective", s(self.objective.name())),
+            ("base_margin", num(self.base_margin as f64)),
+            ("n_features", num(self.n_features as f64)),
+            ("trees", arr(self.trees.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_json_pretty())?;
+        Ok(())
+    }
+
+    /// Parse a model dump back (round-trip for examples / tooling).
+    pub fn load(path: &std::path::Path) -> Result<GbtModel> {
+        let v = Value::parse(&std::fs::read_to_string(path)?)?;
+        let objective = Objective::parse(
+            v.get("objective")
+                .and_then(|o| o.as_str())
+                .ok_or_else(|| Error::data("model: missing objective"))?,
+        )?;
+        let base_margin = v
+            .get("base_margin")
+            .and_then(|b| b.as_f64())
+            .ok_or_else(|| Error::data("model: missing base_margin"))? as f32;
+        let n_features = v
+            .get("n_features")
+            .and_then(|n| n.as_usize())
+            .ok_or_else(|| Error::data("model: missing n_features"))?;
+        let mut trees = Vec::new();
+        for tv in v
+            .get("trees")
+            .and_then(|t| t.as_array())
+            .ok_or_else(|| Error::data("model: missing trees"))?
+        {
+            trees.push(parse_tree(tv)?);
+        }
+        Ok(GbtModel { objective, base_margin, trees, n_features })
+    }
+}
+
+fn parse_tree(v: &Value) -> Result<Tree> {
+    use crate::tree::Node;
+    let nodes_json = v.as_array().ok_or_else(|| Error::data("tree must be an array"))?;
+    let mut nodes = Vec::with_capacity(nodes_json.len());
+    for nv in nodes_json {
+        let depth = nv.get("depth").and_then(|d| d.as_usize()).unwrap_or(0);
+        let cover = nv.get("cover").and_then(|c| c.as_f64()).unwrap_or(0.0);
+        if let Some(leaf) = nv.get("leaf").and_then(|l| l.as_f64()) {
+            nodes.push(Node::leaf(leaf as f32, 0.0, cover, depth));
+        } else {
+            let get = |k: &str| {
+                nv.get(k)
+                    .and_then(|x| x.as_f64())
+                    .ok_or_else(|| Error::data(format!("tree node missing {k}")))
+            };
+            nodes.push(Node {
+                split_feature: get("split")? as i32,
+                split_bin: get("split_bin")? as i32,
+                split_value: get("split_condition")? as f32,
+                left: get("left")? as usize,
+                right: get("right")? as usize,
+                weight: 0.0,
+                gain: get("gain")? as f32,
+                sum_grad: 0.0,
+                sum_hess: cover,
+                depth,
+            });
+        }
+    }
+    Ok(Tree { nodes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::Node;
+
+    fn model() -> GbtModel {
+        let mut m = GbtModel::new(Objective::Logistic, 2);
+        let mut t = Tree::default();
+        t.nodes.push(Node {
+            split_feature: 1,
+            split_bin: 2,
+            split_value: 0.7,
+            left: 1,
+            right: 2,
+            weight: 0.0,
+            gain: 3.0,
+            sum_grad: 0.0,
+            sum_hess: 10.0,
+            depth: 0,
+        });
+        t.nodes.push(Node::leaf(-0.4, 0.0, 5.0, 1));
+        t.nodes.push(Node::leaf(0.8, 0.0, 5.0, 1));
+        m.trees.push(t);
+        m
+    }
+
+    #[test]
+    fn margin_accumulates_trees() {
+        let mut m = model();
+        let t2 = m.trees[0].clone();
+        m.trees.push(t2);
+        // f1=0.5 → left twice: margin = 0 + (-0.4)*2.
+        assert!((m.predict_margin_row(&[0.0, 0.5]) + 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn predict_transforms() {
+        let m = model();
+        let mut page = crate::data::SparsePage::new(2);
+        page.push_dense_row(&[0.0, 0.5]); // left leaf: margin -0.4
+        page.push_dense_row(&[0.0, 0.9]); // right leaf: margin 0.8
+        let d = DMatrix::from_page(page, vec![0.0, 1.0]).unwrap();
+        let p = m.predict(&d);
+        assert!((p[0] - crate::boosting::objective::sigmoid(-0.4)).abs() < 1e-6);
+        assert!((p[1] - crate::boosting::objective::sigmoid(0.8)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn missing_feature_goes_left() {
+        let m = model();
+        let mut page = crate::data::SparsePage::new(2);
+        page.push_row(&[0], &[1.0]); // feature 1 missing
+        let d = DMatrix::from_page(page, vec![0.0]).unwrap();
+        let p = m.predict(&d);
+        assert!((p[0] - crate::boosting::objective::sigmoid(-0.4)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn feature_importance_normalized() {
+        let mut m = model();
+        let t2 = m.trees[0].clone();
+        m.trees.push(t2);
+        let imp = m.feature_importance();
+        assert_eq!(imp.len(), 2);
+        assert_eq!(imp[0], 0.0); // only feature 1 splits
+        assert!((imp[1] - 1.0).abs() < 1e-12);
+        // Empty model: all zeros.
+        let empty = GbtModel::new(Objective::Logistic, 3);
+        assert_eq!(empty.feature_importance(), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("oocgb-model-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        let m = model();
+        m.save(&path).unwrap();
+        let m2 = GbtModel::load(&path).unwrap();
+        assert_eq!(m2.objective, m.objective);
+        assert_eq!(m2.trees.len(), 1);
+        for f1 in [0.5f32, 0.9] {
+            assert!(
+                (m.predict_margin_row(&[0.0, f1]) - m2.predict_margin_row(&[0.0, f1])).abs()
+                    < 1e-6
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

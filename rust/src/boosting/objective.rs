@@ -1,0 +1,120 @@
+//! Loss objectives: gradient pairs (Eq. 5) and prediction transforms.
+//!
+//! The host implementations here mirror the L1 Pallas kernels
+//! (`python/compile/kernels/gradients.py`) exactly; device modes call
+//! the AOT artifacts instead and the parity is asserted in
+//! `rust/tests/runtime_numeric.rs`.
+
+use crate::error::{Error, Result};
+
+/// A supported objective.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// `binary:logistic` — log-loss on {0,1} labels; margins are
+    /// log-odds.
+    Logistic,
+    /// `reg:squarederror` — L2 regression.
+    Squared,
+}
+
+impl Objective {
+    pub fn parse(name: &str) -> Result<Objective> {
+        match name {
+            "binary:logistic" => Ok(Objective::Logistic),
+            "reg:squarederror" => Ok(Objective::Squared),
+            _ => Err(Error::config(format!("unsupported objective `{name}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Logistic => "binary:logistic",
+            Objective::Squared => "reg:squarederror",
+        }
+    }
+
+    /// Initial margin (XGBoost base_score=0.5 → logit 0 for logistic;
+    /// 0.5 raw for regression).
+    pub fn base_margin(&self) -> f32 {
+        match self {
+            Objective::Logistic => 0.0,
+            Objective::Squared => 0.5,
+        }
+    }
+
+    /// Host gradient pairs: `out[r] = (g, h)` at the current margins.
+    pub fn gradients(&self, margins: &[f32], labels: &[f32], out: &mut Vec<[f32; 2]>) {
+        debug_assert_eq!(margins.len(), labels.len());
+        out.clear();
+        out.reserve(margins.len());
+        match self {
+            Objective::Logistic => {
+                for (m, y) in margins.iter().zip(labels) {
+                    let p = sigmoid(*m);
+                    out.push([p - y, (p * (1.0 - p)).max(1e-16)]);
+                }
+            }
+            Objective::Squared => {
+                for (m, y) in margins.iter().zip(labels) {
+                    out.push([m - y, 1.0]);
+                }
+            }
+        }
+    }
+
+    /// Margin → user-facing prediction (probability for logistic).
+    pub fn transform(&self, margin: f32) -> f32 {
+        match self {
+            Objective::Logistic => sigmoid(margin),
+            Objective::Squared => margin,
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Objective::parse("binary:logistic").unwrap(), Objective::Logistic);
+        assert_eq!(Objective::parse("reg:squarederror").unwrap(), Objective::Squared);
+        assert!(Objective::parse("multi:softmax").is_err());
+    }
+
+    #[test]
+    fn logistic_gradients() {
+        let mut out = Vec::new();
+        Objective::Logistic.gradients(&[0.0, 10.0, -10.0], &[1.0, 0.0, 1.0], &mut out);
+        // margin 0 → p=.5: g = -0.5, h = 0.25.
+        assert!((out[0][0] + 0.5).abs() < 1e-6);
+        assert!((out[0][1] - 0.25).abs() < 1e-6);
+        // saturated wrong prediction: g ≈ 1.
+        assert!((out[1][0] - 1.0).abs() < 1e-3);
+        assert!(out[1][1] >= 1e-16);
+        // saturated correct: g ≈ -1... label 1, p≈0 → g ≈ -1.
+        assert!((out[2][0] + 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn squared_gradients() {
+        let mut out = Vec::new();
+        Objective::Squared.gradients(&[2.0, -1.0], &[0.5, -1.0], &mut out);
+        assert_eq!(out[0], [1.5, 1.0]);
+        assert_eq!(out[1], [0.0, 1.0]);
+    }
+
+    #[test]
+    fn transform_logistic_is_probability() {
+        let t = |m| Objective::Logistic.transform(m);
+        assert!((t(0.0) - 0.5).abs() < 1e-6);
+        assert!(t(5.0) > 0.99);
+        assert!(t(-5.0) < 0.01);
+        assert_eq!(Objective::Squared.transform(3.5), 3.5);
+    }
+}

@@ -1,0 +1,427 @@
+//! Typed training configuration + JSON config file / CLI-override parsing.
+//!
+//! The config system mirrors XGBoost's parameter surface for the subset
+//! the paper exercises (Table 2 uses defaults except `max_depth=8`,
+//! `learning_rate=0.1`), plus the out-of-core knobs this reproduction
+//! adds: execution mode, simulated device budget, page size, prefetch
+//! depth, and the sampling method/ratio.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Which training pipeline to run — the six modes of Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// CPU histogram builder, full ELLPACK in host memory.
+    CpuInCore,
+    /// CPU histogram builder, ELLPACK pages streamed from disk.
+    CpuOutOfCore,
+    /// Device builder, full ELLPACK resident on the simulated device.
+    DeviceInCore,
+    /// Device builder, pages streamed per tree level (paper Alg. 6).
+    DeviceOutOfCoreNaive,
+    /// Device builder, gradient-based sampling + compaction (paper Alg. 7).
+    DeviceOutOfCore,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Result<ExecMode> {
+        match s {
+            "cpu" | "cpu-in-core" => Ok(ExecMode::CpuInCore),
+            "cpu-out-of-core" | "cpu-ooc" => Ok(ExecMode::CpuOutOfCore),
+            "device" | "device-in-core" | "gpu" => Ok(ExecMode::DeviceInCore),
+            "device-out-of-core-naive" | "naive-ooc" => {
+                Ok(ExecMode::DeviceOutOfCoreNaive)
+            }
+            "device-out-of-core" | "device-ooc" | "gpu-ooc" => {
+                Ok(ExecMode::DeviceOutOfCore)
+            }
+            _ => Err(Error::config(format!("unknown mode `{s}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::CpuInCore => "cpu-in-core",
+            ExecMode::CpuOutOfCore => "cpu-out-of-core",
+            ExecMode::DeviceInCore => "device-in-core",
+            ExecMode::DeviceOutOfCoreNaive => "device-out-of-core-naive",
+            ExecMode::DeviceOutOfCore => "device-out-of-core",
+        }
+    }
+
+    pub fn is_device(&self) -> bool {
+        !matches!(self, ExecMode::CpuInCore | ExecMode::CpuOutOfCore)
+    }
+
+    pub fn is_out_of_core(&self) -> bool {
+        !matches!(self, ExecMode::CpuInCore | ExecMode::DeviceInCore)
+    }
+}
+
+/// Row-sampling method (paper §2.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplingMethod {
+    /// No sampling (f is ignored; all rows kept).
+    None,
+    /// Stochastic Gradient Boosting — uniform without replacement.
+    Uniform,
+    /// Gradient-based One-Side Sampling (LightGBM).
+    Goss,
+    /// Minimal Variance Sampling (the paper's choice).
+    Mvs,
+}
+
+impl SamplingMethod {
+    pub fn parse(s: &str) -> Result<SamplingMethod> {
+        match s {
+            "none" => Ok(SamplingMethod::None),
+            "uniform" | "sgb" => Ok(SamplingMethod::Uniform),
+            "goss" => Ok(SamplingMethod::Goss),
+            "mvs" | "gradient_based" => Ok(SamplingMethod::Mvs),
+            _ => Err(Error::config(format!("unknown sampling method `{s}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplingMethod::None => "none",
+            SamplingMethod::Uniform => "uniform",
+            SamplingMethod::Goss => "goss",
+            SamplingMethod::Mvs => "mvs",
+        }
+    }
+}
+
+/// Full training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    // ---- learning task ----
+    /// `binary:logistic` or `reg:squarederror`.
+    pub objective: String,
+    /// Boosting rounds (trees).
+    pub n_rounds: usize,
+    /// Maximum tree depth.
+    pub max_depth: usize,
+    /// Shrinkage η.
+    pub learning_rate: f32,
+    /// L2 leaf-weight regularization λ (Eq. 3).
+    pub lambda: f32,
+    /// Per-leaf penalty γ (Eq. 3).
+    pub gamma: f32,
+    /// Minimum hessian sum per child.
+    pub min_child_weight: f32,
+    /// Quantization width (bins per feature).
+    pub max_bin: usize,
+
+    // ---- sampling (paper §2.4 / §3.4) ----
+    pub sampling_method: SamplingMethod,
+    /// Sampling ratio f ∈ (0, 1].
+    pub subsample: f32,
+    /// GOSS top-fraction a (b is derived as f − a).
+    pub goss_top_rate: f32,
+    /// MVS regularizer λ_MVS; `None` = estimate from the leaf value
+    /// (paper §2.4.3).
+    pub mvs_lambda: Option<f32>,
+
+    // ---- execution ----
+    pub mode: ExecMode,
+    /// Simulated device memory budget in bytes.
+    pub device_memory_bytes: u64,
+    /// Target ELLPACK page size in bytes (paper: 32 MiB).
+    pub page_size_bytes: usize,
+    /// Prefetcher queue depth (pages in flight).
+    pub prefetch_depth: usize,
+    /// Worker threads for CPU histogram building (0 = all cores).
+    pub n_threads: usize,
+    /// Directory holding AOT artifacts (manifest.json + *.hlo.txt).
+    pub artifacts_dir: String,
+    /// Scratch directory for external-memory page files.
+    pub cache_dir: String,
+
+    // ---- bookkeeping ----
+    /// Fraction of rows held out for evaluation (Table 2 uses 0.05).
+    pub eval_fraction: f32,
+    /// Evaluate every k rounds (0 = never).
+    pub eval_every: usize,
+    /// Stop when the eval metric hasn't improved for this many
+    /// evaluations (0 = disabled).  Requires an eval split.
+    pub early_stopping_rounds: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Print per-round progress.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            objective: "binary:logistic".into(),
+            n_rounds: 10,
+            max_depth: 6,
+            learning_rate: 0.3,
+            lambda: 1.0,
+            gamma: 0.0,
+            min_child_weight: 1.0,
+            max_bin: 64,
+            sampling_method: SamplingMethod::None,
+            subsample: 1.0,
+            goss_top_rate: 0.2,
+            mvs_lambda: None,
+            mode: ExecMode::CpuInCore,
+            device_memory_bytes: 256 * 1024 * 1024,
+            page_size_bytes: 32 * 1024 * 1024,
+            prefetch_depth: 2,
+            n_threads: 0,
+            artifacts_dir: "artifacts".into(),
+            cache_dir: std::env::temp_dir()
+                .join("oocgb-cache")
+                .to_string_lossy()
+                .into_owned(),
+            eval_fraction: 0.0,
+            eval_every: 1,
+            early_stopping_rounds: 0,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a JSON file, then apply `key=value` CLI overrides.
+    pub fn load(path: Option<&Path>, overrides: &[String]) -> Result<TrainConfig> {
+        let mut cfg = TrainConfig::default();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p)?;
+            let v = Value::parse(&text)?;
+            let obj = v
+                .as_object()
+                .ok_or_else(|| Error::config("config root must be an object"))?;
+            for (k, val) in obj {
+                cfg.set_json(k, val)?;
+            }
+        }
+        for ov in overrides {
+            let (k, v) = ov
+                .split_once('=')
+                .ok_or_else(|| Error::config(format!("override `{ov}` is not key=value")))?;
+            cfg.set_str(k.trim(), v.trim())?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn set_json(&mut self, key: &str, v: &Value) -> Result<()> {
+        let as_string = match v {
+            Value::Str(s) => s.clone(),
+            Value::Num(n) => format!("{n}"),
+            Value::Bool(b) => format!("{b}"),
+            _ => {
+                return Err(Error::config(format!(
+                    "config key `{key}` must be a scalar"
+                )))
+            }
+        };
+        self.set_str(key, &as_string)
+    }
+
+    /// Set a single parameter from its string form (CLI override path).
+    pub fn set_str(&mut self, key: &str, v: &str) -> Result<()> {
+        fn pf<T: std::str::FromStr>(key: &str, v: &str) -> Result<T> {
+            v.parse()
+                .map_err(|_| Error::config(format!("bad value `{v}` for `{key}`")))
+        }
+        match key {
+            "objective" => self.objective = v.to_string(),
+            "n_rounds" | "num_boost_round" => self.n_rounds = pf(key, v)?,
+            "max_depth" => self.max_depth = pf(key, v)?,
+            "learning_rate" | "eta" => self.learning_rate = pf(key, v)?,
+            "lambda" | "reg_lambda" => self.lambda = pf(key, v)?,
+            "gamma" => self.gamma = pf(key, v)?,
+            "min_child_weight" => self.min_child_weight = pf(key, v)?,
+            "max_bin" => self.max_bin = pf(key, v)?,
+            "sampling_method" => self.sampling_method = SamplingMethod::parse(v)?,
+            "subsample" | "f" => self.subsample = pf(key, v)?,
+            "goss_top_rate" => self.goss_top_rate = pf(key, v)?,
+            "mvs_lambda" => {
+                self.mvs_lambda =
+                    if v == "auto" { None } else { Some(pf(key, v)?) }
+            }
+            "mode" => self.mode = ExecMode::parse(v)?,
+            "device_memory_bytes" => self.device_memory_bytes = pf(key, v)?,
+            "device_memory_mb" => {
+                self.device_memory_bytes = pf::<u64>(key, v)? * 1024 * 1024
+            }
+            "page_size_bytes" => self.page_size_bytes = pf(key, v)?,
+            "page_size_mb" => {
+                self.page_size_bytes = pf::<usize>(key, v)? * 1024 * 1024
+            }
+            "prefetch_depth" => self.prefetch_depth = pf(key, v)?,
+            "n_threads" | "nthread" => self.n_threads = pf(key, v)?,
+            "artifacts_dir" => self.artifacts_dir = v.to_string(),
+            "cache_dir" => self.cache_dir = v.to_string(),
+            "eval_fraction" => self.eval_fraction = pf(key, v)?,
+            "eval_every" => self.eval_every = pf(key, v)?,
+            "early_stopping_rounds" => self.early_stopping_rounds = pf(key, v)?,
+            "seed" => self.seed = pf(key, v)?,
+            "verbose" => self.verbose = pf(key, v)?,
+            _ => return Err(Error::config(format!("unknown config key `{key}`"))),
+        }
+        Ok(())
+    }
+
+    /// Validate parameter ranges and combinations.
+    pub fn validate(&self) -> Result<()> {
+        if self.objective != "binary:logistic" && self.objective != "reg:squarederror"
+        {
+            return Err(Error::config(format!(
+                "unsupported objective `{}`",
+                self.objective
+            )));
+        }
+        if self.n_rounds == 0 {
+            return Err(Error::config("n_rounds must be >= 1"));
+        }
+        if self.max_depth == 0 || self.max_depth > 16 {
+            return Err(Error::config("max_depth must be in [1, 16]"));
+        }
+        if !(self.subsample > 0.0 && self.subsample <= 1.0) {
+            return Err(Error::config("subsample must be in (0, 1]"));
+        }
+        if self.max_bin < 2 || self.max_bin > 256 {
+            return Err(Error::config("max_bin must be in [2, 256]"));
+        }
+        if self.lambda < 0.0 || self.gamma < 0.0 {
+            return Err(Error::config("lambda/gamma must be >= 0"));
+        }
+        if self.lambda == 0.0 {
+            // λ=0 makes empty-child gain 0/0; the evaluator requires λ>0.
+            return Err(Error::config("lambda must be > 0 (evaluator invariant)"));
+        }
+        if self.sampling_method == SamplingMethod::Goss
+            && self.goss_top_rate >= self.subsample
+        {
+            return Err(Error::config("goss_top_rate must be < subsample"));
+        }
+        if !(0.0..0.9).contains(&self.eval_fraction) {
+            return Err(Error::config("eval_fraction must be in [0, 0.9)"));
+        }
+        Ok(())
+    }
+
+    /// Dump as a JSON object (for experiment logs).
+    pub fn to_json(&self) -> Value {
+        use crate::util::json::{num, s};
+        let mut m = BTreeMap::new();
+        m.insert("objective".into(), s(&self.objective));
+        m.insert("n_rounds".into(), num(self.n_rounds as f64));
+        m.insert("max_depth".into(), num(self.max_depth as f64));
+        m.insert("learning_rate".into(), num(self.learning_rate as f64));
+        m.insert("lambda".into(), num(self.lambda as f64));
+        m.insert("gamma".into(), num(self.gamma as f64));
+        m.insert("min_child_weight".into(), num(self.min_child_weight as f64));
+        m.insert("max_bin".into(), num(self.max_bin as f64));
+        m.insert("sampling_method".into(), s(self.sampling_method.name()));
+        m.insert("subsample".into(), num(self.subsample as f64));
+        m.insert("mode".into(), s(self.mode.name()));
+        m.insert(
+            "device_memory_bytes".into(),
+            num(self.device_memory_bytes as f64),
+        );
+        m.insert("page_size_bytes".into(), num(self.page_size_bytes as f64));
+        m.insert("prefetch_depth".into(), num(self.prefetch_depth as f64));
+        m.insert("seed".into(), num(self.seed as f64));
+        Value::Object(m)
+    }
+
+    /// Effective worker-thread count.
+    pub fn threads(&self) -> usize {
+        if self.n_threads > 0 {
+            self.n_threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [
+            ExecMode::CpuInCore,
+            ExecMode::CpuOutOfCore,
+            ExecMode::DeviceInCore,
+            ExecMode::DeviceOutOfCoreNaive,
+            ExecMode::DeviceOutOfCore,
+        ] {
+            assert_eq!(ExecMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(ExecMode::parse("quantum").is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let cfg = TrainConfig::load(
+            None,
+            &[
+                "max_depth=8".into(),
+                "eta=0.1".into(),
+                "mode=device-ooc".into(),
+                "sampling_method=mvs".into(),
+                "f=0.3".into(),
+                "device_memory_mb=64".into(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.max_depth, 8);
+        assert_eq!(cfg.learning_rate, 0.1);
+        assert_eq!(cfg.mode, ExecMode::DeviceOutOfCore);
+        assert_eq!(cfg.sampling_method, SamplingMethod::Mvs);
+        assert_eq!(cfg.subsample, 0.3);
+        assert_eq!(cfg.device_memory_bytes, 64 * 1024 * 1024);
+    }
+
+    #[test]
+    fn bad_override_rejected() {
+        assert!(TrainConfig::load(None, &["nope=1".into()]).is_err());
+        assert!(TrainConfig::load(None, &["max_depth".into()]).is_err());
+        assert!(TrainConfig::load(None, &["subsample=0".into()]).is_err());
+        assert!(TrainConfig::load(None, &["lambda=0".into()]).is_err());
+    }
+
+    #[test]
+    fn json_config_file() {
+        let dir = std::env::temp_dir().join(format!("oocgb-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(
+            &p,
+            r#"{"max_depth": 4, "objective": "reg:squarederror", "verbose": true}"#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::load(Some(&p), &["max_depth=5".into()]).unwrap();
+        assert_eq!(cfg.max_depth, 5); // CLI beats file
+        assert_eq!(cfg.objective, "reg:squarederror");
+        assert!(cfg.verbose);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn to_json_parses_back() {
+        let cfg = TrainConfig::default();
+        let v = cfg.to_json();
+        let parsed = Value::parse(&v.to_json_pretty()).unwrap();
+        assert_eq!(parsed.get("max_depth").unwrap().as_usize(), Some(6));
+    }
+}

@@ -1,0 +1,21 @@
+//! Training coordinator — the Layer-3 orchestrator that wires the
+//! paper's pipeline together for each execution mode (Table 2's six
+//! rows):
+//!
+//! 1. **Preprocess** (once): quantile-sketch the CSR pages (Algorithms
+//!    2/3), then convert to ELLPACK — one resident page in-core, or
+//!    size-capped pages spilled to a disk page file (Algorithms 4/5).
+//! 2. **Per boosting round**: compute gradient pairs (host objective or
+//!    the AOT gradient artifact), optionally sample (SGB / GOSS / MVS),
+//!    pick the data path — resident pages, streamed pages (naive
+//!    Algorithm 6), or sample-compacted page (Algorithm 7) — grow one
+//!    tree, and update the margins.
+//! 3. **Evaluate** on the held-out split (AUC for Table 2 / Figure 1).
+//!
+//! All device-side state flows through the simulated
+//! [`crate::device::DeviceContext`], so Table 1's OOM probes and the
+//! interconnect accounting fall out of ordinary training runs.
+
+pub mod session;
+
+pub use session::{TrainOutcome, TrainSession};

@@ -1,0 +1,244 @@
+//! Compressed Sparse Row pages — the unit the paper's preprocessing step
+//! writes to disk (32 MiB CSR pages, §2.3) and the quantile sketch /
+//! ELLPACK conversion streams.
+
+use crate::error::{Error, Result};
+
+/// One CSR page: a horizontal slice of the input matrix.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparsePage {
+    /// Row offsets into `indices` / `values`; length = rows + 1.
+    pub offsets: Vec<u64>,
+    /// Column indices per entry.
+    pub indices: Vec<u32>,
+    /// Feature values per entry.
+    pub values: Vec<f32>,
+    /// Total number of columns in the matrix (not just this page).
+    pub n_cols: usize,
+    /// Global row id of this page's first row.
+    pub base_rowid: u64,
+}
+
+impl SparsePage {
+    /// Empty page for `n_cols` columns.
+    pub fn new(n_cols: usize) -> Self {
+        SparsePage { offsets: vec![0], indices: vec![], values: vec![], n_cols, base_rowid: 0 }
+    }
+
+    /// Number of rows in this page.
+    pub fn n_rows(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Append one row given parallel (column, value) slices.
+    pub fn push_row(&mut self, cols: &[u32], vals: &[f32]) {
+        debug_assert_eq!(cols.len(), vals.len());
+        self.indices.extend_from_slice(cols);
+        self.values.extend_from_slice(vals);
+        self.offsets.push(self.indices.len() as u64);
+    }
+
+    /// Append a dense row (all columns present).
+    pub fn push_dense_row(&mut self, vals: &[f32]) {
+        debug_assert_eq!(vals.len(), self.n_cols);
+        self.indices.extend((0..self.n_cols as u32).into_iter());
+        self.values.extend_from_slice(vals);
+        self.offsets.push(self.indices.len() as u64);
+    }
+
+    /// Column indices of row `i` (page-local).
+    pub fn row_indices(&self, i: usize) -> &[u32] {
+        let (a, b) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
+        &self.indices[a..b]
+    }
+
+    /// Values of row `i` (page-local).
+    pub fn row_values(&self, i: usize) -> &[f32] {
+        let (a, b) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
+        &self.values[a..b]
+    }
+
+    /// Widest row in the page (ELLPACK row stride input).
+    pub fn max_row_nnz(&self) -> usize {
+        self.offsets.windows(2).map(|w| (w[1] - w[0]) as usize).max().unwrap_or(0)
+    }
+
+    /// In-memory footprint in bytes (used for page-size targeting).
+    pub fn memory_bytes(&self) -> usize {
+        self.offsets.len() * 8 + self.indices.len() * 4 + self.values.len() * 4
+    }
+
+    /// Validate structural invariants (sorted offsets, in-range columns).
+    pub fn validate(&self) -> Result<()> {
+        if self.offsets.is_empty() || self.offsets[0] != 0 {
+            return Err(Error::data("offsets must start at 0"));
+        }
+        for w in self.offsets.windows(2) {
+            if w[1] < w[0] {
+                return Err(Error::data("offsets must be non-decreasing"));
+            }
+        }
+        let last = *self.offsets.last().unwrap() as usize;
+        if last != self.indices.len() || last != self.values.len() {
+            return Err(Error::data("offsets/indices/values length mismatch"));
+        }
+        if let Some(&m) = self.indices.iter().max() {
+            if m as usize >= self.n_cols {
+                return Err(Error::data(format!(
+                    "column index {m} out of range (n_cols={})",
+                    self.n_cols
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to a length-prefixed little-endian byte buffer
+    /// (page-store wire format).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.memory_bytes() + 32);
+        out.extend_from_slice(&(self.n_cols as u64).to_le_bytes());
+        out.extend_from_slice(&self.base_rowid.to_le_bytes());
+        out.extend_from_slice(&(self.offsets.len() as u64).to_le_bytes());
+        out.extend_from_slice(&(self.indices.len() as u64).to_le_bytes());
+        for v in &self.offsets {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.indices {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Inverse of [`SparsePage::to_bytes`], with bounds checking.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SparsePage> {
+        let mut pos = 0usize;
+        let mut take_u64 = |bytes: &[u8]| -> Result<u64> {
+            if pos + 8 > bytes.len() {
+                return Err(Error::PageStore("truncated CSR page header".into()));
+            }
+            let v = u64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
+            pos += 8;
+            Ok(v)
+        };
+        let n_cols = take_u64(bytes)? as usize;
+        let base_rowid = take_u64(bytes)?;
+        let n_offsets = take_u64(bytes)? as usize;
+        let nnz = take_u64(bytes)? as usize;
+        let need = pos + n_offsets * 8 + nnz * 4 + nnz * 4;
+        if bytes.len() < need {
+            return Err(Error::PageStore(format!(
+                "truncated CSR page: have {} bytes, need {need}",
+                bytes.len()
+            )));
+        }
+        let mut offsets = Vec::with_capacity(n_offsets);
+        for i in 0..n_offsets {
+            let a = pos + i * 8;
+            offsets.push(u64::from_le_bytes(bytes[a..a + 8].try_into().unwrap()));
+        }
+        pos += n_offsets * 8;
+        let mut indices = Vec::with_capacity(nnz);
+        for i in 0..nnz {
+            let a = pos + i * 4;
+            indices.push(u32::from_le_bytes(bytes[a..a + 4].try_into().unwrap()));
+        }
+        pos += nnz * 4;
+        let mut values = Vec::with_capacity(nnz);
+        for i in 0..nnz {
+            let a = pos + i * 4;
+            values.push(f32::from_le_bytes(bytes[a..a + 4].try_into().unwrap()));
+        }
+        let page = SparsePage { offsets, indices, values, n_cols, base_rowid };
+        page.validate()?;
+        Ok(page)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    fn sample_page() -> SparsePage {
+        let mut p = SparsePage::new(4);
+        p.push_row(&[0, 2], &[1.0, 2.0]);
+        p.push_row(&[], &[]);
+        p.push_row(&[1, 2, 3], &[3.0, 4.0, 5.0]);
+        p
+    }
+
+    #[test]
+    fn push_and_access() {
+        let p = sample_page();
+        assert_eq!(p.n_rows(), 3);
+        assert_eq!(p.nnz(), 5);
+        assert_eq!(p.row_indices(0), &[0, 2]);
+        assert_eq!(p.row_values(2), &[3.0, 4.0, 5.0]);
+        assert_eq!(p.row_indices(1), &[] as &[u32]);
+        assert_eq!(p.max_row_nnz(), 3);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn dense_row() {
+        let mut p = SparsePage::new(3);
+        p.push_dense_row(&[1.0, 2.0, 3.0]);
+        assert_eq!(p.row_indices(0), &[0, 1, 2]);
+        assert_eq!(p.max_row_nnz(), 3);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut p = sample_page();
+        p.base_rowid = 77;
+        let b = p.to_bytes();
+        let q = SparsePage::from_bytes(&b).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn truncated_bytes_rejected() {
+        let b = sample_page().to_bytes();
+        for cut in [0, 7, 16, b.len() - 1] {
+            assert!(SparsePage::from_bytes(&b[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_column_rejected() {
+        let mut p = sample_page();
+        p.indices[0] = 99; // out of range
+        assert!(SparsePage::from_bytes(&p.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_arbitrary_pages() {
+        run_prop("csr roundtrip", 50, |g| {
+            let n_cols = g.usize_in(1..20);
+            let n_rows = g.usize_in(0..30);
+            let mut p = SparsePage::new(n_cols);
+            p.base_rowid = g.u64() % 1000;
+            for _ in 0..n_rows {
+                let nnz = g.usize_in(0..n_cols + 1);
+                let mut cols: Vec<u32> =
+                    (0..nnz).map(|_| g.usize_in(0..n_cols) as u32).collect();
+                cols.sort_unstable();
+                cols.dedup();
+                let vals: Vec<f32> =
+                    cols.iter().map(|_| g.f32_in(-100.0..100.0)).collect();
+                p.push_row(&cols, &vals);
+            }
+            let q = SparsePage::from_bytes(&p.to_bytes()).unwrap();
+            assert_eq!(p, q);
+        });
+    }
+}

@@ -1,0 +1,127 @@
+//! Numeric CSV reader (label column first, the UCI Higgs convention).
+//!
+//! Dense CSV is how the real Higgs dataset ships; the generator in
+//! [`crate::data::synthetic`] can also round-trip through this format so
+//! examples read "real" files.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::csr::SparsePage;
+use crate::data::dmatrix::DMatrix;
+use crate::error::{Error, Result};
+
+/// Read `label,f0,f1,...` rows.  `has_header` skips the first line.
+pub fn read<R: Read>(reader: R, has_header: bool) -> Result<DMatrix> {
+    let mut page: Option<SparsePage> = None;
+    let mut labels = Vec::new();
+    let mut buf: Vec<f32> = Vec::new();
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line?;
+        if lineno == 0 && has_header {
+            continue;
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        buf.clear();
+        for tok in line.split(',') {
+            let v: f32 = tok.trim().parse().map_err(|_| {
+                Error::data(format!("line {}: bad number `{tok}`", lineno + 1))
+            })?;
+            buf.push(v);
+        }
+        if buf.len() < 2 {
+            return Err(Error::data(format!(
+                "line {}: need label + at least one feature",
+                lineno + 1
+            )));
+        }
+        let n_cols = buf.len() - 1;
+        let p = page.get_or_insert_with(|| SparsePage::new(n_cols));
+        if p.n_cols != n_cols {
+            return Err(Error::data(format!(
+                "line {}: ragged row ({} cols, expected {})",
+                lineno + 1,
+                n_cols,
+                p.n_cols
+            )));
+        }
+        labels.push(buf[0]);
+        p.push_dense_row(&buf[1..]);
+    }
+    let page = page.ok_or_else(|| Error::data("empty csv"))?;
+    DMatrix::from_page(page, labels)
+}
+
+pub fn read_file(path: &Path, has_header: bool) -> Result<DMatrix> {
+    read(std::fs::File::open(path)?, has_header)
+}
+
+/// Write `label,f0,...` rows (dense; missing entries become 0).
+pub fn write<W: Write>(m: &DMatrix, writer: W) -> Result<()> {
+    let mut w = BufWriter::new(writer);
+    let mut dense = vec![0f32; m.n_cols()];
+    for r in 0..m.n_rows() {
+        dense.iter_mut().for_each(|v| *v = 0.0);
+        let (cols, vals) = m.row(r);
+        for (c, v) in cols.iter().zip(vals) {
+            dense[*c as usize] = *v;
+        }
+        write!(w, "{}", m.labels()[r])?;
+        for v in &dense {
+            write!(w, ",{v}")?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn write_file(m: &DMatrix, path: &Path) -> Result<()> {
+    write(m, std::fs::File::create(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let text = "1,0.5,2.0\n0,1.5,-3.0\n";
+        let m = read(text.as_bytes(), false).unwrap();
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.n_cols(), 2);
+        assert_eq!(m.labels(), &[1.0, 0.0]);
+        assert_eq!(m.row(1).1, &[1.5, -3.0]);
+    }
+
+    #[test]
+    fn header_skipped() {
+        let text = "label,a,b\n1,2,3\n";
+        let m = read(text.as_bytes(), true).unwrap();
+        assert_eq!(m.n_rows(), 1);
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        assert!(read("1,2,3\n1,2\n".as_bytes(), false).is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(read("".as_bytes(), false).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let text = "1,0.5,2\n0,1.5,-3\n";
+        let m = read(text.as_bytes(), false).unwrap();
+        let mut buf = Vec::new();
+        write(&m, &mut buf).unwrap();
+        let m2 = read(buf.as_slice(), false).unwrap();
+        assert_eq!(m.labels(), m2.labels());
+        assert_eq!(m.row(0).1, m2.row(0).1);
+    }
+}

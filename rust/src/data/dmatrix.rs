@@ -1,0 +1,225 @@
+//! In-memory training matrix: CSR pages + labels.
+//!
+//! This is the in-core data handle.  External-memory training keeps the
+//! pages on disk (see [`crate::page`] and the coordinator) and only the
+//! labels/metadata in memory — mirroring XGBoost, which always keeps
+//! `MetaInfo` resident.
+
+use crate::data::csr::SparsePage;
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// An in-memory dataset: one or more CSR pages plus per-row labels.
+#[derive(Clone, Debug, Default)]
+pub struct DMatrix {
+    pages: Vec<SparsePage>,
+    labels: Vec<f32>,
+    n_cols: usize,
+}
+
+impl DMatrix {
+    /// Build from a single page + labels.
+    pub fn from_page(page: SparsePage, labels: Vec<f32>) -> Result<DMatrix> {
+        if page.n_rows() != labels.len() {
+            return Err(Error::data(format!(
+                "rows ({}) != labels ({})",
+                page.n_rows(),
+                labels.len()
+            )));
+        }
+        page.validate()?;
+        let n_cols = page.n_cols;
+        Ok(DMatrix { pages: vec![page], labels, n_cols })
+    }
+
+    /// Build from multiple pages (already carrying correct `base_rowid`s).
+    pub fn from_pages(pages: Vec<SparsePage>, labels: Vec<f32>) -> Result<DMatrix> {
+        if pages.is_empty() {
+            return Err(Error::data("at least one page required"));
+        }
+        let n_cols = pages[0].n_cols;
+        let mut rows = 0u64;
+        for p in &pages {
+            p.validate()?;
+            if p.n_cols != n_cols {
+                return Err(Error::data("pages disagree on n_cols"));
+            }
+            if p.base_rowid != rows {
+                return Err(Error::data(format!(
+                    "page base_rowid {} != expected {rows}",
+                    p.base_rowid
+                )));
+            }
+            rows += p.n_rows() as u64;
+        }
+        if rows as usize != labels.len() {
+            return Err(Error::data("total rows != labels"));
+        }
+        Ok(DMatrix { pages, labels, n_cols })
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    pub fn labels(&self) -> &[f32] {
+        &self.labels
+    }
+
+    pub fn pages(&self) -> &[SparsePage] {
+        &self.pages
+    }
+
+    /// Take the pages out (external-memory conversion path).
+    pub fn into_parts(self) -> (Vec<SparsePage>, Vec<f32>) {
+        (self.pages, self.labels)
+    }
+
+    /// Fetch one row as (cols, vals); `row` is a global index.
+    pub fn row(&self, row: usize) -> (&[u32], &[f32]) {
+        for p in &self.pages {
+            let base = p.base_rowid as usize;
+            if row < base + p.n_rows() {
+                return (p.row_indices(row - base), p.row_values(row - base));
+            }
+        }
+        panic!("row {row} out of range");
+    }
+
+    /// Deterministic random train/eval split (Table 2 uses 0.95/0.05).
+    pub fn split(&self, eval_fraction: f32, seed: u64) -> (DMatrix, DMatrix) {
+        assert!((0.0..1.0).contains(&eval_fraction));
+        let n = self.n_rows();
+        let n_eval = (n as f64 * eval_fraction as f64).round() as usize;
+        // Fixed salt keeps the split stream independent of other seed uses.
+        const SPLIT_SALT: u64 = 0x5EED_5EED_5EED_5EED;
+        let mut rng = Rng::new(seed ^ SPLIT_SALT);
+        let idx = rng.sample_indices(n, n_eval);
+        let mut is_eval = vec![false; n];
+        for i in idx {
+            is_eval[i] = true;
+        }
+        let make = |keep_eval: bool| -> DMatrix {
+            let mut page = SparsePage::new(self.n_cols);
+            let mut labels = Vec::new();
+            for r in 0..n {
+                if is_eval[r] == keep_eval {
+                    let (c, v) = self.row(r);
+                    page.push_row(c, v);
+                    labels.push(self.labels[r]);
+                }
+            }
+            DMatrix { pages: vec![page], labels, n_cols: self.n_cols }
+        };
+        (make(false), make(true))
+    }
+
+    /// Re-chunk into pages of at most `target_bytes` (paper: 32 MiB CSR
+    /// pages) — the preprocessing step of external-memory mode.
+    pub fn to_sized_pages(&self, target_bytes: usize) -> Vec<SparsePage> {
+        let mut out = Vec::new();
+        let mut cur = SparsePage::new(self.n_cols);
+        cur.base_rowid = 0;
+        let mut next_base = 0u64;
+        for r in 0..self.n_rows() {
+            let (c, v) = self.row(r);
+            cur.push_row(c, v);
+            next_base += 1;
+            if cur.memory_bytes() >= target_bytes {
+                let mut done = SparsePage::new(self.n_cols);
+                done.base_rowid = next_base;
+                std::mem::swap(&mut cur, &mut done);
+                out.push(done);
+            }
+        }
+        if cur.n_rows() > 0 || out.is_empty() {
+            out.push(cur);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_matrix(rows: usize, cols: usize) -> DMatrix {
+        let mut page = SparsePage::new(cols);
+        let mut labels = Vec::new();
+        for r in 0..rows {
+            let vals: Vec<f32> = (0..cols).map(|c| (r * cols + c) as f32).collect();
+            page.push_dense_row(&vals);
+            labels.push((r % 2) as f32);
+        }
+        DMatrix::from_page(page, labels).unwrap()
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let m = dense_matrix(10, 3);
+        assert_eq!(m.n_rows(), 10);
+        assert_eq!(m.n_cols(), 3);
+        let (c, v) = m.row(4);
+        assert_eq!(c, &[0, 1, 2]);
+        assert_eq!(v, &[12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn label_mismatch_rejected() {
+        let mut p = SparsePage::new(2);
+        p.push_dense_row(&[1.0, 2.0]);
+        assert!(DMatrix::from_page(p, vec![1.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn multi_page_row_lookup() {
+        let m = dense_matrix(10, 2);
+        let pages = m.to_sized_pages(64); // force several pages
+        assert!(pages.len() > 1, "expected multiple pages");
+        let m2 = DMatrix::from_pages(pages, m.labels().to_vec()).unwrap();
+        for r in 0..10 {
+            assert_eq!(m.row(r), m2.row(r));
+        }
+    }
+
+    #[test]
+    fn bad_base_rowid_rejected() {
+        let m = dense_matrix(6, 2);
+        let mut pages = m.to_sized_pages(32);
+        assert!(pages.len() > 1);
+        pages[1].base_rowid += 1;
+        assert!(DMatrix::from_pages(pages, m.labels().to_vec()).is_err());
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let m = dense_matrix(100, 3);
+        let (train, eval) = m.split(0.2, 7);
+        assert_eq!(train.n_rows() + eval.n_rows(), 100);
+        assert_eq!(eval.n_rows(), 20);
+        // Deterministic:
+        let (t2, e2) = m.split(0.2, 7);
+        assert_eq!(train.labels(), t2.labels());
+        assert_eq!(eval.labels(), e2.labels());
+        // Different seed differs:
+        let (t3, _) = m.split(0.2, 8);
+        assert_ne!(train.row(0).1, t3.row(0).1);
+    }
+
+    #[test]
+    fn sized_pages_cover_all_rows() {
+        let m = dense_matrix(57, 5);
+        let pages = m.to_sized_pages(256);
+        let total: usize = pages.iter().map(|p| p.n_rows()).sum();
+        assert_eq!(total, 57);
+        let mut expect_base = 0u64;
+        for p in &pages {
+            assert_eq!(p.base_rowid, expect_base);
+            expect_base += p.n_rows() as u64;
+        }
+    }
+}

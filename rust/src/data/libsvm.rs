@@ -1,0 +1,160 @@
+//! LibSVM text format reader/writer.
+//!
+//! The paper reports its Table 1 dataset as "903 GiB on disk in LibSVM
+//! format"; this module provides the same interchange format.  Indices in
+//! files are 1-based (the LibSVM convention) and converted to 0-based in
+//! memory.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::csr::SparsePage;
+use crate::data::dmatrix::DMatrix;
+use crate::error::{Error, Result};
+
+/// Parse LibSVM text from any reader.
+pub fn read<R: Read>(reader: R) -> Result<DMatrix> {
+    let mut page = SparsePage::new(0);
+    let mut labels: Vec<f32> = Vec::new();
+    let mut max_col = 0usize;
+    let mut cols: Vec<u32> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f32 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .map_err(|_| Error::data(format!("line {}: bad label", lineno + 1)))?;
+        cols.clear();
+        vals.clear();
+        for tok in parts {
+            let (i, v) = tok.split_once(':').ok_or_else(|| {
+                Error::data(format!("line {}: token `{tok}` is not idx:val", lineno + 1))
+            })?;
+            let idx: usize = i
+                .parse()
+                .map_err(|_| Error::data(format!("line {}: bad index", lineno + 1)))?;
+            if idx == 0 {
+                return Err(Error::data(format!(
+                    "line {}: LibSVM indices are 1-based",
+                    lineno + 1
+                )));
+            }
+            let val: f32 = v
+                .parse()
+                .map_err(|_| Error::data(format!("line {}: bad value", lineno + 1)))?;
+            if let Some(&last) = cols.last() {
+                if (idx - 1) as u32 <= last {
+                    return Err(Error::data(format!(
+                        "line {}: indices must be strictly increasing",
+                        lineno + 1
+                    )));
+                }
+            }
+            cols.push((idx - 1) as u32);
+            vals.push(val);
+            max_col = max_col.max(idx);
+        }
+        page.push_row(&cols, &vals);
+        labels.push(label);
+    }
+    page.n_cols = max_col;
+    DMatrix::from_page(page, labels)
+}
+
+/// Parse a LibSVM file, forcing a column count (when the tail columns are
+/// all-sparse and absent from the file).
+pub fn read_file(path: &Path, n_cols: Option<usize>) -> Result<DMatrix> {
+    let f = std::fs::File::open(path)?;
+    let m = read(f)?;
+    match n_cols {
+        None => Ok(m),
+        Some(nc) => {
+            let (mut pages, labels) = m.into_parts();
+            for p in &mut pages {
+                if p.n_cols > nc {
+                    return Err(Error::data(format!(
+                        "file has {} cols > requested {nc}",
+                        p.n_cols
+                    )));
+                }
+                p.n_cols = nc;
+            }
+            DMatrix::from_pages(pages, labels)
+        }
+    }
+}
+
+/// Write a DMatrix to LibSVM text.
+pub fn write<W: Write>(m: &DMatrix, writer: W) -> Result<()> {
+    let mut w = BufWriter::new(writer);
+    for r in 0..m.n_rows() {
+        let (cols, vals) = m.row(r);
+        write!(w, "{}", m.labels()[r])?;
+        for (c, v) in cols.iter().zip(vals) {
+            write!(w, " {}:{}", c + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write to a file path.
+pub fn write_file(m: &DMatrix, path: &Path) -> Result<()> {
+    write(m, std::fs::File::create(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let text = "1 1:0.5 3:2.0\n0 2:1.5\n# comment\n\n1\n";
+        let m = read(text.as_bytes()).unwrap();
+        assert_eq!(m.n_rows(), 3);
+        assert_eq!(m.n_cols(), 3);
+        assert_eq!(m.labels(), &[1.0, 0.0, 1.0]);
+        let (c, v) = m.row(0);
+        assert_eq!(c, &[0, 2]);
+        assert_eq!(v, &[0.5, 2.0]);
+        assert_eq!(m.row(2).0.len(), 0);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(read("1 0:5".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_unsorted_indices() {
+        assert!(read("1 3:1 2:1".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_tokens() {
+        assert!(read("x 1:1".as_bytes()).is_err());
+        assert!(read("1 1=1".as_bytes()).is_err());
+        assert!(read("1 a:1".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let text = "1 1:0.5 3:2\n0 2:1.5\n";
+        let m = read(text.as_bytes()).unwrap();
+        let mut buf = Vec::new();
+        write(&m, &mut buf).unwrap();
+        let m2 = read(buf.as_slice()).unwrap();
+        assert_eq!(m.labels(), m2.labels());
+        for r in 0..m.n_rows() {
+            assert_eq!(m.row(r), m2.row(r));
+        }
+    }
+}

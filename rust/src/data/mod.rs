@@ -1,0 +1,16 @@
+//! Data substrate: CSR pages, in-memory DMatrix, text parsers
+//! (LibSVM / CSV) and the synthetic dataset generators used by the
+//! paper's experiments.
+//!
+//! The on-disk external-memory format (paper §2.3: data parsed into CSR
+//! pages, streamed by a prefetcher) lives in [`crate::page`]; this module
+//! defines the page *contents*.
+
+pub mod csr;
+pub mod csv;
+pub mod dmatrix;
+pub mod libsvm;
+pub mod synthetic;
+
+pub use csr::SparsePage;
+pub use dmatrix::DMatrix;

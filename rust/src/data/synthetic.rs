@@ -1,0 +1,358 @@
+//! Synthetic dataset generators.
+//!
+//! Two substitutions from DESIGN.md §Substitutions live here:
+//!
+//! * [`make_classification`] — a faithful Rust port of scikit-learn's
+//!   generator (class centroids on hypercube vertices, informative /
+//!   redundant / repeated / useless feature split, label noise).  The
+//!   paper's Table 1 dataset is "a synthetic dataset with 500 columns
+//!   generated using Scikit-learn"; this is that workload.
+//! * [`higgs_like`] — a physics-flavoured binary task standing in for the
+//!   UCI HIGGS dataset (Figure 1 / Table 2): 21 "low-level" kinematic
+//!   features plus 7 derived nonlinear features, with enough label noise
+//!   that AUC saturates in the mid-0.8s like the real data.
+//!
+//! Both are seeded and deterministic.  [`ClassificationStream`] generates
+//! pages on demand so Table 1's row sweeps never materialize the full
+//! matrix in memory.
+
+use crate::data::csr::SparsePage;
+use crate::data::dmatrix::DMatrix;
+use crate::util::rng::Rng;
+
+/// Parameters for [`make_classification`] (sklearn defaults where
+/// sensible).
+#[derive(Clone, Debug)]
+pub struct ClassificationSpec {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Informative feature count.
+    pub n_informative: usize,
+    /// Redundant features (random linear combinations of informative).
+    pub n_redundant: usize,
+    /// Fraction of labels randomly flipped.
+    pub flip_y: f32,
+    /// Centroid separation multiplier.
+    pub class_sep: f32,
+    pub seed: u64,
+}
+
+impl ClassificationSpec {
+    /// The paper's Table 1 workload shape: 500 columns.
+    pub fn table1(n_rows: usize, seed: u64) -> Self {
+        ClassificationSpec {
+            n_rows,
+            n_cols: 500,
+            n_informative: 40,
+            n_redundant: 60,
+            flip_y: 0.01,
+            class_sep: 1.0,
+            seed,
+        }
+    }
+}
+
+impl Default for ClassificationSpec {
+    fn default() -> Self {
+        ClassificationSpec {
+            n_rows: 1000,
+            n_cols: 20,
+            n_informative: 10,
+            n_redundant: 5,
+            flip_y: 0.01,
+            class_sep: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Shared per-dataset state: centroids and the redundant-feature mixing
+/// matrix, derived once from the seed so streaming generation matches
+/// batch generation row-for-row.
+struct ClassificationModel {
+    spec: ClassificationSpec,
+    /// [2][n_informative] class centroids.
+    centroids: Vec<Vec<f32>>,
+    /// [n_redundant][n_informative] mixing weights.
+    mix: Vec<Vec<f32>>,
+}
+
+impl ClassificationModel {
+    fn new(spec: ClassificationSpec) -> Self {
+        assert!(spec.n_informative + spec.n_redundant <= spec.n_cols);
+        assert!(spec.n_informative > 0);
+        let mut rng = Rng::new(spec.seed ^ 0xC1A5_51F1);
+        // Distinct hypercube vertices per class (sklearn guarantees the
+        // classes get different vertices; without this the two classes
+        // can coincide and the dataset degenerates to noise).
+        let c0: Vec<f32> = (0..spec.n_informative)
+            .map(|_| if rng.bernoulli(0.5) { spec.class_sep } else { -spec.class_sep })
+            .collect();
+        let mut c1: Vec<f32> = (0..spec.n_informative)
+            .map(|_| if rng.bernoulli(0.5) { spec.class_sep } else { -spec.class_sep })
+            .collect();
+        if c0 == c1 {
+            let flip = rng.gen_range(spec.n_informative as u64) as usize;
+            c1[flip] = -c1[flip];
+        }
+        let centroids = vec![c0, c1];
+        let mix = (0..spec.n_redundant)
+            .map(|_| (0..spec.n_informative).map(|_| rng.normal() as f32).collect())
+            .collect();
+        ClassificationModel { spec, centroids, mix }
+    }
+
+    /// Generate one row into `out`; returns the label.
+    fn gen_row(&self, rng: &mut Rng, out: &mut [f32]) -> f32 {
+        let s = &self.spec;
+        let class = rng.bernoulli(0.5) as usize;
+        let c = &self.centroids[class];
+        for i in 0..s.n_informative {
+            out[i] = c[i] + rng.normal() as f32;
+        }
+        for (j, w) in self.mix.iter().enumerate() {
+            let mut acc = 0.0f32;
+            for i in 0..s.n_informative {
+                acc += w[i] * out[i];
+            }
+            out[s.n_informative + j] = acc / (s.n_informative as f32).sqrt();
+        }
+        for k in (s.n_informative + s.n_redundant)..s.n_cols {
+            out[k] = rng.normal() as f32;
+        }
+        let mut label = class as f32;
+        if rng.bernoulli(s.flip_y as f64) {
+            label = 1.0 - label;
+        }
+        label
+    }
+}
+
+/// Dense sklearn-style classification dataset, fully materialized.
+pub fn make_classification(spec: ClassificationSpec) -> DMatrix {
+    let model = ClassificationModel::new(spec.clone());
+    let mut rng = Rng::new(spec.seed);
+    let mut page = SparsePage::new(spec.n_cols);
+    let mut labels = Vec::with_capacity(spec.n_rows);
+    let mut row = vec![0f32; spec.n_cols];
+    for _ in 0..spec.n_rows {
+        labels.push(model.gen_row(&mut rng, &mut row));
+        page.push_dense_row(&row);
+    }
+    DMatrix::from_page(page, labels).expect("generator invariant")
+}
+
+/// Streaming generator yielding fixed-row-count CSR pages — used by the
+/// Table 1 sweep so the "903 GiB" analogue never sits in RAM.
+pub struct ClassificationStream {
+    model: ClassificationModel,
+    rng: Rng,
+    emitted: usize,
+    page_rows: usize,
+}
+
+impl ClassificationStream {
+    pub fn new(spec: ClassificationSpec, page_rows: usize) -> Self {
+        assert!(page_rows > 0);
+        let rng = Rng::new(spec.seed);
+        ClassificationStream {
+            model: ClassificationModel::new(spec),
+            rng,
+            emitted: 0,
+            page_rows,
+        }
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.model.spec.n_cols
+    }
+}
+
+impl Iterator for ClassificationStream {
+    /// (page, labels for that page)
+    type Item = (SparsePage, Vec<f32>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let total = self.model.spec.n_rows;
+        if self.emitted >= total {
+            return None;
+        }
+        let n = self.page_rows.min(total - self.emitted);
+        let mut page = SparsePage::new(self.model.spec.n_cols);
+        page.base_rowid = self.emitted as u64;
+        let mut labels = Vec::with_capacity(n);
+        let mut row = vec![0f32; self.model.spec.n_cols];
+        for _ in 0..n {
+            labels.push(self.model.gen_row(&mut self.rng, &mut row));
+            page.push_dense_row(&row);
+        }
+        self.emitted += n;
+        Some((page, labels))
+    }
+}
+
+/// Number of features in [`higgs_like`] rows (21 kinematic + 7 derived,
+/// matching the UCI HIGGS layout).
+pub const HIGGS_FEATURES: usize = 28;
+
+/// Physics-flavoured stand-in for the UCI HIGGS dataset.
+///
+/// Signal events ("exotic particle") carry correlated structure between
+/// transverse momenta and the derived invariant-mass features; background
+/// events don't.  Label noise is tuned so a well-fit GBDT saturates at
+/// AUC ≈ 0.84 — the level the paper's Table 2 reports — rather than 1.0.
+pub fn higgs_like(n_rows: usize, seed: u64) -> DMatrix {
+    let mut rng = Rng::new(seed);
+    let mut page = SparsePage::new(HIGGS_FEATURES);
+    let mut labels = Vec::with_capacity(n_rows);
+    let mut row = vec![0f32; HIGGS_FEATURES];
+    for _ in 0..n_rows {
+        labels.push(higgs_row(&mut rng, &mut row));
+        page.push_dense_row(&row);
+    }
+    DMatrix::from_page(page, labels).expect("generator invariant")
+}
+
+fn higgs_row(rng: &mut Rng, out: &mut [f32]) -> f32 {
+    debug_assert_eq!(out.len(), HIGGS_FEATURES);
+    let signal = rng.bernoulli(0.53); // UCI HIGGS is ~53% signal
+    // 6% label noise caps the reachable AUC in the mid-0.8s — the level
+    // the paper's Table 2 reports for the real Higgs data.
+    let label = if rng.bernoulli(0.06) { !signal } else { signal };
+    let s = signal as i32 as f64;
+
+    // 21 "low-level" features: lepton/jet pT (exponential-ish), eta
+    // (normal), phi (uniform), b-tags (discrete).  Signal shifts the pT
+    // scale and tightens angular correlations.
+    let pt_scale = 1.0 + 0.25 * s;
+    let mut pts = [0f64; 6];
+    for (i, pt) in pts.iter_mut().enumerate() {
+        *pt = rng.exponential() * pt_scale * (1.0 + 0.1 * i as f64);
+        out[i] = *pt as f32;
+    }
+    let mut etas = [0f64; 6];
+    for (i, eta) in etas.iter_mut().enumerate() {
+        *eta = rng.normal() * (1.2 - 0.2 * s);
+        out[6 + i] = *eta as f32;
+    }
+    for i in 0..6 {
+        out[12 + i] = (rng.next_f64() * 2.0 * std::f64::consts::PI
+            - std::f64::consts::PI) as f32;
+    }
+    // b-tag-like discrete features.
+    out[18] = (rng.bernoulli(0.3 + 0.25 * s) as i32) as f32 * 2.0;
+    out[19] = (rng.bernoulli(0.25 + 0.2 * s) as i32) as f32 * 2.0;
+    out[20] = (rng.normal() * 0.5 + s * 0.3) as f32;
+
+    // 7 "derived" features: invariant-mass-like nonlinear combinations.
+    // Signal events reconstruct near a resonance (shifted mean, smaller
+    // spread); background is broad.
+    let m_base = 0.9 + 0.35 * s;
+    let spread = 0.55 - 0.25 * s;
+    let mjj = m_base + rng.normal() * spread + 0.08 * (pts[0] * pts[1]).sqrt();
+    let mjjj = mjj * (1.05 + 0.1 * rng.normal());
+    let mlv = 0.8 + 0.1 * s + rng.normal() * 0.4;
+    let mjlv = (mjj * mlv).sqrt() + rng.normal() * 0.2;
+    let mbb = m_base * 1.1 + rng.normal() * (spread * 1.2) - 0.05 * (etas[0] - etas[1]).abs();
+    let mwbb = (mbb + mlv) * 0.7 + rng.normal() * 0.3;
+    let mwwbb = (mwbb + mjj) * 0.6 + rng.normal() * 0.25;
+    out[21] = mjj as f32;
+    out[22] = mjjj as f32;
+    out[23] = mlv as f32;
+    out[24] = mjlv as f32;
+    out[25] = mbb as f32;
+    out[26] = mwbb as f32;
+    out[27] = mwwbb as f32;
+
+    label as i32 as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::auc;
+
+    #[test]
+    fn classification_shapes_and_determinism() {
+        let spec = ClassificationSpec { n_rows: 200, seed: 5, ..Default::default() };
+        let a = make_classification(spec.clone());
+        let b = make_classification(spec);
+        assert_eq!(a.n_rows(), 200);
+        assert_eq!(a.n_cols(), 20);
+        assert_eq!(a.labels(), b.labels());
+        assert_eq!(a.row(17).1, b.row(17).1);
+    }
+
+    #[test]
+    fn classification_is_learnable_linearly() {
+        // The informative block should separate classes: a crude centroid
+        // classifier must beat chance by a wide margin.
+        let spec = ClassificationSpec { n_rows: 2000, seed: 1, ..Default::default() };
+        let m = make_classification(spec);
+        // Score = mean of informative features signed by a rough direction
+        // learned from the first half.
+        let n_inf = 10;
+        let half = m.n_rows() / 2;
+        let mut dir = vec![0f64; n_inf];
+        for r in 0..half {
+            let sign = if m.labels()[r] > 0.5 { 1.0 } else { -1.0 };
+            for i in 0..n_inf {
+                dir[i] += sign * m.row(r).1[i] as f64;
+            }
+        }
+        let scores: Vec<f32> = (half..m.n_rows())
+            .map(|r| {
+                let v = m.row(r).1;
+                (0..n_inf).map(|i| dir[i] * v[i] as f64).sum::<f64>() as f32
+            })
+            .collect();
+        let labels: Vec<f32> = m.labels()[half..].to_vec();
+        let a = auc(&scores, &labels);
+        assert!(a > 0.75, "auc={a}");
+    }
+
+    #[test]
+    fn stream_matches_batch() {
+        let spec = ClassificationSpec { n_rows: 100, seed: 9, ..Default::default() };
+        let batch = make_classification(spec.clone());
+        let mut rows = 0usize;
+        let mut all_labels = Vec::new();
+        for (page, labels) in ClassificationStream::new(spec, 17) {
+            assert_eq!(page.base_rowid as usize, rows);
+            for r in 0..page.n_rows() {
+                assert_eq!(page.row_values(r), batch.row(rows + r).1);
+            }
+            rows += page.n_rows();
+            all_labels.extend(labels);
+        }
+        assert_eq!(rows, 100);
+        assert_eq!(all_labels, batch.labels());
+    }
+
+    #[test]
+    fn higgs_shapes_and_balance() {
+        let m = higgs_like(4000, 3);
+        assert_eq!(m.n_cols(), HIGGS_FEATURES);
+        let pos: usize = m.labels().iter().filter(|&&y| y > 0.5).count();
+        let frac = pos as f64 / 4000.0;
+        assert!((0.45..0.62).contains(&frac), "class balance {frac}");
+    }
+
+    #[test]
+    fn higgs_derived_features_are_informative() {
+        // Single-feature AUC of the invariant-mass block should be well
+        // above chance but below perfect (the "hard dataset" property).
+        let m = higgs_like(6000, 4);
+        let scores: Vec<f32> = (0..m.n_rows()).map(|r| m.row(r).1[21]).collect();
+        let a = auc(&scores, m.labels());
+        assert!((0.55..0.9).contains(&a), "mjj auc={a}");
+    }
+
+    #[test]
+    fn higgs_deterministic() {
+        let a = higgs_like(50, 11);
+        let b = higgs_like(50, 11);
+        assert_eq!(a.labels(), b.labels());
+        assert_eq!(a.row(49).1, b.row(49).1);
+    }
+}

@@ -1,0 +1,127 @@
+//! Host↔device interconnect cost model.
+//!
+//! The paper's central obstacle is the PCIe bottleneck (§1, §3.3, §5):
+//! streaming ELLPACK pages through the link for every tree level makes
+//! the naive algorithm slower than the CPU.  Our physical "device" is
+//! host memory, so the link is modeled: every transfer charges
+//! `latency + bytes / bandwidth` of *simulated* time to an accumulator.
+//! Benches report both wall-clock and simulated-transfer time; the
+//! naive-vs-sampled ablation reproduces the paper's §3.3 observation in
+//! the simulated column.
+
+use std::sync::Mutex;
+
+/// Transfer directions (stats are kept per direction).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    HostToDevice,
+    DeviceToHost,
+}
+
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct LinkStats {
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub h2d_transfers: u64,
+    pub d2h_transfers: u64,
+    /// Total simulated seconds spent on the link.
+    pub sim_seconds: f64,
+}
+
+/// A bandwidth/latency-parameterized link.
+#[derive(Debug)]
+pub struct Interconnect {
+    /// Per-transfer latency in seconds.
+    latency_s: f64,
+    /// Bandwidth in bytes/second.
+    bandwidth_bps: f64,
+    stats: Mutex<LinkStats>,
+}
+
+impl Interconnect {
+    pub fn new(latency_s: f64, bandwidth_bps: f64) -> Interconnect {
+        assert!(bandwidth_bps > 0.0);
+        Interconnect { latency_s, bandwidth_bps, stats: Mutex::new(LinkStats::default()) }
+    }
+
+    /// PCIe 3.0 x16: ~12.5 GB/s effective, ~10 µs per transfer — the
+    /// link the paper's V100/Titan V testbeds used.
+    pub fn pcie_gen3_x16() -> Interconnect {
+        Interconnect::new(10e-6, 12.5e9)
+    }
+
+    /// NVLink-class link for ablations (what "no PCIe bottleneck" looks
+    /// like).
+    pub fn nvlink() -> Interconnect {
+        Interconnect::new(5e-6, 150e9)
+    }
+
+    /// Record a transfer; returns the simulated seconds it costs.
+    pub fn charge(&self, dir: Dir, bytes: u64) -> f64 {
+        let secs = self.latency_s + bytes as f64 / self.bandwidth_bps;
+        let mut s = self.stats.lock().unwrap();
+        match dir {
+            Dir::HostToDevice => {
+                s.h2d_bytes += bytes;
+                s.h2d_transfers += 1;
+            }
+            Dir::DeviceToHost => {
+                s.d2h_bytes += bytes;
+                s.d2h_transfers += 1;
+            }
+        }
+        s.sim_seconds += secs;
+        secs
+    }
+
+    pub fn stats(&self) -> LinkStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn reset(&self) {
+        *self.stats.lock().unwrap() = LinkStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_accumulates() {
+        let link = Interconnect::new(1e-6, 1e9);
+        let t1 = link.charge(Dir::HostToDevice, 1_000_000);
+        assert!((t1 - (1e-6 + 1e-3)).abs() < 1e-12);
+        link.charge(Dir::DeviceToHost, 500);
+        let s = link.stats();
+        assert_eq!(s.h2d_bytes, 1_000_000);
+        assert_eq!(s.d2h_bytes, 500);
+        assert_eq!(s.h2d_transfers, 1);
+        assert_eq!(s.d2h_transfers, 1);
+        assert!(s.sim_seconds > t1);
+    }
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let link = Interconnect::pcie_gen3_x16();
+        let small = link.charge(Dir::HostToDevice, 64);
+        // 64 B at 12.5 GB/s is ~5 ns; latency is 10 µs.
+        assert!(small > 9e-6 && small < 11e-6);
+    }
+
+    #[test]
+    fn nvlink_faster_than_pcie() {
+        let pcie = Interconnect::pcie_gen3_x16();
+        let nv = Interconnect::nvlink();
+        let b = 256 * 1024 * 1024;
+        assert!(nv.charge(Dir::HostToDevice, b) < pcie.charge(Dir::HostToDevice, b));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let link = Interconnect::pcie_gen3_x16();
+        link.charge(Dir::HostToDevice, 1024);
+        link.reset();
+        assert_eq!(link.stats(), LinkStats::default());
+    }
+}

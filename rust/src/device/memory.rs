@@ -1,0 +1,231 @@
+//! Device memory budget simulation.
+//!
+//! All device-side state in the pipeline allocates through this manager;
+//! allocations past the budget fail with [`Error::DeviceOom`] — the
+//! signal the Table 1 sweep probes.  Guards are RAII so the accounting
+//! can't leak, and a peak/high-water mark plus a per-tag breakdown are
+//! kept for EXPERIMENTS.md reporting.
+
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Default, Clone)]
+struct Inner {
+    used: u64,
+    peak: u64,
+    /// (tag, currently allocated bytes, lifetime allocation count)
+    tags: Vec<(&'static str, u64, u64)>,
+}
+
+/// Byte-budget allocator for the simulated device.
+#[derive(Debug)]
+pub struct MemoryManager {
+    capacity: u64,
+    inner: Mutex<Inner>,
+}
+
+/// Point-in-time snapshot of allocator state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemStats {
+    pub capacity: u64,
+    pub used: u64,
+    pub peak: u64,
+    /// (tag, live bytes, lifetime allocations)
+    pub tags: Vec<(&'static str, u64, u64)>,
+}
+
+impl MemoryManager {
+    pub fn new(capacity: u64) -> MemoryManager {
+        MemoryManager { capacity, inner: Mutex::new(Inner::default()) }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Allocate `bytes` under `tag`; fails (without side effects) when the
+    /// budget would be exceeded.
+    pub fn alloc(self: &Arc<Self>, tag: &'static str, bytes: u64) -> Result<DeviceAlloc> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.used + bytes > self.capacity {
+                return Err(Error::DeviceOom {
+                    requested: bytes,
+                    used: inner.used,
+                    capacity: self.capacity,
+                    tag,
+                });
+            }
+            inner.used += bytes;
+            inner.peak = inner.peak.max(inner.used);
+            if let Some(t) = inner.tags.iter_mut().find(|(n, ..)| *n == tag) {
+                t.1 += bytes;
+                t.2 += 1;
+            } else {
+                inner.tags.push((tag, bytes, 1));
+            }
+        }
+        Ok(DeviceAlloc { mgr: Arc::clone(self), bytes, tag })
+    }
+
+    fn free(&self, tag: &'static str, bytes: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        debug_assert!(inner.used >= bytes);
+        inner.used -= bytes;
+        if let Some(t) = inner.tags.iter_mut().find(|(n, ..)| *n == tag) {
+            t.1 = t.1.saturating_sub(bytes);
+        }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.inner.lock().unwrap().used
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.inner.lock().unwrap().peak
+    }
+
+    pub fn stats(&self) -> MemStats {
+        let inner = self.inner.lock().unwrap();
+        MemStats {
+            capacity: self.capacity,
+            used: inner.used,
+            peak: inner.peak,
+            tags: inner.tags.clone(),
+        }
+    }
+
+    /// Reset the peak marker (between bench phases).
+    pub fn reset_peak(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.peak = inner.used;
+    }
+}
+
+/// RAII guard for one device allocation.
+#[derive(Debug)]
+pub struct DeviceAlloc {
+    mgr: Arc<MemoryManager>,
+    bytes: u64,
+    tag: &'static str,
+}
+
+impl DeviceAlloc {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Grow/shrink this allocation in place (used by accumulating
+    /// buffers); fails on budget exhaustion without losing the original.
+    pub fn resize(&mut self, new_bytes: u64) -> Result<()> {
+        if new_bytes == self.bytes {
+            return Ok(());
+        }
+        if new_bytes > self.bytes {
+            let extra = self.mgr.alloc(self.tag, new_bytes - self.bytes)?;
+            std::mem::forget(extra); // merged into self
+        } else {
+            self.mgr.free(self.tag, self.bytes - new_bytes);
+        }
+        self.bytes = new_bytes;
+        Ok(())
+    }
+}
+
+impl Drop for DeviceAlloc {
+    fn drop(&mut self) {
+        self.mgr.free(self.tag, self.bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let m = Arc::new(MemoryManager::new(100));
+        let a = m.alloc("a", 60).unwrap();
+        assert_eq!(m.used(), 60);
+        let b = m.alloc("b", 40).unwrap();
+        assert_eq!(m.used(), 100);
+        drop(a);
+        assert_eq!(m.used(), 40);
+        drop(b);
+        assert_eq!(m.used(), 0);
+        assert_eq!(m.peak(), 100);
+    }
+
+    #[test]
+    fn oom_is_clean() {
+        let m = Arc::new(MemoryManager::new(100));
+        let _a = m.alloc("a", 80).unwrap();
+        let err = m.alloc("b", 30).unwrap_err();
+        assert!(err.is_device_oom());
+        match err {
+            Error::DeviceOom { requested, used, capacity, tag } => {
+                assert_eq!((requested, used, capacity, tag), (30, 80, 100, "b"));
+            }
+            _ => unreachable!(),
+        }
+        // Failed alloc must not change accounting.
+        assert_eq!(m.used(), 80);
+        // And a fitting request still succeeds.
+        assert!(m.alloc("c", 20).is_ok());
+    }
+
+    #[test]
+    fn tag_breakdown() {
+        let m = Arc::new(MemoryManager::new(1000));
+        let _a = m.alloc("ellpack", 100).unwrap();
+        let _b = m.alloc("ellpack", 200).unwrap();
+        let _c = m.alloc("hist", 50).unwrap();
+        let stats = m.stats();
+        let ell = stats.tags.iter().find(|(n, ..)| *n == "ellpack").unwrap();
+        assert_eq!((ell.1, ell.2), (300, 2));
+        let hist = stats.tags.iter().find(|(n, ..)| *n == "hist").unwrap();
+        assert_eq!((hist.1, hist.2), (50, 1));
+    }
+
+    #[test]
+    fn resize_grow_and_shrink() {
+        let m = Arc::new(MemoryManager::new(100));
+        let mut a = m.alloc("buf", 40).unwrap();
+        a.resize(90).unwrap();
+        assert_eq!(m.used(), 90);
+        assert!(a.resize(150).is_err());
+        assert_eq!(m.used(), 90); // unchanged after failed grow
+        a.resize(10).unwrap();
+        assert_eq!(m.used(), 10);
+        drop(a);
+        assert_eq!(m.used(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_rejects_everything() {
+        let m = Arc::new(MemoryManager::new(0));
+        assert!(m.alloc("x", 1).is_err());
+        assert!(m.alloc("x", 0).is_ok());
+    }
+
+    #[test]
+    fn concurrent_alloc_consistency() {
+        let m = Arc::new(MemoryManager::new(1_000_000));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    let a = m.alloc("t", 100).unwrap();
+                    drop(a);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.used(), 0);
+        assert!(m.peak() <= 8 * 100);
+    }
+}

@@ -1,0 +1,57 @@
+//! Simulated accelerator: memory budget + interconnect cost model
+//! (DESIGN.md §Hardware-Adaptation).
+//!
+//! The paper's experiments hinge on two physical properties of a real
+//! GPU: (1) device memory is small and allocation beyond it fails —
+//! Table 1 probes exactly that; (2) the PCIe link is slow relative to
+//! device bandwidth — §3.3 shows the naive streaming algorithm drowning
+//! in transfers.  Neither property exists on the CPU-backed PJRT device
+//! this reproduction executes on, so both are *modeled*:
+//!
+//! * [`MemoryManager`] — every allocation the device pipeline makes
+//!   (ELLPACK pages, gradient buffers, histograms, sample buffers) is
+//!   registered against a configurable byte budget and fails with
+//!   [`crate::Error::DeviceOom`] when it would exceed it.  RAII guards
+//!   free on drop, so peak tracking is exact.
+//! * [`Interconnect`] — every host↔device copy charges
+//!   `latency + bytes / bandwidth` of simulated transfer time, recorded
+//!   separately from wall-clock so benches can report both.
+
+pub mod interconnect;
+pub mod memory;
+pub mod timing;
+
+pub use interconnect::{Dir, Interconnect, LinkStats};
+pub use memory::{DeviceAlloc, MemStats, MemoryManager};
+pub use timing::ComputeModel;
+
+use std::sync::Arc;
+
+/// Bundle of the simulated-device facilities a training session holds.
+#[derive(Clone)]
+pub struct DeviceContext {
+    pub mem: Arc<MemoryManager>,
+    pub link: Arc<Interconnect>,
+    /// Modeled kernel time (see [`timing`]).
+    pub compute: Arc<ComputeModel>,
+}
+
+impl DeviceContext {
+    /// A device with `capacity` bytes of memory and a PCIe-3.0-x16-like
+    /// link (the paper's testbed interconnect).
+    pub fn new(capacity: u64) -> DeviceContext {
+        DeviceContext {
+            mem: Arc::new(MemoryManager::new(capacity)),
+            link: Arc::new(Interconnect::pcie_gen3_x16()),
+            compute: Arc::new(ComputeModel::v100()),
+        }
+    }
+
+    pub fn with_link(capacity: u64, link: Interconnect) -> DeviceContext {
+        DeviceContext {
+            mem: Arc::new(MemoryManager::new(capacity)),
+            link: Arc::new(link),
+            compute: Arc::new(ComputeModel::v100()),
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Device *compute* timing model.
+//!
+//! The physical executor behind the PJRT client is the host CPU, so
+//! wall-clock cannot exhibit the paper's "GPU ≫ CPU" ordering.  Like the
+//! memory budget and the interconnect, device kernel time is therefore
+//! *modeled*: every artifact execution charges an estimate derived from
+//! the bytes it touches at V100-class effective bandwidth plus a kernel
+//! launch overhead.  Benches report this simulated column next to
+//! wall-clock (EXPERIMENTS.md §Table 2 discusses the two).
+//!
+//! The histogram kernel is memory-bound on real hardware (ELLPACK reads
+//! + gradient reads + atomic histogram updates), so a bandwidth model is
+//! the right first-order estimate; MXU-style compute time for the
+//! one-hot formulation is far below the memory time at these shapes
+//! (DESIGN.md §Perf L1 quantifies).
+
+use std::sync::Mutex;
+
+/// Accumulating kernel-time model.
+#[derive(Debug)]
+pub struct ComputeModel {
+    /// Effective device memory bandwidth (bytes/s) for scatter-heavy
+    /// kernels.
+    bytes_per_sec: f64,
+    /// Per-kernel launch overhead (s).
+    launch_s: f64,
+    state: Mutex<(f64, u64)>, // (seconds, kernel count)
+}
+
+impl ComputeModel {
+    pub fn new(bytes_per_sec: f64, launch_s: f64) -> ComputeModel {
+        ComputeModel { bytes_per_sec, launch_s, state: Mutex::new((0.0, 0)) }
+    }
+
+    /// V100-class: 900 GB/s HBM2 de-rated to 1/3 for atomic-heavy
+    /// histogram kernels; ~5 µs launch.
+    pub fn v100() -> ComputeModel {
+        ComputeModel::new(300e9, 5e-6)
+    }
+
+    /// Charge one kernel that touches `bytes`; returns its modeled
+    /// seconds.
+    pub fn charge_kernel(&self, bytes: u64) -> f64 {
+        let secs = self.launch_s + bytes as f64 / self.bytes_per_sec;
+        let mut s = self.state.lock().unwrap();
+        s.0 += secs;
+        s.1 += 1;
+        secs
+    }
+
+    /// (total modeled seconds, kernels charged).
+    pub fn stats(&self) -> (f64, u64) {
+        *self.state.lock().unwrap()
+    }
+
+    pub fn reset(&self) {
+        *self.state.lock().unwrap() = (0.0, 0);
+    }
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        ComputeModel::v100()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let m = ComputeModel::new(1e9, 1e-6);
+        let t = m.charge_kernel(1_000_000);
+        assert!((t - (1e-6 + 1e-3)).abs() < 1e-12);
+        m.charge_kernel(0);
+        let (secs, n) = m.stats();
+        assert_eq!(n, 2);
+        assert!(secs > t);
+        m.reset();
+        assert_eq!(m.stats(), (0.0, 0));
+    }
+
+    #[test]
+    fn launch_floor() {
+        let m = ComputeModel::v100();
+        assert!(m.charge_kernel(64) >= 5e-6);
+    }
+}

@@ -1,0 +1,207 @@
+//! CSR → ELLPACK conversion (paper Algorithms 4 and 5).
+//!
+//! The in-core path converts everything into one page (Algorithm 4).
+//! The out-of-core path accumulates CSR pages and spills a size-capped
+//! ELLPACK page whenever the estimate crosses the configured limit
+//! (Algorithm 5; XGBoost and the paper use 32 MiB).
+
+use crate::data::SparsePage;
+use crate::ellpack::page::{EllpackPage, EllpackWriter};
+use crate::sketch::HistogramCuts;
+
+/// Converts quantized CSR rows into size-capped ELLPACK pages.
+pub struct EllpackBuilder<'a> {
+    cuts: &'a HistogramCuts,
+    row_stride: usize,
+    dense: bool,
+    page_size_bytes: usize,
+    /// Pending CSR pages (Algorithm 5's `list`).
+    pending: Vec<&'a SparsePage>,
+    pending_rows: usize,
+    next_base: u64,
+    scratch: Vec<u32>,
+}
+
+impl<'a> EllpackBuilder<'a> {
+    /// `row_stride` must be the max row nnz across the *whole* dataset
+    /// (all pages share one stride — the ELLPACK invariant).
+    pub fn new(
+        cuts: &'a HistogramCuts,
+        row_stride: usize,
+        dense: bool,
+        page_size_bytes: usize,
+    ) -> Self {
+        EllpackBuilder {
+            cuts,
+            row_stride,
+            dense,
+            page_size_bytes: page_size_bytes.max(1),
+            pending: Vec::new(),
+            pending_rows: 0,
+            next_base: 0,
+            scratch: vec![0u32; row_stride],
+        }
+    }
+
+    /// Symbol alphabet size: total bins + 1 null.
+    pub fn n_symbols(&self) -> u32 {
+        *self.cuts.ptrs.last().unwrap() + 1
+    }
+
+    /// Feed one CSR page; returns any completed ELLPACK page(s)
+    /// (Algorithm 5 loop body).
+    pub fn push_page(&mut self, page: &'a SparsePage, out: &mut Vec<EllpackPage>) {
+        self.pending_rows += page.n_rows();
+        self.pending.push(page);
+        if EllpackPage::estimated_bytes(self.pending_rows, self.row_stride, self.n_symbols())
+            >= self.page_size_bytes
+        {
+            out.push(self.convert_pending());
+        }
+    }
+
+    /// Flush the remainder (call once at end of input).
+    pub fn finish(mut self, out: &mut Vec<EllpackPage>) {
+        if self.pending_rows > 0 {
+            out.push(self.convert_pending());
+        }
+    }
+
+    /// Algorithm 4: convert the accumulated CSR pages into one ELLPACK
+    /// page.
+    fn convert_pending(&mut self) -> EllpackPage {
+        let mut w = EllpackWriter::new(
+            self.pending_rows,
+            self.row_stride,
+            self.n_symbols(),
+            self.dense,
+        );
+        for page in self.pending.drain(..) {
+            for r in 0..page.n_rows() {
+                let cols = page.row_indices(r);
+                let vals = page.row_values(r);
+                let syms = &mut self.scratch[..cols.len()];
+                for ((c, v), s) in cols.iter().zip(vals).zip(syms.iter_mut()) {
+                    let f = *c as usize;
+                    *s = self.cuts.ptrs[f] + self.cuts.search_bin(f, *v);
+                }
+                w.push_row(&self.scratch[..cols.len()]);
+            }
+        }
+        let page = w.finish(self.next_base);
+        self.next_base += self.pending_rows as u64;
+        self.pending_rows = 0;
+        page
+    }
+}
+
+/// One-shot in-core conversion (Algorithm 4): everything in one page.
+pub fn convert_in_core(
+    pages: &[SparsePage],
+    cuts: &HistogramCuts,
+    row_stride: usize,
+    dense: bool,
+) -> EllpackPage {
+    let mut b = EllpackBuilder::new(cuts, row_stride, dense, usize::MAX);
+    let mut out = Vec::new();
+    for p in pages {
+        b.push_page(p, &mut out);
+    }
+    b.finish(&mut out);
+    assert_eq!(out.len(), 1);
+    out.pop().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{make_classification, ClassificationSpec};
+
+    fn setup(rows: usize) -> (crate::data::DMatrix, HistogramCuts) {
+        let spec = ClassificationSpec {
+            n_rows: rows,
+            n_cols: 6,
+            n_informative: 3,
+            n_redundant: 2,
+            ..Default::default()
+        };
+        let m = make_classification(spec);
+        let cuts = HistogramCuts::build(m.pages(), m.n_cols(), 8).unwrap();
+        (m, cuts)
+    }
+
+    #[test]
+    fn in_core_symbols_match_search_bin() {
+        let (m, cuts) = setup(200);
+        let page = convert_in_core(m.pages(), &cuts, m.n_cols(), true);
+        assert_eq!(page.n_rows(), 200);
+        assert!(page.is_dense());
+        for r in 0..m.n_rows() {
+            let (_, vals) = m.row(r);
+            for (f, v) in vals.iter().enumerate() {
+                let want = cuts.ptrs[f] + cuts.search_bin(f, *v);
+                assert_eq!(page.get(r, f), want, "r={r} f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn paged_conversion_matches_in_core() {
+        let (m, cuts) = setup(300);
+        let whole = convert_in_core(m.pages(), &cuts, m.n_cols(), true);
+        // Chop into small CSR pages, convert with a small page cap.
+        let csr_pages = m.to_sized_pages(2048);
+        assert!(csr_pages.len() > 2);
+        let mut b = EllpackBuilder::new(&cuts, m.n_cols(), true, 500);
+        let mut out = Vec::new();
+        for p in &csr_pages {
+            b.push_page(p, &mut out);
+        }
+        b.finish(&mut out);
+        assert!(out.len() > 1, "expected multiple ELLPACK pages");
+        // Page rows must concatenate to the in-core page.
+        let mut row = 0usize;
+        for ep in &out {
+            assert_eq!(ep.base_rowid as usize, row);
+            for r in 0..ep.n_rows() {
+                for k in 0..ep.row_stride() {
+                    assert_eq!(ep.get(r, k), whole.get(row + r, k));
+                }
+            }
+            row += ep.n_rows();
+        }
+        assert_eq!(row, 300);
+    }
+
+    #[test]
+    fn page_cap_respected() {
+        let (m, cuts) = setup(400);
+        let csr_pages = m.to_sized_pages(1024);
+        let cap = 2000usize;
+        let mut b = EllpackBuilder::new(&cuts, m.n_cols(), true, cap);
+        let mut out = Vec::new();
+        for p in &csr_pages {
+            b.push_page(p, &mut out);
+        }
+        b.finish(&mut out);
+        for (i, ep) in out.iter().enumerate() {
+            // A page may overshoot by at most one CSR page worth of rows,
+            // and only the last page may be small.
+            if i + 1 < out.len() {
+                assert!(ep.memory_bytes() >= cap / 2, "page {i} too small");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_rows_null_padded() {
+        let mut p = SparsePage::new(3);
+        p.push_row(&[0, 2], &[1.0, 5.0]);
+        p.push_row(&[1], &[2.0]);
+        let cuts = HistogramCuts::build(&[p.clone()], 3, 4).unwrap();
+        let page = convert_in_core(&[p], &cuts, 2, false);
+        assert_eq!(page.row_stride(), 2);
+        assert!(!page.is_dense());
+        assert_eq!(page.get(1, 1), page.null_symbol());
+    }
+}

@@ -1,0 +1,180 @@
+//! Page compaction (paper Algorithm 7's `Compact` step).
+//!
+//! After gradient-based sampling, the rows that survived are gathered
+//! from all ELLPACK pages into a single device-resident page, and the
+//! in-core tree construction algorithm runs on that page.  The mapping
+//! from compacted row → original row is returned so gradients and
+//! positions can be gathered consistently.
+
+use crate::ellpack::page::{EllpackPage, EllpackWriter};
+
+/// Incremental compactor: feed pages in `base_rowid` order together with
+/// the global selection mask.
+pub struct Compactor<'m> {
+    /// Global per-row selection mask.
+    mask: &'m [bool],
+    writer: EllpackWriter,
+    /// original row id per compacted row.
+    row_map: Vec<u64>,
+    scratch: Vec<u32>,
+}
+
+impl<'m> Compactor<'m> {
+    /// `n_selected` must equal the number of `true` entries in `mask`.
+    pub fn new(
+        mask: &'m [bool],
+        n_selected: usize,
+        row_stride: usize,
+        n_symbols: u32,
+        dense: bool,
+    ) -> Self {
+        Compactor {
+            mask,
+            writer: EllpackWriter::new(n_selected, row_stride, n_symbols, dense),
+            row_map: Vec::with_capacity(n_selected),
+            scratch: vec![0u32; row_stride],
+        }
+    }
+
+    /// Copy the selected rows of `page` into the compacted page
+    /// (Algorithm 7: `Compact(sampled_page, ellpack_page)`).
+    pub fn push_page(&mut self, page: &EllpackPage) {
+        let base = page.base_rowid as usize;
+        for r in 0..page.n_rows() {
+            if !self.mask[base + r] {
+                continue;
+            }
+            page.unpack_row_into(r, &mut self.scratch);
+            self.writer.push_row(&self.scratch);
+            self.row_map.push((base + r) as u64);
+        }
+    }
+
+    /// Rows gathered so far.
+    pub fn rows_written(&self) -> usize {
+        self.writer.rows_written()
+    }
+
+    /// Finish; returns the compacted page and the compacted→original row
+    /// map.
+    pub fn finish(self) -> (EllpackPage, Vec<u64>) {
+        (self.writer.finish(0), self.row_map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    /// Build `n_pages` pages of `rows_per` rows with random symbols.
+    fn make_pages(
+        n_pages: usize,
+        rows_per: usize,
+        stride: usize,
+        n_symbols: u32,
+        seed: u64,
+    ) -> Vec<EllpackPage> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        let mut base = 0u64;
+        for _ in 0..n_pages {
+            let mut w = EllpackWriter::new(rows_per, stride, n_symbols, true);
+            for _ in 0..rows_per {
+                let row: Vec<u32> = (0..stride)
+                    .map(|_| rng.gen_range(n_symbols as u64 - 1) as u32)
+                    .collect();
+                w.push_row(&row);
+            }
+            out.push(w.finish(base));
+            base += rows_per as u64;
+        }
+        out
+    }
+
+    #[test]
+    fn compaction_preserves_selected_rows_exactly() {
+        let pages = make_pages(3, 10, 4, 16, 1);
+        let mut rng = Rng::new(2);
+        let mask: Vec<bool> = (0..30).map(|_| rng.bernoulli(0.4)).collect();
+        let n_sel = mask.iter().filter(|&&b| b).count();
+        let mut c = Compactor::new(&mask, n_sel, 4, 16, true);
+        for p in &pages {
+            c.push_page(p);
+        }
+        let (compacted, row_map) = c.finish();
+        assert_eq!(compacted.n_rows(), n_sel);
+        assert_eq!(row_map.len(), n_sel);
+        for (cr, &orig) in row_map.iter().enumerate() {
+            let page = &pages[orig as usize / 10];
+            let pr = orig as usize % 10;
+            for k in 0..4 {
+                assert_eq!(compacted.get(cr, k), page.get(pr, k));
+            }
+        }
+        // row_map ascending (pages processed in order).
+        for w in row_map.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn empty_selection() {
+        let pages = make_pages(2, 5, 3, 8, 3);
+        let mask = vec![false; 10];
+        let mut c = Compactor::new(&mask, 0, 3, 8, true);
+        for p in &pages {
+            c.push_page(p);
+        }
+        let (compacted, row_map) = c.finish();
+        assert_eq!(compacted.n_rows(), 0);
+        assert!(row_map.is_empty());
+    }
+
+    #[test]
+    fn full_selection_is_concatenation() {
+        let pages = make_pages(2, 7, 3, 8, 4);
+        let mask = vec![true; 14];
+        let mut c = Compactor::new(&mask, 14, 3, 8, true);
+        for p in &pages {
+            c.push_page(p);
+        }
+        let (compacted, row_map) = c.finish();
+        assert_eq!(compacted.n_rows(), 14);
+        assert_eq!(row_map, (0..14u64).collect::<Vec<_>>());
+        for r in 0..14usize {
+            let page = &pages[r / 7];
+            for k in 0..3 {
+                assert_eq!(compacted.get(r, k), page.get(r % 7, k));
+            }
+        }
+    }
+
+    #[test]
+    fn prop_compaction_row_count_and_content() {
+        run_prop("compaction", 25, |g| {
+            let n_pages = g.usize_in(1..5);
+            let rows_per = g.usize_in(1..12);
+            let stride = g.usize_in(1..6);
+            let total = n_pages * rows_per;
+            let pages = make_pages(n_pages, rows_per, stride, 32, g.u64());
+            let mask: Vec<bool> = (0..total).map(|_| g.bool()).collect();
+            let n_sel = mask.iter().filter(|&&b| b).count();
+            let mut c = Compactor::new(&mask, n_sel, stride, 32, true);
+            for p in &pages {
+                c.push_page(p);
+            }
+            let (compacted, row_map) = c.finish();
+            assert_eq!(compacted.n_rows(), n_sel);
+            for (cr, &orig) in row_map.iter().enumerate() {
+                assert!(mask[orig as usize]);
+                let page = &pages[orig as usize / rows_per];
+                let pr = orig as usize % rows_per;
+                for k in 0..stride {
+                    assert_eq!(compacted.get(cr, k), page.get(pr, k));
+                }
+            }
+        });
+    }
+}

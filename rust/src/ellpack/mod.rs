@@ -1,0 +1,21 @@
+//! ELLPACK compressed quantized matrix (paper §3.2, Algorithms 4–5).
+//!
+//! After quantization every feature value becomes a small bin index, so
+//! the matrix is stored as fixed-stride rows of bit-packed symbols —
+//! XGBoost's `EllpackPage`.  The fixed stride is what makes the format
+//! device-friendly (coalesced access / clean `BlockSpec` tiling), and
+//! the bit-packing is where the "903 GiB LibSVM → fits on one GPU with
+//! sampling" compression comes from.
+//!
+//! * [`page::EllpackPage`] — the page itself (bit-packed storage).
+//! * [`builder::EllpackBuilder`] — CSR page(s) → size-capped ELLPACK
+//!   pages (Algorithm 5's accumulate-convert-spill loop).
+//! * [`compact`] — gather sampled rows from many pages into one
+//!   (Algorithm 7's `Compact` step).
+
+pub mod builder;
+pub mod compact;
+pub mod page;
+
+pub use builder::EllpackBuilder;
+pub use page::EllpackPage;

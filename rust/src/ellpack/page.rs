@@ -1,0 +1,428 @@
+//! Bit-packed ELLPACK page.
+//!
+//! Layout: `n_rows × row_stride` symbols, each `bits` wide, packed
+//! contiguously into little-endian `u64` words.  A symbol is a *global*
+//! bin index (`cuts.ptrs[f] + local_bin`, the XGBoost `gidx` convention);
+//! the reserved value [`EllpackPage::null_symbol`] marks padding entries
+//! of short (sparse) rows.  Dense pages put feature `f` at row position
+//! `f`, which is what lets the device tile extractor recover feature
+//! identity without storing it.
+
+use crate::error::{Error, Result};
+use crate::sketch::HistogramCuts;
+
+/// One compressed quantized page.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EllpackPage {
+    /// Rows in this page.
+    n_rows: usize,
+    /// Symbols per row (max nnz across the whole matrix).
+    row_stride: usize,
+    /// Total symbol alphabet = total_bins + 1 (null).
+    n_symbols: u32,
+    /// Bits per symbol.
+    bits: u32,
+    /// Packed storage.
+    packed: Vec<u64>,
+    /// Global row id of the first row.
+    pub base_rowid: u64,
+    /// True when every row is full-stride with feature f at position f.
+    dense: bool,
+}
+
+impl EllpackPage {
+    /// Allocate a zero-filled page (all symbols = 0; use a writer to
+    /// fill).
+    pub fn with_capacity(
+        n_rows: usize,
+        row_stride: usize,
+        n_symbols: u32,
+        dense: bool,
+    ) -> EllpackPage {
+        assert!(n_symbols >= 2);
+        let bits = 64 - u64::from(n_symbols - 1).leading_zeros();
+        let total_bits = n_rows as u64 * row_stride as u64 * bits as u64;
+        let words = crate::util::div_ceil(total_bits as usize, 64);
+        EllpackPage {
+            n_rows,
+            row_stride,
+            n_symbols,
+            bits,
+            packed: vec![0u64; words],
+            base_rowid: 0,
+            dense,
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn row_stride(&self) -> usize {
+        self.row_stride
+    }
+
+    pub fn n_symbols(&self) -> u32 {
+        self.n_symbols
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.dense
+    }
+
+    /// The reserved padding/missing symbol.
+    pub fn null_symbol(&self) -> u32 {
+        self.n_symbols - 1
+    }
+
+    /// Compressed size in bytes (the quantity Algorithm 5's 32 MiB page
+    /// cap and the Table 1 device budget track).
+    pub fn memory_bytes(&self) -> usize {
+        self.packed.len() * 8 + 64 // + header
+    }
+
+    /// Symbol at (row, k).
+    #[inline]
+    pub fn get(&self, row: usize, k: usize) -> u32 {
+        debug_assert!(row < self.n_rows && k < self.row_stride);
+        let idx = (row * self.row_stride + k) as u64;
+        let bit = idx * self.bits as u64;
+        let word = (bit / 64) as usize;
+        let off = (bit % 64) as u32;
+        let mask = if self.bits == 64 { u64::MAX } else { (1u64 << self.bits) - 1 };
+        let lo = self.packed[word] >> off;
+        let val = if off + self.bits <= 64 {
+            lo
+        } else {
+            lo | (self.packed[word + 1] << (64 - off))
+        };
+        (val & mask) as u32
+    }
+
+    /// Write symbol at (row, k).  Sequential writers should prefer
+    /// [`EllpackWriter`].
+    #[inline]
+    pub fn set(&mut self, row: usize, k: usize, symbol: u32) {
+        debug_assert!(symbol < self.n_symbols);
+        let idx = (row * self.row_stride + k) as u64;
+        let bit = idx * self.bits as u64;
+        let word = (bit / 64) as usize;
+        let off = (bit % 64) as u32;
+        let mask = if self.bits == 64 { u64::MAX } else { (1u64 << self.bits) - 1 };
+        let v = symbol as u64 & mask;
+        self.packed[word] = (self.packed[word] & !(mask << off)) | (v << off);
+        if off + self.bits > 64 {
+            let hi_bits = off + self.bits - 64;
+            let hi_mask = (1u64 << hi_bits) - 1;
+            self.packed[word + 1] =
+                (self.packed[word + 1] & !hi_mask) | (v >> (64 - off));
+        }
+    }
+
+    /// Unpack one row of symbols into `out` (length ≥ row_stride).
+    pub fn unpack_row_into(&self, row: usize, out: &mut [u32]) {
+        debug_assert!(out.len() >= self.row_stride);
+        for (k, s) in self.row_symbols(row).enumerate() {
+            out[k] = s;
+        }
+    }
+
+    /// Iterate one row's symbols with an incremental bit cursor — the
+    /// histogram hot loop uses this instead of per-entry [`Self::get`]
+    /// (which re-derives word/offset with a divide each call).
+    #[inline]
+    pub fn row_symbols(&self, row: usize) -> RowSymbols<'_> {
+        let bit = row as u64 * self.row_stride as u64 * self.bits as u64;
+        RowSymbols {
+            packed: &self.packed,
+            bit,
+            bits: self.bits,
+            mask: if self.bits == 64 { u64::MAX } else { (1u64 << self.bits) - 1 },
+            remaining: self.row_stride,
+        }
+    }
+
+    /// Estimated bytes for a page with these parameters (Algorithm 5's
+    /// `CalculateEllpackPageSize`).
+    pub fn estimated_bytes(n_rows: usize, row_stride: usize, n_symbols: u32) -> usize {
+        let bits = 64 - u64::from(n_symbols.max(2) - 1).leading_zeros();
+        crate::util::div_ceil(n_rows * row_stride * bits as usize, 64) * 8 + 64
+    }
+
+    /// Fill a device feature-tile batch: rows `row_begin..row_begin+b`,
+    /// features `feat_begin..feat_begin+f_tile`, as feature-*local* i32
+    /// bins, padded with `pad_bin` (rows past the end, features past
+    /// `n_features`, or missing entries).
+    ///
+    /// Requires a dense page (feature identity = position); the device
+    /// pipeline asserts density at construction.
+    pub fn fill_device_tile(
+        &self,
+        cuts: &HistogramCuts,
+        row_begin: usize,
+        batch: usize,
+        feat_begin: usize,
+        f_tile: usize,
+        pad_bin: i32,
+        out: &mut [i32],
+    ) {
+        assert!(self.dense, "device tiles require dense ELLPACK pages");
+        assert_eq!(out.len(), batch * f_tile);
+        let nf = cuts.n_features();
+        for i in 0..batch {
+            let r = row_begin + i;
+            let dst = &mut out[i * f_tile..(i + 1) * f_tile];
+            if r >= self.n_rows {
+                dst.iter_mut().for_each(|v| *v = pad_bin);
+                continue;
+            }
+            // Incremental cursor over the contiguous feature range
+            // (dense pages store feature f at position f).
+            let null = self.null_symbol();
+            let mut syms = self.row_symbols(r);
+            if feat_begin > 0 {
+                syms.advance(feat_begin.min(self.row_stride));
+            }
+            for (j, d) in dst.iter_mut().enumerate() {
+                let f = feat_begin + j;
+                if f >= nf || f >= self.row_stride {
+                    *d = pad_bin;
+                    continue;
+                }
+                let sym = syms.next().unwrap();
+                *d = if sym == null {
+                    pad_bin
+                } else {
+                    (sym - cuts.ptrs[f]) as i32
+                };
+            }
+        }
+    }
+
+    /// Serialize (page-store wire format).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.packed.len() * 8 + 48);
+        out.extend_from_slice(&(self.n_rows as u64).to_le_bytes());
+        out.extend_from_slice(&(self.row_stride as u64).to_le_bytes());
+        out.extend_from_slice(&u64::from(self.n_symbols).to_le_bytes());
+        out.extend_from_slice(&self.base_rowid.to_le_bytes());
+        out.extend_from_slice(&(self.dense as u64).to_le_bytes());
+        out.extend_from_slice(&(self.packed.len() as u64).to_le_bytes());
+        for w in &self.packed {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize with bounds checks.
+    pub fn from_bytes(bytes: &[u8]) -> Result<EllpackPage> {
+        if bytes.len() < 48 {
+            return Err(Error::PageStore("truncated ELLPACK header".into()));
+        }
+        let u = |i: usize| u64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap());
+        let n_rows = u(0) as usize;
+        let row_stride = u(1) as usize;
+        let n_symbols = u(2) as u32;
+        let base_rowid = u(3);
+        let dense = u(4) != 0;
+        let n_words = u(5) as usize;
+        if n_symbols < 2 {
+            return Err(Error::PageStore("bad symbol count".into()));
+        }
+        let bits = 64 - u64::from(n_symbols - 1).leading_zeros();
+        let need_words =
+            crate::util::div_ceil(n_rows * row_stride * bits as usize, 64);
+        if n_words != need_words {
+            return Err(Error::PageStore(format!(
+                "word count {n_words} != expected {need_words}"
+            )));
+        }
+        if bytes.len() < 48 + n_words * 8 {
+            return Err(Error::PageStore("truncated ELLPACK body".into()));
+        }
+        let mut packed = Vec::with_capacity(n_words);
+        for i in 0..n_words {
+            let a = 48 + i * 8;
+            packed.push(u64::from_le_bytes(bytes[a..a + 8].try_into().unwrap()));
+        }
+        Ok(EllpackPage { n_rows, row_stride, n_symbols, bits, packed, base_rowid, dense })
+    }
+}
+
+/// Incremental-cursor symbol iterator over one ELLPACK row.
+pub struct RowSymbols<'a> {
+    packed: &'a [u64],
+    bit: u64,
+    bits: u32,
+    mask: u64,
+    remaining: usize,
+}
+
+impl<'a> Iterator for RowSymbols<'a> {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let word = (self.bit >> 6) as usize;
+        let off = (self.bit & 63) as u32;
+        let lo = self.packed[word] >> off;
+        let val = if off + self.bits <= 64 {
+            lo
+        } else {
+            lo | (self.packed[word + 1] << (64 - off))
+        };
+        self.bit += self.bits as u64;
+        Some((val & self.mask) as u32)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl<'a> ExactSizeIterator for RowSymbols<'a> {}
+
+impl<'a> RowSymbols<'a> {
+    /// Skip `n` symbols in O(1) (cursor arithmetic, no decoding).
+    #[inline]
+    pub fn advance(&mut self, n: usize) {
+        let n = n.min(self.remaining);
+        self.bit += n as u64 * self.bits as u64;
+        self.remaining -= n;
+    }
+}
+
+/// Sequential row writer (append-only, faster than random `set`).
+pub struct EllpackWriter {
+    page: EllpackPage,
+    next_row: usize,
+}
+
+impl EllpackWriter {
+    pub fn new(n_rows: usize, row_stride: usize, n_symbols: u32, dense: bool) -> Self {
+        EllpackWriter {
+            page: EllpackPage::with_capacity(n_rows, row_stride, n_symbols, dense),
+            next_row: 0,
+        }
+    }
+
+    /// Append one row of symbols; shorter rows are null-padded.
+    pub fn push_row(&mut self, symbols: &[u32]) {
+        assert!(self.next_row < self.page.n_rows, "writer overflow");
+        assert!(symbols.len() <= self.page.row_stride);
+        let null = self.page.null_symbol();
+        let r = self.next_row;
+        for (k, s) in symbols.iter().enumerate() {
+            self.page.set(r, k, *s);
+        }
+        for k in symbols.len()..self.page.row_stride {
+            self.page.set(r, k, null);
+        }
+        self.next_row += 1;
+    }
+
+    pub fn rows_written(&self) -> usize {
+        self.next_row
+    }
+
+    pub fn finish(self, base_rowid: u64) -> EllpackPage {
+        assert_eq!(self.next_row, self.page.n_rows, "writer under-filled");
+        let mut p = self.page;
+        p.base_rowid = base_rowid;
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn pack_roundtrip_various_widths() {
+        for n_symbols in [2u32, 3, 16, 17, 64, 65, 255, 257, 1 << 20] {
+            let mut page = EllpackPage::with_capacity(7, 5, n_symbols, true);
+            let mut expect = vec![vec![0u32; 5]; 7];
+            let mut state = 12345u64;
+            for r in 0..7 {
+                for k in 0..5 {
+                    let v = (crate::util::rng::splitmix64(&mut state) % n_symbols as u64)
+                        as u32;
+                    page.set(r, k, v);
+                    expect[r][k] = v;
+                }
+            }
+            for r in 0..7 {
+                for k in 0..5 {
+                    assert_eq!(page.get(r, k), expect[r][k], "sym={n_symbols} r={r} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn writer_pads_with_null() {
+        let mut w = EllpackWriter::new(2, 4, 10, false);
+        w.push_row(&[1, 2]);
+        w.push_row(&[3, 4, 5, 6]);
+        let p = w.finish(100);
+        assert_eq!(p.base_rowid, 100);
+        assert_eq!(p.get(0, 0), 1);
+        assert_eq!(p.get(0, 2), p.null_symbol());
+        assert_eq!(p.get(1, 3), 6);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut w = EllpackWriter::new(3, 2, 100, true);
+        w.push_row(&[0, 99]);
+        w.push_row(&[50, 51]);
+        w.push_row(&[7, 8]);
+        let p = w.finish(5);
+        let q = EllpackPage::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn truncated_bytes_rejected() {
+        let p = EllpackPage::with_capacity(4, 4, 16, true);
+        let b = p.to_bytes();
+        assert!(EllpackPage::from_bytes(&b[..20]).is_err());
+        assert!(EllpackPage::from_bytes(&b[..b.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn estimated_matches_actual() {
+        for (r, s, n) in [(10, 4, 16u32), (1000, 500, 65), (1, 1, 2)] {
+            let p = EllpackPage::with_capacity(r, s, n, true);
+            assert_eq!(p.memory_bytes(), EllpackPage::estimated_bytes(r, s, n));
+        }
+    }
+
+    #[test]
+    fn prop_random_access_consistent() {
+        run_prop("ellpack set/get", 30, |g| {
+            let rows = g.usize_in(1..20);
+            let stride = g.usize_in(1..20);
+            let n_symbols = g.usize_in(2..300) as u32;
+            let mut page = EllpackPage::with_capacity(rows, stride, n_symbols, false);
+            let mut model = vec![0u32; rows * stride];
+            for _ in 0..100 {
+                let r = g.usize_in(0..rows);
+                let k = g.usize_in(0..stride);
+                let v = g.usize_in(0..n_symbols as usize) as u32;
+                page.set(r, k, v);
+                model[r * stride + k] = v;
+            }
+            for r in 0..rows {
+                for k in 0..stride {
+                    assert_eq!(page.get(r, k), model[r * stride + k]);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,99 @@
+//! Crate-wide error type.
+//!
+//! The interesting variant is [`Error::DeviceOom`]: the simulated device
+//! allocator ([`crate::device::MemoryManager`]) returns it when an
+//! allocation would exceed the configured budget, which is exactly the
+//! signal the paper's Table 1 experiment probes for.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes of the oocgb stack.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Filesystem / page-store I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// XLA / PJRT runtime failure (artifact load, compile, execute).
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Simulated device out-of-memory — the Table 1 signal.
+    #[error("device OOM: requested {requested} B for `{tag}` with {used}/{capacity} B in use")]
+    DeviceOom {
+        /// Bytes the failed allocation asked for.
+        requested: u64,
+        /// Bytes already allocated when the request arrived.
+        used: u64,
+        /// Configured device budget in bytes.
+        capacity: u64,
+        /// Allocation site tag (e.g. `"ellpack"`, `"histogram"`).
+        tag: &'static str,
+    },
+
+    /// Malformed input data (parser errors, shape mismatches).
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// Malformed configuration (file, CLI, or invalid combination).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// JSON parse error from the hand-rolled parser in [`crate::util::json`].
+    #[error("json error at byte {offset}: {msg}")]
+    Json {
+        /// Byte offset where parsing failed.
+        offset: usize,
+        /// Human-readable description.
+        msg: String,
+    },
+
+    /// Corrupt or truncated page file.
+    #[error("page store error: {0}")]
+    PageStore(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// True when the error is a simulated device OOM (Table 1 probe).
+    pub fn is_device_oom(&self) -> bool {
+        matches!(self, Error::DeviceOom { .. })
+    }
+
+    /// Shorthand constructor for data errors.
+    pub fn data(msg: impl Into<String>) -> Self {
+        Error::Data(msg.into())
+    }
+
+    /// Shorthand constructor for config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oom_detection() {
+        let e = Error::DeviceOom { requested: 10, used: 5, capacity: 8, tag: "x" };
+        assert!(e.is_device_oom());
+        assert!(!Error::data("nope").is_device_oom());
+    }
+
+    #[test]
+    fn display_formats() {
+        let e = Error::DeviceOom { requested: 10, used: 5, capacity: 8, tag: "hist" };
+        let s = e.to_string();
+        assert!(s.contains("hist") && s.contains("10"));
+    }
+}

@@ -1,0 +1,49 @@
+//! # oocgb — Out-of-Core GPU Gradient Boosting
+//!
+//! A from-scratch reproduction of *"Out-of-Core GPU Gradient Boosting"*
+//! (Rong Ou, 2020) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the training coordinator: quantile
+//!   sketching, external ELLPACK paging, disk page store with a threaded
+//!   prefetcher, a simulated device (memory budget + interconnect cost
+//!   model), gradient-based sampling (SGB / GOSS / MVS), and level-wise
+//!   tree construction with CPU and device backends.
+//! * **Layer 2** — JAX compute graphs (`python/compile/model.py`) AOT-
+//!   lowered to HLO text once at build time (`make artifacts`).
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the
+//!   histogram / gradient / sampling hot spots, lowered into the same HLO.
+//!
+//! At runtime the [`runtime`] module loads the HLO artifacts through the
+//! PJRT C API (`xla` crate) — Python is never on the training path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use oocgb::config::TrainConfig;
+//! use oocgb::coordinator::TrainSession;
+//! use oocgb::data::synthetic;
+//!
+//! let data = synthetic::higgs_like(10_000, 42);
+//! let mut cfg = TrainConfig::default();
+//! cfg.n_rounds = 20;
+//! let session = TrainSession::from_memory(data, cfg).unwrap();
+//! let outcome = session.train().unwrap();
+//! println!("final AUC: {:?}", outcome.eval_history.last());
+//! ```
+
+pub mod boosting;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod ellpack;
+pub mod error;
+pub mod page;
+pub mod runtime;
+pub mod sampling;
+pub mod sketch;
+pub mod tree;
+pub mod util;
+
+pub use config::TrainConfig;
+pub use error::{Error, Result};

@@ -1,0 +1,289 @@
+//! `oocgb` — out-of-core gradient boosting CLI (the Layer-3 leader
+//! entrypoint).
+//!
+//! Subcommands:
+//!
+//! * `train`   — train a model (any of the six execution modes).
+//! * `datagen` — write a synthetic dataset (LibSVM or CSV).
+//! * `predict` — score a dataset with a saved model.
+//! * `info`    — show the AOT artifact inventory and PJRT platform.
+//!
+//! Training parameters are `key=value` pairs (XGBoost-style), optionally
+//! seeded from a JSON config via `--config`; see
+//! [`oocgb::config::TrainConfig`] for the full surface.
+//!
+//! Example:
+//! ```text
+//! oocgb datagen --kind higgs --rows 200000 --out /tmp/higgs.csv --format csv
+//! oocgb train --data /tmp/higgs.csv --format csv \
+//!     mode=device-ooc sampling_method=mvs f=0.3 max_depth=8 eta=0.1 \
+//!     n_rounds=100 eval_fraction=0.05 verbose=true
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use oocgb::boosting::GbtModel;
+use oocgb::config::TrainConfig;
+use oocgb::coordinator::TrainSession;
+use oocgb::data::synthetic::{self, ClassificationSpec};
+use oocgb::data::{csv, libsvm, DMatrix};
+use oocgb::error::{Error, Result};
+use oocgb::runtime::Runtime;
+use oocgb::util::fmt_bytes;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("datagen") => cmd_datagen(&args[1..]),
+        Some("predict") => cmd_predict(&args[1..]),
+        Some("info") => cmd_info(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            print!("{}", USAGE);
+            Ok(())
+        }
+        Some(other) => Err(Error::config(format!(
+            "unknown subcommand `{other}` (see --help)"
+        ))),
+    }
+}
+
+const USAGE: &str = "\
+oocgb — Out-of-Core GPU Gradient Boosting (paper reproduction)
+
+USAGE:
+  oocgb train   [--config cfg.json] [--data FILE --format libsvm|csv]
+                [--synthetic higgs|classification --rows N --cols N]
+                [--model-out model.json] [key=value ...]
+  oocgb datagen --kind higgs|classification --rows N [--cols N]
+                --out FILE [--format libsvm|csv] [--seed N]
+  oocgb predict --model model.json --data FILE [--format libsvm|csv]
+                [--out preds.txt]
+  oocgb info    [--artifacts DIR]
+
+Common train keys: mode=cpu|cpu-ooc|device|naive-ooc|device-ooc,
+  sampling_method=none|uniform|goss|mvs, f=0.3, n_rounds=100, max_depth=8,
+  eta=0.1, max_bin=64, device_memory_mb=256, eval_fraction=0.05,
+  verbose=true.  See DESIGN.md for the full list.
+";
+
+/// Tiny flag parser: `--key value` pairs + positional `key=value`
+/// overrides.
+struct Flags {
+    named: Vec<(String, String)>,
+    overrides: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut named = Vec::new();
+        let mut overrides = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let val = args
+                    .get(i + 1)
+                    .ok_or_else(|| Error::config(format!("--{name} needs a value")))?;
+                named.push((name.to_string(), val.clone()));
+                i += 2;
+            } else if a.contains('=') {
+                overrides.push(a.clone());
+                i += 1;
+            } else {
+                return Err(Error::config(format!("unexpected argument `{a}`")));
+            }
+        }
+        Ok(Flags { named, overrides })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.named
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| Error::config(format!("missing required flag --{name}")))
+    }
+}
+
+fn load_data(path: &str, format: Option<&str>) -> Result<DMatrix> {
+    let p = Path::new(path);
+    let fmt = match format {
+        Some(f) => f.to_string(),
+        None => match p.extension().and_then(|e| e.to_str()) {
+            Some("csv") => "csv".into(),
+            _ => "libsvm".into(),
+        },
+    };
+    match fmt.as_str() {
+        "libsvm" => libsvm::read_file(p, None),
+        "csv" => csv::read_file(p, false),
+        other => Err(Error::config(format!("unknown data format `{other}`"))),
+    }
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let cfg_path = flags.get("config").map(PathBuf::from);
+    let cfg = TrainConfig::load(cfg_path.as_deref(), &flags.overrides)?;
+
+    let data = if let Some(path) = flags.get("data") {
+        load_data(path, flags.get("format"))?
+    } else {
+        let rows: usize = flags
+            .get("rows")
+            .unwrap_or("100000")
+            .parse()
+            .map_err(|_| Error::config("bad --rows"))?;
+        match flags.get("synthetic").unwrap_or("higgs") {
+            "higgs" => synthetic::higgs_like(rows, cfg.seed),
+            "classification" => {
+                let cols: usize = flags
+                    .get("cols")
+                    .unwrap_or("500")
+                    .parse()
+                    .map_err(|_| Error::config("bad --cols"))?;
+                synthetic::make_classification(ClassificationSpec {
+                    n_rows: rows,
+                    n_cols: cols,
+                    n_informative: (cols / 12).max(2),
+                    n_redundant: (cols / 8).max(1),
+                    seed: cfg.seed,
+                    ..Default::default()
+                })
+            }
+            other => return Err(Error::config(format!("unknown synthetic `{other}`"))),
+        }
+    };
+
+    eprintln!(
+        "training: {} rows × {} cols, mode={}, sampler={} f={}",
+        data.n_rows(),
+        data.n_cols(),
+        cfg.mode.name(),
+        cfg.sampling_method.name(),
+        cfg.subsample,
+    );
+    let model_out = flags.get("model-out").map(PathBuf::from);
+    let session = TrainSession::from_memory(data, cfg)?;
+    let outcome = session.train()?;
+
+    eprintln!(
+        "trained {} trees in {:.2}s",
+        outcome.model.trees.len(),
+        outcome.train_seconds
+    );
+    eprint!("{}", outcome.timers.report());
+    if let Some((round, m)) = outcome.eval_history.last() {
+        eprintln!("final eval (round {round}): {m:.5}");
+    }
+    if let Some(link) = &outcome.link_stats {
+        eprintln!(
+            "simulated link: h2d {} in {} transfers, d2h {}, {:.3}s simulated",
+            fmt_bytes(link.h2d_bytes),
+            link.h2d_transfers,
+            fmt_bytes(link.d2h_bytes),
+            link.sim_seconds
+        );
+    }
+    if let (Some(peak), Some(cap)) = (outcome.mem_peak, outcome.mem_capacity) {
+        eprintln!("device memory peak: {} / {}", fmt_bytes(peak), fmt_bytes(cap));
+    }
+    if let Some(path) = model_out {
+        outcome.model.save(&path)?;
+        eprintln!("model written to {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_datagen(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let kind = flags.require("kind")?;
+    let rows: usize = flags
+        .require("rows")?
+        .parse()
+        .map_err(|_| Error::config("bad --rows"))?;
+    let seed: u64 = flags.get("seed").unwrap_or("0").parse().unwrap_or(0);
+    let out = PathBuf::from(flags.require("out")?);
+    let data = match kind {
+        "higgs" => synthetic::higgs_like(rows, seed),
+        "classification" => {
+            let cols: usize = flags.get("cols").unwrap_or("500").parse().unwrap_or(500);
+            synthetic::make_classification(ClassificationSpec {
+                n_rows: rows,
+                n_cols: cols,
+                n_informative: (cols / 12).max(2),
+                n_redundant: (cols / 8).max(1),
+                seed,
+                ..Default::default()
+            })
+        }
+        other => return Err(Error::config(format!("unknown kind `{other}`"))),
+    };
+    match flags.get("format").unwrap_or("libsvm") {
+        "libsvm" => libsvm::write_file(&data, &out)?,
+        "csv" => csv::write_file(&data, &out)?,
+        other => return Err(Error::config(format!("unknown format `{other}`"))),
+    }
+    eprintln!(
+        "wrote {} rows × {} cols to {}",
+        data.n_rows(),
+        data.n_cols(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_predict(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let model = GbtModel::load(Path::new(flags.require("model")?))?;
+    let data = load_data(flags.require("data")?, flags.get("format"))?;
+    let preds = model.predict(&data);
+    match flags.get("out") {
+        Some(path) => {
+            let text: String = preds.iter().map(|p| format!("{p}\n")).collect();
+            std::fs::write(path, text)?;
+            eprintln!("wrote {} predictions to {path}", preds.len());
+        }
+        None => {
+            for p in preds {
+                println!("{p}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let dir = PathBuf::from(flags.get("artifacts").unwrap_or("artifacts"));
+    let rt = Runtime::load(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifacts ({}):", rt.manifest().artifacts.len());
+    for a in &rt.manifest().artifacts {
+        println!(
+            "  {:<32} kind={:<12} inputs={} outputs={}",
+            a.name,
+            a.kind,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Disk page store + threaded prefetcher (paper §2.3).
+//!
+//! External-memory mode writes CSR and ELLPACK pages to disk and streams
+//! them back during sketching / conversion / tree construction.  The
+//! prefetcher mirrors XGBoost's multi-threaded pre-fetcher: a background
+//! reader thread pushes decoded pages into a bounded channel, so disk
+//! I/O overlaps compute and backpressure caps memory at
+//! `prefetch_depth` pages.
+
+pub mod prefetch;
+pub mod store;
+
+pub use prefetch::Prefetcher;
+pub use store::{PageFile, PageFileWriter, Serializable};

@@ -1,0 +1,187 @@
+//! Multi-threaded page prefetcher with bounded backpressure (paper §2.3:
+//! "the data pages are streamed from disk via a multi-threaded
+//! pre-fetcher").
+//!
+//! A background thread reads + decodes pages in order and pushes them
+//! into a `sync_channel(depth)`; the training loop pulls them as it
+//! needs them.  The bounded channel is the backpressure mechanism: at
+//! most `depth + 1` pages are ever in flight, which is what caps the
+//! host-memory footprint of out-of-core mode.  `depth = 0` degenerates
+//! to synchronous rendezvous reads (the ablation bench sweeps this).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::error::Result;
+use crate::page::store::{PageFile, Serializable};
+
+/// Streaming iterator over a [`PageFile`], reading ahead on a background
+/// thread.
+pub struct Prefetcher<T: Serializable + Send + 'static> {
+    rx: Receiver<Result<T>>,
+    handle: Option<JoinHandle<()>>,
+    cancel: Arc<AtomicBool>,
+    /// Pages delivered so far.
+    delivered: usize,
+}
+
+impl<T: Serializable + Send + 'static> Prefetcher<T> {
+    /// Start prefetching all pages of `file` in order.
+    ///
+    /// The file is re-opened on the reader thread (page files are
+    /// immutable once finished), so the caller keeps its handle.
+    pub fn start(file: &PageFile<T>, depth: usize) -> Result<Self> {
+        let path = file.path().to_path_buf();
+        let n_pages = file.n_pages();
+        let (tx, rx) = sync_channel::<Result<T>>(depth);
+        let cancel = Arc::new(AtomicBool::new(false));
+        let cancel_bg = cancel.clone();
+        let handle = std::thread::Builder::new()
+            .name("oocgb-prefetch".into())
+            .spawn(move || {
+                let file = match PageFile::<T>::open(&path) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        let _ = tx.send(Err(e));
+                        return;
+                    }
+                };
+                for i in 0..n_pages {
+                    if cancel_bg.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let page = file.read_page(i);
+                    let failed = page.is_err();
+                    // send blocks when the channel is full — backpressure.
+                    if tx.send(page).is_err() || failed {
+                        return; // consumer dropped, or error terminates
+                    }
+                }
+            })?;
+        Ok(Prefetcher { rx, handle: Some(handle), cancel, delivered: 0 })
+    }
+
+    /// Pages handed to the consumer so far.
+    pub fn delivered(&self) -> usize {
+        self.delivered
+    }
+}
+
+impl<T: Serializable + Send + 'static> Iterator for Prefetcher<T> {
+    type Item = Result<T>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match self.rx.recv() {
+            Ok(item) => {
+                self.delivered += 1;
+                Some(item)
+            }
+            Err(_) => None, // sender finished
+        }
+    }
+}
+
+impl<T: Serializable + Send + 'static> Drop for Prefetcher<T> {
+    fn drop(&mut self) {
+        self.cancel.store(true, Ordering::Relaxed);
+        // Drain the channel so a blocked sender wakes and observes cancel.
+        while self.rx.try_recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SparsePage;
+    use crate::page::store::PageFileWriter;
+    use std::path::PathBuf;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("oocgb-prefetch-{}-{name}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_pages(path: &std::path::Path, n: usize) -> PageFile<SparsePage> {
+        let mut w = PageFileWriter::create(path).unwrap();
+        for i in 0..n {
+            let mut p = SparsePage::new(2);
+            p.base_rowid = i as u64;
+            p.push_row(&[0], &[i as f32]);
+            w.write_page(&p).unwrap();
+        }
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn delivers_all_pages_in_order() {
+        for depth in [0usize, 1, 2, 8] {
+            let d = tmpdir(&format!("order{depth}"));
+            let f = write_pages(&d.join("p.bin"), 20);
+            let pf = Prefetcher::start(&f, depth).unwrap();
+            let pages: Vec<SparsePage> = pf.map(|r| r.unwrap()).collect();
+            assert_eq!(pages.len(), 20);
+            for (i, p) in pages.iter().enumerate() {
+                assert_eq!(p.base_rowid, i as u64);
+                assert_eq!(p.row_values(0), &[i as f32]);
+            }
+            std::fs::remove_dir_all(&d).ok();
+        }
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let d = tmpdir("drop");
+        let f = write_pages(&d.join("p.bin"), 50);
+        let mut pf = Prefetcher::start(&f, 1).unwrap();
+        let first = pf.next().unwrap().unwrap();
+        assert_eq!(first.base_rowid, 0);
+        drop(pf); // must join cleanly even with 48 pages unread
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn read_error_is_surfaced() {
+        let d = tmpdir("err");
+        let path = d.join("p.bin");
+        let f = write_pages(&path, 5);
+        // Corrupt page 2's payload.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let off = {
+            // page payloads start at 32; find page 2 offset via read: easier
+            // to corrupt everything after header + first two pages by
+            // flipping a byte in the middle of the file.
+            bytes.len() / 2
+        };
+        bytes[off] ^= 0xAA;
+        std::fs::write(&path, &bytes).unwrap();
+        let pf = Prefetcher::start(&f, 2).unwrap();
+        let results: Vec<Result<SparsePage>> = pf.collect();
+        assert!(
+            results.iter().any(|r| r.is_err()),
+            "expected at least one error"
+        );
+        // Stream terminates at the first error (no pages after it).
+        let first_err = results.iter().position(|r| r.is_err()).unwrap();
+        assert_eq!(first_err, results.len() - 1);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn empty_file_yields_nothing() {
+        let d = tmpdir("none");
+        let f = {
+            let w = PageFileWriter::<SparsePage>::create(&d.join("p.bin")).unwrap();
+            w.finish().unwrap()
+        };
+        let pf = Prefetcher::start(&f, 2).unwrap();
+        assert_eq!(pf.count(), 0);
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

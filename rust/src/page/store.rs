@@ -1,0 +1,303 @@
+//! On-disk page file: `[magic | version | page count | offset index |
+//! pages...]`, every page length-prefixed and CRC-checked.
+//!
+//! The format is deliberately simple — the paper's contribution is the
+//! access *pattern* (sequential streaming), not the container — but it
+//! detects truncation and corruption, which the failure-injection tests
+//! exercise.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+const MAGIC: u64 = 0x4F4F_4347_4250_4147; // "OOCGBPAG"
+const VERSION: u64 = 1;
+
+/// Types that can live in a page file.
+pub trait Serializable: Sized {
+    fn to_bytes(&self) -> Vec<u8>;
+    fn from_bytes(bytes: &[u8]) -> Result<Self>;
+}
+
+impl Serializable for crate::data::SparsePage {
+    fn to_bytes(&self) -> Vec<u8> {
+        crate::data::SparsePage::to_bytes(self)
+    }
+    fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        crate::data::SparsePage::from_bytes(bytes)
+    }
+}
+
+impl Serializable for crate::ellpack::EllpackPage {
+    fn to_bytes(&self) -> Vec<u8> {
+        crate::ellpack::EllpackPage::to_bytes(self)
+    }
+    fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        crate::ellpack::EllpackPage::from_bytes(bytes)
+    }
+}
+
+/// FNV-1a — cheap integrity check per page.
+fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Streaming page-file writer.
+pub struct PageFileWriter<T: Serializable> {
+    path: PathBuf,
+    file: BufWriter<File>,
+    offsets: Vec<(u64, u64, u64)>, // (offset, len, checksum)
+    pos: u64,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: Serializable> PageFileWriter<T> {
+    pub fn create(path: &Path) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = BufWriter::new(File::create(path)?);
+        // Header placeholder: magic, version, page count, index offset.
+        file.write_all(&[0u8; 32])?;
+        Ok(PageFileWriter {
+            path: path.to_path_buf(),
+            file,
+            offsets: Vec::new(),
+            pos: 32,
+            _marker: std::marker::PhantomData,
+        })
+    }
+
+    /// Append one page.
+    pub fn write_page(&mut self, page: &T) -> Result<()> {
+        let bytes = page.to_bytes();
+        let sum = checksum(&bytes);
+        self.file.write_all(&bytes)?;
+        self.offsets.push((self.pos, bytes.len() as u64, sum));
+        self.pos += bytes.len() as u64;
+        Ok(())
+    }
+
+    pub fn pages_written(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// Write the index + header and close.
+    pub fn finish(mut self) -> Result<PageFile<T>> {
+        let index_offset = self.pos;
+        for (off, len, sum) in &self.offsets {
+            self.file.write_all(&off.to_le_bytes())?;
+            self.file.write_all(&len.to_le_bytes())?;
+            self.file.write_all(&sum.to_le_bytes())?;
+        }
+        self.file.flush()?;
+        let mut f = self.file.into_inner().map_err(|e| Error::PageStore(e.to_string()))?;
+        f.seek(SeekFrom::Start(0))?;
+        f.write_all(&MAGIC.to_le_bytes())?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.offsets.len() as u64).to_le_bytes())?;
+        f.write_all(&index_offset.to_le_bytes())?;
+        f.sync_all()?;
+        PageFile::open(&self.path)
+    }
+}
+
+/// A readable page file.
+pub struct PageFile<T: Serializable> {
+    path: PathBuf,
+    index: Vec<(u64, u64, u64)>,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: Serializable> PageFile<T> {
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut f = BufReader::new(File::open(path)?);
+        let mut header = [0u8; 32];
+        f.read_exact(&mut header)
+            .map_err(|_| Error::PageStore("file too short for header".into()))?;
+        let g = |i: usize| u64::from_le_bytes(header[i * 8..i * 8 + 8].try_into().unwrap());
+        if g(0) != MAGIC {
+            return Err(Error::PageStore(format!("bad magic in {}", path.display())));
+        }
+        if g(1) != VERSION {
+            return Err(Error::PageStore(format!("unsupported version {}", g(1))));
+        }
+        let n_pages = g(2) as usize;
+        let index_offset = g(3);
+        f.seek(SeekFrom::Start(index_offset))?;
+        let mut index = Vec::with_capacity(n_pages);
+        let mut buf = [0u8; 24];
+        for _ in 0..n_pages {
+            f.read_exact(&mut buf)
+                .map_err(|_| Error::PageStore("truncated index".into()))?;
+            index.push((
+                u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+                u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+                u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+            ));
+        }
+        Ok(PageFile { path: path.to_path_buf(), index, _marker: std::marker::PhantomData })
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Total bytes of page payload (disk footprint of the dataset).
+    pub fn payload_bytes(&self) -> u64 {
+        self.index.iter().map(|(_, len, _)| len).sum()
+    }
+
+    /// Read and decode page `i`, verifying its checksum.
+    pub fn read_page(&self, i: usize) -> Result<T> {
+        let (off, len, sum) = *self
+            .index
+            .get(i)
+            .ok_or_else(|| Error::PageStore(format!("page {i} out of range")))?;
+        let mut f = File::open(&self.path)?;
+        f.seek(SeekFrom::Start(off))?;
+        let mut bytes = vec![0u8; len as usize];
+        f.read_exact(&mut bytes)
+            .map_err(|_| Error::PageStore(format!("truncated page {i}")))?;
+        if checksum(&bytes) != sum {
+            return Err(Error::PageStore(format!("checksum mismatch on page {i}")));
+        }
+        T::from_bytes(&bytes)
+    }
+
+    /// Sequential iterator (no prefetch; see [`crate::page::Prefetcher`]
+    /// for the threaded version).
+    pub fn iter(&self) -> impl Iterator<Item = Result<T>> + '_ {
+        (0..self.n_pages()).map(move |i| self.read_page(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SparsePage;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("oocgb-test-{}-{name}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn pages(n: usize) -> Vec<SparsePage> {
+        (0..n)
+            .map(|i| {
+                let mut p = SparsePage::new(3);
+                p.base_rowid = i as u64 * 2;
+                p.push_row(&[0, 2], &[i as f32, 2.0 * i as f32]);
+                p.push_row(&[1], &[42.0]);
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let d = tmpdir("rw");
+        let path = d.join("pages.bin");
+        let src = pages(5);
+        let mut w = PageFileWriter::create(&path).unwrap();
+        for p in &src {
+            w.write_page(p).unwrap();
+        }
+        let f = w.finish().unwrap();
+        assert_eq!(f.n_pages(), 5);
+        for (i, p) in src.iter().enumerate() {
+            assert_eq!(&f.read_page(i).unwrap(), p);
+        }
+        // Random access out of order:
+        assert_eq!(&f.read_page(3).unwrap(), &src[3]);
+        assert_eq!(&f.read_page(0).unwrap(), &src[0]);
+        assert!(f.read_page(5).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn empty_file_ok() {
+        let d = tmpdir("empty");
+        let path = d.join("none.bin");
+        let w = PageFileWriter::<SparsePage>::create(&path).unwrap();
+        let f = w.finish().unwrap();
+        assert_eq!(f.n_pages(), 0);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let d = tmpdir("corrupt");
+        let path = d.join("pages.bin");
+        let mut w = PageFileWriter::create(&path).unwrap();
+        for p in pages(3) {
+            w.write_page(&p).unwrap();
+        }
+        let f = w.finish().unwrap();
+        // Flip one payload byte of page 1.
+        let (off, ..) = f.index[1];
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[off as usize + 10] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let f = PageFile::<SparsePage>::open(&path).unwrap();
+        assert!(f.read_page(0).is_ok());
+        let err = f.read_page(1).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let d = tmpdir("trunc");
+        let path = d.join("pages.bin");
+        let mut w = PageFileWriter::create(&path).unwrap();
+        for p in pages(3) {
+            w.write_page(&p).unwrap();
+        }
+        w.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..16]).unwrap();
+        assert!(PageFile::<SparsePage>::open(&path).is_err());
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(PageFile::<SparsePage>::open(&path).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let d = tmpdir("magic");
+        let path = d.join("pages.bin");
+        std::fs::write(&path, vec![7u8; 64]).unwrap();
+        assert!(PageFile::<SparsePage>::open(&path).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn ellpack_pages_roundtrip() {
+        use crate::ellpack::page::EllpackWriter;
+        let d = tmpdir("ellpack");
+        let path = d.join("ep.bin");
+        let mut w = PageFileWriter::create(&path).unwrap();
+        let mut ew = EllpackWriter::new(4, 3, 16, true);
+        for r in 0..4 {
+            ew.push_row(&[r as u32, (r + 1) as u32, (r + 2) as u32]);
+        }
+        let page = ew.finish(0);
+        w.write_page(&page).unwrap();
+        let f = w.finish().unwrap();
+        assert_eq!(f.read_page(0).unwrap(), page);
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

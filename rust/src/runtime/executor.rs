@@ -1,0 +1,364 @@
+//! Typed PJRT executor over the AOT artifacts.
+//!
+//! Artifacts are compiled lazily (first call per name) and cached; HLO
+//! text is the interchange format (`HloModuleProto::from_text_file` —
+//! the text parser reassigns the 64-bit instruction ids jax ≥ 0.5 emits,
+//! which xla_extension 0.5.1 would otherwise reject).
+//!
+//! Shape discipline: HLO modules are fixed-shape, so every entry point
+//! takes exactly the compiled batch; the device tree builder does the
+//! padding (zero-gradient rows are exactly inert — see
+//! `python/compile/kernels/histogram.py`).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+/// Compiled-artifact cache + typed call surface.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Lifetime execute() count per artifact kind (perf accounting).
+    call_counts: Mutex<HashMap<String, u64>>,
+}
+
+/// Split-evaluation output for one node chunk (parallel arrays).
+#[derive(Debug, Clone, Default)]
+pub struct EvalOut {
+    pub gain: Vec<f32>,
+    pub feature: Vec<i32>,
+    pub split_bin: Vec<i32>,
+    /// (g, h) of the left child per node.
+    pub left_sum: Vec<[f32; 2]>,
+    /// (g, h) totals per node.
+    pub total: Vec<[f32; 2]>,
+}
+
+fn as_bytes<T: Copy>(data: &[T]) -> &[u8] {
+    // i32/f32 are POD; reinterpretation is safe for reads.
+    unsafe {
+        std::slice::from_raw_parts(
+            data.as_ptr() as *const u8,
+            std::mem::size_of_val(data),
+        )
+    }
+}
+
+fn literal_f32(data: &[f32], dims: &[usize]) -> xla::Literal {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        as_bytes(data),
+    )
+    .expect("f32 literal")
+}
+
+fn literal_i32(data: &[i32], dims: &[usize]) -> xla::Literal {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        as_bytes(data),
+    )
+    .expect("i32 literal")
+}
+
+impl Runtime {
+    /// Create a runtime over `artifacts_dir` (must contain
+    /// manifest.json; run `make artifacts` to produce it).
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            executables: Mutex::new(HashMap::new()),
+            call_counts: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Cumulative execute() calls per artifact kind.
+    pub fn call_counts(&self) -> Vec<(String, u64)> {
+        let mut v: Vec<(String, u64)> = self
+            .call_counts
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, c)| (k.clone(), *c))
+            .collect();
+        v.sort();
+        v
+    }
+
+    fn executable(&self, meta: &ArtifactMeta) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.lock().unwrap().get(&meta.name) {
+            return Ok(e.clone());
+        }
+        // Compile outside the lock (compilation can take ~100 ms).
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        self.executables
+            .lock()
+            .unwrap()
+            .entry(meta.name.clone())
+            .or_insert_with(|| exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact (startup warm-up; keeps compile
+    /// time out of the measured training loop).
+    pub fn warm_up(&self) -> Result<()> {
+        for a in self.manifest.artifacts.clone() {
+            self.executable(&a)?;
+        }
+        Ok(())
+    }
+
+    fn run(&self, meta: &ArtifactMeta, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self.executable(meta)?;
+        *self
+            .call_counts
+            .lock()
+            .unwrap()
+            .entry(meta.kind.clone())
+            .or_insert(0) += 1;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let literal = result[0][0].to_literal_sync()?;
+        Ok(literal)
+    }
+
+    // ---- artifact selection ----
+
+    /// Artifact of `kind` matching all `(param, value)` filters.
+    fn find(&self, kind: &str, filters: &[(&str, usize)]) -> Result<ArtifactMeta> {
+        self.manifest
+            .of_kind(kind)
+            .into_iter()
+            .find(|a| {
+                filters
+                    .iter()
+                    .all(|(k, v)| a.param_usize(k).map(|x| x == *v).unwrap_or(false))
+            })
+            .cloned()
+            .ok_or_else(|| {
+                Error::config(format!(
+                    "no `{kind}` artifact for {filters:?}; regenerate artifacts"
+                ))
+            })
+    }
+
+    /// Histogram batch sizes available for `bins` (ascending).
+    pub fn hist_batches(&self, bins: usize) -> Vec<usize> {
+        self.manifest
+            .of_kind("histogram")
+            .into_iter()
+            .filter(|a| a.param_usize("bins").map(|b| b == bins).unwrap_or(false))
+            .filter_map(|a| a.param_usize("batch").ok())
+            .collect()
+    }
+
+    /// Histogram feature-tile width (uniform across variants).
+    pub fn hist_feature_tile(&self, bins: usize) -> Result<usize> {
+        self.manifest
+            .of_kind("histogram")
+            .into_iter()
+            .find(|a| a.param_usize("bins").map(|b| b == bins).unwrap_or(false))
+            .ok_or_else(|| Error::config(format!("no histogram artifact with bins={bins}")))?
+            .param_usize("features")
+    }
+
+    /// Node-slot chunk size of the histogram/eval artifacts.
+    pub fn hist_node_slots(&self, bins: usize) -> Result<usize> {
+        self.manifest
+            .of_kind("histogram")
+            .into_iter()
+            .find(|a| a.param_usize("bins").map(|b| b == bins).unwrap_or(false))
+            .ok_or_else(|| Error::config(format!("no histogram artifact with bins={bins}")))?
+            .param_usize("nodes")
+    }
+
+    /// Gradient batch sizes (ascending).
+    pub fn grad_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .manifest
+            .of_kind("gradient")
+            .into_iter()
+            .filter_map(|a| a.param_usize("batch").ok())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    // ---- typed entry points ----
+
+    /// Level-wise histogram for one padded batch.
+    ///
+    /// `bins_tile`: i32[batch × f_tile] feature-local bins;
+    /// `grads`: f32[batch × 2]; `node_ids`: i32[batch] in [0, node_slots).
+    /// Returns f32[node_slots × f_tile × n_bins × 2] (flattened).
+    pub fn histogram(
+        &self,
+        bins_tile: &[i32],
+        grads: &[f32],
+        node_ids: &[i32],
+        batch: usize,
+        n_bins: usize,
+    ) -> Result<Vec<f32>> {
+        let meta = self.find("histogram", &[("batch", batch), ("bins", n_bins)])?;
+        let f_tile = meta.param_usize("features")?;
+        debug_assert_eq!(bins_tile.len(), batch * f_tile);
+        debug_assert_eq!(grads.len(), batch * 2);
+        debug_assert_eq!(node_ids.len(), batch);
+        let out = self.run(
+            &meta,
+            &[
+                literal_i32(bins_tile, &[batch, f_tile]),
+                literal_f32(grads, &[batch, 2]),
+                literal_i32(node_ids, &[batch]),
+            ],
+        )?;
+        let hist = out.to_tuple1()?;
+        Ok(hist.to_vec::<f32>()?)
+    }
+
+    /// Gradient pairs for one padded batch; returns f32[batch × 2].
+    pub fn gradients(
+        &self,
+        preds: &[f32],
+        labels: &[f32],
+        batch: usize,
+        objective: &str,
+    ) -> Result<Vec<f32>> {
+        let tag = match objective {
+            "binary:logistic" => "logistic",
+            "reg:squarederror" => "squared",
+            other => return Err(Error::config(format!("objective `{other}`"))),
+        };
+        let meta = self
+            .manifest
+            .of_kind("gradient")
+            .into_iter()
+            .find(|a| {
+                a.param_usize("batch").map(|b| b == batch).unwrap_or(false)
+                    && a.name.contains(tag)
+            })
+            .cloned()
+            .ok_or_else(|| {
+                Error::config(format!("no gradient artifact b={batch} {tag}"))
+            })?;
+        debug_assert_eq!(preds.len(), batch);
+        let out = self.run(
+            &meta,
+            &[literal_f32(preds, &[batch]), literal_f32(labels, &[batch])],
+        )?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// MVS scores ĝ = √(g² + λh²) and their sum for one padded batch.
+    pub fn mvs_scores(
+        &self,
+        grads: &[f32],
+        lambda: f32,
+        batch: usize,
+    ) -> Result<(Vec<f32>, f32)> {
+        let meta = self.find("mvs", &[("batch", batch)])?;
+        debug_assert_eq!(grads.len(), batch * 2);
+        let out = self.run(
+            &meta,
+            &[literal_f32(grads, &[batch, 2]), literal_f32(&[lambda], &[1])],
+        )?;
+        let (scores, total) = out.to_tuple2()?;
+        Ok((
+            scores.to_vec::<f32>()?,
+            total.to_vec::<f32>()?.first().copied().unwrap_or(0.0),
+        ))
+    }
+
+    /// Best split per node slot from a uniform-layout histogram chunk
+    /// (f32[node_slots × f_tile × n_bins × 2]).
+    pub fn evaluate_splits(
+        &self,
+        hist: &[f32],
+        lambda: f32,
+        gamma: f32,
+        min_child_weight: f32,
+        n_bins: usize,
+    ) -> Result<EvalOut> {
+        let meta = self.find("eval_splits", &[("bins", n_bins)])?;
+        let nodes = meta.param_usize("nodes")?;
+        let f_tile = meta.param_usize("features")?;
+        debug_assert_eq!(hist.len(), nodes * f_tile * n_bins * 2);
+        let out = self.run(
+            &meta,
+            &[
+                literal_f32(hist, &[nodes, f_tile, n_bins, 2]),
+                literal_f32(&[lambda, gamma, min_child_weight], &[3]),
+            ],
+        )?;
+        let mut parts = out.to_tuple()?;
+        if parts.len() != 5 {
+            return Err(Error::Xla(format!(
+                "eval_splits returned {} outputs, expected 5",
+                parts.len()
+            )));
+        }
+        let total_v = parts.pop().unwrap().to_vec::<f32>()?;
+        let left_v = parts.pop().unwrap().to_vec::<f32>()?;
+        let split_bin = parts.pop().unwrap().to_vec::<i32>()?;
+        let feature = parts.pop().unwrap().to_vec::<i32>()?;
+        let gain = parts.pop().unwrap().to_vec::<f32>()?;
+        let pack = |v: Vec<f32>| -> Vec<[f32; 2]> {
+            v.chunks_exact(2).map(|c| [c[0], c[1]]).collect()
+        };
+        Ok(EvalOut {
+            gain,
+            feature,
+            split_bin,
+            left_sum: pack(left_v),
+            total: pack(total_v),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests that don't need built artifacts live here; the full
+    //! numeric round-trip tests (vs the Python oracles) are integration
+    //! tests in `rust/tests/runtime_numeric.rs` because they require
+    //! `make artifacts`.
+    use super::*;
+
+    #[test]
+    fn as_bytes_views_pod() {
+        let xs = [1.0f32, -2.5];
+        let b = as_bytes(&xs);
+        assert_eq!(b.len(), 8);
+        assert_eq!(f32::from_le_bytes(b[0..4].try_into().unwrap()), 1.0);
+        let ys = [i32::MIN, 7];
+        assert_eq!(as_bytes(&ys).len(), 8);
+    }
+
+    #[test]
+    fn missing_dir_is_config_error() {
+        let err = match Runtime::load(Path::new("/nonexistent-oocgb")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,220 @@
+//! `artifacts/manifest.json` parsing — the Rust side is entirely
+//! manifest-driven (no compiled shapes duplicated in Rust code).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Tensor signature entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// `histogram` | `gradient` | `mvs` | `eval_splits`
+    pub kind: String,
+    /// Static parameters (batch, features, nodes, bins, objective...).
+    pub params: BTreeMap<String, Value>,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+impl ArtifactMeta {
+    pub fn param_usize(&self, key: &str) -> Result<usize> {
+        self.params
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| Error::config(format!("artifact {}: missing param {key}", self.name)))
+    }
+
+    pub fn param_str(&self, key: &str) -> Result<&str> {
+        self.params
+            .get(key)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| Error::config(format!("artifact {}: missing param {key}", self.name)))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn parse_sig(v: &Value, what: &str) -> Result<Vec<TensorSig>> {
+    let arr = v
+        .as_array()
+        .ok_or_else(|| Error::config(format!("{what} must be an array")))?;
+    arr.iter()
+        .map(|t| {
+            let dtype = t
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .ok_or_else(|| Error::config(format!("{what}: missing dtype")))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(|s| s.as_array())
+                .ok_or_else(|| Error::config(format!("{what}: missing shape")))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| Error::config(format!("{what}: bad dim")))
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            Ok(TensorSig { dtype, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json`; artifact file paths are resolved
+    /// relative to `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::config(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Value::parse(text)?;
+        let format = v
+            .get("format")
+            .and_then(|f| f.as_usize())
+            .ok_or_else(|| Error::config("manifest: missing format"))?;
+        if format != 1 {
+            return Err(Error::config(format!("manifest format {format} unsupported")));
+        }
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_array())
+            .ok_or_else(|| Error::config("manifest: missing artifacts"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| Error::config("artifact missing name"))?
+                .to_string();
+            let file = dir.join(
+                a.get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| Error::config("artifact missing file"))?,
+            );
+            let kind = a
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .ok_or_else(|| Error::config("artifact missing kind"))?
+                .to_string();
+            let params = a
+                .get("params")
+                .and_then(|p| p.as_object())
+                .cloned()
+                .unwrap_or_default();
+            let inputs = parse_sig(
+                a.get("inputs").unwrap_or(&Value::Array(vec![])),
+                "inputs",
+            )?;
+            let outputs = parse_sig(
+                a.get("outputs").unwrap_or(&Value::Array(vec![])),
+                "outputs",
+            )?;
+            artifacts.push(ArtifactMeta { name, file, kind, params, inputs, outputs });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// All artifacts of a kind, sorted by `batch` ascending when present.
+    pub fn of_kind(&self, kind: &str) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> =
+            self.artifacts.iter().filter(|a| a.kind == kind).collect();
+        v.sort_by_key(|a| a.param_usize("batch").unwrap_or(0));
+        v
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "artifacts": [
+        {"name": "hist_b4096", "file": "h.hlo.txt", "kind": "histogram",
+         "params": {"batch": 4096, "features": 32, "nodes": 32, "bins": 64},
+         "inputs": [{"dtype": "int32", "shape": [4096, 32]},
+                    {"dtype": "float32", "shape": [4096, 2]},
+                    {"dtype": "int32", "shape": [4096]}],
+         "outputs": [{"dtype": "float32", "shape": [32, 32, 64, 2]}]},
+        {"name": "hist_b16384", "file": "h2.hlo.txt", "kind": "histogram",
+         "params": {"batch": 16384}, "inputs": [], "outputs": []},
+        {"name": "mvs_b8192", "file": "m.hlo.txt", "kind": "mvs",
+         "params": {"batch": 8192}, "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let h = m.by_name("hist_b4096").unwrap();
+        assert_eq!(h.kind, "histogram");
+        assert_eq!(h.param_usize("bins").unwrap(), 64);
+        assert_eq!(h.inputs[0].shape, vec![4096, 32]);
+        assert_eq!(h.file, Path::new("/art/h.hlo.txt"));
+    }
+
+    #[test]
+    fn of_kind_sorted_by_batch() {
+        let m = Manifest::parse(SAMPLE, Path::new("/")).unwrap();
+        let hists = m.of_kind("histogram");
+        assert_eq!(hists.len(), 2);
+        assert!(hists[0].param_usize("batch").unwrap() < hists[1].param_usize("batch").unwrap());
+        assert_eq!(m.of_kind("gradient").len(), 0);
+    }
+
+    #[test]
+    fn bad_format_rejected() {
+        let bad = SAMPLE.replace("\"format\": 1", "\"format\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::parse(r#"{"format": 1}"#, Path::new("/")).is_err());
+        assert!(Manifest::parse(
+            r#"{"format": 1, "artifacts": [{"file": "x", "kind": "y"}]}"#,
+            Path::new("/")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.of_kind("histogram").is_empty());
+            assert!(!m.of_kind("gradient").is_empty());
+            assert!(!m.of_kind("mvs").is_empty());
+            assert!(!m.of_kind("eval_splits").is_empty());
+        }
+    }
+}

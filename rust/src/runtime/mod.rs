@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO artifacts and executes them on the
+//! hot path.
+//!
+//! This is the Layer-3 half of the AOT bridge (DESIGN.md §3): Python
+//! lowers the L2 graphs + L1 Pallas kernels to HLO *text* once at build
+//! time; this module parses `artifacts/manifest.json`, compiles each
+//! module on the PJRT CPU client (`xla` crate), and exposes typed entry
+//! points (`histogram`, `gradients`, `mvs_scores`, `evaluate_splits`)
+//! that the device tree builder calls.  Python is never involved at
+//! runtime.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{EvalOut, Runtime};
+pub use manifest::{ArtifactMeta, Manifest};

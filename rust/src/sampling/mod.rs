@@ -1,0 +1,348 @@
+//! Gradient-based row sampling (paper §2.4, §3.4).
+//!
+//! Three samplers, matching the paper's survey:
+//!
+//! * [`Sampler::Uniform`] — Stochastic Gradient Boosting (Friedman):
+//!   uniform Bernoulli(f), no reweighting.
+//! * [`Sampler::Goss`] — Gradient-based One-Side Sampling (LightGBM):
+//!   keep the top `a·n` rows by |g|, sample `b·n` of the rest and scale
+//!   them by `(1-a)/b` to keep the gradient statistics unbiased.
+//! * [`Sampler::Mvs`] — Minimal Variance Sampling (the paper's choice,
+//!   Eq. 9): inclusion probability `p_i = min(ĝ_i/μ, 1)` with
+//!   `ĝ = √(g² + λh²)`, μ chosen so `Σ p_i = f·n`, and importance
+//!   weights `1/p_i` applied to the kept gradient pairs.
+//!
+//! Samplers mutate the gradient array in place (unselected rows are
+//! zeroed — the padding contract the histogram kernels rely on) and
+//! return the selection mask that drives compaction (Algorithm 7).
+
+use crate::config::SamplingMethod;
+use crate::util::rng::Rng;
+
+/// Outcome of one sampling round.
+#[derive(Debug, Clone)]
+pub struct SampleResult {
+    /// Per-row selection.
+    pub mask: Vec<bool>,
+    pub n_selected: usize,
+}
+
+/// Row sampler (one per training session; stateless between rounds).
+#[derive(Debug, Clone)]
+pub enum Sampler {
+    None,
+    Uniform { f: f32 },
+    Goss { top_rate: f32, f: f32 },
+    Mvs { f: f32, lambda: Option<f32> },
+}
+
+impl Sampler {
+    pub fn from_config(cfg: &crate::TrainConfig) -> Sampler {
+        match cfg.sampling_method {
+            SamplingMethod::None => Sampler::None,
+            SamplingMethod::Uniform => Sampler::Uniform { f: cfg.subsample },
+            SamplingMethod::Goss => {
+                Sampler::Goss { top_rate: cfg.goss_top_rate, f: cfg.subsample }
+            }
+            SamplingMethod::Mvs => Sampler::Mvs { f: cfg.subsample, lambda: cfg.mvs_lambda },
+        }
+    }
+
+    /// Effective sampling ratio (for memory estimates).
+    pub fn ratio(&self) -> f32 {
+        match self {
+            Sampler::None => 1.0,
+            Sampler::Uniform { f } | Sampler::Goss { f, .. } | Sampler::Mvs { f, .. } => *f,
+        }
+    }
+
+    /// Sample one round.  `mvs_scores`, when provided (device path),
+    /// must be `ĝ_i` per row; otherwise MVS computes them on the host.
+    pub fn sample(
+        &self,
+        grads: &mut [[f32; 2]],
+        rng: &mut Rng,
+        mvs_scores: Option<&[f32]>,
+    ) -> SampleResult {
+        match self {
+            Sampler::None => SampleResult { mask: vec![true; grads.len()], n_selected: grads.len() },
+            Sampler::Uniform { f } => uniform(grads, *f, rng),
+            Sampler::Goss { top_rate, f } => goss(grads, *top_rate, *f, rng),
+            Sampler::Mvs { f, lambda } => mvs(grads, *f, *lambda, rng, mvs_scores),
+        }
+    }
+}
+
+fn uniform(grads: &mut [[f32; 2]], f: f32, rng: &mut Rng) -> SampleResult {
+    let mut mask = vec![false; grads.len()];
+    let mut n = 0usize;
+    for (i, g) in grads.iter_mut().enumerate() {
+        if rng.bernoulli(f as f64) {
+            mask[i] = true;
+            n += 1;
+        } else {
+            *g = [0.0, 0.0];
+        }
+    }
+    SampleResult { mask, n_selected: n }
+}
+
+fn goss(grads: &mut [[f32; 2]], a: f32, f: f32, rng: &mut Rng) -> SampleResult {
+    let n = grads.len();
+    let b = (f - a).max(0.0);
+    let top_n = ((a as f64) * n as f64).round() as usize;
+    // Threshold = |g| of the top_n-th largest gradient (selection by
+    // nth-element on a copy).
+    let mut abs_g: Vec<f32> = grads.iter().map(|g| g[0].abs()).collect();
+    let thresh = if top_n == 0 {
+        f32::INFINITY
+    } else if top_n >= n {
+        -1.0
+    } else {
+        let idx = n - top_n; // ascending select
+        abs_g.select_nth_unstable_by(idx, |x, y| x.partial_cmp(y).unwrap());
+        abs_g[idx]
+    };
+    let scale = if b > 0.0 { (1.0 - a) / b } else { 0.0 };
+    let mut mask = vec![false; n];
+    let mut selected = 0usize;
+    let mut kept_top = 0usize;
+    for (i, g) in grads.iter_mut().enumerate() {
+        let is_top = g[0].abs() >= thresh && kept_top < top_n;
+        if is_top {
+            kept_top += 1;
+            mask[i] = true;
+            selected += 1;
+        } else if b > 0.0 && rng.bernoulli((b / (1.0 - a).max(1e-12)) as f64) {
+            // Sample b·n from the remaining (1-a)·n rows.
+            g[0] *= scale;
+            g[1] *= scale;
+            mask[i] = true;
+            selected += 1;
+        } else {
+            *g = [0.0, 0.0];
+        }
+    }
+    SampleResult { mask, n_selected: selected }
+}
+
+/// Find μ such that Σ min(ĝ/μ, 1) ≈ target by bisection.
+fn mvs_threshold(scores: &[f32], target: f64) -> f64 {
+    let max_s = scores.iter().cloned().fold(0.0f32, f32::max) as f64;
+    if max_s == 0.0 {
+        return 1.0;
+    }
+    let mut lo = 0.0f64; // μ→0: everything selected (Σ→n)
+    let mut hi = max_s * scores.len() as f64 / target.max(1.0); // Σ < target
+    for _ in 0..64 {
+        let mu = 0.5 * (lo + hi);
+        let sum: f64 = scores
+            .iter()
+            .map(|&s| ((s as f64) / mu).min(1.0))
+            .sum();
+        if sum > target {
+            lo = mu;
+        } else {
+            hi = mu;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+fn mvs(
+    grads: &mut [[f32; 2]],
+    f: f32,
+    lambda: Option<f32>,
+    rng: &mut Rng,
+    device_scores: Option<&[f32]>,
+) -> SampleResult {
+    let n = grads.len();
+    let target = (f as f64) * n as f64;
+    // λ: hyperparameter, or estimated from the squared mean of the
+    // initial leaf value (paper §2.4.3): (ΣG/ΣH)².
+    let lam = lambda.unwrap_or_else(|| {
+        let sg: f64 = grads.iter().map(|g| g[0] as f64).sum();
+        let sh: f64 = grads.iter().map(|g| g[1] as f64).sum();
+        if sh.abs() < 1e-12 {
+            1.0
+        } else {
+            ((sg / sh) * (sg / sh)) as f32
+        }
+    }) as f64;
+    let host_scores: Vec<f32>;
+    let scores: &[f32] = match device_scores {
+        Some(s) => {
+            debug_assert_eq!(s.len(), n);
+            s
+        }
+        None => {
+            host_scores = grads
+                .iter()
+                .map(|g| {
+                    ((g[0] as f64 * g[0] as f64) + lam * (g[1] as f64 * g[1] as f64)).sqrt()
+                        as f32
+                })
+                .collect();
+            &host_scores
+        }
+    };
+    let mu = mvs_threshold(scores, target);
+    let mut mask = vec![false; n];
+    let mut selected = 0usize;
+    for i in 0..n {
+        let p = ((scores[i] as f64) / mu).min(1.0);
+        if p > 0.0 && rng.bernoulli(p) {
+            mask[i] = true;
+            selected += 1;
+            let w = (1.0 / p) as f32;
+            grads[i][0] *= w;
+            grads[i][1] *= w;
+        } else {
+            grads[i] = [0.0, 0.0];
+        }
+    }
+    SampleResult { mask, n_selected: selected }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_grads(n: usize, seed: u64) -> Vec<[f32; 2]> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let g = rng.normal() as f32;
+                let p = rng.next_f32() * 0.9 + 0.05;
+                [g, p * (1.0 - p)]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn none_keeps_everything() {
+        let mut grads = test_grads(100, 1);
+        let orig = grads.clone();
+        let r = Sampler::None.sample(&mut grads, &mut Rng::new(2), None);
+        assert_eq!(r.n_selected, 100);
+        assert_eq!(grads, orig);
+    }
+
+    #[test]
+    fn uniform_hits_ratio_and_zeroes() {
+        let mut grads = test_grads(20_000, 3);
+        let r = Sampler::Uniform { f: 0.3 }.sample(&mut grads, &mut Rng::new(4), None);
+        let frac = r.n_selected as f64 / 20_000.0;
+        assert!((frac - 0.3).abs() < 0.02, "frac={frac}");
+        for (i, g) in grads.iter().enumerate() {
+            if !r.mask[i] {
+                assert_eq!(*g, [0.0, 0.0]);
+            }
+        }
+    }
+
+    #[test]
+    fn goss_keeps_top_gradients() {
+        let mut grads = test_grads(10_000, 5);
+        let orig = grads.clone();
+        let r = Sampler::Goss { top_rate: 0.2, f: 0.4 }
+            .sample(&mut grads, &mut Rng::new(6), None);
+        let frac = r.n_selected as f64 / 10_000.0;
+        assert!((frac - 0.4).abs() < 0.03, "frac={frac}");
+        // Every row in the top 10% by |g| must be selected with weight 1.
+        let mut abs: Vec<f32> = orig.iter().map(|g| g[0].abs()).collect();
+        abs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let t10 = abs[1000];
+        let mut checked = 0;
+        for i in 0..10_000 {
+            if orig[i][0].abs() > t10 {
+                assert!(r.mask[i], "top row {i} dropped");
+                assert_eq!(grads[i], orig[i], "top row {i} rescaled");
+                checked += 1;
+            }
+        }
+        assert!(checked > 500);
+    }
+
+    #[test]
+    fn goss_rest_scaled_unbiased() {
+        // Gradient-sum preservation in expectation: scaled rest rows carry
+        // (1-a)/b weight.
+        let mut grads = vec![[1.0f32, 1.0f32]; 50_000];
+        let orig_sum = 50_000.0f64;
+        let r = Sampler::Goss { top_rate: 0.1, f: 0.3 }
+            .sample(&mut grads, &mut Rng::new(7), None);
+        let new_sum: f64 = grads.iter().map(|g| g[0] as f64).sum();
+        assert!((new_sum - orig_sum).abs() / orig_sum < 0.05,
+                "sum {new_sum} vs {orig_sum}");
+        assert!(r.n_selected > 0);
+    }
+
+    #[test]
+    fn mvs_ratio_and_unbiasedness() {
+        let mut grads = test_grads(50_000, 8);
+        let orig = grads.clone();
+        let r = Sampler::Mvs { f: 0.2, lambda: Some(1.0) }
+            .sample(&mut grads, &mut Rng::new(9), None);
+        let frac = r.n_selected as f64 / 50_000.0;
+        assert!((frac - 0.2).abs() < 0.02, "frac={frac}");
+        // Importance weighting keeps ΣG unbiased.
+        let sg_orig: f64 = orig.iter().map(|g| g[0] as f64).sum();
+        let sg_new: f64 = grads.iter().map(|g| g[0] as f64).sum();
+        assert!(
+            (sg_new - sg_orig).abs() < 0.05 * orig.len() as f64,
+            "ΣG {sg_orig} → {sg_new}"
+        );
+    }
+
+    #[test]
+    fn mvs_prefers_large_gradients() {
+        let n = 10_000;
+        let mut grads: Vec<[f32; 2]> = (0..n)
+            .map(|i| if i < 1000 { [10.0, 0.1] } else { [0.01, 0.1] })
+            .collect();
+        let r = Sampler::Mvs { f: 0.15, lambda: Some(1.0) }
+            .sample(&mut grads, &mut Rng::new(10), None);
+        let big_kept = r.mask[..1000].iter().filter(|&&m| m).count();
+        let small_kept = r.mask[1000..].iter().filter(|&&m| m).count();
+        // All big-gradient rows kept (p=1), small ones heavily sampled.
+        assert!(big_kept > 990, "big_kept={big_kept}");
+        assert!((small_kept as f64) < 0.1 * 9000.0, "small_kept={small_kept}");
+    }
+
+    #[test]
+    fn mvs_device_scores_path_matches_host() {
+        let grads0 = test_grads(5000, 11);
+        let lam = 1.0f64;
+        let scores: Vec<f32> = grads0
+            .iter()
+            .map(|g| ((g[0] as f64).powi(2) + lam * (g[1] as f64).powi(2)).sqrt() as f32)
+            .collect();
+        let mut a = grads0.clone();
+        let mut b = grads0.clone();
+        let ra = Sampler::Mvs { f: 0.3, lambda: Some(1.0) }
+            .sample(&mut a, &mut Rng::new(12), None);
+        let rb = Sampler::Mvs { f: 0.3, lambda: Some(1.0) }
+            .sample(&mut b, &mut Rng::new(12), Some(&scores));
+        assert_eq!(ra.mask, rb.mask);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mvs_threshold_bisection() {
+        let scores = vec![1.0f32; 1000];
+        let mu = mvs_threshold(&scores, 500.0);
+        // p = min(1/μ, 1) = 0.5 → μ = 2.
+        assert!((mu - 2.0).abs() < 1e-6, "mu={mu}");
+        let sum: f64 = scores.iter().map(|&s| ((s as f64) / mu).min(1.0)).sum();
+        assert!((sum - 500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn all_zero_gradients_dont_panic() {
+        let mut grads = vec![[0.0f32, 0.0f32]; 100];
+        let r = Sampler::Mvs { f: 0.5, lambda: None }
+            .sample(&mut grads, &mut Rng::new(13), None);
+        assert_eq!(r.n_selected, 0);
+    }
+}

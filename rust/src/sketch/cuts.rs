@@ -1,0 +1,284 @@
+//! Histogram cut points — the quantized feature representation every
+//! builder (CPU and device) shares.
+//!
+//! For feature `f`, `values[ptrs[f]..ptrs[f+1]]` holds ascending cut
+//! upper-bounds.  `search_bin(f, v)` returns the first bin whose cut is
+//! ≥ `v` — i.e. bin `b` contains values in `(cut[b-1], cut[b]]`.  The
+//! last cut is nudged above the feature max so every value lands in a
+//! bin.  This matches XGBoost's `HistogramCuts` contract, including the
+//! "split at bin b sends `bin ≤ b` left ⟺ `value ≤ cut[b]`" equivalence
+//! the predictor relies on.
+
+use crate::data::SparsePage;
+use crate::error::{Error, Result};
+use crate::sketch::quantile::{SketchBuilder, WQSummary};
+
+/// Quantization table for all features.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistogramCuts {
+    /// CSR-style offsets into `values`; length = n_features + 1.
+    pub ptrs: Vec<u32>,
+    /// Ascending cut upper-bounds per feature.
+    pub values: Vec<f32>,
+    /// Per-feature observed minimum (for completeness / model dumps).
+    pub min_vals: Vec<f32>,
+}
+
+impl HistogramCuts {
+    /// Derive cuts from per-feature summaries (`max_bin` bins target).
+    pub fn from_summaries(
+        summaries: &[WQSummary],
+        min_vals: &[f32],
+        max_bin: usize,
+    ) -> HistogramCuts {
+        assert!(max_bin >= 2);
+        let mut ptrs = Vec::with_capacity(summaries.len() + 1);
+        let mut values = Vec::new();
+        ptrs.push(0u32);
+        for s in summaries {
+            if s.is_empty() {
+                // Feature never observed: single catch-all cut.
+                values.push(f32::MAX);
+                ptrs.push(values.len() as u32);
+                continue;
+            }
+            let total = s.total_weight();
+            let max_val = s.entries.last().unwrap().value;
+            let start = values.len();
+            // Interior cuts at ranks k/max_bin; dedupe adjacent.
+            for k in 1..max_bin {
+                let rank = total * k as f64 / max_bin as f64;
+                let v = s.query_value(rank);
+                if v >= max_val {
+                    break; // remaining cuts would all collapse onto max
+                }
+                if values.len() == start || *values.last().unwrap() < v {
+                    values.push(v);
+                }
+            }
+            // Final cut strictly above the max so search_bin always lands.
+            values.push(above(max_val));
+            ptrs.push(values.len() as u32);
+        }
+        HistogramCuts { ptrs, values, min_vals: min_vals.to_vec() }
+    }
+
+    /// Single-pass convenience over in-memory pages (Algorithm 2 — the
+    /// in-core sketch).  The out-of-core path drives [`SketchBuilder`]
+    /// page-by-page itself (Algorithm 3).
+    pub fn build(pages: &[SparsePage], n_features: usize, max_bin: usize) -> Result<HistogramCuts> {
+        if pages.is_empty() {
+            return Err(Error::data("no pages to sketch"));
+        }
+        let mut b = SketchBuilder::new(n_features, max_bin);
+        for p in pages {
+            b.push_page(p);
+        }
+        let (summaries, mins) = b.finish();
+        Ok(HistogramCuts::from_summaries(&summaries, &mins, max_bin))
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.ptrs.len() - 1
+    }
+
+    /// Number of bins for feature `f`.
+    pub fn n_bins(&self, f: usize) -> usize {
+        (self.ptrs[f + 1] - self.ptrs[f]) as usize
+    }
+
+    /// Largest per-feature bin count (device artifacts are compiled for a
+    /// uniform width; features with fewer bins simply never emit high
+    /// symbols).
+    pub fn max_bins(&self) -> usize {
+        (0..self.n_features()).map(|f| self.n_bins(f)).max().unwrap_or(0)
+    }
+
+    /// Cut values for feature `f`.
+    pub fn feature_cuts(&self, f: usize) -> &[f32] {
+        &self.values[self.ptrs[f] as usize..self.ptrs[f + 1] as usize]
+    }
+
+    /// Bin index (feature-local) of value `v`: first cut ≥ v.
+    #[inline]
+    pub fn search_bin(&self, f: usize, v: f32) -> u32 {
+        let cuts = self.feature_cuts(f);
+        // Branchless-ish binary search (cuts are short: ≤ max_bin).
+        let mut lo = 0usize;
+        let mut hi = cuts.len() - 1;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if cuts[mid] < v {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo as u32
+    }
+
+    /// The raw-value threshold for a split at (feature, bin): value ≤
+    /// threshold goes left.  This is what trees store as `split_value`.
+    pub fn split_value(&self, f: usize, bin: u32) -> f32 {
+        self.feature_cuts(f)[bin as usize]
+    }
+
+    /// Serialized size (for device-memory accounting: the cuts table is
+    /// resident during quantization).
+    pub fn memory_bytes(&self) -> usize {
+        self.ptrs.len() * 4 + self.values.len() * 4 + self.min_vals.len() * 4
+    }
+}
+
+/// Smallest f32 strictly greater than `v` (for the terminal cut).
+fn above(v: f32) -> f32 {
+    if v == f32::MAX || v.is_nan() {
+        f32::MAX
+    } else {
+        // next_up: add one ulp.
+        let bits = v.to_bits();
+        let next = if v >= 0.0 { bits + 1 } else { bits - 1 };
+        f32::from_bits(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    fn uniform_page(rows: usize, cols: usize, seed: u64) -> SparsePage {
+        let mut rng = Rng::new(seed);
+        let mut p = SparsePage::new(cols);
+        let mut row = vec![0f32; cols];
+        for _ in 0..rows {
+            for v in row.iter_mut() {
+                *v = rng.next_f32();
+            }
+            p.push_dense_row(&row);
+        }
+        p
+    }
+
+    #[test]
+    fn above_is_strictly_greater() {
+        for v in [-1.5f32, 0.0, 1.0, 1e30, -1e-30] {
+            assert!(above(v) > v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn bins_are_balanced_on_uniform_data() {
+        let page = uniform_page(20_000, 1, 3);
+        let cuts = HistogramCuts::build(&[page.clone()], 1, 16).unwrap();
+        assert_eq!(cuts.n_features(), 1);
+        assert!(cuts.n_bins(0) <= 16 && cuts.n_bins(0) >= 14);
+        let mut counts = vec![0usize; cuts.n_bins(0)];
+        for r in 0..page.n_rows() {
+            counts[cuts.search_bin(0, page.row_values(r)[0]) as usize] += 1;
+        }
+        let expect = 20_000 / cuts.n_bins(0);
+        for (b, c) in counts.iter().enumerate() {
+            assert!(
+                (*c as f64) > 0.5 * expect as f64 && (*c as f64) < 1.6 * expect as f64,
+                "bin {b} count {c} (expect ~{expect})"
+            );
+        }
+    }
+
+    #[test]
+    fn every_value_lands_in_range() {
+        let page = uniform_page(1000, 3, 4);
+        let cuts = HistogramCuts::build(&[page.clone()], 3, 8).unwrap();
+        for r in 0..page.n_rows() {
+            for (c, v) in page.row_indices(r).iter().zip(page.row_values(r)) {
+                let b = cuts.search_bin(*c as usize, *v);
+                assert!((b as usize) < cuts.n_bins(*c as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn constant_feature_gets_one_bin() {
+        let mut p = SparsePage::new(2);
+        for _ in 0..100 {
+            p.push_dense_row(&[5.0, 1.0]);
+        }
+        let cuts = HistogramCuts::build(&[p], 2, 16).unwrap();
+        assert_eq!(cuts.n_bins(0), 1);
+        assert_eq!(cuts.search_bin(0, 5.0), 0);
+    }
+
+    #[test]
+    fn unobserved_feature_catch_all() {
+        let mut p = SparsePage::new(2);
+        p.push_row(&[0], &[1.0]); // feature 1 never appears
+        let cuts = HistogramCuts::build(&[p], 2, 16).unwrap();
+        assert_eq!(cuts.n_bins(1), 1);
+        assert_eq!(cuts.search_bin(1, 123.0), 0);
+    }
+
+    #[test]
+    fn split_value_bin_equivalence() {
+        // bin(v) ≤ b  ⟺  v ≤ split_value(f, b) — the predictor contract.
+        let page = uniform_page(5000, 1, 9);
+        let cuts = HistogramCuts::build(&[page.clone()], 1, 16).unwrap();
+        for b in 0..cuts.n_bins(0) as u32 {
+            let t = cuts.split_value(0, b);
+            for r in 0..200 {
+                let v = page.row_values(r)[0];
+                assert_eq!(cuts.search_bin(0, v) <= b, v <= t, "b={b} v={v} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn paged_sketch_close_to_single_pass() {
+        // Algorithm 3 ≈ Algorithm 2: cuts from many small pages must put
+        // uniform data into near-balanced bins too.
+        let mut b = SketchBuilder::new(1, 16);
+        let mut rng = Rng::new(10);
+        let mut all = Vec::new();
+        for _ in 0..50 {
+            let page = {
+                let mut p = SparsePage::new(1);
+                for _ in 0..400 {
+                    let v = rng.next_f32();
+                    all.push(v);
+                    p.push_dense_row(&[v]);
+                }
+                p
+            };
+            b.push_page(&page);
+        }
+        let (summaries, mins) = b.finish();
+        let cuts = HistogramCuts::from_summaries(&summaries, &mins, 16);
+        let mut counts = vec![0usize; cuts.n_bins(0)];
+        for v in &all {
+            counts[cuts.search_bin(0, *v) as usize] += 1;
+        }
+        let expect = all.len() / cuts.n_bins(0);
+        for c in &counts {
+            assert!(*c > expect / 3, "unbalanced bin: {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn prop_search_bin_monotone() {
+        run_prop("search_bin monotone in value", 40, |g| {
+            let n = g.usize_in(10..500);
+            let vals: Vec<(f32, f64)> =
+                (0..n).map(|_| (g.f32_in(-100.0..100.0), 1.0)).collect();
+            let s = WQSummary::from_unsorted(vals);
+            let cuts = HistogramCuts::from_summaries(&[s], &[-100.0], 16);
+            let mut last = 0u32;
+            for i in 0..50 {
+                let v = -110.0 + i as f32 * (220.0 / 50.0);
+                let b = cuts.search_bin(0, v);
+                assert!(b >= last);
+                last = b;
+            }
+        });
+    }
+}

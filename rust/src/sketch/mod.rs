@@ -1,0 +1,15 @@
+//! Streaming weighted quantile sketch (paper §3.1, Algorithms 2–3).
+//!
+//! XGBoost quantizes every feature into `max_bin` bins before tree
+//! construction; the cut points come from a *mergeable* weighted quantile
+//! sketch so they can be computed one CSR page at a time — that is
+//! exactly what makes the out-of-core preprocessing step (Algorithm 3)
+//! possible.  This module implements the GK-style summary XGBoost uses
+//! (`WQSummary`: per-entry `rmin`/`rmax` rank bounds) with `push` /
+//! `merge` / `prune`, and the final cut-point extraction.
+
+pub mod cuts;
+pub mod quantile;
+
+pub use cuts::HistogramCuts;
+pub use quantile::{SketchBuilder, WQSummary};

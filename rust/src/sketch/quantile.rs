@@ -1,0 +1,425 @@
+//! Mergeable weighted quantile summary (GK-style, after XGBoost's
+//! `WQSummary`/`WXQSummary`).
+//!
+//! A summary is a sorted list of entries `(value, rmin, rmax, w)` where
+//! for each retained value:
+//! * `rmin` — total weight of items strictly smaller,
+//! * `rmax` — `rmin` + total weight of items ≤ value,
+//! * `w`    — total weight of items exactly equal.
+//!
+//! The invariant maintained under `merge` and `prune` is the GK bound:
+//! any rank query is answered within `eps · total_weight` where `eps`
+//! shrinks with the prune budget.  Out-of-core sketching (Algorithm 3)
+//! is: per page → build exact summary per column batch → `merge` into
+//! the running summary → `prune` to budget.
+
+/// One summary entry.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Entry {
+    pub value: f32,
+    pub rmin: f64,
+    pub rmax: f64,
+    pub w: f64,
+}
+
+impl Entry {
+    /// Upper bound on the rank of `value` minus its own weight (XGBoost's
+    /// `RMinNext`).
+    fn rmin_next(&self) -> f64 {
+        self.rmin + self.w
+    }
+
+    /// Lower bound on the rank just before `value` (XGBoost's `RMaxPrev`).
+    fn rmax_prev(&self) -> f64 {
+        self.rmax - self.w
+    }
+}
+
+/// A weighted quantile summary over one feature.
+#[derive(Clone, Debug, Default)]
+pub struct WQSummary {
+    pub entries: Vec<Entry>,
+}
+
+impl WQSummary {
+    /// Build an *exact* summary from unsorted (value, weight) pairs.
+    pub fn from_unsorted(mut data: Vec<(f32, f64)>) -> WQSummary {
+        data.retain(|(v, w)| v.is_finite() && *w > 0.0);
+        if data.is_empty() {
+            return WQSummary::default();
+        }
+        data.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut entries: Vec<Entry> = Vec::new();
+        let mut rank = 0.0f64;
+        let mut i = 0;
+        while i < data.len() {
+            let v = data[i].0;
+            let mut w = 0.0;
+            while i < data.len() && data[i].0 == v {
+                w += data[i].1;
+                i += 1;
+            }
+            entries.push(Entry { value: v, rmin: rank, rmax: rank + w, w });
+            rank += w;
+        }
+        WQSummary { entries }
+    }
+
+    /// Total weight covered.
+    pub fn total_weight(&self) -> f64 {
+        self.entries.last().map(|e| e.rmax).unwrap_or(0.0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Maximum rank uncertainty (the sketch ε·N bound).
+    pub fn max_error(&self) -> f64 {
+        let mut err: f64 = 0.0;
+        for pair in self.entries.windows(2) {
+            err = err.max(pair[1].rmax_prev() - pair[0].rmin_next());
+        }
+        for e in &self.entries {
+            err = err.max(e.rmax - e.rmin - e.w);
+        }
+        err
+    }
+
+    /// Merge two summaries (exact on the union of retained values —
+    /// XGBoost `SetCombine`).
+    pub fn merge(&self, other: &WQSummary) -> WQSummary {
+        if self.is_empty() {
+            return other.clone();
+        }
+        if other.is_empty() {
+            return self.clone();
+        }
+        let (a, b) = (&self.entries, &other.entries);
+        let mut out = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            let ea = a[i];
+            let eb = b[j];
+            if ea.value == eb.value {
+                out.push(Entry {
+                    value: ea.value,
+                    rmin: ea.rmin + eb.rmin,
+                    rmax: ea.rmax + eb.rmax,
+                    w: ea.w + eb.w,
+                });
+                i += 1;
+                j += 1;
+            } else if ea.value < eb.value {
+                // All of b before j is < ea.value; b[j] is > ea.value, so
+                // ea gains b's rank bounds just before eb.
+                out.push(Entry {
+                    value: ea.value,
+                    rmin: ea.rmin + eb.rmax_prev(),
+                    rmax: ea.rmax + eb.rmax_prev(),
+                    w: ea.w,
+                });
+                i += 1;
+            } else {
+                out.push(Entry {
+                    value: eb.value,
+                    rmin: eb.rmin + ea.rmax_prev(),
+                    rmax: eb.rmax + ea.rmax_prev(),
+                    w: eb.w,
+                });
+                j += 1;
+            }
+        }
+        let tail_rank_b = other.total_weight();
+        while i < a.len() {
+            let ea = a[i];
+            out.push(Entry {
+                value: ea.value,
+                rmin: ea.rmin + tail_rank_b,
+                rmax: ea.rmax + tail_rank_b,
+                w: ea.w,
+            });
+            i += 1;
+        }
+        let tail_rank_a = self.total_weight();
+        while j < b.len() {
+            let eb = b[j];
+            out.push(Entry {
+                value: eb.value,
+                rmin: eb.rmin + tail_rank_a,
+                rmax: eb.rmax + tail_rank_a,
+                w: eb.w,
+            });
+            j += 1;
+        }
+        WQSummary { entries: out }
+    }
+
+    /// Shrink to at most `maxsize` entries, keeping endpoints and picking
+    /// interior entries nearest to evenly spaced target ranks (XGBoost
+    /// `SetPrune`).
+    pub fn prune(&self, maxsize: usize) -> WQSummary {
+        assert!(maxsize >= 2);
+        let n = self.entries.len();
+        if n <= maxsize {
+            return self.clone();
+        }
+        let total = self.total_weight();
+        let mut out: Vec<Entry> = Vec::with_capacity(maxsize);
+        out.push(self.entries[0]);
+        let interior = maxsize - 2;
+        let mut cursor = 1usize;
+        for k in 1..=interior {
+            let target = total * k as f64 / (interior + 1) as f64;
+            // Advance to the entry whose rank midpoint straddles target.
+            while cursor + 1 < n - 1
+                && (self.entries[cursor].rmin + self.entries[cursor].rmax) / 2.0
+                    < target
+            {
+                cursor += 1;
+            }
+            let e = self.entries[cursor];
+            if out.last().map(|p| p.value) != Some(e.value) {
+                out.push(e);
+            }
+        }
+        let last = self.entries[n - 1];
+        if out.last().map(|p| p.value) != Some(last.value) {
+            out.push(last);
+        }
+        WQSummary { entries: out }
+    }
+
+    /// Rank query: returns the retained value whose rank-midpoint
+    /// `(rmin + rmax)/2` is closest to `rank` (unbiased under the GK
+    /// bounds, unlike a one-sided rmax search).
+    pub fn query_value(&self, rank: f64) -> f32 {
+        debug_assert!(!self.is_empty());
+        // Binary search for the first midpoint ≥ rank...
+        let mid = |e: &Entry| (e.rmin + e.rmax) / 2.0;
+        let mut lo = 0usize;
+        let mut hi = self.entries.len();
+        while lo < hi {
+            let m = (lo + hi) / 2;
+            if mid(&self.entries[m]) < rank {
+                lo = m + 1;
+            } else {
+                hi = m;
+            }
+        }
+        // ...then pick the nearer of it and its predecessor.
+        let i = lo.min(self.entries.len() - 1);
+        if i > 0 && rank - mid(&self.entries[i - 1]) < mid(&self.entries[i]) - rank {
+            self.entries[i - 1].value
+        } else {
+            self.entries[i].value
+        }
+    }
+}
+
+/// Multi-feature streaming sketch builder — the object Algorithm 3 loops
+/// over pages with.
+#[derive(Debug)]
+pub struct SketchBuilder {
+    /// Per-feature running summary.
+    summaries: Vec<WQSummary>,
+    /// Per-feature staging buffer of (value, weight).
+    buffers: Vec<Vec<(f32, f64)>>,
+    /// Per-feature observed min (cuts need a lower bound).
+    min_values: Vec<f32>,
+    /// Flush threshold per feature buffer.
+    buffer_limit: usize,
+    /// Prune budget for the running summaries.
+    prune_size: usize,
+}
+
+impl SketchBuilder {
+    /// `max_bin` sizes the prune budget.  Sequential page merges
+    /// accumulate prune error linearly, so the budget keeps a 32× safety
+    /// factor over `max_bin`: ε ≈ flushes/(32·max_bin), comfortably below
+    /// a bin width for realistic page counts.
+    pub fn new(n_features: usize, max_bin: usize) -> SketchBuilder {
+        let prune_size = (32 * max_bin).max(256);
+        SketchBuilder {
+            summaries: vec![WQSummary::default(); n_features],
+            buffers: vec![Vec::new(); n_features],
+            min_values: vec![f32::INFINITY; n_features],
+            buffer_limit: (16 * prune_size).max(1024),
+            prune_size,
+        }
+    }
+
+    /// Feed one value (weight 1 for the initial sketch; XGBoost uses
+    /// hessian weights when re-sketching).
+    #[inline]
+    pub fn push(&mut self, feature: usize, value: f32, weight: f64) {
+        if !value.is_finite() {
+            return;
+        }
+        if value < self.min_values[feature] {
+            self.min_values[feature] = value;
+        }
+        self.buffers[feature].push((value, weight));
+        if self.buffers[feature].len() >= self.buffer_limit {
+            self.flush_feature(feature);
+        }
+    }
+
+    /// Feed a whole CSR page (Algorithm 3 inner loop).
+    pub fn push_page(&mut self, page: &crate::data::SparsePage) {
+        for r in 0..page.n_rows() {
+            let (cols, vals) = (page.row_indices(r), page.row_values(r));
+            for (c, v) in cols.iter().zip(vals) {
+                self.push(*c as usize, *v, 1.0);
+            }
+        }
+    }
+
+    fn flush_feature(&mut self, feature: usize) {
+        if self.buffers[feature].is_empty() {
+            return;
+        }
+        let batch = WQSummary::from_unsorted(std::mem::take(&mut self.buffers[feature]));
+        let merged = self.summaries[feature].merge(&batch);
+        self.summaries[feature] = merged.prune(self.prune_size);
+    }
+
+    /// Finish: flush buffers and return per-feature summaries + minima.
+    pub fn finish(mut self) -> (Vec<WQSummary>, Vec<f32>) {
+        for f in 0..self.summaries.len() {
+            self.flush_feature(f);
+        }
+        (self.summaries, self.min_values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_summary_ranks() {
+        let s = WQSummary::from_unsorted(vec![(2.0, 1.0), (1.0, 1.0), (2.0, 1.0), (5.0, 2.0)]);
+        assert_eq!(s.entries.len(), 3);
+        assert_eq!(s.total_weight(), 5.0);
+        let e2 = s.entries[1]; // value 2.0
+        assert_eq!(e2.rmin, 1.0);
+        assert_eq!(e2.rmax, 3.0);
+        assert_eq!(e2.w, 2.0);
+        assert_eq!(s.max_error(), 0.0);
+    }
+
+    #[test]
+    fn nonfinite_and_zero_weight_dropped() {
+        let s = WQSummary::from_unsorted(vec![
+            (f32::NAN, 1.0),
+            (f32::INFINITY, 1.0),
+            (1.0, 0.0),
+            (3.0, 1.0),
+        ]);
+        assert_eq!(s.entries.len(), 1);
+        assert_eq!(s.entries[0].value, 3.0);
+    }
+
+    #[test]
+    fn merge_equals_exact_on_union() {
+        let a = WQSummary::from_unsorted(vec![(1.0, 1.0), (3.0, 1.0), (5.0, 1.0)]);
+        let b = WQSummary::from_unsorted(vec![(2.0, 1.0), (3.0, 1.0), (6.0, 1.0)]);
+        let m = a.merge(&b);
+        let exact = WQSummary::from_unsorted(vec![
+            (1.0, 1.0),
+            (3.0, 1.0),
+            (5.0, 1.0),
+            (2.0, 1.0),
+            (3.0, 1.0),
+            (6.0, 1.0),
+        ]);
+        assert_eq!(m.entries.len(), exact.entries.len());
+        for (x, y) in m.entries.iter().zip(&exact.entries) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn prune_keeps_endpoints_and_bound() {
+        let data: Vec<(f32, f64)> = (0..1000).map(|i| (i as f32, 1.0)).collect();
+        let s = WQSummary::from_unsorted(data);
+        let p = s.prune(64);
+        assert!(p.entries.len() <= 64);
+        assert_eq!(p.entries[0].value, 0.0);
+        assert_eq!(p.entries.last().unwrap().value, 999.0);
+        // ε bound: error ≤ total/interior ≈ 1000/62.
+        assert!(p.max_error() <= 1000.0 / 31.0, "err={}", p.max_error());
+    }
+
+    #[test]
+    fn streaming_matches_quantiles() {
+        // 100k uniform values through page-wise sketching: every decile
+        // query must land within 1% of the true quantile.
+        let mut rng = Rng::new(42);
+        let mut b = SketchBuilder::new(1, 64);
+        let mut all: Vec<f32> = Vec::new();
+        for _ in 0..100_000 {
+            let v = rng.next_f32();
+            all.push(v);
+            b.push(0, v, 1.0);
+        }
+        let (summaries, mins) = b.finish();
+        let s = &summaries[0];
+        assert!(mins[0] >= 0.0);
+        let total = s.total_weight();
+        assert_eq!(total, 100_000.0);
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for k in 1..10 {
+            let target = total * k as f64 / 10.0;
+            let got = s.query_value(target);
+            let truth = all[(all.len() * k / 10).min(all.len() - 1)];
+            assert!(
+                (got - truth).abs() < 0.01,
+                "decile {k}: got {got} truth {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_merge_preserves_total_weight() {
+        run_prop("merge total weight", 50, |g| {
+            let mk = |g: &mut crate::util::prop::Gen| {
+                let n = g.usize_in(0..50);
+                let data: Vec<(f32, f64)> = (0..n)
+                    .map(|_| (g.f32_in(-10.0..10.0), g.f64_in(0.1..2.0)))
+                    .collect();
+                WQSummary::from_unsorted(data)
+            };
+            let a = mk(g);
+            let b = mk(g);
+            let m = a.merge(&b);
+            let want = a.total_weight() + b.total_weight();
+            assert!((m.total_weight() - want).abs() < 1e-6 * (1.0 + want));
+            // Sorted, deduped values:
+            for w in m.entries.windows(2) {
+                assert!(w[0].value < w[1].value);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_prune_error_bounded() {
+        run_prop("prune error bound", 30, |g| {
+            let n = g.usize_in(100..2000);
+            let data: Vec<(f32, f64)> =
+                (0..n).map(|_| (g.f32_in(0.0..1.0), 1.0)).collect();
+            let s = WQSummary::from_unsorted(data);
+            let budget = g.usize_in(16..128);
+            let p = s.prune(budget);
+            assert!(p.entries.len() <= budget);
+            // 2·total/(budget-2) is a loose but always-valid bound for the
+            // midpoint-selection rule above.
+            let bound = 2.0 * s.total_weight() / (budget - 2) as f64 + s.max_error();
+            assert!(p.max_error() <= bound + 1e-9,
+                    "err={} bound={bound}", p.max_error());
+        });
+    }
+}

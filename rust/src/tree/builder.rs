@@ -1,0 +1,267 @@
+//! Depth-wise tree grower (paper Algorithm 1), generic over the
+//! histogram backend and the data source.
+//!
+//! Level protocol: the frontier (all candidate nodes at the current
+//! depth) is histogrammed and evaluated in one backend call, splits are
+//! applied to the tree, and the *next* sweep routes rows through the
+//! fresh splits while it accumulates the next level's histograms — one
+//! data pass per level, the access pattern that makes out-of-core
+//! streaming sequential.
+
+use crate::error::Result;
+use crate::sketch::HistogramCuts;
+use crate::tree::evaluator::SplitCandidate;
+use crate::tree::model::{Node, Tree};
+use crate::tree::param::TreeParams;
+use crate::tree::partitioner::RowPartitioner;
+use crate::tree::source::EllpackSource;
+
+/// A level-histogram + split-evaluation engine (CPU or device).
+pub trait HistBackend {
+    /// Best split per `active` node (all at depth `level`).
+    ///
+    /// Implementations sweep `source` (possibly several times for wide
+    /// levels) and, on the first sweep only, fuse the position update
+    /// for `apply_level`'s splits.  `totals` are the (G, H) sums per
+    /// active node, parallel to `active`.
+    #[allow(clippy::too_many_arguments)]
+    fn best_splits(
+        &mut self,
+        source: &mut dyn EllpackSource,
+        grads: &[[f32; 2]],
+        partitioner: &mut RowPartitioner,
+        tree: &Tree,
+        cuts: &HistogramCuts,
+        params: &TreeParams,
+        active: &[u32],
+        level: usize,
+        apply_level: Option<usize>,
+        totals: &[(f64, f64)],
+    ) -> Result<Vec<SplitCandidate>>;
+}
+
+/// Depth-wise grower.
+pub struct TreeBuilder<'a> {
+    pub params: &'a TreeParams,
+    pub cuts: &'a HistogramCuts,
+}
+
+impl<'a> TreeBuilder<'a> {
+    pub fn new(params: &'a TreeParams, cuts: &'a HistogramCuts) -> Self {
+        TreeBuilder { params, cuts }
+    }
+
+    /// Grow one tree.  `grads[r]` must be zero for rows the partitioner
+    /// marks inactive (the samplers guarantee this).
+    pub fn build(
+        &self,
+        backend: &mut dyn HistBackend,
+        source: &mut dyn EllpackSource,
+        grads: &[[f32; 2]],
+        partitioner: &mut RowPartitioner,
+    ) -> Result<Tree> {
+        let lr = self.params.learning_rate;
+        // Root statistics.
+        let mut tg = 0.0f64;
+        let mut th = 0.0f64;
+        for (r, g) in grads.iter().enumerate() {
+            if partitioner.position(r) != RowPartitioner::INACTIVE {
+                tg += g[0] as f64;
+                th += g[1] as f64;
+            }
+        }
+        let mut tree = Tree::default();
+        tree.nodes.push(Node::leaf(self.params.leaf_weight(tg, th) * lr, tg, th, 0));
+
+        let mut frontier: Vec<u32> = vec![0];
+        let mut totals: Vec<(f64, f64)> = vec![(tg, th)];
+
+        for level in 0..self.params.max_depth {
+            if frontier.is_empty() {
+                break;
+            }
+            let apply_level = if level > 0 { Some(level - 1) } else { None };
+            let cands = backend.best_splits(
+                source,
+                grads,
+                partitioner,
+                &tree,
+                self.cuts,
+                self.params,
+                &frontier,
+                level,
+                apply_level,
+                &totals,
+            )?;
+            debug_assert_eq!(cands.len(), frontier.len());
+
+            let mut next_frontier = Vec::new();
+            let mut next_totals = Vec::new();
+            for (node_id, cand) in frontier.iter().zip(&cands) {
+                if !cand.valid {
+                    continue; // stays a leaf (weight set at creation)
+                }
+                let (left_id, right_id) = self.apply_split(&mut tree, *node_id, cand);
+                next_frontier.push(left_id as u32);
+                next_totals.push((cand.left_g, cand.left_h));
+                next_frontier.push(right_id as u32);
+                next_totals.push((cand.right_g(), cand.right_h()));
+            }
+            frontier = next_frontier;
+            totals = next_totals;
+        }
+        Ok(tree)
+    }
+
+    /// Turn leaf `node_id` into an interior node with two fresh leaves.
+    fn apply_split(&self, tree: &mut Tree, node_id: u32, cand: &SplitCandidate) -> (usize, usize) {
+        let lr = self.params.learning_rate;
+        let depth = tree.nodes[node_id as usize].depth;
+        let left = tree.nodes.len();
+        let right = left + 1;
+        tree.nodes.push(Node::leaf(
+            self.params.leaf_weight(cand.left_g, cand.left_h) * lr,
+            cand.left_g,
+            cand.left_h,
+            depth + 1,
+        ));
+        tree.nodes.push(Node::leaf(
+            self.params.leaf_weight(cand.right_g(), cand.right_h()) * lr,
+            cand.right_g(),
+            cand.right_h(),
+            depth + 1,
+        ));
+        let n = &mut tree.nodes[node_id as usize];
+        n.split_feature = cand.feature;
+        n.split_bin = cand.split_bin;
+        n.split_value = self.cuts.split_value(cand.feature as usize, cand.split_bin as u32);
+        n.left = left;
+        n.right = right;
+        n.gain = cand.gain;
+        n.weight = 0.0;
+        (left, right)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ellpack::builder::convert_in_core;
+    use crate::tree::hist_cpu::CpuHistBackend;
+    use crate::tree::source::InMemorySource;
+    use crate::util::rng::Rng;
+
+    /// Data with a 2-level hierarchy: the x1 threshold depends on which
+    /// side of x0 = 0.5 a row falls (0.3 on the left, 0.7 on the right).
+    /// A depth-2 tree must recover both thresholds.
+    fn hierarchical_setup(rows: usize) -> (InMemorySource, Vec<[f32; 2]>, HistogramCuts) {
+        let mut rng = Rng::new(3);
+        let mut page = crate::data::SparsePage::new(2);
+        let mut grads = Vec::new();
+        for _ in 0..rows {
+            let x0 = rng.next_f32();
+            let x1 = rng.next_f32();
+            page.push_dense_row(&[x0, x1]);
+            let y = if x0 < 0.5 { x1 < 0.3 } else { x1 < 0.7 };
+            grads.push([if y { -1.0 } else { 1.0 }, 1.0f32]);
+        }
+        let cuts = HistogramCuts::build(&[page.clone()], 2, 16).unwrap();
+        let ep = convert_in_core(&[page], &cuts, 2, true);
+        (InMemorySource::new(vec![ep]), grads, cuts)
+    }
+
+    #[test]
+    fn grows_hierarchical_tree() {
+        let (mut source, grads, cuts) = hierarchical_setup(4000);
+        let params = TreeParams { max_depth: 3, learning_rate: 1.0, ..Default::default() };
+        let mut backend = CpuHistBackend::new(2);
+        let mut part = RowPartitioner::new(4000);
+        let builder = TreeBuilder::new(&params, &cuts);
+        let tree = builder
+            .build(&mut backend, &mut source, &grads, &mut part)
+            .unwrap();
+        // The function needs ≥2 levels and 4 pure regions; pure leaves
+        // stop splitting early, so 3–6 leaves are all legitimate shapes.
+        assert!(tree.max_depth() >= 2);
+        assert!((3..=8).contains(&tree.n_leaves()), "{} leaves", tree.n_leaves());
+        // Points well inside each region must get the right sign with
+        // magnitude ≈ 1 (pure leaves).
+        for (x0, x1) in [(0.2f32, 0.1f32), (0.2, 0.6), (0.8, 0.5), (0.8, 0.9)] {
+            let y = if x0 < 0.5 { x1 < 0.3 } else { x1 < 0.7 };
+            let want = if y { 1.0 } else { -1.0 };
+            let got = tree.predict_raw(&[x0, x1]);
+            assert!(
+                (got - want).abs() < 0.2,
+                "region ({x0},{x1}): got {got}, want ~{want}"
+            );
+        }
+    }
+
+    #[test]
+    fn max_depth_respected() {
+        let (mut source, grads, cuts) = hierarchical_setup(500);
+        for depth in 1..=3 {
+            let params = TreeParams { max_depth: depth, ..Default::default() };
+            let mut backend = CpuHistBackend::new(1);
+            let mut part = RowPartitioner::new(500);
+            let tree = TreeBuilder::new(&params, &cuts)
+                .build(&mut backend, &mut source, &grads, &mut part)
+                .unwrap();
+            assert!(tree.max_depth() <= depth);
+            assert!(tree.n_leaves() <= 1 << depth);
+        }
+    }
+
+    #[test]
+    fn pure_gradients_give_single_leaf() {
+        // All-equal gradients on random features: no split has gain.
+        let mut rng = Rng::new(4);
+        let mut page = crate::data::SparsePage::new(2);
+        let rows = 200;
+        let grads = vec![[1.0f32, 1.0f32]; rows];
+        for _ in 0..rows {
+            page.push_dense_row(&[rng.next_f32(), rng.next_f32()]);
+        }
+        let cuts = HistogramCuts::build(&[page.clone()], 2, 8).unwrap();
+        let ep = convert_in_core(&[page], &cuts, 2, true);
+        let mut source = InMemorySource::new(vec![ep]);
+        let params = TreeParams { max_depth: 4, learning_rate: 1.0, ..Default::default() };
+        let mut backend = CpuHistBackend::new(1);
+        let mut part = RowPartitioner::new(rows);
+        let tree = TreeBuilder::new(&params, &cuts)
+            .build(&mut backend, &mut source, &grads, &mut part)
+            .unwrap();
+        assert_eq!(tree.n_nodes(), 1);
+        // Leaf weight = -G/(H+λ) = -200/201.
+        assert!((tree.nodes[0].weight + 200.0 / 201.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sampled_rows_only() {
+        // Mask out all rows with x0 ≥ 0.5; the tree must be built purely
+        // from the left half (gradients there are constant → one leaf).
+        let mut rng = Rng::new(5);
+        let mut page = crate::data::SparsePage::new(1);
+        let rows = 400;
+        let mut grads = Vec::new();
+        let mut mask = Vec::new();
+        for _ in 0..rows {
+            let x = rng.next_f32();
+            page.push_dense_row(&[x]);
+            mask.push(x < 0.5);
+            grads.push(if x < 0.5 { [1.0f32, 1.0f32] } else { [0.0, 0.0] });
+        }
+        let cuts = HistogramCuts::build(&[page.clone()], 1, 8).unwrap();
+        let ep = convert_in_core(&[page], &cuts, 1, true);
+        let mut source = InMemorySource::new(vec![ep]);
+        let params = TreeParams { max_depth: 3, learning_rate: 1.0, ..Default::default() };
+        let mut backend = CpuHistBackend::new(2);
+        let mut part = RowPartitioner::from_mask(&mask);
+        let tree = TreeBuilder::new(&params, &cuts)
+            .build(&mut backend, &mut source, &grads, &mut part)
+            .unwrap();
+        assert_eq!(tree.n_nodes(), 1, "constant gradients can't split: {tree:?}");
+        let n_sel = mask.iter().filter(|&&m| m).count() as f64;
+        assert!((tree.nodes[0].sum_hess - n_sel).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,220 @@
+//! CPU split evaluator over the ragged global-bin histogram layout —
+//! the host-side mirror of the `eval_splits` AOT artifact (paper Eq. 8).
+//!
+//! Semantics are pinned to match the device artifact bit-for-bit where
+//! floating-point allows: cumulative left scan over bins, the last bin
+//! of each feature excluded, `min_child_weight` on both children, ties
+//! resolved to the lowest (feature, bin), and `gain > 0` required.
+//! `rust/tests/parity.rs` asserts CPU and device builders grow identical
+//! trees.
+
+use crate::sketch::HistogramCuts;
+
+/// Best split found for one node (or none).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SplitCandidate {
+    /// Loss reduction (Eq. 8); only meaningful when `valid`.
+    pub gain: f32,
+    /// Split feature (global index).
+    pub feature: i32,
+    /// Feature-local bin threshold: bin ≤ split_bin goes left.
+    pub split_bin: i32,
+    /// Left-child gradient sums.
+    pub left_g: f64,
+    pub left_h: f64,
+    /// Node totals.
+    pub total_g: f64,
+    pub total_h: f64,
+    pub valid: bool,
+}
+
+impl SplitCandidate {
+    pub fn none(total_g: f64, total_h: f64) -> SplitCandidate {
+        SplitCandidate {
+            gain: 0.0,
+            feature: -1,
+            split_bin: -1,
+            left_g: 0.0,
+            left_h: 0.0,
+            total_g,
+            total_h,
+            valid: false,
+        }
+    }
+
+    pub fn right_g(&self) -> f64 {
+        self.total_g - self.left_g
+    }
+
+    pub fn right_h(&self) -> f64 {
+        self.total_h - self.left_h
+    }
+}
+
+/// Evaluate the best split for one node from its ragged histogram
+/// (`hist[gidx * 2 + k]`, gidx over all features' bins, k ∈ {g, h}).
+///
+/// `total` is the node's (G, H) — taken from the parent's bookkeeping,
+/// not re-derived, so empty features can't corrupt it.
+pub fn evaluate_node(
+    hist: &[f32],
+    cuts: &HistogramCuts,
+    total: (f64, f64),
+    lambda: f32,
+    gamma: f32,
+    min_child_weight: f32,
+) -> SplitCandidate {
+    let (tg, th) = total;
+    let lambda = lambda as f64;
+    let gamma = gamma as f64;
+    let mcw = min_child_weight as f64;
+    let parent = tg * tg / (th + lambda);
+    let mut best = SplitCandidate::none(tg, th);
+    for f in 0..cuts.n_features() {
+        let lo = cuts.ptrs[f] as usize;
+        let hi = cuts.ptrs[f + 1] as usize;
+        let mut gl = 0.0f64;
+        let mut hl = 0.0f64;
+        // Last bin excluded: a split there sends everything left.
+        for b in lo..hi.saturating_sub(1) {
+            gl += hist[b * 2] as f64;
+            hl += hist[b * 2 + 1] as f64;
+            let gr = tg - gl;
+            let hr = th - hl;
+            if hl < mcw || hr < mcw {
+                continue;
+            }
+            let gain =
+                0.5 * (gl * gl / (hl + lambda) + gr * gr / (hr + lambda) - parent) - gamma;
+            // Strictly-greater keeps the lowest (feature, bin) on ties.
+            if gain > best.gain as f64 && gain > 0.0 {
+                best = SplitCandidate {
+                    gain: gain as f32,
+                    feature: f as i32,
+                    split_bin: (b - lo) as i32,
+                    left_g: gl,
+                    left_h: hl,
+                    total_g: tg,
+                    total_h: th,
+                    valid: true,
+                };
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_feature_cuts(bins: usize) -> HistogramCuts {
+        HistogramCuts {
+            ptrs: vec![0, bins as u32, 2 * bins as u32],
+            values: (0..2 * bins).map(|i| i as f32).collect(),
+            min_vals: vec![0.0, 0.0],
+        }
+    }
+
+    #[test]
+    fn planted_split_found() {
+        let bins = 8;
+        let cuts = two_feature_cuts(bins);
+        let mut hist = vec![0f32; 2 * bins * 2];
+        // Feature 1: bins 0-3 carry g=-1 each, bins 4-7 carry g=+1.
+        for b in 0..bins {
+            let gidx = bins + b;
+            hist[gidx * 2] = if b < 4 { -1.0 } else { 1.0 };
+            hist[gidx * 2 + 1] = 1.0;
+        }
+        // Feature 0: everything in bin 0 (no useful split).
+        hist[0] = 0.0;
+        hist[1] = 8.0;
+        let c = evaluate_node(&hist, &cuts, (0.0, 8.0), 1.0, 0.0, 1.0);
+        assert!(c.valid);
+        assert_eq!(c.feature, 1);
+        assert_eq!(c.split_bin, 3);
+        assert_eq!(c.left_g, -4.0);
+        assert_eq!(c.left_h, 4.0);
+        assert!(c.gain > 0.0);
+    }
+
+    #[test]
+    fn pure_node_no_split() {
+        let cuts = two_feature_cuts(4);
+        let mut hist = vec![0f32; 4 * 2 * 2];
+        hist[2 * 2] = -3.0; // all mass in f0/bin2
+        hist[2 * 2 + 1] = 5.0;
+        hist[(4 + 2) * 2] = -3.0; // f1/bin2
+        hist[(4 + 2) * 2 + 1] = 5.0;
+        let c = evaluate_node(&hist, &cuts, (-3.0, 5.0), 1.0, 0.0, 1.0);
+        assert!(!c.valid);
+        assert_eq!(c.feature, -1);
+    }
+
+    #[test]
+    fn min_child_weight_blocks() {
+        let cuts = two_feature_cuts(4);
+        let mut hist = vec![0f32; 4 * 2 * 2];
+        hist[0] = -1.0;
+        hist[1] = 0.4; // tiny left child
+        hist[3 * 2] = 5.0;
+        hist[3 * 2 + 1] = 9.6;
+        let c = evaluate_node(&hist, &cuts, (4.0, 10.0), 1.0, 0.0, 0.5);
+        assert!(!c.valid, "hl=0.4 < mcw=0.5 for every cut of f0: {c:?}");
+    }
+
+    #[test]
+    fn gamma_suppresses_weak_gain() {
+        let bins = 4;
+        let cuts = two_feature_cuts(bins);
+        let mut hist = vec![0f32; bins * 2 * 2];
+        for b in 0..bins {
+            hist[b * 2] = if b < 2 { -1.0 } else { 1.0 };
+            hist[b * 2 + 1] = 2.0;
+        }
+        let c0 = evaluate_node(&hist, &cuts, (0.0, 8.0), 1.0, 0.0, 1.0);
+        assert!(c0.valid);
+        let c1 = evaluate_node(&hist, &cuts, (0.0, 8.0), 1.0, c0.gain + 1.0, 1.0);
+        assert!(!c1.valid);
+    }
+
+    #[test]
+    fn tie_break_lowest_feature_bin() {
+        // Identical histograms on both features → feature 0 must win.
+        let bins = 4;
+        let cuts = two_feature_cuts(bins);
+        let mut hist = vec![0f32; bins * 2 * 2];
+        for f in 0..2 {
+            for b in 0..bins {
+                let gidx = f * bins + b;
+                hist[gidx * 2] = if b < 2 { -1.0 } else { 1.0 };
+                hist[gidx * 2 + 1] = 2.0;
+            }
+        }
+        let c = evaluate_node(&hist, &cuts, (0.0, 16.0), 1.0, 0.0, 1.0);
+        assert!(c.valid);
+        assert_eq!(c.feature, 0);
+        assert_eq!(c.split_bin, 1);
+    }
+
+    #[test]
+    fn last_bin_never_selected() {
+        // All discriminative mass between last-1 and last bin: the only
+        // candidate cut is at last-1, never "split at last bin".
+        let bins = 4;
+        let cuts = HistogramCuts {
+            ptrs: vec![0, bins as u32],
+            values: (0..bins).map(|i| i as f32).collect(),
+            min_vals: vec![0.0],
+        };
+        let mut hist = vec![0f32; bins * 2];
+        hist[(bins - 2) * 2] = -5.0;
+        hist[(bins - 2) * 2 + 1] = 5.0;
+        hist[(bins - 1) * 2] = 5.0;
+        hist[(bins - 1) * 2 + 1] = 5.0;
+        let c = evaluate_node(&hist, &cuts, (0.0, 10.0), 1.0, 0.0, 1.0);
+        assert!(c.valid);
+        assert_eq!(c.split_bin, (bins - 2) as i32);
+    }
+}

@@ -1,0 +1,34 @@
+//! Level-wise histogram tree construction (paper §2.2 Algorithm 1, §3.3
+//! Algorithm 6, §3.4 Algorithm 7).
+//!
+//! The grower ([`builder::TreeBuilder`]) is generic over two axes:
+//!
+//! * **histogram backend** — [`hist_cpu::CpuHistBackend`] (the paper's
+//!   CPU `hist` baseline: multithreaded host loops over the ragged
+//!   global-bin layout) or [`hist_device::DeviceHistBackend`] (the
+//!   `gpu_hist` analogue: PJRT calls into the AOT Pallas histogram +
+//!   split-evaluation artifacts, with device-memory accounting and
+//!   interconnect charging).
+//! * **data source** — [`source::EllpackSource`] implementations:
+//!   in-core (resident pages), streamed from disk (out-of-core), or the
+//!   compacted sample page (Algorithm 7).
+//!
+//! One data pass per tree level fuses the position update
+//! (`RepartitionInstances`) with histogram accumulation
+//! (`BuildHistograms`) — the access pattern that makes out-of-core
+//! streaming sequential, which is the heart of the paper's design.
+
+pub mod builder;
+pub mod evaluator;
+pub mod hist_cpu;
+pub mod hist_device;
+pub mod model;
+pub mod param;
+pub mod partitioner;
+pub mod source;
+
+pub use builder::TreeBuilder;
+pub use evaluator::SplitCandidate;
+pub use model::{Node, Tree};
+pub use param::TreeParams;
+pub use source::{EllpackSource, InMemorySource};

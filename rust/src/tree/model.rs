@@ -1,0 +1,219 @@
+//! Regression-tree model: arena of nodes, binned + raw prediction, JSON
+//! dump.
+
+use crate::sketch::HistogramCuts;
+use crate::util::json::{arr, num, obj, Value};
+
+/// One tree node.  Interior nodes carry both the quantized split
+/// (`split_feature`, `split_bin`) used during training and the raw
+/// threshold (`split_value`) used for inference on unbinned features;
+/// the two are equivalent by the [`HistogramCuts`] contract
+/// `bin(v) ≤ split_bin ⟺ v ≤ split_value`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Node {
+    /// Split feature, or -1 for leaves.
+    pub split_feature: i32,
+    /// Feature-local bin threshold (rows with bin ≤ this go left).
+    pub split_bin: i32,
+    /// Raw-value threshold (values ≤ this go left).
+    pub split_value: f32,
+    /// Children indices (leaves: usize::MAX).
+    pub left: usize,
+    pub right: usize,
+    /// Leaf output (already shrunk by η); 0 for interior nodes.
+    pub weight: f32,
+    /// Split gain (Eq. 8) for interior nodes.
+    pub gain: f32,
+    /// Gradient statistics of the node's rows.
+    pub sum_grad: f64,
+    pub sum_hess: f64,
+    /// Depth (root = 0).
+    pub depth: usize,
+}
+
+impl Node {
+    pub fn leaf(weight: f32, sum_grad: f64, sum_hess: f64, depth: usize) -> Node {
+        Node {
+            split_feature: -1,
+            split_bin: -1,
+            split_value: f32::NAN,
+            left: usize::MAX,
+            right: usize::MAX,
+            weight,
+            gain: 0.0,
+            sum_grad,
+            sum_hess,
+            depth,
+        }
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        self.split_feature < 0
+    }
+}
+
+/// One regression tree.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+impl Tree {
+    /// A single-leaf tree (used when the root can't split).
+    pub fn single_leaf(weight: f32) -> Tree {
+        Tree { nodes: vec![Node::leaf(weight, 0.0, 0.0, 0)] }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_leaf()).count()
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
+    }
+
+    /// Predict from raw feature values (dense slice, one value per
+    /// feature; missing = NaN goes left).
+    pub fn predict_raw(&self, features: &[f32]) -> f32 {
+        let mut i = 0usize;
+        loop {
+            let n = &self.nodes[i];
+            if n.is_leaf() {
+                return n.weight;
+            }
+            let v = features[n.split_feature as usize];
+            i = if v.is_nan() || v <= n.split_value { n.left } else { n.right };
+        }
+    }
+
+    /// Predict from a quantized ELLPACK row of *global* symbols, dense
+    /// layout (feature f at position f); null symbols go left.
+    pub fn predict_binned(
+        &self,
+        page: &crate::ellpack::EllpackPage,
+        row: usize,
+        cuts: &HistogramCuts,
+    ) -> f32 {
+        let null = page.null_symbol();
+        let mut i = 0usize;
+        loop {
+            let n = &self.nodes[i];
+            if n.is_leaf() {
+                return n.weight;
+            }
+            let f = n.split_feature as usize;
+            let sym = page.get(row, f);
+            let go_left =
+                sym == null || (sym - cuts.ptrs[f]) as i32 <= n.split_bin;
+            i = if go_left { n.left } else { n.right };
+        }
+    }
+
+    /// XGBoost-style JSON dump (model inspection / examples).
+    pub fn to_json(&self) -> Value {
+        let nodes: Vec<Value> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                if n.is_leaf() {
+                    obj(vec![
+                        ("leaf", num(n.weight as f64)),
+                        ("cover", num(n.sum_hess)),
+                        ("depth", num(n.depth as f64)),
+                    ])
+                } else {
+                    obj(vec![
+                        ("split", num(n.split_feature as f64)),
+                        ("split_condition", num(n.split_value as f64)),
+                        ("split_bin", num(n.split_bin as f64)),
+                        ("gain", num(n.gain as f64)),
+                        ("cover", num(n.sum_hess)),
+                        ("left", num(n.left as f64)),
+                        ("right", num(n.right as f64)),
+                        ("depth", num(n.depth as f64)),
+                    ])
+                }
+            })
+            .collect();
+        arr(nodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// root: f0 ≤ 0.5 → leaf(-1) else leaf(+2)
+    fn stump() -> Tree {
+        let mut t = Tree::default();
+        t.nodes.push(Node {
+            split_feature: 0,
+            split_bin: 3,
+            split_value: 0.5,
+            left: 1,
+            right: 2,
+            weight: 0.0,
+            gain: 10.0,
+            sum_grad: 0.0,
+            sum_hess: 20.0,
+            depth: 0,
+        });
+        t.nodes.push(Node::leaf(-1.0, 5.0, 10.0, 1));
+        t.nodes.push(Node::leaf(2.0, -5.0, 10.0, 1));
+        t
+    }
+
+    #[test]
+    fn predict_raw_routing() {
+        let t = stump();
+        assert_eq!(t.predict_raw(&[0.4]), -1.0);
+        assert_eq!(t.predict_raw(&[0.5]), -1.0); // boundary goes left
+        assert_eq!(t.predict_raw(&[0.6]), 2.0);
+        assert_eq!(t.predict_raw(&[f32::NAN]), -1.0); // missing → left
+    }
+
+    #[test]
+    fn structure_queries() {
+        let t = stump();
+        assert_eq!(t.n_nodes(), 3);
+        assert_eq!(t.n_leaves(), 2);
+        assert_eq!(t.max_depth(), 1);
+        assert_eq!(Tree::single_leaf(0.5).n_leaves(), 1);
+    }
+
+    #[test]
+    fn json_dump_parses() {
+        let t = stump();
+        let v = t.to_json();
+        let s = v.to_json_pretty();
+        let parsed = Value::parse(&s).unwrap();
+        let nodes = parsed.as_array().unwrap();
+        assert_eq!(nodes.len(), 3);
+        assert_eq!(nodes[0].get("split").unwrap().as_usize(), Some(0));
+        assert_eq!(nodes[1].get("leaf").unwrap().as_f64(), Some(-1.0));
+    }
+
+    #[test]
+    fn predict_binned_routing() {
+        use crate::ellpack::page::EllpackWriter;
+        // cuts: feature 0 has 8 bins (ptrs [0, 8]).
+        let cuts = HistogramCuts {
+            ptrs: vec![0, 8],
+            values: (0..8).map(|i| i as f32 * 0.25).collect(),
+            min_vals: vec![0.0],
+        };
+        let mut w = EllpackWriter::new(3, 1, 9, true);
+        w.push_row(&[2]); // bin 2 ≤ 3 → left
+        w.push_row(&[3]); // boundary → left
+        w.push_row(&[7]); // right
+        let page = w.finish(0);
+        let t = stump();
+        assert_eq!(t.predict_binned(&page, 0, &cuts), -1.0);
+        assert_eq!(t.predict_binned(&page, 1, &cuts), -1.0);
+        assert_eq!(t.predict_binned(&page, 2, &cuts), 2.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! Tree-growth hyperparameters (the subset of [`crate::TrainConfig`]
+//! the grower needs).
+
+/// Growth parameters (paper Eq. 3/6/8 symbols).
+#[derive(Clone, Debug)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    /// L2 leaf regularization λ.
+    pub lambda: f32,
+    /// Per-leaf penalty γ (also the minimum split gain).
+    pub gamma: f32,
+    /// Minimum hessian sum per child.
+    pub min_child_weight: f32,
+    /// Shrinkage η applied to leaf weights.
+    pub learning_rate: f32,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            max_depth: 6,
+            lambda: 1.0,
+            gamma: 0.0,
+            min_child_weight: 1.0,
+            learning_rate: 0.3,
+        }
+    }
+}
+
+impl TreeParams {
+    pub fn from_config(cfg: &crate::TrainConfig) -> TreeParams {
+        TreeParams {
+            max_depth: cfg.max_depth,
+            lambda: cfg.lambda,
+            gamma: cfg.gamma,
+            min_child_weight: cfg.min_child_weight,
+            learning_rate: cfg.learning_rate,
+        }
+    }
+
+    /// Optimal leaf weight −G/(H+λ) (Eq. 6), *before* shrinkage.
+    pub fn leaf_weight(&self, g: f64, h: f64) -> f32 {
+        (-g / (h + self.lambda as f64)) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leaf_weight_formula() {
+        let p = TreeParams { lambda: 1.0, ..Default::default() };
+        assert_eq!(p.leaf_weight(4.0, 3.0), -1.0);
+        assert_eq!(p.leaf_weight(0.0, 10.0), 0.0);
+        // Sign: positive gradient sum → negative weight.
+        assert!(p.leaf_weight(1.0, 1.0) < 0.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! Row partitioner — tracks which tree node every row currently sits in
+//! (`RepartitionInstances` in the paper's Algorithm 1/6).
+//!
+//! Positions are *global* (indexed by `base_rowid + local row`) so the
+//! same partitioner works across page boundaries in out-of-core mode.
+//! Unsampled rows are marked [`RowPartitioner::INACTIVE`] and never
+//! route or contribute to histograms.
+
+use crate::ellpack::EllpackPage;
+use crate::sketch::HistogramCuts;
+use crate::tree::model::Tree;
+
+/// Per-row node assignment.
+#[derive(Clone, Debug)]
+pub struct RowPartitioner {
+    /// Tree-node index per row; `INACTIVE` = row not in this tree.
+    positions: Vec<u32>,
+}
+
+impl RowPartitioner {
+    pub const INACTIVE: u32 = u32::MAX;
+
+    /// All rows start at the root (node 0).
+    pub fn new(n_rows: usize) -> RowPartitioner {
+        RowPartitioner { positions: vec![0; n_rows] }
+    }
+
+    /// Start from a sampling mask: unselected rows are inactive.
+    pub fn from_mask(mask: &[bool]) -> RowPartitioner {
+        RowPartitioner {
+            positions: mask
+                .iter()
+                .map(|&m| if m { 0 } else { Self::INACTIVE })
+                .collect(),
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.positions.len()
+    }
+
+    #[inline]
+    pub fn position(&self, row: usize) -> u32 {
+        self.positions[row]
+    }
+
+    pub fn positions(&self) -> &[u32] {
+        &self.positions
+    }
+
+    /// Mutable view (backends update positions in parallel over disjoint
+    /// row ranges).
+    pub fn positions_mut(&mut self) -> &mut [u32] {
+        &mut self.positions
+    }
+
+    /// Count of rows currently at `node`.
+    pub fn count_at(&self, node: u32) -> usize {
+        self.positions.iter().filter(|&&p| p == node).count()
+    }
+
+    /// Route the rows of one page through their nodes' fresh splits.
+    ///
+    /// For every row sitting at a node that just split (depth =
+    /// `level`), move it to the matching child.  Rows at leaves or
+    /// inactive rows stay put.  Dense pages read feature `f` at position
+    /// `f`; null symbols (missing) default left.
+    pub fn apply_splits_page(
+        &mut self,
+        page: &EllpackPage,
+        tree: &Tree,
+        cuts: &HistogramCuts,
+        level: usize,
+    ) {
+        let base = page.base_rowid as usize;
+        let null = page.null_symbol();
+        for r in 0..page.n_rows() {
+            let pos = self.positions[base + r];
+            if pos == Self::INACTIVE {
+                continue;
+            }
+            let node = &tree.nodes[pos as usize];
+            if node.is_leaf() || node.depth != level {
+                continue;
+            }
+            let f = node.split_feature as usize;
+            let sym = page.get(r, f);
+            let go_left = sym == null || (sym - cuts.ptrs[f]) as i32 <= node.split_bin;
+            self.positions[base + r] = if go_left { node.left } else { node.right } as u32;
+        }
+    }
+
+    /// Gather positions for a compacted page via its row map
+    /// (Algorithm 7: the compacted page's row `i` is original row
+    /// `row_map[i]`).
+    pub fn gather(&self, row_map: &[u64]) -> RowPartitioner {
+        RowPartitioner {
+            positions: row_map.iter().map(|&r| self.positions[r as usize]).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ellpack::page::EllpackWriter;
+    use crate::tree::model::Node;
+
+    fn one_feature_cuts(bins: u32) -> HistogramCuts {
+        HistogramCuts {
+            ptrs: vec![0, bins],
+            values: (0..bins).map(|i| i as f32).collect(),
+            min_vals: vec![0.0],
+        }
+    }
+
+    /// Tree: root splits f0 at bin 3 → nodes 1 (left), 2 (right).
+    fn stump() -> Tree {
+        let mut t = Tree::default();
+        t.nodes.push(Node {
+            split_feature: 0,
+            split_bin: 3,
+            split_value: 3.0,
+            left: 1,
+            right: 2,
+            weight: 0.0,
+            gain: 1.0,
+            sum_grad: 0.0,
+            sum_hess: 0.0,
+            depth: 0,
+        });
+        t.nodes.push(Node::leaf(-0.5, 0.0, 0.0, 1));
+        t.nodes.push(Node::leaf(0.5, 0.0, 0.0, 1));
+        t
+    }
+
+    fn page_with_bins(bins: &[u32]) -> EllpackPage {
+        let mut w = EllpackWriter::new(bins.len(), 1, 9, true);
+        for &b in bins {
+            w.push_row(&[b]);
+        }
+        w.finish(0)
+    }
+
+    #[test]
+    fn routes_left_right() {
+        let page = page_with_bins(&[0, 3, 4, 7]);
+        let tree = stump();
+        let cuts = one_feature_cuts(8);
+        let mut part = RowPartitioner::new(4);
+        part.apply_splits_page(&page, &tree, &cuts, 0);
+        assert_eq!(part.positions(), &[1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn inactive_rows_stay() {
+        let page = page_with_bins(&[0, 7]);
+        let tree = stump();
+        let cuts = one_feature_cuts(8);
+        let mut part = RowPartitioner::from_mask(&[false, true]);
+        part.apply_splits_page(&page, &tree, &cuts, 0);
+        assert_eq!(part.position(0), RowPartitioner::INACTIVE);
+        assert_eq!(part.position(1), 2);
+    }
+
+    #[test]
+    fn leaf_rows_stay() {
+        let page = page_with_bins(&[0, 7]);
+        let tree = stump();
+        let cuts = one_feature_cuts(8);
+        let mut part = RowPartitioner::new(2);
+        // Put row 0 at leaf node 1 already.
+        part.positions[0] = 1;
+        part.apply_splits_page(&page, &tree, &cuts, 0);
+        assert_eq!(part.position(0), 1); // unchanged, node 1 is a leaf
+        assert_eq!(part.position(1), 2);
+    }
+
+    #[test]
+    fn wrong_level_not_routed() {
+        let page = page_with_bins(&[0]);
+        let tree = stump();
+        let cuts = one_feature_cuts(8);
+        let mut part = RowPartitioner::new(1);
+        part.apply_splits_page(&page, &tree, &cuts, 1); // tree split is depth 0
+        assert_eq!(part.position(0), 0);
+    }
+
+    #[test]
+    fn multi_page_global_positions() {
+        let tree = stump();
+        let cuts = one_feature_cuts(8);
+        let mut p1 = page_with_bins(&[1, 5]);
+        p1.base_rowid = 0;
+        let mut p2 = page_with_bins(&[6, 2]);
+        p2.base_rowid = 2;
+        let mut part = RowPartitioner::new(4);
+        part.apply_splits_page(&p1, &tree, &cuts, 0);
+        part.apply_splits_page(&p2, &tree, &cuts, 0);
+        assert_eq!(part.positions(), &[1, 2, 2, 1]);
+    }
+
+    #[test]
+    fn gather_for_compaction() {
+        let mut part = RowPartitioner::new(5);
+        part.positions = vec![1, 2, 1, 2, 1];
+        let g = part.gather(&[0, 3, 4]);
+        assert_eq!(g.positions(), &[1, 2, 1]);
+    }
+
+    #[test]
+    fn count_at_counts() {
+        let mut part = RowPartitioner::new(4);
+        part.positions = vec![1, 1, 2, RowPartitioner::INACTIVE];
+        assert_eq!(part.count_at(1), 2);
+        assert_eq!(part.count_at(2), 1);
+        assert_eq!(part.count_at(0), 0);
+    }
+}

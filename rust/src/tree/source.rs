@@ -1,0 +1,298 @@
+//! Data sources for tree construction — the axis that distinguishes
+//! in-core, out-of-core (streamed), and sampled-compacted training.
+//!
+//! Every source yields the same thing (ELLPACK pages in `base_rowid`
+//! order, one full sweep per call), but differs in *where the bytes
+//! live* and what the sweep costs:
+//!
+//! * [`InMemorySource`] — pages in host RAM (CPU in-core, and the
+//!   compacted sample page of Algorithm 7).
+//! * [`DiskSource`] — pages streamed from a page file through the
+//!   threaded prefetcher (CPU out-of-core; paper §2.3).
+//! * [`DeviceResidentSource`] — pages pinned in simulated device memory
+//!   (device in-core; allocation held for the source's lifetime, h2d
+//!   charged once at load).
+//! * [`DeviceStreamSource`] — pages streamed from disk *through the
+//!   interconnect* every sweep (the naive Algorithm 6; this is where
+//!   the PCIe bottleneck shows up).
+
+use std::sync::Arc;
+
+use crate::device::{DeviceAlloc, DeviceContext, Dir};
+use crate::ellpack::EllpackPage;
+use crate::error::Result;
+use crate::page::{PageFile, Prefetcher};
+
+/// A sweepable collection of ELLPACK pages.
+pub trait EllpackSource {
+    fn n_rows(&self) -> usize;
+    /// One full pass over the pages in row order.
+    fn for_each_page(&mut self, f: &mut dyn FnMut(&EllpackPage) -> Result<()>)
+        -> Result<()>;
+    /// Number of sweeps performed (perf accounting).
+    fn sweeps(&self) -> usize;
+}
+
+/// Host-resident pages.
+pub struct InMemorySource {
+    pages: Vec<EllpackPage>,
+    n_rows: usize,
+    sweeps: usize,
+}
+
+impl InMemorySource {
+    pub fn new(pages: Vec<EllpackPage>) -> InMemorySource {
+        let n_rows = pages.iter().map(|p| p.n_rows()).sum();
+        InMemorySource { pages, n_rows, sweeps: 0 }
+    }
+
+    pub fn pages(&self) -> &[EllpackPage] {
+        &self.pages
+    }
+}
+
+impl EllpackSource for InMemorySource {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn for_each_page(
+        &mut self,
+        f: &mut dyn FnMut(&EllpackPage) -> Result<()>,
+    ) -> Result<()> {
+        self.sweeps += 1;
+        for p in &self.pages {
+            f(p)?;
+        }
+        Ok(())
+    }
+
+    fn sweeps(&self) -> usize {
+        self.sweeps
+    }
+}
+
+/// Pages streamed from disk via the prefetcher (one prefetch pass per
+/// sweep).
+pub struct DiskSource {
+    file: Arc<PageFile<EllpackPage>>,
+    depth: usize,
+    n_rows: usize,
+    sweeps: usize,
+}
+
+impl DiskSource {
+    pub fn new(file: Arc<PageFile<EllpackPage>>, depth: usize) -> Result<DiskSource> {
+        // One cheap metadata pass to learn the row count.
+        let mut n_rows = 0usize;
+        for p in file.iter() {
+            n_rows += p?.n_rows();
+        }
+        Ok(DiskSource { file, depth, n_rows, sweeps: 0 })
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.file.n_pages()
+    }
+}
+
+impl EllpackSource for DiskSource {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn for_each_page(
+        &mut self,
+        f: &mut dyn FnMut(&EllpackPage) -> Result<()>,
+    ) -> Result<()> {
+        self.sweeps += 1;
+        let pf = Prefetcher::start(&self.file, self.depth)?;
+        for page in pf {
+            f(&page?)?;
+        }
+        Ok(())
+    }
+
+    fn sweeps(&self) -> usize {
+        self.sweeps
+    }
+}
+
+/// Pages held in simulated device memory for the source's lifetime
+/// (device in-core).  Construction fails with `DeviceOom` when the
+/// matrix doesn't fit — the Table 1 "In-core GPU" limit.
+pub struct DeviceResidentSource {
+    inner: InMemorySource,
+    /// RAII budget registration for every resident page.
+    _allocs: Vec<DeviceAlloc>,
+}
+
+impl DeviceResidentSource {
+    pub fn load(pages: Vec<EllpackPage>, ctx: &DeviceContext) -> Result<Self> {
+        let mut allocs = Vec::with_capacity(pages.len());
+        for p in &pages {
+            let bytes = p.memory_bytes() as u64;
+            allocs.push(ctx.mem.alloc("ellpack_resident", bytes)?);
+            ctx.link.charge(Dir::HostToDevice, bytes);
+        }
+        Ok(DeviceResidentSource { inner: InMemorySource::new(pages), _allocs: allocs })
+    }
+}
+
+impl EllpackSource for DeviceResidentSource {
+    fn n_rows(&self) -> usize {
+        self.inner.n_rows()
+    }
+
+    fn for_each_page(
+        &mut self,
+        f: &mut dyn FnMut(&EllpackPage) -> Result<()>,
+    ) -> Result<()> {
+        self.inner.for_each_page(f)
+    }
+
+    fn sweeps(&self) -> usize {
+        self.inner.sweeps()
+    }
+}
+
+/// Pages streamed from disk through the interconnect on *every sweep*
+/// (naive Algorithm 6).  Each page transiently occupies device memory
+/// (staging) and charges an h2d transfer — the cost model that makes
+/// the naive algorithm lose, as §3.3 reports.
+pub struct DeviceStreamSource {
+    disk: DiskSource,
+    ctx: DeviceContext,
+}
+
+impl DeviceStreamSource {
+    pub fn new(
+        file: Arc<PageFile<EllpackPage>>,
+        depth: usize,
+        ctx: DeviceContext,
+    ) -> Result<Self> {
+        Ok(DeviceStreamSource { disk: DiskSource::new(file, depth)?, ctx })
+    }
+}
+
+impl EllpackSource for DeviceStreamSource {
+    fn n_rows(&self) -> usize {
+        self.disk.n_rows()
+    }
+
+    fn for_each_page(
+        &mut self,
+        f: &mut dyn FnMut(&EllpackPage) -> Result<()>,
+    ) -> Result<()> {
+        let ctx = self.ctx.clone();
+        self.disk.for_each_page(&mut |page| {
+            let bytes = page.memory_bytes() as u64;
+            let _staging = ctx.mem.alloc("ellpack_staging", bytes)?;
+            ctx.link.charge(Dir::HostToDevice, bytes);
+            f(page)
+        })
+    }
+
+    fn sweeps(&self) -> usize {
+        self.disk.sweeps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ellpack::page::EllpackWriter;
+    use crate::page::PageFileWriter;
+
+    fn pages(n: usize, rows: usize) -> Vec<EllpackPage> {
+        let mut out = Vec::new();
+        let mut base = 0u64;
+        for i in 0..n {
+            let mut w = EllpackWriter::new(rows, 2, 16, true);
+            for r in 0..rows {
+                w.push_row(&[(i + r) as u32 % 15, r as u32 % 15]);
+            }
+            out.push(w.finish(base));
+            base += rows as u64;
+        }
+        out
+    }
+
+    #[test]
+    fn in_memory_sweeps() {
+        let mut s = InMemorySource::new(pages(3, 5));
+        assert_eq!(s.n_rows(), 15);
+        let mut seen = Vec::new();
+        s.for_each_page(&mut |p| {
+            seen.push(p.base_rowid);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![0, 5, 10]);
+        s.for_each_page(&mut |_| Ok(())).unwrap();
+        assert_eq!(s.sweeps(), 2);
+    }
+
+    #[test]
+    fn disk_source_roundtrip() {
+        let d = std::env::temp_dir().join(format!("oocgb-src-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let path = d.join("ep.bin");
+        let mut w = PageFileWriter::create(&path).unwrap();
+        for p in pages(4, 3) {
+            w.write_page(&p).unwrap();
+        }
+        let file = Arc::new(w.finish().unwrap());
+        let mut s = DiskSource::new(file, 2).unwrap();
+        assert_eq!(s.n_rows(), 12);
+        assert_eq!(s.n_pages(), 4);
+        let mut rows = 0;
+        s.for_each_page(&mut |p| {
+            assert_eq!(p.base_rowid as usize, rows);
+            rows += p.n_rows();
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(rows, 12);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn device_resident_accounts_and_ooms() {
+        let ps = pages(3, 5);
+        let total: u64 = ps.iter().map(|p| p.memory_bytes() as u64).sum();
+        // Fits:
+        let ctx = DeviceContext::new(total + 100);
+        let s = DeviceResidentSource::load(ps.clone(), &ctx).unwrap();
+        assert_eq!(ctx.mem.used(), total);
+        assert_eq!(ctx.link.stats().h2d_transfers, 3);
+        drop(s);
+        assert_eq!(ctx.mem.used(), 0);
+        // Doesn't fit:
+        let ctx = DeviceContext::new(total - 1);
+        match DeviceResidentSource::load(ps, &ctx) {
+            Err(e) => assert!(e.is_device_oom()),
+            Ok(_) => panic!("expected OOM"),
+        }
+    }
+
+    #[test]
+    fn device_stream_charges_every_sweep() {
+        let d = std::env::temp_dir().join(format!("oocgb-dss-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let path = d.join("ep.bin");
+        let mut w = PageFileWriter::create(&path).unwrap();
+        for p in pages(2, 4) {
+            w.write_page(&p).unwrap();
+        }
+        let file = Arc::new(w.finish().unwrap());
+        let ctx = DeviceContext::new(1 << 20);
+        let mut s = DeviceStreamSource::new(file, 1, ctx.clone()).unwrap();
+        s.for_each_page(&mut |_| Ok(())).unwrap();
+        s.for_each_page(&mut |_| Ok(())).unwrap();
+        let stats = ctx.link.stats();
+        assert_eq!(stats.h2d_transfers, 4); // 2 pages × 2 sweeps
+        assert_eq!(ctx.mem.used(), 0); // staging freed
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -1,0 +1,129 @@
+//! Wall-clock timing helpers for the training loop and bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Named phase timer accumulating totals — used by the coordinator to
+/// report the per-phase breakdown (sketch / ellpack / sample / compact /
+/// hist / eval / partition) that EXPERIMENTS.md §Perf tracks.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimers {
+    phases: Vec<(String, f64)>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `secs` to phase `name` (created on first use).
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(p) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            p.1 += secs;
+        } else {
+            self.phases.push((name.to_string(), secs));
+        }
+    }
+
+    /// Time a closure into phase `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::start();
+        let out = f();
+        self.add(name, sw.elapsed_secs());
+        out
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        for (n, s) in &other.phases {
+            self.add(n, *s);
+        }
+    }
+
+    /// All phases in insertion order.
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+
+    pub fn report(&self) -> String {
+        let total: f64 = self.phases.iter().map(|(_, s)| s).sum();
+        let mut out = String::new();
+        for (n, s) in &self.phases {
+            out.push_str(&format!(
+                "  {:<12} {:>9.3}s ({:>4.1}%)\n",
+                n,
+                s,
+                if total > 0.0 { 100.0 * s / total } else { 0.0 }
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_secs() >= 0.004);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let mut t = PhaseTimers::new();
+        t.add("hist", 1.0);
+        t.add("hist", 2.0);
+        t.add("eval", 0.5);
+        assert_eq!(t.get("hist"), 3.0);
+        assert_eq!(t.get("eval"), 0.5);
+        assert_eq!(t.get("missing"), 0.0);
+        assert!(t.report().contains("hist"));
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = PhaseTimers::new();
+        a.add("x", 1.0);
+        let mut b = PhaseTimers::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 3.0);
+        assert_eq!(a.get("y"), 3.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! CLI integration: drive the `oocgb` binary end-to-end through
+//! datagen → train → predict, plus error paths.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_oocgb"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("oocgb-cli-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = bin().arg("--help").output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn datagen_train_predict_roundtrip() {
+    let d = tmpdir("roundtrip");
+    let data = d.join("higgs.csv");
+    let model = d.join("model.json");
+    let preds = d.join("preds.txt");
+
+    let out = bin()
+        .args(["datagen", "--kind", "higgs", "--rows", "3000", "--out"])
+        .arg(&data)
+        .args(["--format", "csv", "--seed", "5"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(data.exists());
+
+    let out = bin()
+        .args(["train", "--data"])
+        .arg(&data)
+        .args(["--format", "csv", "--model-out"])
+        .arg(&model)
+        .args([
+            "n_rounds=5",
+            "max_depth=4",
+            "max_bin=16",
+            "eval_fraction=0.1",
+            "eta=0.5",
+        ])
+        .output()
+        .unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "{stderr}");
+    assert!(stderr.contains("trained 5 trees"), "{stderr}");
+    assert!(model.exists());
+
+    let out = bin()
+        .args(["predict", "--model"])
+        .arg(&model)
+        .args(["--data"])
+        .arg(&data)
+        .args(["--format", "csv", "--out"])
+        .arg(&preds)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&preds).unwrap();
+    let values: Vec<f32> = text.lines().map(|l| l.parse().unwrap()).collect();
+    assert_eq!(values.len(), 3000);
+    assert!(values.iter().all(|p| (0.0..=1.0).contains(p)));
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn train_with_mvs_sampling_cpu() {
+    let d = tmpdir("mvs");
+    let out = bin()
+        .args([
+            "train",
+            "--synthetic",
+            "higgs",
+            "--rows",
+            "2000",
+            "n_rounds=3",
+            "max_depth=3",
+            "max_bin=16",
+            "sampling_method=mvs",
+            "f=0.4",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn bad_config_key_reports_error() {
+    let out = bin()
+        .args(["train", "--synthetic", "higgs", "--rows", "512", "bogus_key=1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("bogus_key"));
+}
+
+#[test]
+fn info_lists_artifacts_if_built() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    let out = bin().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("PJRT platform"));
+    assert!(stdout.contains("hist_b"));
+}

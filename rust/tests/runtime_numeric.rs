@@ -1,0 +1,151 @@
+//! Integration: the Rust PJRT runtime executes the AOT artifacts and the
+//! numbers match pure-Rust oracles (which themselves mirror ref.py).
+//!
+//! Requires `make artifacts`.  Tests skip gracefully when artifacts/ is
+//! absent so `cargo test` works on a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use oocgb::runtime::Runtime;
+use oocgb::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let d = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn gradients_match_host_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let b = *rt.grad_batches().first().unwrap();
+    let mut rng = Rng::new(1);
+    let preds: Vec<f32> = (0..b).map(|_| rng.normal() as f32 * 2.0).collect();
+    let labels: Vec<f32> = (0..b).map(|_| rng.bernoulli(0.4) as i32 as f32).collect();
+
+    let out = rt.gradients(&preds, &labels, b, "binary:logistic").unwrap();
+    assert_eq!(out.len(), b * 2);
+    for i in (0..b).step_by(97) {
+        let p = 1.0 / (1.0 + (-preds[i] as f64).exp());
+        let g = p - labels[i] as f64;
+        let h = (p * (1.0 - p)).max(1e-16);
+        assert!((out[i * 2] as f64 - g).abs() < 1e-5, "g row {i}");
+        assert!((out[i * 2 + 1] as f64 - h).abs() < 1e-5, "h row {i}");
+    }
+
+    let out = rt.gradients(&preds, &labels, b, "reg:squarederror").unwrap();
+    for i in (0..b).step_by(131) {
+        assert!((out[i * 2] - (preds[i] - labels[i])).abs() < 1e-6);
+        assert_eq!(out[i * 2 + 1], 1.0);
+    }
+}
+
+#[test]
+fn mvs_scores_match_host_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let b = *rt.grad_batches().first().unwrap();
+    let mut rng = Rng::new(2);
+    let grads: Vec<f32> = (0..b * 2).map(|_| rng.normal() as f32).collect();
+    let lam = 0.7f32;
+    let (scores, total) = rt.mvs_scores(&grads, lam, b).unwrap();
+    assert_eq!(scores.len(), b);
+    let mut want_total = 0.0f64;
+    for i in 0..b {
+        let (g, h) = (grads[i * 2] as f64, grads[i * 2 + 1] as f64);
+        let want = (g * g + lam as f64 * h * h).sqrt();
+        assert!((scores[i] as f64 - want).abs() < 1e-5, "row {i}");
+        want_total += want;
+    }
+    assert!((total as f64 - want_total).abs() / want_total < 1e-4);
+}
+
+#[test]
+fn histogram_matches_host_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let n_bins = 64usize;
+    let batch = *rt.hist_batches(n_bins).first().unwrap();
+    let f_tile = rt.hist_feature_tile(n_bins).unwrap();
+    let slots = rt.hist_node_slots(n_bins).unwrap();
+
+    let mut rng = Rng::new(3);
+    let bins: Vec<i32> =
+        (0..batch * f_tile).map(|_| rng.gen_range(n_bins as u64) as i32).collect();
+    let mut grads: Vec<f32> = (0..batch * 2).map(|_| rng.normal() as f32).collect();
+    // Half the rows are zero-gradient padding — must be inert.
+    for i in batch / 2..batch {
+        grads[i * 2] = 0.0;
+        grads[i * 2 + 1] = 0.0;
+    }
+    let nids: Vec<i32> = (0..batch).map(|_| rng.gen_range(slots as u64) as i32).collect();
+
+    let got = rt.histogram(&bins, &grads, &nids, batch, n_bins).unwrap();
+    assert_eq!(got.len(), slots * f_tile * n_bins * 2);
+
+    let mut want = vec![0f64; slots * f_tile * n_bins * 2];
+    for r in 0..batch / 2 {
+        for f in 0..f_tile {
+            let idx = ((nids[r] as usize * f_tile + f) * n_bins
+                + bins[r * f_tile + f] as usize)
+                * 2;
+            want[idx] += grads[r * 2] as f64;
+            want[idx + 1] += grads[r * 2 + 1] as f64;
+        }
+    }
+    let mut max_err = 0f64;
+    for i in 0..want.len() {
+        max_err = max_err.max((got[i] as f64 - want[i]).abs());
+    }
+    assert!(max_err < 2e-3, "max_err={max_err}");
+}
+
+#[test]
+fn evaluate_splits_finds_planted_split() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let n_bins = 64usize;
+    let f_tile = rt.hist_feature_tile(n_bins).unwrap();
+    let slots = rt.hist_node_slots(n_bins).unwrap();
+    let mut hist = vec![0f32; slots * f_tile * n_bins * 2];
+    // Node 0: feature 3 separates negatives (bins < 20) from positives.
+    let f = 3usize;
+    for b in 0..n_bins {
+        let idx = ((f) * n_bins + b) * 2; // node 0
+        hist[idx] = if b < 20 { -1.0 } else { 1.0 };
+        hist[idx + 1] = 1.0;
+    }
+    // Other features of node 0: all mass in one bin (same totals!).
+    for of in 0..f_tile {
+        if of == f {
+            continue;
+        }
+        let idx = (of * n_bins + 5) * 2;
+        hist[idx] = (n_bins as f32) - 40.0; // sum of g = 24 with n_bins=64
+        hist[idx + 1] = n_bins as f32;
+    }
+    let out = rt.evaluate_splits(&hist, 1.0, 0.0, 1.0, n_bins).unwrap();
+    assert_eq!(out.gain.len(), slots);
+    assert_eq!(out.feature[0], f as i32);
+    assert_eq!(out.split_bin[0], 19);
+    assert!((out.left_sum[0][0] + 20.0).abs() < 1e-3);
+    assert!((out.left_sum[0][1] - 20.0).abs() < 1e-3);
+    // Empty node slots are leaves.
+    for n in 1..slots {
+        assert_eq!(out.feature[n], -1, "slot {n}");
+    }
+}
+
+#[test]
+fn warm_up_compiles_everything() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    rt.warm_up().unwrap();
+    assert!(rt.platform().to_lowercase().contains("cpu")
+        || rt.platform().to_lowercase().contains("host"));
+}

@@ -1,0 +1,187 @@
+//! Cross-module property tests over whole training runs: invariants
+//! that must hold for *any* seed/configuration, checked on sampled
+//! configurations (hand-rolled harness; no proptest in the vendored
+//! set).
+
+use oocgb::config::{ExecMode, SamplingMethod, TrainConfig};
+use oocgb::coordinator::TrainSession;
+use oocgb::data::synthetic::{self, ClassificationSpec};
+use oocgb::util::prop::run_prop;
+
+fn base_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.n_rounds = 3;
+    cfg.max_depth = 3;
+    cfg.max_bin = 16;
+    cfg.learning_rate = 0.4;
+    cfg
+}
+
+/// Leaf covers (hessian sums) of every tree must sum to the training-row
+/// hessian mass that round (all rows when unsampled, logistic h ≤ 0.25).
+#[test]
+fn prop_leaf_cover_conservation() {
+    run_prop("leaf cover conservation", 6, |g| {
+        let rows = g.usize_in(300..1200);
+        let data = synthetic::higgs_like(rows, g.u64());
+        let cfg = base_cfg();
+        let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
+        for tree in &out.model.trees {
+            let leaf_cover: f64 =
+                tree.nodes.iter().filter(|n| n.is_leaf()).map(|n| n.sum_hess).sum();
+            let root_cover = tree.nodes[0].sum_hess;
+            assert!(
+                (leaf_cover - root_cover).abs() < 1e-3 * root_cover.max(1.0),
+                "leaves {leaf_cover} vs root {root_cover}"
+            );
+            assert!(root_cover <= 0.25 * rows as f64 + 1e-6);
+        }
+    });
+}
+
+/// Tree structure sanity for arbitrary runs: children deeper by one,
+/// interior gains positive, binned and raw prediction agree on the
+/// training rows.
+#[test]
+fn prop_tree_structure_and_prediction_consistency() {
+    run_prop("tree structure", 5, |g| {
+        let spec = ClassificationSpec {
+            n_rows: g.usize_in(200..800),
+            n_cols: g.usize_in(3..10),
+            n_informative: 3,
+            n_redundant: 1,
+            seed: g.u64(),
+            ..Default::default()
+        };
+        let data = synthetic::make_classification(spec);
+        let mut cfg = base_cfg();
+        cfg.max_depth = g.usize_in(1..5);
+        let out = TrainSession::from_memory(data.clone(), cfg)
+            .unwrap()
+            .train()
+            .unwrap();
+        for tree in &out.model.trees {
+            for (i, n) in tree.nodes.iter().enumerate() {
+                if n.is_leaf() {
+                    continue;
+                }
+                assert!(n.gain > 0.0, "interior node {i} gain {}", n.gain);
+                assert_eq!(tree.nodes[n.left].depth, n.depth + 1);
+                assert_eq!(tree.nodes[n.right].depth, n.depth + 1);
+                assert!(n.split_value.is_finite());
+            }
+        }
+        // Model predictions are finite probabilities.
+        let preds = out.model.predict(&data);
+        assert!(preds.iter().all(|p| p.is_finite() && (0.0..=1.0).contains(p)));
+    });
+}
+
+/// Training is deterministic: identical config + seed ⇒ identical model
+/// (trees, eval history), for both in-core and out-of-core pipelines.
+#[test]
+fn prop_determinism_across_runs() {
+    run_prop("determinism", 3, |g| {
+        let seed = g.u64();
+        let rows = g.usize_in(300..900);
+        for mode in [ExecMode::CpuInCore, ExecMode::CpuOutOfCore] {
+            let mut cfg = base_cfg();
+            cfg.mode = mode;
+            cfg.seed = seed;
+            cfg.eval_fraction = 0.2;
+            cfg.page_size_bytes = 4096;
+            cfg.sampling_method = SamplingMethod::Mvs;
+            cfg.subsample = 0.6;
+            let a = TrainSession::from_memory(synthetic::higgs_like(rows, seed), cfg.clone())
+                .unwrap()
+                .train()
+                .unwrap();
+            let b = TrainSession::from_memory(synthetic::higgs_like(rows, seed), cfg)
+                .unwrap()
+                .train()
+                .unwrap();
+            assert_eq!(a.model.trees.len(), b.model.trees.len());
+            for (ta, tb) in a.model.trees.iter().zip(&b.model.trees) {
+                // Leaf split_value is NaN by convention, so PartialEq on
+                // Node can't be used directly; the JSON dump is NaN-free.
+                assert_eq!(
+                    ta.to_json().to_json(),
+                    tb.to_json().to_json(),
+                    "trees diverged in {}",
+                    mode.name()
+                );
+            }
+            assert_eq!(a.eval_history, b.eval_history);
+        }
+    });
+}
+
+/// More boosting rounds never worsen *training-set* fit for the squared
+/// objective without sampling (each tree minimizes the Taylor objective
+/// on the training set).
+#[test]
+fn prop_training_loss_monotone_squared() {
+    run_prop("training loss monotone", 3, |g| {
+        let rows = g.usize_in(300..800);
+        let mut page = oocgb::data::SparsePage::new(3);
+        let mut labels = Vec::new();
+        let mut rng = oocgb::util::rng::Rng::new(g.u64());
+        for _ in 0..rows {
+            let x: Vec<f32> = (0..3).map(|_| rng.next_f32()).collect();
+            labels.push(x[0] * 2.0 - x[1]);
+            page.push_dense_row(&x);
+        }
+        let data = oocgb::data::DMatrix::from_page(page, labels.clone()).unwrap();
+        let mut cfg = base_cfg();
+        cfg.objective = "reg:squarederror".into();
+        cfg.n_rounds = 8;
+        cfg.learning_rate = 0.3;
+        let out = TrainSession::from_memory(data.clone(), cfg).unwrap().train().unwrap();
+        // Evaluate RMSE on the training set after each prefix of trees.
+        let mut prev = f64::INFINITY;
+        for k in [1usize, 2, 4, 8] {
+            let mut partial = out.model.clone();
+            partial.trees.truncate(k);
+            let preds = partial.predict(&data);
+            let rmse: f64 = (preds
+                .iter()
+                .zip(&labels)
+                .map(|(p, y)| ((p - y) as f64).powi(2))
+                .sum::<f64>()
+                / rows as f64)
+                .sqrt();
+            assert!(
+                rmse <= prev + 1e-9,
+                "training RMSE rose at k={k}: {prev} → {rmse}"
+            );
+            prev = rmse;
+        }
+    });
+}
+
+/// Feature importance concentrates on informative features: with 2
+/// informative + several pure-noise columns, the noise share stays low.
+#[test]
+fn prop_importance_on_informative_features() {
+    run_prop("importance", 3, |g| {
+        let spec = ClassificationSpec {
+            n_rows: 1500,
+            n_cols: 10,
+            n_informative: 2,
+            n_redundant: 0,
+            flip_y: 0.0,
+            class_sep: 1.5,
+            seed: g.u64(),
+        };
+        let data = synthetic::make_classification(spec);
+        let mut cfg = base_cfg();
+        cfg.n_rounds = 6;
+        let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
+        let imp = out.model.feature_importance();
+        let informative: f64 = imp[..2].iter().sum();
+        assert!(
+            informative > 0.8,
+            "informative features carry only {informative:.2} of the gain: {imp:?}"
+        );
+    });
+}
