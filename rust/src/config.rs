@@ -133,8 +133,11 @@ pub struct TrainConfig {
     pub device_memory_bytes: u64,
     /// Target ELLPACK page size in bytes (paper: 32 MiB).
     pub page_size_bytes: usize,
-    /// Prefetcher queue depth (pages in flight).
+    /// Prefetcher queue depth (pages in flight per read/decode stage).
     pub prefetch_depth: usize,
+    /// Bounded-channel depth for the preprocessing pipeline stages
+    /// (CSR staging, ELLPACK conversion); 0 = rendezvous handoff.
+    pub pipeline_depth: usize,
     /// Worker threads for CPU histogram building (0 = all cores).
     pub n_threads: usize,
     /// Directory holding AOT artifacts (manifest.json + *.hlo.txt).
@@ -175,6 +178,7 @@ impl Default for TrainConfig {
             device_memory_bytes: 256 * 1024 * 1024,
             page_size_bytes: 32 * 1024 * 1024,
             prefetch_depth: 2,
+            pipeline_depth: 2,
             n_threads: 0,
             artifacts_dir: "artifacts".into(),
             cache_dir: std::env::temp_dir()
@@ -260,6 +264,7 @@ impl TrainConfig {
                 self.page_size_bytes = pf::<usize>(key, v)? * 1024 * 1024
             }
             "prefetch_depth" => self.prefetch_depth = pf(key, v)?,
+            "pipeline_depth" => self.pipeline_depth = pf(key, v)?,
             "n_threads" | "nthread" => self.n_threads = pf(key, v)?,
             "artifacts_dir" => self.artifacts_dir = v.to_string(),
             "cache_dir" => self.cache_dir = v.to_string(),
@@ -333,6 +338,7 @@ impl TrainConfig {
         );
         m.insert("page_size_bytes".into(), num(self.page_size_bytes as f64));
         m.insert("prefetch_depth".into(), num(self.prefetch_depth as f64));
+        m.insert("pipeline_depth".into(), num(self.pipeline_depth as f64));
         m.insert("seed".into(), num(self.seed as f64));
         Value::Object(m)
     }
@@ -381,9 +387,11 @@ mod tests {
                 "sampling_method=mvs".into(),
                 "f=0.3".into(),
                 "device_memory_mb=64".into(),
+                "pipeline_depth=4".into(),
             ],
         )
         .unwrap();
+        assert_eq!(cfg.pipeline_depth, 4);
         assert_eq!(cfg.max_depth, 8);
         assert_eq!(cfg.learning_rate, 0.1);
         assert_eq!(cfg.mode, ExecMode::DeviceOutOfCore);

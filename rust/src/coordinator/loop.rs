@@ -1,0 +1,550 @@
+//! The boosting round driver — gradients → sampling → grow → margins →
+//! eval, generic over the page stream.
+//!
+//! This loop never branches on *where the data lives*: it sweeps
+//! whatever [`EllpackSource`] `modes::open_source` assembled (memory,
+//! disk pipeline, or hooked device pipeline).  The one per-mode fork
+//! that remains is *algorithmic*, not data-placement: Algorithm 7
+//! (`ExecMode::DeviceOutOfCore`) compacts the sampled rows into a fresh
+//! device-resident page every round instead of reusing a persistent
+//! source.
+
+use crate::boosting::GbtModel;
+use crate::config::ExecMode;
+use crate::coordinator::modes::{self, TrainData};
+use crate::coordinator::session::{TrainOutcome, TrainSession};
+use crate::device::Dir;
+use crate::ellpack::{compact::Compactor, EllpackPage};
+use crate::error::{Error, Result};
+use crate::sampling::Sampler;
+use crate::tree::{
+    builder::HistBackend,
+    hist_cpu::CpuHistBackend,
+    hist_device::DeviceHistBackend,
+    partitioner::RowPartitioner,
+    source::InMemorySource,
+    Tree, TreeBuilder, TreeParams,
+};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+/// Run the boosting loop to completion.
+pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
+    let cfg = session.cfg.clone();
+    let n_rows = session.labels.len();
+    let n_cols = session.cuts.n_features();
+    let params = TreeParams::from_config(&cfg);
+    let sampler = Sampler::from_config(&cfg);
+    // Fixed salt keeps the sampling stream independent of other seed
+    // consumers (data gen, splits).
+    const SAMPLE_SALT: u64 = 0x7A1D_5EED_0C0A_C47E;
+    let mut rng = Rng::new(cfg.seed ^ SAMPLE_SALT);
+    let mut model = GbtModel::new(session.objective, n_cols);
+    let mut margins = vec![model.base_margin; n_rows];
+    let mut grads: Vec<[f32; 2]> = Vec::with_capacity(n_rows);
+    let mut eval_history = Vec::new();
+    let mut sample_rows_total = 0usize;
+    let mut sampled_rounds = 0usize;
+
+    // Mode-persistent backend + stream-backed source.
+    let mut backend: Box<dyn HistBackend> = match &session.device {
+        Some(dev) => Box::new(DeviceHistBackend::new(
+            dev.rt.clone(),
+            dev.ctx.clone(),
+            cfg.max_bin,
+        )?),
+        None => Box::new(CpuHistBackend::new(cfg.threads())),
+    };
+    let mut persistent_source = modes::open_source(
+        &session.data,
+        session.device.as_ref().map(|d| &d.ctx),
+        &cfg,
+        n_rows,
+    )?;
+
+    let sw_total = Stopwatch::start();
+    // Early stopping state (XGBoost semantics: best metric so far,
+    // patience counted in *evaluations*).
+    let mut best_metric = if session.metric.maximize() {
+        f64::NEG_INFINITY
+    } else {
+        f64::INFINITY
+    };
+    let mut since_best = 0usize;
+    for round in 0..cfg.n_rounds {
+        // ---- gradients ----
+        let sw = Stopwatch::start();
+        session.compute_gradients(&margins, &mut grads)?;
+        session.timers.add("gradients", sw.elapsed_secs());
+
+        // ---- sampling (paper §3.4) ----
+        let sw = Stopwatch::start();
+        let sample = if matches!(sampler, Sampler::None) {
+            None
+        } else {
+            let scores = session.device_mvs_scores(&sampler, &grads)?;
+            let s = sampler.sample(&mut grads, &mut rng, scores.as_deref());
+            sample_rows_total += s.n_selected;
+            sampled_rounds += 1;
+            Some(s)
+        };
+        session.timers.add("sample", sw.elapsed_secs());
+
+        // ---- grow one tree ----
+        let tree = if cfg.mode == ExecMode::DeviceOutOfCore {
+            session.build_tree_compacted(
+                &params,
+                backend.as_mut(),
+                &grads,
+                sample.as_ref().map(|s| s.mask.as_slice()),
+            )?
+        } else {
+            let source = persistent_source
+                .as_mut()
+                .expect("non-compacted modes keep a persistent source");
+            let mut partitioner = match &sample {
+                Some(s) => RowPartitioner::from_mask(&s.mask),
+                None => RowPartitioner::new(n_rows),
+            };
+            let sw = Stopwatch::start();
+            let builder = TreeBuilder::new(&params, &session.cuts);
+            let tree =
+                builder.build(backend.as_mut(), source, &grads, &mut partitioner)?;
+            session.timers.add("grow", sw.elapsed_secs());
+            tree
+        };
+
+        // ---- margin update (one sweep of the full data) ----
+        let sw = Stopwatch::start();
+        session.update_margins(&tree, &mut margins)?;
+        session.timers.add("predict", sw.elapsed_secs());
+        model.trees.push(tree);
+
+        // ---- evaluation ----
+        if let Some(eval) = &session.eval {
+            if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
+                let sw = Stopwatch::start();
+                let preds = model.predict(eval);
+                let m = session.metric.compute(&preds, eval.labels());
+                session.timers.add("eval", sw.elapsed_secs());
+                if cfg.verbose {
+                    eprintln!(
+                        "[{}] round {:>4}  {} = {:.5}",
+                        cfg.mode.name(),
+                        round + 1,
+                        session.metric.name(),
+                        m
+                    );
+                }
+                eval_history.push((round + 1, m));
+                if cfg.early_stopping_rounds > 0 {
+                    let improved = if session.metric.maximize() {
+                        m > best_metric
+                    } else {
+                        m < best_metric
+                    };
+                    if improved {
+                        best_metric = m;
+                        since_best = 0;
+                    } else {
+                        since_best += 1;
+                        if since_best >= cfg.early_stopping_rounds {
+                            if cfg.verbose {
+                                eprintln!(
+                                    "early stop at round {} (best {} = {best_metric:.5})",
+                                    round + 1,
+                                    session.metric.name()
+                                );
+                            }
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let train_seconds = sw_total.elapsed_secs();
+
+    let (link_stats, compute_stats, mem_peak, mem_capacity) = match &session.device {
+        Some(dev) => (
+            Some(dev.ctx.link.stats()),
+            Some(dev.ctx.compute.stats()),
+            Some(dev.ctx.mem.peak()),
+            Some(dev.ctx.mem.capacity()),
+        ),
+        None => (None, None, None, None),
+    };
+    // Clean the spill directory.
+    if matches!(session.data, TrainData::Disk(_)) {
+        let _ = std::fs::remove_dir_all(&session.cache_dir);
+    }
+    Ok(TrainOutcome {
+        model,
+        eval_history,
+        train_seconds,
+        timers: session.timers.clone(),
+        link_stats,
+        compute_stats,
+        mem_peak,
+        mem_capacity,
+        mean_sample_rows: if sampled_rounds > 0 {
+            sample_rows_total as f64 / sampled_rounds as f64
+        } else {
+            n_rows as f64
+        },
+    })
+}
+
+impl TrainSession {
+    /// Gradient pairs at the current margins — host objective for CPU
+    /// modes, the AOT gradient artifact for device modes.
+    fn compute_gradients(&mut self, margins: &[f32], grads: &mut Vec<[f32; 2]>) -> Result<()> {
+        match &self.device {
+            None => {
+                self.objective.gradients(margins, &self.labels, grads);
+                Ok(())
+            }
+            Some(dev) => {
+                let n = margins.len();
+                grads.clear();
+                grads.resize(n, [0.0, 0.0]);
+                let batches = dev.rt.grad_batches();
+                let mut row = 0usize;
+                let mut preds_buf: Vec<f32> = Vec::new();
+                let mut labels_buf: Vec<f32> = Vec::new();
+                while row < n {
+                    let remaining = n - row;
+                    let batch = *batches
+                        .iter()
+                        .find(|&&b| b >= remaining)
+                        .unwrap_or(batches.last().unwrap());
+                    let used = remaining.min(batch);
+                    preds_buf.clear();
+                    preds_buf.resize(batch, 0.0);
+                    labels_buf.clear();
+                    labels_buf.resize(batch, 0.0);
+                    preds_buf[..used].copy_from_slice(&margins[row..row + used]);
+                    labels_buf[..used].copy_from_slice(&self.labels[row..row + used]);
+                    let out = dev.rt.gradients(
+                        &preds_buf,
+                        &labels_buf,
+                        batch,
+                        self.objective.name(),
+                    )?;
+                    dev.ctx.compute.charge_kernel(used as u64 * 16);
+                    for i in 0..used {
+                        grads[row + i] = [out[i * 2], out[i * 2 + 1]];
+                    }
+                    row += used;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Device-side MVS scores (Eq. 9) when both apply; host fallback is
+    /// inside the sampler.
+    fn device_mvs_scores(
+        &mut self,
+        sampler: &Sampler,
+        grads: &[[f32; 2]],
+    ) -> Result<Option<Vec<f32>>> {
+        let Sampler::Mvs { lambda, .. } = sampler else { return Ok(None) };
+        let Some(dev) = &self.device else { return Ok(None) };
+        let lam = lambda.unwrap_or_else(|| {
+            let sg: f64 = grads.iter().map(|g| g[0] as f64).sum();
+            let sh: f64 = grads.iter().map(|g| g[1] as f64).sum();
+            if sh.abs() < 1e-12 { 1.0 } else { ((sg / sh) * (sg / sh)) as f32 }
+        });
+        let n = grads.len();
+        let mut scores = vec![0f32; n];
+        let batches = dev.rt.grad_batches();
+        let mut flat: Vec<f32> = Vec::new();
+        let mut row = 0usize;
+        while row < n {
+            let remaining = n - row;
+            let batch = *batches
+                .iter()
+                .find(|&&b| b >= remaining)
+                .unwrap_or(batches.last().unwrap());
+            let used = remaining.min(batch);
+            flat.clear();
+            flat.resize(batch * 2, 0.0);
+            for i in 0..used {
+                flat[i * 2] = grads[row + i][0];
+                flat[i * 2 + 1] = grads[row + i][1];
+            }
+            let (s, _) = dev.rt.mvs_scores(&flat, lam, batch)?;
+            dev.ctx.compute.charge_kernel(used as u64 * 12);
+            scores[row..row + used].copy_from_slice(&s[..used]);
+            // Scores come back to the host for the threshold search.
+            dev.ctx.link.charge(Dir::DeviceToHost, used as u64 * 4);
+            row += used;
+        }
+        Ok(Some(scores))
+    }
+
+    /// Algorithm 7: compact the sampled rows from all pages into a single
+    /// device-resident page, then run the in-core grower on it.  The
+    /// source sweep is a hooked read → decode → transfer pipeline, so
+    /// disk reads overlap the gather.
+    fn build_tree_compacted(
+        &mut self,
+        params: &TreeParams,
+        backend: &mut dyn HistBackend,
+        grads: &[[f32; 2]],
+        mask: Option<&[bool]>,
+    ) -> Result<Tree> {
+        let dev = self.device.as_ref().unwrap();
+        let TrainData::Disk(file) = &self.data else {
+            return Err(Error::config("compacted mode requires disk pages"));
+        };
+        let full_mask_store;
+        let mask: &[bool] = match mask {
+            Some(m) => m,
+            None => {
+                full_mask_store = vec![true; self.labels.len()];
+                &full_mask_store
+            }
+        };
+        let n_selected = mask.iter().filter(|&&m| m).count();
+        let n_symbols = *self.cuts.ptrs.last().unwrap() + 1;
+
+        let sw = Stopwatch::start();
+        // Budget the compacted page before filling it.
+        let compact_bytes =
+            EllpackPage::estimated_bytes(n_selected, self.row_stride, n_symbols);
+        let compact_alloc = dev.ctx.mem.alloc("ellpack_compacted", compact_bytes as u64)?;
+        let mut compactor =
+            Compactor::new(mask, n_selected, self.row_stride, n_symbols, self.dense);
+        // Each source page is staged on device and moves across the
+        // link once per round (the transfer hook charges it).
+        for page in modes::compaction_sweep(file, &dev.ctx, &self.cfg)? {
+            compactor.push_page(&page?);
+        }
+        let (compacted, row_map) = compactor.finish();
+        // Modeled: the compaction gather reads each source page once and
+        // writes the compacted page.
+        dev.ctx
+            .compute
+            .charge_kernel(compacted.memory_bytes() as u64 * 2);
+        self.timers.add("compact", sw.elapsed_secs());
+
+        // Gather the sampled gradients (device-side gather in reality).
+        let sub_grads: Vec<[f32; 2]> =
+            row_map.iter().map(|&r| grads[r as usize]).collect();
+        let mut partitioner = RowPartitioner::new(n_selected);
+        let mut source = InMemorySource::new(vec![compacted]);
+
+        let sw = Stopwatch::start();
+        let builder = TreeBuilder::new(params, &self.cuts);
+        let tree = builder.build(backend, &mut source, &sub_grads, &mut partitioner)?;
+        self.timers.add("grow", sw.elapsed_secs());
+        drop(compact_alloc);
+        Ok(tree)
+    }
+
+    /// margin[r] += tree(r) for every training row — one sweep of the
+    /// full data (host-side traversal; see DESIGN.md §cost-model).
+    fn update_margins(&mut self, tree: &Tree, margins: &mut [f32]) -> Result<()> {
+        for page in modes::data_sweep(&self.data, self.cfg.prefetch_depth)? {
+            let page = page?;
+            let base = page.base_rowid as usize;
+            for r in 0..page.n_rows() {
+                margins[base + r] += tree.predict_binned(&page, r, &self.cuts);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{ExecMode, SamplingMethod, TrainConfig};
+    use crate::coordinator::TrainSession;
+    use crate::data::{synthetic, DMatrix, SparsePage};
+    use crate::util::rng::Rng;
+
+    fn quick_cfg(mode: ExecMode) -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.mode = mode;
+        cfg.n_rounds = 5;
+        cfg.max_depth = 3;
+        cfg.max_bin = 16;
+        cfg.eval_fraction = 0.2;
+        cfg.learning_rate = 0.5;
+        cfg.seed = 42;
+        cfg
+    }
+
+    #[test]
+    fn cpu_in_core_learns_higgs_like() {
+        let data = synthetic::higgs_like(3000, 1);
+        let session = TrainSession::from_memory(data, quick_cfg(ExecMode::CpuInCore)).unwrap();
+        let out = session.train().unwrap();
+        assert_eq!(out.model.trees.len(), 5);
+        let (_, auc) = *out.eval_history.last().unwrap();
+        assert!(auc > 0.62, "auc={auc}");
+        assert!(out.link_stats.is_none());
+    }
+
+    #[test]
+    fn cpu_out_of_core_matches_in_core() {
+        let data = synthetic::higgs_like(2000, 2);
+        let mut cfg_in = quick_cfg(ExecMode::CpuInCore);
+        let mut cfg_out = quick_cfg(ExecMode::CpuOutOfCore);
+        // Force several pages on disk.
+        cfg_out.page_size_bytes = 8 * 1024;
+        cfg_in.seed = 7;
+        cfg_out.seed = 7;
+        let out_in =
+            TrainSession::from_memory(data.clone(), cfg_in).unwrap().train().unwrap();
+        let out_out =
+            TrainSession::from_memory(data, cfg_out).unwrap().train().unwrap();
+        // Same cuts, same splits, same trees → identical eval history.
+        assert_eq!(out_in.eval_history.len(), out_out.eval_history.len());
+        for ((r1, m1), (r2, m2)) in out_in.eval_history.iter().zip(&out_out.eval_history) {
+            assert_eq!(r1, r2);
+            assert!((m1 - m2).abs() < 1e-9, "round {r1}: {m1} vs {m2}");
+        }
+    }
+
+    #[test]
+    fn uniform_sampling_still_learns() {
+        let data = synthetic::higgs_like(3000, 3);
+        let mut cfg = quick_cfg(ExecMode::CpuInCore);
+        cfg.sampling_method = SamplingMethod::Uniform;
+        cfg.subsample = 0.5;
+        cfg.n_rounds = 8;
+        let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
+        let (_, auc) = *out.eval_history.last().unwrap();
+        assert!(auc > 0.6, "auc={auc}");
+        assert!(out.mean_sample_rows < 0.6 * 2400.0);
+    }
+
+    #[test]
+    fn mvs_sampling_cpu_learns() {
+        let data = synthetic::higgs_like(3000, 4);
+        let mut cfg = quick_cfg(ExecMode::CpuInCore);
+        cfg.sampling_method = SamplingMethod::Mvs;
+        cfg.subsample = 0.3;
+        cfg.n_rounds = 8;
+        let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
+        let (_, auc) = *out.eval_history.last().unwrap();
+        assert!(auc > 0.6, "auc={auc}");
+    }
+
+    #[test]
+    fn sparse_data_trains_on_cpu() {
+        // LibSVM-style sparse input exercises the null-symbol path.
+        let text = (0..200)
+            .map(|i| {
+                let y = i % 2;
+                if i % 3 == 0 {
+                    format!("{y} 1:{}.5", i % 7)
+                } else {
+                    format!("{y} 1:{}.5 2:{}", i % 7, i % 5)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        let data = crate::data::libsvm::read(text.as_bytes()).unwrap();
+        let mut cfg = quick_cfg(ExecMode::CpuInCore);
+        cfg.eval_fraction = 0.0;
+        let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
+        assert_eq!(out.model.trees.len(), 5);
+    }
+
+    #[test]
+    fn device_mode_rejects_sparse() {
+        let mut page = SparsePage::new(3);
+        page.push_row(&[0], &[1.0]);
+        page.push_row(&[0, 1, 2], &[1.0, 2.0, 3.0]);
+        let data = DMatrix::from_page(page, vec![0.0, 1.0]).unwrap();
+        let err = TrainSession::from_memory(data, quick_cfg(ExecMode::DeviceInCore));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn empty_stream_rejected() {
+        let cfg = quick_cfg(ExecMode::CpuInCore);
+        assert!(TrainSession::from_page_stream(std::iter::empty(), cfg).is_err());
+        let mut cfg = quick_cfg(ExecMode::CpuOutOfCore);
+        cfg.eval_fraction = 0.0;
+        assert!(TrainSession::from_page_stream(std::iter::empty(), cfg).is_err());
+    }
+
+    #[test]
+    fn out_of_core_page_stream_spills_and_trains() {
+        // The streaming entry point must produce the same model as the
+        // buffered in-memory entry point for identical rows.
+        let data = synthetic::higgs_like(1200, 9);
+        let mut cfg = quick_cfg(ExecMode::CpuOutOfCore);
+        cfg.eval_fraction = 0.0; // page-stream path takes no eval split
+        cfg.page_size_bytes = 4 * 1024;
+        let labels = data.labels().to_vec();
+        let pages = data.to_sized_pages(2048);
+        let mut offset = 0usize;
+        let stream = pages.into_iter().map(|p| {
+            let l = labels[offset..offset + p.n_rows()].to_vec();
+            offset += p.n_rows();
+            (p, l)
+        });
+        let out_stream =
+            TrainSession::from_page_stream(stream, cfg.clone()).unwrap().train().unwrap();
+        let (in_pages, in_labels) = data.into_parts();
+        let out_mem = TrainSession::from_page_stream(
+            in_pages.into_iter().map(|p| {
+                let n = p.n_rows();
+                let l = in_labels[p.base_rowid as usize..p.base_rowid as usize + n].to_vec();
+                (p, l)
+            }),
+            cfg,
+        )
+        .unwrap()
+        .train()
+        .unwrap();
+        assert_eq!(out_stream.model.trees.len(), out_mem.model.trees.len());
+        for (a, b) in out_stream.model.trees.iter().zip(&out_mem.model.trees) {
+            assert_eq!(a.n_nodes(), b.n_nodes());
+        }
+    }
+
+    #[test]
+    fn early_stopping_halts_training() {
+        let data = synthetic::higgs_like(1500, 6);
+        let mut cfg = quick_cfg(ExecMode::CpuInCore);
+        cfg.n_rounds = 60;
+        cfg.max_depth = 2;
+        cfg.learning_rate = 1.5; // deliberately unstable → metric stalls
+        cfg.early_stopping_rounds = 3;
+        let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
+        assert!(
+            out.model.trees.len() < 60,
+            "expected early stop, trained {}",
+            out.model.trees.len()
+        );
+    }
+
+    #[test]
+    fn squared_error_objective() {
+        // Regression: y = x0; RMSE must shrink.
+        let mut page = SparsePage::new(2);
+        let mut labels = Vec::new();
+        let mut rng = Rng::new(5);
+        for _ in 0..1500 {
+            let x0 = rng.next_f32();
+            page.push_dense_row(&[x0, rng.next_f32()]);
+            labels.push(x0);
+        }
+        let data = DMatrix::from_page(page, labels).unwrap();
+        let mut cfg = quick_cfg(ExecMode::CpuInCore);
+        cfg.objective = "reg:squarederror".into();
+        cfg.n_rounds = 10;
+        let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
+        let first = out.eval_history[0].1;
+        let last = out.eval_history.last().unwrap().1;
+        assert!(last < first * 0.5, "rmse {first} → {last}");
+        assert!(last < 0.1, "rmse={last}");
+    }
+}

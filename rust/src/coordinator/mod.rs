@@ -1,21 +1,25 @@
 //! Training coordinator — the Layer-3 orchestrator that wires the
-//! paper's pipeline together for each execution mode (Table 2's six
-//! rows):
+//! paper's pipeline together, split along the axis the paper itself
+//! draws (§2.3): *data placement/transport* versus *the tree-growing
+//! algorithm*.
 //!
-//! 1. **Preprocess** (once): quantile-sketch the CSR pages (Algorithms
-//!    2/3), then convert to ELLPACK — one resident page in-core, or
-//!    size-capped pages spilled to a disk page file (Algorithms 4/5).
-//! 2. **Per boosting round**: compute gradient pairs (host objective or
-//!    the AOT gradient artifact), optionally sample (SGB / GOSS / MVS),
-//!    pick the data path — resident pages, streamed pages (naive
-//!    Algorithm 6), or sample-compacted page (Algorithm 7) — grow one
-//!    tree, and update the margins.
-//! 3. **Evaluate** on the held-out split (AUC for Table 2 / Figure 1).
+//! * [`session`] — construction and config plumbing: carve the eval
+//!   split, stage CSR input, run the two preprocessing steps (quantile
+//!   sketch, Algorithms 2/3; ELLPACK conversion, Algorithms 4/5).
+//! * `modes` *(crate-private)* — per-mode pipeline assembly and
+//!   device budgeting: every `ExecMode` is a composition of the staged
+//!   bounded pipeline in `page/pipeline.rs` (read → decode → convert /
+//!   transfer stages), not a branch in the training code.
+//! * `loop` *(crate-private)* — the mode-agnostic boosting round
+//!   driver: gradients → sampling → grow → margins → eval, sweeping
+//!   whatever page stream its mode composed.
 //!
 //! All device-side state flows through the simulated
 //! [`crate::device::DeviceContext`], so Table 1's OOM probes and the
 //! interconnect accounting fall out of ordinary training runs.
 
+pub(crate) mod r#loop;
+pub(crate) mod modes;
 pub mod session;
 
 pub use session::{TrainOutcome, TrainSession};

@@ -1,0 +1,511 @@
+//! Per-mode pipeline assembly and device budgeting.
+//!
+//! Every `ExecMode` is a *composition* of the same staged page pipeline
+//! (`page/pipeline.rs`) rather than a branch in the boosting loop:
+//!
+//! | mode                     | preprocessing            | per-level sweep                  |
+//! |--------------------------|--------------------------|----------------------------------|
+//! | cpu-in-core              | csr → convert            | memory                           |
+//! | device-in-core           | csr → convert (budgeted) | memory, pages pinned on device   |
+//! | cpu-out-of-core          | csr → convert → write    | read → decode                    |
+//! | device-out-of-core-naive | csr → convert → write    | read → decode → transfer         |
+//! | device-out-of-core       | csr → convert → write    | read → decode → transfer →       |
+//! |                          |                          | compact (once per *round*)       |
+//!
+//! This module owns the assembly: staging CSR input ([`CsrSource`]),
+//! re-chunking to the paper's size-capped page premise ([`Rechunker`]),
+//! the quantile sketch with its device staging charges
+//! ([`sketch_cuts`]), the conversion pipeline ([`build_train_data`]),
+//! and the per-mode persistent sweep source ([`open_source`]).  The
+//! boosting loop (`coordinator/loop.rs`) never matches on `ExecMode`
+//! for data placement — it just sweeps whatever stream it is handed.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::{ExecMode, TrainConfig};
+use crate::data::SparsePage;
+use crate::device::{DeviceAlloc, DeviceContext, Dir};
+use crate::ellpack::{EllpackBuilder, EllpackPage};
+use crate::error::{Error, Result};
+use crate::page::pipeline::Pipeline;
+use crate::page::{PageFile, PageFileWriter, Prefetcher};
+use crate::runtime::Runtime;
+use crate::sketch::{HistogramCuts, SketchBuilder};
+use crate::tree::source::{
+    h2d_staging_hook, load_resident, DiskStream, MemoryStream, PageIter, StreamSource,
+};
+
+/// Where the quantized training data lives after preprocessing.
+pub(crate) enum TrainData {
+    /// Host-resident ELLPACK pages (in-core modes).
+    HostPages(Vec<Arc<EllpackPage>>),
+    /// Disk page file (out-of-core modes).
+    Disk(Arc<PageFile<EllpackPage>>),
+}
+
+/// Device-mode facilities.
+pub(crate) struct DeviceSetup {
+    pub rt: Arc<Runtime>,
+    pub ctx: DeviceContext,
+    /// Long-lived per-row device buffers (gradients, positions,
+    /// prediction cache) — part of every mode's working set.
+    pub _row_buffers: DeviceAlloc,
+}
+
+/// Load the AOT runtime and budget the per-row working set (device
+/// modes only).
+pub(crate) fn device_setup(cfg: &TrainConfig, n_rows: usize) -> Result<Option<DeviceSetup>> {
+    if !cfg.mode.is_device() {
+        return Ok(None);
+    }
+    let rt = Arc::new(Runtime::load(Path::new(&cfg.artifacts_dir))?);
+    if rt.hist_batches(cfg.max_bin).is_empty() {
+        return Err(Error::config(format!(
+            "device modes need max_bin compiled into artifacts (64 or 256), got {}",
+            cfg.max_bin
+        )));
+    }
+    let ctx = DeviceContext::new(cfg.device_memory_bytes);
+    // Per-row working set resident for the whole run: gradient pairs
+    // (8 B), positions (4 B), prediction cache (4 B).
+    let row_buffers = ctx.mem.alloc("row_buffers", n_rows as u64 * 16)?;
+    Ok(Some(DeviceSetup { rt, ctx, _row_buffers: row_buffers }))
+}
+
+/// Scratch directory for this session's spill files.  The process-wide
+/// counter keeps concurrent same-seed sessions (parallel tests, Table 1
+/// probes) from sharing — and deleting — each other's spill.
+pub(crate) fn session_cache_dir(cfg: &TrainConfig) -> PathBuf {
+    static SESSION_COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = SESSION_COUNTER.fetch_add(1, Ordering::Relaxed);
+    PathBuf::from(&cfg.cache_dir)
+        .join(format!("session-{}-{}-{n}", std::process::id(), cfg.seed))
+}
+
+/// Dataset-level facts accumulated while staging CSR input (one pass,
+/// page at a time — no full-matrix buffering required).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct CsrMeta {
+    pub n_cols: usize,
+    pub n_rows: usize,
+    pub nnz: usize,
+    /// Max row nnz across the whole dataset (the ELLPACK row stride).
+    pub row_stride: usize,
+    pub dense: bool,
+}
+
+impl Default for CsrMeta {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CsrMeta {
+    pub fn new() -> CsrMeta {
+        CsrMeta { n_cols: 0, n_rows: 0, nnz: 0, row_stride: 0, dense: true }
+    }
+
+    pub fn add_page(&mut self, p: &SparsePage) {
+        if self.n_cols == 0 {
+            self.n_cols = p.n_cols;
+        }
+        self.n_rows += p.n_rows();
+        self.nnz += p.nnz();
+        self.row_stride = self.row_stride.max(p.max_row_nnz());
+        if p.nnz() != p.n_rows() * p.n_cols {
+            self.dense = false;
+        }
+    }
+}
+
+/// Staged CSR input for the sketch / conversion passes: resident pages
+/// (in-core entry points) or a spilled page file streamed back through
+/// the prefetch pipeline (the `from_page_stream` out-of-core path,
+/// where the full matrix never sits in host memory).
+pub(crate) enum CsrSource {
+    Memory(Vec<SparsePage>),
+    Spilled { file: Arc<PageFile<SparsePage>>, depth: usize },
+}
+
+impl CsrSource {
+    /// One streaming pass over the CSR pages.
+    pub fn for_each(&self, f: &mut dyn FnMut(&SparsePage) -> Result<()>) -> Result<()> {
+        match self {
+            CsrSource::Memory(pages) => {
+                for p in pages {
+                    f(p)?;
+                }
+                Ok(())
+            }
+            CsrSource::Spilled { file, depth } => {
+                for p in Prefetcher::start(file, *depth)? {
+                    f(&p?)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Consume into an owned-page iterator feeding the conversion
+    /// pipeline.
+    fn into_page_iter(self) -> Result<Box<dyn Iterator<Item = Result<SparsePage>> + Send>> {
+        Ok(match self {
+            CsrSource::Memory(pages) => Box::new(pages.into_iter().map(Ok)),
+            CsrSource::Spilled { file, depth } => Box::new(Prefetcher::start(&file, depth)?),
+        })
+    }
+
+    /// Path of the spill file, if any (removed once conversion is done).
+    pub fn spilled_path(&self) -> Option<PathBuf> {
+        match self {
+            CsrSource::Spilled { file, .. } => Some(file.path().to_path_buf()),
+            CsrSource::Memory(_) => None,
+        }
+    }
+}
+
+/// ---- Step 1: quantile sketch (Algorithms 2/3). ----
+///
+/// Device modes charge staging against the simulated budget: the
+/// in-core sketch stages the whole raw matrix at once (values +
+/// indices, 8 B/entry — the allocation that bounds Table 1's in-core
+/// row count); the out-of-core sketch stages one CSR page at a time.
+pub(crate) fn sketch_cuts(
+    csr: &CsrSource,
+    meta: &CsrMeta,
+    device: Option<&DeviceContext>,
+    cfg: &TrainConfig,
+) -> Result<HistogramCuts> {
+    let mut sketch = SketchBuilder::new(meta.n_cols, cfg.max_bin);
+    match device {
+        Some(ctx) if !cfg.mode.is_out_of_core() => {
+            let bytes = meta.nnz as u64 * 8;
+            let _staging = ctx.mem.alloc("raw_staging", bytes)?;
+            ctx.link.charge(Dir::HostToDevice, bytes);
+            csr.for_each(&mut |p| {
+                sketch.push_page(p);
+                Ok(())
+            })?;
+        }
+        Some(ctx) => {
+            csr.for_each(&mut |p| {
+                let bytes = p.memory_bytes() as u64;
+                let _staging = ctx.mem.alloc("raw_staging", bytes)?;
+                ctx.link.charge(Dir::HostToDevice, bytes);
+                sketch.push_page(p);
+                Ok(())
+            })?;
+        }
+        None => {
+            csr.for_each(&mut |p| {
+                sketch.push_page(p);
+                Ok(())
+            })?;
+        }
+    }
+    let (summaries, mins) = sketch.finish();
+    Ok(HistogramCuts::from_summaries(&summaries, &mins, cfg.max_bin))
+}
+
+/// ---- Step 2: ELLPACK conversion (Algorithms 4/5). ----
+///
+/// The conversion runs as a pipeline stage, so CSR read/decode, the
+/// quantization itself, and the page-file write (or host collection)
+/// overlap on separate threads.  In GPU modes each completed page
+/// transiently occupies device memory and crosses the link back to the
+/// host spill file.
+pub(crate) fn build_train_data(
+    csr: CsrSource,
+    meta: &CsrMeta,
+    cuts: &Arc<HistogramCuts>,
+    device: Option<&DeviceContext>,
+    cfg: &TrainConfig,
+    cache_dir: &Path,
+) -> Result<TrainData> {
+    let out_of_core = cfg.mode.is_out_of_core();
+    let cap = if out_of_core { cfg.page_size_bytes } else { usize::MAX };
+    let builder = EllpackBuilder::new(cuts.clone(), meta.row_stride, meta.dense, cap);
+    let depth = cfg.pipeline_depth;
+    let pipe = Pipeline::from_iter("csr", depth, csr.into_page_iter()?)
+        .then_stage("convert", depth, builder);
+    if out_of_core {
+        std::fs::create_dir_all(cache_dir)?;
+        let path = cache_dir.join("ellpack.pages");
+        let mut writer = PageFileWriter::create(&path)?;
+        for page in pipe {
+            let page = page?;
+            if let Some(ctx) = device {
+                // Conversion itself runs on device in GPU mode: the
+                // page transiently occupies device memory.
+                let bytes = page.memory_bytes() as u64;
+                let _staging = ctx.mem.alloc("ellpack_convert", bytes)?;
+                ctx.link.charge(Dir::DeviceToHost, bytes);
+            }
+            writer.write_page(&page)?;
+        }
+        Ok(TrainData::Disk(Arc::new(writer.finish()?)))
+    } else {
+        let mut pages = Vec::new();
+        for page in pipe {
+            pages.push(Arc::new(page?));
+        }
+        Ok(TrainData::HostPages(pages))
+    }
+}
+
+/// Assemble the persistent per-mode sweep source the grower uses.
+/// `DeviceOutOfCore` returns `None`: Algorithm 7 opens a fresh hooked
+/// compaction sweep every round instead ([`compaction_sweep`]).
+pub(crate) fn open_source(
+    data: &TrainData,
+    device: Option<&DeviceContext>,
+    cfg: &TrainConfig,
+    n_rows: usize,
+) -> Result<Option<StreamSource>> {
+    match (data, cfg.mode) {
+        (TrainData::HostPages(pages), ExecMode::CpuInCore) => Ok(Some(StreamSource::new(
+            Box::new(MemoryStream::from_shared(pages.clone())),
+        ))),
+        (TrainData::HostPages(pages), ExecMode::DeviceInCore) => {
+            let ctx = device.expect("device mode without device context");
+            let allocs = load_resident(pages, ctx)?;
+            Ok(Some(StreamSource::with_retained(
+                Box::new(MemoryStream::from_shared(pages.clone())),
+                allocs,
+            )))
+        }
+        (TrainData::Disk(file), ExecMode::CpuOutOfCore) => Ok(Some(StreamSource::new(
+            Box::new(DiskStream::with_rows(file.clone(), cfg.prefetch_depth, n_rows)),
+        ))),
+        (TrainData::Disk(file), ExecMode::DeviceOutOfCoreNaive) => {
+            let ctx = device.expect("device mode without device context");
+            Ok(Some(StreamSource::new(Box::new(
+                DiskStream::with_rows(file.clone(), cfg.prefetch_depth, n_rows)
+                    .with_hook(h2d_staging_hook(ctx.clone())),
+            ))))
+        }
+        (TrainData::Disk(_), ExecMode::DeviceOutOfCore) => Ok(None),
+        _ => Err(Error::config(format!(
+            "mode {} is inconsistent with the prepared data layout",
+            cfg.mode.name()
+        ))),
+    }
+}
+
+/// One hooked sweep for Algorithm 7's per-round compaction: every page
+/// is staged on device and charged across the link before the
+/// compactor gathers its sampled rows.
+pub(crate) fn compaction_sweep(
+    file: &PageFile<EllpackPage>,
+    ctx: &DeviceContext,
+    cfg: &TrainConfig,
+) -> Result<PageIter> {
+    let hook = h2d_staging_hook(ctx.clone());
+    DiskStream::open_file(file, cfg.prefetch_depth, Some(&hook))
+}
+
+/// One host-side pass over the prepared data (margin updates): the
+/// in-memory fast path, or a read → decode pipeline for disk pages.
+pub(crate) fn data_sweep(data: &TrainData, depth: usize) -> Result<PageIter> {
+    match data {
+        TrainData::HostPages(pages) => Ok(PageIter::from_shared(pages.clone())),
+        TrainData::Disk(file) => DiskStream::open_file(file, depth, None),
+    }
+}
+
+/// Streaming CSR re-chunker: rows flow in, size-capped pages flow out
+/// (the 32 MiB CSR page premise of §2.3).  Row order is preserved and
+/// `base_rowid`s are assigned contiguously from 0.
+pub(crate) struct Rechunker {
+    target_bytes: usize,
+    n_cols: Option<usize>,
+    cur: SparsePage,
+    next_base: u64,
+}
+
+impl Rechunker {
+    pub fn new(target_bytes: usize) -> Rechunker {
+        Rechunker {
+            target_bytes: target_bytes.max(1),
+            n_cols: None,
+            cur: SparsePage::new(0),
+            next_base: 0,
+        }
+    }
+
+    /// Global row id the next incoming row will get.
+    pub fn next_base(&self) -> u64 {
+        self.next_base
+    }
+
+    /// Feed one input page; completed size-capped chunks land in `out`.
+    pub fn push_page(&mut self, page: &SparsePage, out: &mut Vec<SparsePage>) {
+        let n_cols = *self.n_cols.get_or_insert(page.n_cols);
+        if self.cur.n_rows() == 0 && self.cur.n_cols != n_cols {
+            self.cur = SparsePage::new(n_cols);
+        }
+        for r in 0..page.n_rows() {
+            if self.cur.n_rows() == 0 {
+                self.cur.base_rowid = self.next_base;
+            }
+            self.cur.push_row(page.row_indices(r), page.row_values(r));
+            self.next_base += 1;
+            if self.cur.memory_bytes() >= self.target_bytes {
+                out.push(std::mem::replace(&mut self.cur, SparsePage::new(n_cols)));
+            }
+        }
+    }
+
+    /// Flush the trailing partial chunk, if any.
+    pub fn finish(mut self, out: &mut Vec<SparsePage>) {
+        if self.cur.n_rows() > 0 {
+            out.push(std::mem::take(&mut self.cur));
+        }
+    }
+}
+
+/// Re-chunk CSR pages so none exceeds `target_bytes` (the 32 MiB CSR
+/// page cap of §2.3).  Row order and `base_rowid` continuity are
+/// preserved; the result always holds at least one (possibly empty)
+/// page.
+pub(crate) fn rechunk_pages(pages: Vec<SparsePage>, target_bytes: usize) -> Vec<SparsePage> {
+    let n_cols = pages.first().map(|p| p.n_cols).unwrap_or(0);
+    let mut rc = Rechunker::new(target_bytes);
+    let mut out = Vec::new();
+    for p in &pages {
+        rc.push_page(p, &mut out);
+    }
+    let tail_base = rc.next_base();
+    rc.finish(&mut out);
+    if out.is_empty() {
+        let mut empty = SparsePage::new(n_cols);
+        empty.base_rowid = tail_base;
+        out.push(empty);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A dense page of `rows` rows × 2 cols; each row costs
+    /// 8 (offset) + 2×4 (indices) + 2×4 (values) = 24 bytes.
+    fn dense_page(rows: usize, base: u64) -> SparsePage {
+        let mut p = SparsePage::new(2);
+        p.base_rowid = base;
+        for r in 0..rows {
+            p.push_dense_row(&[(base as usize + r) as f32, 1.0]);
+        }
+        p
+    }
+
+    fn check_continuity(chunks: &[SparsePage], total_rows: usize) {
+        let mut next = 0u64;
+        let mut rows = 0usize;
+        for c in chunks {
+            assert_eq!(c.base_rowid, next, "base_rowid gap");
+            next += c.n_rows() as u64;
+            rows += c.n_rows();
+        }
+        assert_eq!(rows, total_rows);
+    }
+
+    #[test]
+    fn rechunk_exact_boundary_pages() {
+        // 24 B/row, target 96 B → chunks close at exactly 4 rows, and
+        // 12 rows split into exactly 3 full chunks with no empty tail.
+        let pages = vec![dense_page(4, 0), dense_page(4, 4), dense_page(4, 8)];
+        let out = rechunk_pages(pages, 96 + 8); // +8: offsets vec starts at 1 entry
+        assert_eq!(out.len(), 3);
+        for c in &out {
+            assert_eq!(c.n_rows(), 4);
+        }
+        check_continuity(&out, 12);
+        // Row payloads survive the re-chunk.
+        assert_eq!(out[2].row_values(3), &[11.0, 1.0]);
+    }
+
+    #[test]
+    fn rechunk_single_oversized_page_splits() {
+        let out = rechunk_pages(vec![dense_page(100, 0)], 10 * 24);
+        assert!(out.len() > 5, "oversized page must split, got {}", out.len());
+        check_continuity(&out, 100);
+        for c in &out[..out.len() - 1] {
+            assert!(c.memory_bytes() >= 10 * 24);
+        }
+    }
+
+    #[test]
+    fn rechunk_handles_empty_rows_and_empty_pages() {
+        // Rows with zero stored entries (all-missing) and a zero-row
+        // input page must flow through without breaking continuity.
+        let mut sparse = SparsePage::new(2);
+        for _ in 0..5 {
+            sparse.push_row(&[], &[]);
+        }
+        let empty_page = SparsePage::new(2);
+        let pages = vec![dense_page(3, 0), empty_page, sparse, dense_page(2, 8)];
+        let out = rechunk_pages(pages, 64);
+        check_continuity(&out, 10);
+        let total_nnz: usize = out.iter().map(|p| p.nnz()).sum();
+        assert_eq!(total_nnz, 3 * 2 + 0 + 2 * 2);
+        for c in &out {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn rechunk_empty_input_yields_one_empty_page() {
+        let out = rechunk_pages(Vec::new(), 1024);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].n_rows(), 0);
+        let out = rechunk_pages(vec![SparsePage::new(3)], 1024);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].n_rows(), 0);
+        assert_eq!(out[0].n_cols, 3);
+    }
+
+    #[test]
+    fn rechunk_base_rowid_continuity_across_uneven_inputs() {
+        // Input pages of wildly different sizes; output bases must tile
+        // [0, total) regardless of where the splits land.
+        let pages = vec![
+            dense_page(1, 0),
+            dense_page(7, 1),
+            dense_page(2, 8),
+            dense_page(13, 10),
+        ];
+        for target in [1usize, 50, 100, 1 << 20] {
+            let out = rechunk_pages(pages.clone(), target);
+            check_continuity(&out, 23);
+        }
+    }
+
+    #[test]
+    fn rechunker_streams_incrementally() {
+        let mut rc = Rechunker::new(3 * 24);
+        let mut out = Vec::new();
+        rc.push_page(&dense_page(4, 0), &mut out);
+        assert!(!out.is_empty(), "cap crossed mid-page must emit eagerly");
+        rc.push_page(&dense_page(4, 4), &mut out);
+        rc.finish(&mut out);
+        check_continuity(&out, 8);
+    }
+
+    #[test]
+    fn csr_meta_accumulates() {
+        let mut meta = CsrMeta::new();
+        meta.add_page(&dense_page(3, 0));
+        assert!(meta.dense);
+        assert_eq!((meta.n_rows, meta.n_cols, meta.nnz), (3, 2, 6));
+        let mut sparse = SparsePage::new(2);
+        sparse.push_row(&[1], &[2.0]);
+        meta.add_page(&sparse);
+        assert!(!meta.dense);
+        assert_eq!(meta.n_rows, 4);
+        assert_eq!(meta.row_stride, 2);
+    }
+}

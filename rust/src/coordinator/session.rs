@@ -1,61 +1,38 @@
-//! The training session: mode-specific setup + the boosting loop.
+//! Session construction and config plumbing.
+//!
+//! A [`TrainSession`] is built in two preprocessing steps — quantile
+//! sketch, then ELLPACK conversion — both assembled per execution mode
+//! by `coordinator/modes.rs` on top of the staged page pipeline.  The
+//! boosting loop itself lives in `coordinator/loop.rs`; [`train`]
+//! (`TrainSession::train`) just hands the prepared session to it.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::boosting::{GbtModel, Metric, Objective};
-use crate::config::{ExecMode, TrainConfig};
+use crate::config::TrainConfig;
 use crate::data::{DMatrix, SparsePage};
-use crate::device::{DeviceAlloc, DeviceContext, Dir};
-use crate::ellpack::{compact::Compactor, EllpackBuilder, EllpackPage};
 use crate::error::{Error, Result};
-use crate::page::{PageFile, PageFileWriter, Prefetcher};
-use crate::runtime::Runtime;
-use crate::sampling::Sampler;
-use crate::sketch::{HistogramCuts, SketchBuilder};
-use crate::tree::{
-    builder::HistBackend,
-    hist_cpu::CpuHistBackend,
-    hist_device::DeviceHistBackend,
-    partitioner::RowPartitioner,
-    source::{DeviceResidentSource, DeviceStreamSource, DiskSource, EllpackSource,
-             InMemorySource},
-    Tree, TreeBuilder, TreeParams,
-};
-use crate::util::rng::Rng;
+use crate::page::PageFileWriter;
+use crate::sketch::HistogramCuts;
 use crate::util::timer::{PhaseTimers, Stopwatch};
 
-/// Where the quantized training data lives after preprocessing.
-enum TrainData {
-    /// Host-resident ELLPACK pages (in-core modes).
-    HostPages(Vec<EllpackPage>),
-    /// Disk page file (out-of-core modes).
-    Disk(Arc<PageFile<EllpackPage>>),
-}
-
-/// Device-mode facilities.
-struct DeviceSetup {
-    rt: Arc<Runtime>,
-    ctx: DeviceContext,
-    /// Long-lived per-row device buffers (gradients, positions,
-    /// prediction cache) — part of every mode's working set.
-    _row_buffers: DeviceAlloc,
-}
+use super::modes::{self, CsrMeta, CsrSource, DeviceSetup, Rechunker, TrainData};
 
 /// A fully-prepared training session.
 pub struct TrainSession {
-    cfg: TrainConfig,
-    objective: Objective,
-    metric: Metric,
-    cuts: HistogramCuts,
-    row_stride: usize,
-    dense: bool,
-    data: TrainData,
-    labels: Vec<f32>,
-    eval: Option<DMatrix>,
-    device: Option<DeviceSetup>,
+    pub(crate) cfg: TrainConfig,
+    pub(crate) objective: Objective,
+    pub(crate) metric: Metric,
+    pub(crate) cuts: Arc<HistogramCuts>,
+    pub(crate) row_stride: usize,
+    pub(crate) dense: bool,
+    pub(crate) data: TrainData,
+    pub(crate) labels: Vec<f32>,
+    pub(crate) eval: Option<DMatrix>,
+    pub(crate) device: Option<DeviceSetup>,
     pub timers: PhaseTimers,
-    cache_dir: PathBuf,
+    pub(crate) cache_dir: PathBuf,
 }
 
 /// Everything a finished run reports (benches consume this).
@@ -92,165 +69,136 @@ impl TrainSession {
     }
 
     /// Build a session from a streaming page generator (Table 1's large
-    /// sweeps: the full matrix never sits in host memory; OOC modes
-    /// write CSR pages straight to disk).
+    /// sweeps: the full matrix never sits in host memory).  In
+    /// out-of-core modes, CSR pages flow straight through re-chunking to
+    /// the disk page file; only the in-core modes — whose whole point is
+    /// a resident matrix — buffer the stream.
     pub fn from_page_stream(
         stream: impl Iterator<Item = (SparsePage, Vec<f32>)>,
         cfg: TrainConfig,
     ) -> Result<TrainSession> {
         cfg.validate()?;
-        let mut pages = Vec::new();
-        let mut labels = Vec::new();
-        for (p, l) in stream {
-            p.validate()?;
-            labels.extend(l);
-            pages.push(p);
+        if !cfg.mode.is_out_of_core() {
+            let mut pages = Vec::new();
+            let mut labels = Vec::new();
+            for (p, l) in stream {
+                p.validate()?;
+                labels.extend(l);
+                pages.push(p);
+            }
+            if pages.is_empty() {
+                return Err(Error::data("empty page stream"));
+            }
+            return Self::build(pages, labels, None, cfg);
         }
-        if pages.is_empty() {
-            return Err(Error::data("empty page stream"));
+
+        let cache_dir = modes::session_cache_dir(&cfg);
+        std::fs::create_dir_all(&cache_dir)?;
+        let dir = cache_dir.clone();
+        let built = (move || -> Result<TrainSession> {
+            let mut writer = PageFileWriter::create(&cache_dir.join("csr.pages"))?;
+            let mut rechunker = Rechunker::new(cfg.page_size_bytes);
+            let mut meta = CsrMeta::new();
+            let mut labels = Vec::new();
+            let mut chunks = Vec::new();
+            let mut spill = |chunks: &mut Vec<SparsePage>,
+                             meta: &mut CsrMeta|
+             -> Result<()> {
+                for c in chunks.drain(..) {
+                    meta.add_page(&c);
+                    writer.write_page(&c)?;
+                }
+                Ok(())
+            };
+            for (p, l) in stream {
+                p.validate()?;
+                labels.extend(l);
+                rechunker.push_page(&p, &mut chunks);
+                spill(&mut chunks, &mut meta)?;
+            }
+            rechunker.finish(&mut chunks);
+            spill(&mut chunks, &mut meta)?;
+            drop(spill);
+            if meta.n_rows == 0 {
+                return Err(Error::data("empty page stream"));
+            }
+            let file = Arc::new(writer.finish()?);
+            let csr = CsrSource::Spilled { file, depth: cfg.prefetch_depth };
+            Self::build_from(csr, meta, labels, None, cfg, cache_dir)
+        })();
+        if built.is_err() {
+            // Don't leak the spill on any failed ingest or build (the
+            // Table 1 probes OOM here repeatedly).
+            let _ = std::fs::remove_dir_all(&dir);
         }
-        Self::build(pages, labels, None, cfg)
+        built
     }
 
+    /// Memory-resident CSR input; OOC modes re-chunk it to the §2.3
+    /// size-capped page premise first.
     fn build(
         csr_pages: Vec<SparsePage>,
         labels: Vec<f32>,
         eval: Option<DMatrix>,
         cfg: TrainConfig,
     ) -> Result<TrainSession> {
-        let objective = Objective::parse(&cfg.objective)?;
-        let metric = Metric::default_for(objective);
-        // Out-of-core mode assumes the input is parsed into size-capped
-        // CSR pages (paper §2.3) — re-chunk so the per-page staging
-        // matches that premise regardless of how the caller batched rows.
         let csr_pages = if cfg.mode.is_out_of_core() {
-            rechunk_pages(csr_pages, cfg.page_size_bytes)
+            modes::rechunk_pages(csr_pages, cfg.page_size_bytes)
         } else {
             csr_pages
         };
-        let n_cols = csr_pages[0].n_cols;
-        let n_rows: usize = csr_pages.iter().map(|p| p.n_rows()).sum();
-        if n_rows != labels.len() {
+        let mut meta = CsrMeta::new();
+        for p in &csr_pages {
+            meta.add_page(p);
+        }
+        let cache_dir = modes::session_cache_dir(&cfg);
+        Self::build_from(CsrSource::Memory(csr_pages), meta, labels, eval, cfg, cache_dir)
+    }
+
+    fn build_from(
+        csr: CsrSource,
+        meta: CsrMeta,
+        labels: Vec<f32>,
+        eval: Option<DMatrix>,
+        cfg: TrainConfig,
+        cache_dir: PathBuf,
+    ) -> Result<TrainSession> {
+        let objective = Objective::parse(&cfg.objective)?;
+        let metric = Metric::default_for(objective);
+        if meta.n_rows != labels.len() {
             return Err(Error::data("rows != labels"));
         }
-        let row_stride = csr_pages.iter().map(|p| p.max_row_nnz()).max().unwrap_or(0);
-        let dense = csr_pages
-            .iter()
-            .all(|p| p.nnz() == p.n_rows() * n_cols);
-        if cfg.mode.is_device() && !dense {
+        if cfg.mode.is_device() && !meta.dense {
             return Err(Error::config(
                 "device modes require dense data (see DESIGN.md §limitations)",
             ));
         }
         let mut timers = PhaseTimers::new();
-        let cache_dir = PathBuf::from(&cfg.cache_dir)
-            .join(format!("session-{}-{}", std::process::id(), cfg.seed));
-
         // Device facilities first: the sketch/convert phases charge
         // against the budget in device modes.
-        let device = if cfg.mode.is_device() {
-            let rt = Arc::new(Runtime::load(std::path::Path::new(&cfg.artifacts_dir))?);
-            if rt.hist_batches(cfg.max_bin).is_empty() {
-                return Err(Error::config(format!(
-                    "device modes need max_bin compiled into artifacts (64 or 256), got {}",
-                    cfg.max_bin
-                )));
-            }
-            let ctx = DeviceContext::new(cfg.device_memory_bytes);
-            // Per-row working set resident for the whole run: gradient
-            // pairs (8 B), positions (4 B), prediction cache (4 B).
-            let row_buffers = ctx.mem.alloc("row_buffers", n_rows as u64 * 16)?;
-            Some(DeviceSetup { rt, ctx, _row_buffers: row_buffers })
-        } else {
-            None
-        };
+        let device = modes::device_setup(&cfg, meta.n_rows)?;
+        let ctx = device.as_ref().map(|d| &d.ctx);
 
-        // ---- Step 1: quantile sketch (Algorithms 2/3). ----
         let sw = Stopwatch::start();
-        let cuts = {
-            let mut sketch = SketchBuilder::new(n_cols, cfg.max_bin);
-            if let Some(dev) = &device {
-                if !cfg.mode.is_out_of_core() {
-                    // In-core device sketch stages the raw CSR batch on
-                    // device (values + indices, 8 B/entry) — the
-                    // allocation that bounds Table 1's in-core row count.
-                    let nnz: usize = csr_pages.iter().map(|p| p.nnz()).sum();
-                    let _staging = dev.ctx.mem.alloc("raw_staging", nnz as u64 * 8)?;
-                    dev.ctx.link.charge(Dir::HostToDevice, nnz as u64 * 8);
-                    for p in &csr_pages {
-                        sketch.push_page(p);
-                    }
-                } else {
-                    // Out-of-core sketch stages one CSR page at a time
-                    // (Algorithm 3).
-                    for p in &csr_pages {
-                        let bytes = p.memory_bytes() as u64;
-                        let _staging = dev.ctx.mem.alloc("raw_staging", bytes)?;
-                        dev.ctx.link.charge(Dir::HostToDevice, bytes);
-                        sketch.push_page(p);
-                    }
-                }
-            } else {
-                for p in &csr_pages {
-                    sketch.push_page(p);
-                }
-            }
-            let (summaries, mins) = sketch.finish();
-            HistogramCuts::from_summaries(&summaries, &mins, cfg.max_bin)
-        };
+        let cuts = Arc::new(modes::sketch_cuts(&csr, &meta, ctx, &cfg)?);
         timers.add("sketch", sw.elapsed_secs());
 
-        // ---- Step 2: ELLPACK conversion (Algorithms 4/5). ----
         let sw = Stopwatch::start();
-        let data = if cfg.mode.is_out_of_core() {
-            std::fs::create_dir_all(&cache_dir)?;
-            let path = cache_dir.join("ellpack.pages");
-            let mut writer = PageFileWriter::create(&path)?;
-            let mut builder =
-                EllpackBuilder::new(&cuts, row_stride, dense, cfg.page_size_bytes);
-            let mut done = Vec::new();
-            for p in &csr_pages {
-                builder.push_page(p, &mut done);
-                for ep in done.drain(..) {
-                    // Conversion itself runs on device in GPU mode: the
-                    // page transiently occupies device memory.
-                    if let Some(dev) = &device {
-                        let _staging =
-                            dev.ctx.mem.alloc("ellpack_convert", ep.memory_bytes() as u64)?;
-                        dev.ctx.link.charge(Dir::DeviceToHost, ep.memory_bytes() as u64);
-                    }
-                    writer.write_page(&ep)?;
-                }
-            }
-            builder.finish(&mut done);
-            for ep in done.drain(..) {
-                if let Some(dev) = &device {
-                    let _staging =
-                        dev.ctx.mem.alloc("ellpack_convert", ep.memory_bytes() as u64)?;
-                    dev.ctx.link.charge(Dir::DeviceToHost, ep.memory_bytes() as u64);
-                }
-                writer.write_page(&ep)?;
-            }
-            TrainData::Disk(Arc::new(writer.finish()?))
-        } else {
-            let mut builder = EllpackBuilder::new(&cuts, row_stride, dense, usize::MAX);
-            let mut out = Vec::new();
-            for p in &csr_pages {
-                builder.push_page(p, &mut out);
-            }
-            builder.finish(&mut out);
-            TrainData::HostPages(out)
-        };
+        let spilled_csr = csr.spilled_path();
+        let data = modes::build_train_data(csr, &meta, &cuts, ctx, &cfg, &cache_dir)?;
         timers.add("ellpack", sw.elapsed_secs());
-        drop(csr_pages);
+        if let Some(path) = spilled_csr {
+            // The staged CSR spill is fully consumed; reclaim the disk.
+            let _ = std::fs::remove_file(path);
+        }
 
         Ok(TrainSession {
             cfg,
             objective,
             metric,
             cuts,
-            row_stride,
-            dense,
+            row_stride: meta.row_stride,
+            dense: meta.dense,
             data,
             labels,
             eval,
@@ -268,546 +216,8 @@ impl TrainSession {
         &self.cuts
     }
 
-    /// Run the boosting loop.
-    pub fn train(mut self) -> Result<TrainOutcome> {
-        let cfg = self.cfg.clone();
-        let n_rows = self.labels.len();
-        let n_cols = self.cuts.n_features();
-        let params = TreeParams::from_config(&cfg);
-        let sampler = Sampler::from_config(&cfg);
-        // Fixed salt keeps the sampling stream independent of other
-        // seed consumers (data gen, splits).
-        const SAMPLE_SALT: u64 = 0x7A1D_5EED_0C0A_C47E;
-        let mut rng = Rng::new(cfg.seed ^ SAMPLE_SALT);
-        let mut model = GbtModel::new(self.objective, n_cols);
-        let mut margins = vec![model.base_margin; n_rows];
-        let mut grads: Vec<[f32; 2]> = Vec::with_capacity(n_rows);
-        let mut eval_history = Vec::new();
-        let mut sample_rows_total = 0usize;
-        let mut sampled_rounds = 0usize;
-
-        // Mode-persistent source + backend.
-        let mut backend: Box<dyn HistBackend> = match (&self.device, cfg.mode) {
-            (Some(dev), _) => Box::new(DeviceHistBackend::new(
-                dev.rt.clone(),
-                dev.ctx.clone(),
-                cfg.max_bin,
-            )?),
-            (None, _) => Box::new(CpuHistBackend::new(cfg.threads())),
-        };
-        let mut persistent_source: Option<Box<dyn EllpackSource>> = match (&self.data, cfg.mode)
-        {
-            (TrainData::HostPages(pages), ExecMode::CpuInCore) => {
-                Some(Box::new(InMemorySource::new(pages.clone())))
-            }
-            (TrainData::HostPages(pages), ExecMode::DeviceInCore) => {
-                let dev = self.device.as_ref().unwrap();
-                Some(Box::new(DeviceResidentSource::load(pages.clone(), &dev.ctx)?))
-            }
-            (TrainData::Disk(file), ExecMode::CpuOutOfCore) => {
-                Some(Box::new(DiskSource::new(file.clone(), cfg.prefetch_depth)?))
-            }
-            (TrainData::Disk(file), ExecMode::DeviceOutOfCoreNaive) => {
-                let dev = self.device.as_ref().unwrap();
-                Some(Box::new(DeviceStreamSource::new(
-                    file.clone(),
-                    cfg.prefetch_depth,
-                    dev.ctx.clone(),
-                )?))
-            }
-            (TrainData::Disk(_), ExecMode::DeviceOutOfCore) => None, // per-round compaction
-            _ => {
-                return Err(Error::config(format!(
-                    "mode {} is inconsistent with the prepared data layout",
-                    cfg.mode.name()
-                )))
-            }
-        };
-
-        let sw_total = Stopwatch::start();
-        // Early stopping state (XGBoost semantics: best metric so far,
-        // patience counted in *evaluations*).
-        let mut best_metric = if self.metric.maximize() {
-            f64::NEG_INFINITY
-        } else {
-            f64::INFINITY
-        };
-        let mut since_best = 0usize;
-        for round in 0..cfg.n_rounds {
-            // ---- gradients ----
-            let sw = Stopwatch::start();
-            self.compute_gradients(&margins, &mut grads)?;
-            self.timers.add("gradients", sw.elapsed_secs());
-
-            // ---- sampling (paper §3.4) ----
-            let sw = Stopwatch::start();
-            let sample = if matches!(sampler, Sampler::None) {
-                None
-            } else {
-                let scores = self.device_mvs_scores(&sampler, &grads)?;
-                let s = sampler.sample(&mut grads, &mut rng, scores.as_deref());
-                sample_rows_total += s.n_selected;
-                sampled_rounds += 1;
-                Some(s)
-            };
-            self.timers.add("sample", sw.elapsed_secs());
-
-            // ---- grow one tree ----
-            let tree = if cfg.mode == ExecMode::DeviceOutOfCore {
-                self.build_tree_compacted(
-                    &params,
-                    backend.as_mut(),
-                    &grads,
-                    sample.as_ref().map(|s| s.mask.as_slice()),
-                )?
-            } else {
-                let source = persistent_source.as_mut().unwrap();
-                let mut partitioner = match &sample {
-                    Some(s) => RowPartitioner::from_mask(&s.mask),
-                    None => RowPartitioner::new(n_rows),
-                };
-                let sw = Stopwatch::start();
-                let builder = TreeBuilder::new(&params, &self.cuts);
-                let tree =
-                    builder.build(backend.as_mut(), source.as_mut(), &grads, &mut partitioner)?;
-                self.timers.add("grow", sw.elapsed_secs());
-                tree
-            };
-
-            // ---- margin update (one sweep of the full data) ----
-            let sw = Stopwatch::start();
-            self.update_margins(&tree, &mut margins)?;
-            self.timers.add("predict", sw.elapsed_secs());
-            model.trees.push(tree);
-
-            // ---- evaluation ----
-            if let Some(eval) = &self.eval {
-                if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
-                    let sw = Stopwatch::start();
-                    let preds = model.predict(eval);
-                    let m = self.metric.compute(&preds, eval.labels());
-                    self.timers.add("eval", sw.elapsed_secs());
-                    if cfg.verbose {
-                        eprintln!(
-                            "[{}] round {:>4}  {} = {:.5}",
-                            cfg.mode.name(),
-                            round + 1,
-                            self.metric.name(),
-                            m
-                        );
-                    }
-                    eval_history.push((round + 1, m));
-                    if cfg.early_stopping_rounds > 0 {
-                        let improved = if self.metric.maximize() {
-                            m > best_metric
-                        } else {
-                            m < best_metric
-                        };
-                        if improved {
-                            best_metric = m;
-                            since_best = 0;
-                        } else {
-                            since_best += 1;
-                            if since_best >= cfg.early_stopping_rounds {
-                                if cfg.verbose {
-                                    eprintln!(
-                                        "early stop at round {} (best {} = {best_metric:.5})",
-                                        round + 1,
-                                        self.metric.name()
-                                    );
-                                }
-                                break;
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        let train_seconds = sw_total.elapsed_secs();
-
-        let (link_stats, compute_stats, mem_peak, mem_capacity) = match &self.device {
-            Some(dev) => (
-                Some(dev.ctx.link.stats()),
-                Some(dev.ctx.compute.stats()),
-                Some(dev.ctx.mem.peak()),
-                Some(dev.ctx.mem.capacity()),
-            ),
-            None => (None, None, None, None),
-        };
-        // Clean the spill directory.
-        if matches!(self.data, TrainData::Disk(_)) {
-            let _ = std::fs::remove_dir_all(&self.cache_dir);
-        }
-        Ok(TrainOutcome {
-            model,
-            eval_history,
-            train_seconds,
-            timers: self.timers.clone(),
-            link_stats,
-            compute_stats,
-            mem_peak,
-            mem_capacity,
-            mean_sample_rows: if sampled_rounds > 0 {
-                sample_rows_total as f64 / sampled_rounds as f64
-            } else {
-                n_rows as f64
-            },
-        })
-    }
-
-    /// Gradient pairs at the current margins — host objective for CPU
-    /// modes, the AOT gradient artifact for device modes.
-    fn compute_gradients(&mut self, margins: &[f32], grads: &mut Vec<[f32; 2]>) -> Result<()> {
-        match &self.device {
-            None => {
-                self.objective.gradients(margins, &self.labels, grads);
-                Ok(())
-            }
-            Some(dev) => {
-                let n = margins.len();
-                grads.clear();
-                grads.resize(n, [0.0, 0.0]);
-                let batches = dev.rt.grad_batches();
-                let mut row = 0usize;
-                let mut preds_buf: Vec<f32> = Vec::new();
-                let mut labels_buf: Vec<f32> = Vec::new();
-                while row < n {
-                    let remaining = n - row;
-                    let batch = *batches
-                        .iter()
-                        .find(|&&b| b >= remaining)
-                        .unwrap_or(batches.last().unwrap());
-                    let used = remaining.min(batch);
-                    preds_buf.clear();
-                    preds_buf.resize(batch, 0.0);
-                    labels_buf.clear();
-                    labels_buf.resize(batch, 0.0);
-                    preds_buf[..used].copy_from_slice(&margins[row..row + used]);
-                    labels_buf[..used].copy_from_slice(&self.labels[row..row + used]);
-                    let out = dev.rt.gradients(
-                        &preds_buf,
-                        &labels_buf,
-                        batch,
-                        self.objective.name(),
-                    )?;
-                    dev.ctx.compute.charge_kernel(used as u64 * 16);
-                    for i in 0..used {
-                        grads[row + i] = [out[i * 2], out[i * 2 + 1]];
-                    }
-                    row += used;
-                }
-                Ok(())
-            }
-        }
-    }
-
-    /// Device-side MVS scores (Eq. 9) when both apply; host fallback is
-    /// inside the sampler.
-    fn device_mvs_scores(
-        &mut self,
-        sampler: &Sampler,
-        grads: &[[f32; 2]],
-    ) -> Result<Option<Vec<f32>>> {
-        let Sampler::Mvs { lambda, .. } = sampler else { return Ok(None) };
-        let Some(dev) = &self.device else { return Ok(None) };
-        let lam = lambda.unwrap_or_else(|| {
-            let sg: f64 = grads.iter().map(|g| g[0] as f64).sum();
-            let sh: f64 = grads.iter().map(|g| g[1] as f64).sum();
-            if sh.abs() < 1e-12 { 1.0 } else { ((sg / sh) * (sg / sh)) as f32 }
-        });
-        let n = grads.len();
-        let mut scores = vec![0f32; n];
-        let batches = dev.rt.grad_batches();
-        let mut flat: Vec<f32> = Vec::new();
-        let mut row = 0usize;
-        while row < n {
-            let remaining = n - row;
-            let batch = *batches
-                .iter()
-                .find(|&&b| b >= remaining)
-                .unwrap_or(batches.last().unwrap());
-            let used = remaining.min(batch);
-            flat.clear();
-            flat.resize(batch * 2, 0.0);
-            for i in 0..used {
-                flat[i * 2] = grads[row + i][0];
-                flat[i * 2 + 1] = grads[row + i][1];
-            }
-            let (s, _) = dev.rt.mvs_scores(&flat, lam, batch)?;
-            dev.ctx.compute.charge_kernel(used as u64 * 12);
-            scores[row..row + used].copy_from_slice(&s[..used]);
-            // Scores come back to the host for the threshold search.
-            dev.ctx.link.charge(Dir::DeviceToHost, used as u64 * 4);
-            row += used;
-        }
-        Ok(Some(scores))
-    }
-
-    /// Algorithm 7: compact the sampled rows from all pages into a single
-    /// device-resident page, then run the in-core grower on it.
-    fn build_tree_compacted(
-        &mut self,
-        params: &TreeParams,
-        backend: &mut dyn HistBackend,
-        grads: &[[f32; 2]],
-        mask: Option<&[bool]>,
-    ) -> Result<Tree> {
-        let dev = self.device.as_ref().unwrap();
-        let TrainData::Disk(file) = &self.data else {
-            return Err(Error::config("compacted mode requires disk pages"));
-        };
-        let full_mask_store;
-        let mask: &[bool] = match mask {
-            Some(m) => m,
-            None => {
-                full_mask_store = vec![true; self.labels.len()];
-                &full_mask_store
-            }
-        };
-        let n_selected = mask.iter().filter(|&&m| m).count();
-        let n_symbols = *self.cuts.ptrs.last().unwrap() + 1;
-
-        let sw = Stopwatch::start();
-        // Budget the compacted page before filling it.
-        let compact_bytes =
-            EllpackPage::estimated_bytes(n_selected, self.row_stride, n_symbols);
-        let compact_alloc = dev.ctx.mem.alloc("ellpack_compacted", compact_bytes as u64)?;
-        let mut compactor =
-            Compactor::new(mask, n_selected, self.row_stride, n_symbols, self.dense);
-        let pf = Prefetcher::start(file, self.cfg.prefetch_depth)?;
-        for page in pf {
-            let page = page?;
-            // Each source page moves across the link once per round.
-            let bytes = page.memory_bytes() as u64;
-            let _staging = dev.ctx.mem.alloc("ellpack_staging", bytes)?;
-            dev.ctx.link.charge(Dir::HostToDevice, bytes);
-            compactor.push_page(&page);
-        }
-        let (compacted, row_map) = compactor.finish();
-        // Modeled: the compaction gather reads each source page once and
-        // writes the compacted page.
-        dev.ctx
-            .compute
-            .charge_kernel(compacted.memory_bytes() as u64 * 2);
-        self.timers.add("compact", sw.elapsed_secs());
-
-        // Gather the sampled gradients (device-side gather in reality).
-        let sub_grads: Vec<[f32; 2]> =
-            row_map.iter().map(|&r| grads[r as usize]).collect();
-        let mut partitioner = RowPartitioner::new(n_selected);
-        let mut source = InMemorySource::new(vec![compacted]);
-
-        let sw = Stopwatch::start();
-        let builder = TreeBuilder::new(params, &self.cuts);
-        let tree = builder.build(backend, &mut source, &sub_grads, &mut partitioner)?;
-        self.timers.add("grow", sw.elapsed_secs());
-        drop(compact_alloc);
-        Ok(tree)
-    }
-
-    /// margin[r] += tree(r) for every training row — one sweep of the
-    /// full data (host-side traversal; see DESIGN.md §cost-model).
-    fn update_margins(&mut self, tree: &Tree, margins: &mut [f32]) -> Result<()> {
-        match &self.data {
-            TrainData::HostPages(pages) => {
-                for page in pages {
-                    let base = page.base_rowid as usize;
-                    for r in 0..page.n_rows() {
-                        margins[base + r] += tree.predict_binned(page, r, &self.cuts);
-                    }
-                }
-                Ok(())
-            }
-            TrainData::Disk(file) => {
-                let pf = Prefetcher::start(file, self.cfg.prefetch_depth)?;
-                for page in pf {
-                    let page = page?;
-                    let base = page.base_rowid as usize;
-                    for r in 0..page.n_rows() {
-                        margins[base + r] += tree.predict_binned(&page, r, &self.cuts);
-                    }
-                }
-                Ok(())
-            }
-        }
-    }
-}
-
-/// Re-chunk CSR pages so none exceeds `target_bytes` (the 32 MiB CSR
-/// page cap of §2.3).  Row order and `base_rowid`s are preserved.
-fn rechunk_pages(pages: Vec<SparsePage>, target_bytes: usize) -> Vec<SparsePage> {
-    let n_cols = pages[0].n_cols;
-    let mut out: Vec<SparsePage> = Vec::new();
-    let mut cur = SparsePage::new(n_cols);
-    let mut next_base = 0u64;
-    for p in &pages {
-        for r in 0..p.n_rows() {
-            if cur.n_rows() == 0 {
-                cur.base_rowid = next_base;
-            }
-            cur.push_row(p.row_indices(r), p.row_values(r));
-            next_base += 1;
-            if cur.memory_bytes() >= target_bytes {
-                out.push(std::mem::replace(&mut cur, SparsePage::new(n_cols)));
-            }
-        }
-    }
-    if cur.n_rows() > 0 || out.is_empty() {
-        if cur.n_rows() == 0 {
-            cur.base_rowid = next_base;
-        }
-        out.push(cur);
-    }
-    out
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::SamplingMethod;
-    use crate::data::synthetic;
-
-    fn quick_cfg(mode: ExecMode) -> TrainConfig {
-        let mut cfg = TrainConfig::default();
-        cfg.mode = mode;
-        cfg.n_rounds = 5;
-        cfg.max_depth = 3;
-        cfg.max_bin = 16;
-        cfg.eval_fraction = 0.2;
-        cfg.learning_rate = 0.5;
-        cfg.seed = 42;
-        cfg
-    }
-
-    #[test]
-    fn cpu_in_core_learns_higgs_like() {
-        let data = synthetic::higgs_like(3000, 1);
-        let session = TrainSession::from_memory(data, quick_cfg(ExecMode::CpuInCore)).unwrap();
-        let out = session.train().unwrap();
-        assert_eq!(out.model.trees.len(), 5);
-        let (_, auc) = *out.eval_history.last().unwrap();
-        assert!(auc > 0.62, "auc={auc}");
-        assert!(out.link_stats.is_none());
-    }
-
-    #[test]
-    fn cpu_out_of_core_matches_in_core() {
-        let data = synthetic::higgs_like(2000, 2);
-        let mut cfg_in = quick_cfg(ExecMode::CpuInCore);
-        let mut cfg_out = quick_cfg(ExecMode::CpuOutOfCore);
-        // Force several pages on disk.
-        cfg_out.page_size_bytes = 8 * 1024;
-        cfg_in.seed = 7;
-        cfg_out.seed = 7;
-        let out_in =
-            TrainSession::from_memory(data.clone(), cfg_in).unwrap().train().unwrap();
-        let out_out =
-            TrainSession::from_memory(data, cfg_out).unwrap().train().unwrap();
-        // Same cuts, same splits, same trees → identical eval history.
-        assert_eq!(out_in.eval_history.len(), out_out.eval_history.len());
-        for ((r1, m1), (r2, m2)) in out_in.eval_history.iter().zip(&out_out.eval_history) {
-            assert_eq!(r1, r2);
-            assert!((m1 - m2).abs() < 1e-9, "round {r1}: {m1} vs {m2}");
-        }
-    }
-
-    #[test]
-    fn uniform_sampling_still_learns() {
-        let data = synthetic::higgs_like(3000, 3);
-        let mut cfg = quick_cfg(ExecMode::CpuInCore);
-        cfg.sampling_method = SamplingMethod::Uniform;
-        cfg.subsample = 0.5;
-        cfg.n_rounds = 8;
-        let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
-        let (_, auc) = *out.eval_history.last().unwrap();
-        assert!(auc > 0.6, "auc={auc}");
-        assert!(out.mean_sample_rows < 0.6 * 2400.0);
-    }
-
-    #[test]
-    fn mvs_sampling_cpu_learns() {
-        let data = synthetic::higgs_like(3000, 4);
-        let mut cfg = quick_cfg(ExecMode::CpuInCore);
-        cfg.sampling_method = SamplingMethod::Mvs;
-        cfg.subsample = 0.3;
-        cfg.n_rounds = 8;
-        let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
-        let (_, auc) = *out.eval_history.last().unwrap();
-        assert!(auc > 0.6, "auc={auc}");
-    }
-
-    #[test]
-    fn sparse_data_trains_on_cpu() {
-        // LibSVM-style sparse input exercises the null-symbol path.
-        let text = (0..200)
-            .map(|i| {
-                let y = i % 2;
-                if i % 3 == 0 {
-                    format!("{y} 1:{}.5", i % 7)
-                } else {
-                    format!("{y} 1:{}.5 2:{}", i % 7, i % 5)
-                }
-            })
-            .collect::<Vec<_>>()
-            .join("\n");
-        let data = crate::data::libsvm::read(text.as_bytes()).unwrap();
-        let mut cfg = quick_cfg(ExecMode::CpuInCore);
-        cfg.eval_fraction = 0.0;
-        let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
-        assert_eq!(out.model.trees.len(), 5);
-    }
-
-    #[test]
-    fn device_mode_rejects_sparse() {
-        let mut page = SparsePage::new(3);
-        page.push_row(&[0], &[1.0]);
-        page.push_row(&[0, 1, 2], &[1.0, 2.0, 3.0]);
-        let data = DMatrix::from_page(page, vec![0.0, 1.0]).unwrap();
-        let err = TrainSession::from_memory(data, quick_cfg(ExecMode::DeviceInCore));
-        assert!(err.is_err());
-    }
-
-    #[test]
-    fn empty_stream_rejected() {
-        let cfg = quick_cfg(ExecMode::CpuInCore);
-        assert!(TrainSession::from_page_stream(std::iter::empty(), cfg).is_err());
-    }
-
-    #[test]
-    fn early_stopping_halts_training() {
-        let data = synthetic::higgs_like(1500, 6);
-        let mut cfg = quick_cfg(ExecMode::CpuInCore);
-        cfg.n_rounds = 60;
-        cfg.max_depth = 2;
-        cfg.learning_rate = 1.5; // deliberately unstable → metric stalls
-        cfg.early_stopping_rounds = 3;
-        let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
-        assert!(
-            out.model.trees.len() < 60,
-            "expected early stop, trained {}",
-            out.model.trees.len()
-        );
-    }
-
-    #[test]
-    fn squared_error_objective() {
-        // Regression: y = x0; RMSE must shrink.
-        let mut page = SparsePage::new(2);
-        let mut labels = Vec::new();
-        let mut rng = Rng::new(5);
-        for _ in 0..1500 {
-            let x0 = rng.next_f32();
-            page.push_dense_row(&[x0, rng.next_f32()]);
-            labels.push(x0);
-        }
-        let data = DMatrix::from_page(page, labels).unwrap();
-        let mut cfg = quick_cfg(ExecMode::CpuInCore);
-        cfg.objective = "reg:squarederror".into();
-        cfg.n_rounds = 10;
-        let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
-        let first = out.eval_history[0].1;
-        let last = out.eval_history.last().unwrap().1;
-        assert!(last < first * 0.5, "rmse {first} → {last}");
-        assert!(last < 0.1, "rmse={last}");
+    /// Run the boosting loop (`coordinator/loop.rs`).
+    pub fn train(self) -> Result<TrainOutcome> {
+        super::r#loop::run(self)
     }
 }

@@ -4,29 +4,39 @@
 //! The out-of-core path accumulates CSR pages and spills a size-capped
 //! ELLPACK page whenever the estimate crosses the configured limit
 //! (Algorithm 5; XGBoost and the paper use 32 MiB).
+//!
+//! The builder owns its inputs (pages are moved in) and its cut table
+//! (an `Arc`), so it can run as a [`MapStage`] on a pipeline thread —
+//! the "conversion" stage of the out-of-core data path, overlapping
+//! quantization with the CSR read/decode stages upstream and the page
+//! write downstream.
+
+use std::sync::Arc;
 
 use crate::data::SparsePage;
 use crate::ellpack::page::{EllpackPage, EllpackWriter};
+use crate::error::Result;
+use crate::page::pipeline::MapStage;
 use crate::sketch::HistogramCuts;
 
 /// Converts quantized CSR rows into size-capped ELLPACK pages.
-pub struct EllpackBuilder<'a> {
-    cuts: &'a HistogramCuts,
+pub struct EllpackBuilder {
+    cuts: Arc<HistogramCuts>,
     row_stride: usize,
     dense: bool,
     page_size_bytes: usize,
     /// Pending CSR pages (Algorithm 5's `list`).
-    pending: Vec<&'a SparsePage>,
+    pending: Vec<SparsePage>,
     pending_rows: usize,
     next_base: u64,
     scratch: Vec<u32>,
 }
 
-impl<'a> EllpackBuilder<'a> {
+impl EllpackBuilder {
     /// `row_stride` must be the max row nnz across the *whole* dataset
     /// (all pages share one stride — the ELLPACK invariant).
     pub fn new(
-        cuts: &'a HistogramCuts,
+        cuts: Arc<HistogramCuts>,
         row_stride: usize,
         dense: bool,
         page_size_bytes: usize,
@@ -50,7 +60,7 @@ impl<'a> EllpackBuilder<'a> {
 
     /// Feed one CSR page; returns any completed ELLPACK page(s)
     /// (Algorithm 5 loop body).
-    pub fn push_page(&mut self, page: &'a SparsePage, out: &mut Vec<EllpackPage>) {
+    pub fn push_page(&mut self, page: SparsePage, out: &mut Vec<EllpackPage>) {
         self.pending_rows += page.n_rows();
         self.pending.push(page);
         if EllpackPage::estimated_bytes(self.pending_rows, self.row_stride, self.n_symbols())
@@ -62,6 +72,10 @@ impl<'a> EllpackBuilder<'a> {
 
     /// Flush the remainder (call once at end of input).
     pub fn finish(mut self, out: &mut Vec<EllpackPage>) {
+        self.flush_pending(out);
+    }
+
+    fn flush_pending(&mut self, out: &mut Vec<EllpackPage>) {
         if self.pending_rows > 0 {
             out.push(self.convert_pending());
         }
@@ -76,17 +90,9 @@ impl<'a> EllpackBuilder<'a> {
             self.n_symbols(),
             self.dense,
         );
-        for page in self.pending.drain(..) {
-            for r in 0..page.n_rows() {
-                let cols = page.row_indices(r);
-                let vals = page.row_values(r);
-                let syms = &mut self.scratch[..cols.len()];
-                for ((c, v), s) in cols.iter().zip(vals).zip(syms.iter_mut()) {
-                    let f = *c as usize;
-                    *s = self.cuts.ptrs[f] + self.cuts.search_bin(f, *v);
-                }
-                w.push_row(&self.scratch[..cols.len()]);
-            }
+        let pending = std::mem::take(&mut self.pending);
+        for page in &pending {
+            quantize_page_into(&self.cuts, page, &mut self.scratch, &mut w);
         }
         let page = w.finish(self.next_base);
         self.next_base += self.pending_rows as u64;
@@ -95,21 +101,56 @@ impl<'a> EllpackBuilder<'a> {
     }
 }
 
-/// One-shot in-core conversion (Algorithm 4): everything in one page.
+/// Map one CSR page's values to global bin symbols and append its rows
+/// (the shared inner loop of Algorithms 4 and 5).
+fn quantize_page_into(
+    cuts: &HistogramCuts,
+    page: &SparsePage,
+    scratch: &mut [u32],
+    w: &mut EllpackWriter,
+) {
+    for r in 0..page.n_rows() {
+        let cols = page.row_indices(r);
+        let vals = page.row_values(r);
+        let syms = &mut scratch[..cols.len()];
+        for ((c, v), s) in cols.iter().zip(vals).zip(syms.iter_mut()) {
+            let f = *c as usize;
+            *s = cuts.ptrs[f] + cuts.search_bin(f, *v);
+        }
+        w.push_row(&scratch[..cols.len()]);
+    }
+}
+
+/// The builder *is* a pipeline stage: CSR pages in, size-capped ELLPACK
+/// pages out, remainder flushed at end of input.
+impl MapStage<SparsePage, EllpackPage> for EllpackBuilder {
+    fn apply(&mut self, page: SparsePage, out: &mut Vec<EllpackPage>) -> Result<()> {
+        self.push_page(page, out);
+        Ok(())
+    }
+
+    fn flush(&mut self, out: &mut Vec<EllpackPage>) -> Result<()> {
+        self.flush_pending(out);
+        Ok(())
+    }
+}
+
+/// One-shot in-core conversion (Algorithm 4): everything in one page,
+/// straight from borrowed pages — no buffering, no copies.
 pub fn convert_in_core(
     pages: &[SparsePage],
     cuts: &HistogramCuts,
     row_stride: usize,
     dense: bool,
 ) -> EllpackPage {
-    let mut b = EllpackBuilder::new(cuts, row_stride, dense, usize::MAX);
-    let mut out = Vec::new();
-    for p in pages {
-        b.push_page(p, &mut out);
+    let n_rows = pages.iter().map(|p| p.n_rows()).sum();
+    let n_symbols = *cuts.ptrs.last().unwrap() + 1;
+    let mut w = EllpackWriter::new(n_rows, row_stride, n_symbols, dense);
+    let mut scratch = vec![0u32; row_stride];
+    for page in pages {
+        quantize_page_into(cuts, page, &mut scratch, &mut w);
     }
-    b.finish(&mut out);
-    assert_eq!(out.len(), 1);
-    out.pop().unwrap()
+    w.finish(0)
 }
 
 #[cfg(test)]
@@ -152,9 +193,9 @@ mod tests {
         // Chop into small CSR pages, convert with a small page cap.
         let csr_pages = m.to_sized_pages(2048);
         assert!(csr_pages.len() > 2);
-        let mut b = EllpackBuilder::new(&cuts, m.n_cols(), true, 500);
+        let mut b = EllpackBuilder::new(Arc::new(cuts.clone()), m.n_cols(), true, 500);
         let mut out = Vec::new();
-        for p in &csr_pages {
+        for p in csr_pages {
             b.push_page(p, &mut out);
         }
         b.finish(&mut out);
@@ -178,9 +219,9 @@ mod tests {
         let (m, cuts) = setup(400);
         let csr_pages = m.to_sized_pages(1024);
         let cap = 2000usize;
-        let mut b = EllpackBuilder::new(&cuts, m.n_cols(), true, cap);
+        let mut b = EllpackBuilder::new(Arc::new(cuts.clone()), m.n_cols(), true, cap);
         let mut out = Vec::new();
-        for p in &csr_pages {
+        for p in csr_pages {
             b.push_page(p, &mut out);
         }
         b.finish(&mut out);
@@ -203,5 +244,28 @@ mod tests {
         assert_eq!(page.row_stride(), 2);
         assert!(!page.is_dense());
         assert_eq!(page.get(1, 1), page.null_symbol());
+    }
+
+    #[test]
+    fn conversion_runs_as_pipeline_stage() {
+        use crate::page::pipeline::Pipeline;
+        let (m, cuts) = setup(300);
+        let whole = convert_in_core(m.pages(), &cuts, m.n_cols(), true);
+        let csr_pages = m.to_sized_pages(2048);
+        let builder = EllpackBuilder::new(Arc::new(cuts), m.n_cols(), true, 500);
+        let pipe = Pipeline::from_iter("csr", 2, csr_pages.into_iter().map(Ok))
+            .then_stage("convert", 2, builder);
+        let mut row = 0usize;
+        for ep in pipe {
+            let ep = ep.unwrap();
+            assert_eq!(ep.base_rowid as usize, row);
+            for r in 0..ep.n_rows() {
+                for k in 0..ep.row_stride() {
+                    assert_eq!(ep.get(r, k), whole.get(row + r, k));
+                }
+            }
+            row += ep.n_rows();
+        }
+        assert_eq!(row, 300);
     }
 }

@@ -1,14 +1,17 @@
-//! Disk page store + threaded prefetcher (paper §2.3).
+//! Disk page store + staged streaming pipeline (paper §2.3).
 //!
 //! External-memory mode writes CSR and ELLPACK pages to disk and streams
 //! them back during sketching / conversion / tree construction.  The
-//! prefetcher mirrors XGBoost's multi-threaded pre-fetcher: a background
-//! reader thread pushes decoded pages into a bounded channel, so disk
-//! I/O overlaps compute and backpressure caps memory at
-//! `prefetch_depth` pages.
+//! streaming machinery is a composable bounded pipeline
+//! ([`pipeline::Pipeline`]): each stage (disk read, decode, ELLPACK
+//! conversion, host→device transfer) runs on its own thread behind a
+//! bounded channel, so I/O genuinely overlaps compute while
+//! backpressure caps memory at a few pages per stage.  [`Prefetcher`]
+//! is the canonical read→decode instance of that pipeline.
 
+pub mod pipeline;
 pub mod prefetch;
 pub mod store;
 
-pub use prefetch::Prefetcher;
-pub use store::{PageFile, PageFileWriter, Serializable};
+pub use prefetch::{read_decode_pipeline, Prefetcher};
+pub use store::{PageFile, PageFileWriter, PageReader, Serializable};

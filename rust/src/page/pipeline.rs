@@ -1,0 +1,409 @@
+//! Staged bounded-channel pipeline — the generalization of the paper's
+//! multi-threaded prefetcher (§2.3) that the whole out-of-core data
+//! path is composed from.
+//!
+//! A pipeline is a chain of stages.  Each stage runs on its own thread
+//! and is connected to the next by a `sync_channel(depth)`: a full
+//! channel blocks the producer, so backpressure caps the number of
+//! in-flight items per link at `depth + 1` (`depth = 0` degenerates to
+//! rendezvous handoff).  Errors terminate the stream: an `Err` item is
+//! forwarded downstream and every upstream stage unwinds as its send
+//! side disconnects.  Dropping an unfinished pipeline tears the chain
+//! down the same way and joins all stage threads.
+//!
+//! Stages come in two shapes:
+//!
+//! * [`Pipeline::then`] — 1:1 transforms (decode, host→device copy).
+//! * [`Pipeline::then_stage`] — stateful 0..n:1 transforms implementing
+//!   [`MapStage`] (e.g. [`crate::ellpack::EllpackBuilder`], which
+//!   accumulates CSR rows and emits size-capped ELLPACK pages, plus a
+//!   final flush at end of input).
+//!
+//! Every stage keeps a busy-time counter ([`PipelineStats`]), which the
+//! ablation bench uses to model synchronous (Σ stage busy) versus
+//! overlapped (max stage busy) sweep cost.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::error::Result;
+
+/// A stateful, cardinality-changing pipeline stage: zero or more
+/// outputs per input, plus a flush when the input is exhausted.
+pub trait MapStage<T, U>: Send {
+    /// Process one item, pushing any completed outputs into `out`.
+    fn apply(&mut self, item: T, out: &mut Vec<U>) -> Result<()>;
+
+    /// Clean end-of-input: emit whatever is still pending.
+    fn flush(&mut self, _out: &mut Vec<U>) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Per-stage busy-time and throughput counters (updated atomically from
+/// the stage thread).
+#[derive(Debug)]
+struct StageStat {
+    name: String,
+    busy_nanos: AtomicU64,
+    items: AtomicU64,
+}
+
+impl StageStat {
+    fn record(&self, elapsed: std::time::Duration, items: u64) {
+        self.busy_nanos
+            .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        self.items.fetch_add(items, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time view of one stage's counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSnapshot {
+    pub name: String,
+    /// Seconds the stage thread spent doing work (not blocked on its
+    /// channels).
+    pub busy_secs: f64,
+    /// Items the stage produced.
+    pub items: u64,
+}
+
+/// Cloneable handle onto a pipeline's stage counters; stays readable
+/// after the pipeline itself has been consumed or dropped.
+#[derive(Clone, Default)]
+pub struct PipelineStats {
+    stages: Vec<Arc<StageStat>>,
+}
+
+impl PipelineStats {
+    fn push(&mut self, name: &str) -> Arc<StageStat> {
+        let stat = Arc::new(StageStat {
+            name: name.to_string(),
+            busy_nanos: AtomicU64::new(0),
+            items: AtomicU64::new(0),
+        });
+        self.stages.push(stat.clone());
+        stat
+    }
+
+    /// Snapshot every stage, in pipeline order.
+    pub fn snapshot(&self) -> Vec<StageSnapshot> {
+        self.stages
+            .iter()
+            .map(|s| StageSnapshot {
+                name: s.name.clone(),
+                busy_secs: s.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+                items: s.items.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+}
+
+// Thread-spawn failure (EAGAIN under resource exhaustion) panics rather
+// than threading `Result` through every builder call: the process is
+// already dying at that point, and an infallible builder keeps pipeline
+// composition (`from_iter(..).then(..).then_stage(..)`) chainable.
+fn spawn_stage<F: FnOnce() + Send + 'static>(name: &str, f: F) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("oocgb-{name}"))
+        .spawn(f)
+        .expect("failed to spawn pipeline stage thread")
+}
+
+/// A running chain of stages, consumed as an iterator of
+/// `Result<T>` items.
+pub struct Pipeline<T: Send + 'static> {
+    /// `Some` until the pipeline is extended or dropped; taking it
+    /// disconnects the chain so blocked senders unwind.
+    rx: Option<Receiver<Result<T>>>,
+    handles: Vec<JoinHandle<()>>,
+    stats: PipelineStats,
+    delivered: usize,
+}
+
+impl<T: Send + 'static> Pipeline<T> {
+    /// Start a pipeline from a producing iterator, which runs on its
+    /// own thread and feeds a `depth`-bounded channel.  An `Err` item
+    /// ends the stream after being delivered.
+    pub fn from_iter<I>(name: &str, depth: usize, iter: I) -> Pipeline<T>
+    where
+        I: Iterator<Item = Result<T>> + Send + 'static,
+    {
+        let mut stats = PipelineStats::default();
+        let stat = stats.push(name);
+        let (tx, rx) = sync_channel::<Result<T>>(depth);
+        let handle = spawn_stage(name, move || {
+            let mut iter = iter;
+            loop {
+                let t0 = Instant::now();
+                let item = iter.next();
+                stat.record(t0.elapsed(), u64::from(matches!(&item, Some(Ok(_)))));
+                match item {
+                    None => return,
+                    Some(item) => {
+                        let stop = item.is_err();
+                        // send blocks when the channel is full — that is
+                        // the backpressure that caps in-flight items.
+                        if tx.send(item).is_err() || stop {
+                            return;
+                        }
+                    }
+                }
+            }
+        });
+        Pipeline { rx: Some(rx), handles: vec![handle], stats, delivered: 0 }
+    }
+
+    /// Append a 1:1 transform stage on its own thread.
+    pub fn then<U, F>(self, name: &str, depth: usize, f: F) -> Pipeline<U>
+    where
+        U: Send + 'static,
+        F: FnMut(T) -> Result<U> + Send + 'static,
+    {
+        struct MapFn<F>(F);
+        impl<T, U, F> MapStage<T, U> for MapFn<F>
+        where
+            F: FnMut(T) -> Result<U> + Send,
+        {
+            fn apply(&mut self, item: T, out: &mut Vec<U>) -> Result<()> {
+                out.push((self.0)(item)?);
+                Ok(())
+            }
+        }
+        self.then_stage(name, depth, MapFn(f))
+    }
+
+    /// Append a stateful [`MapStage`] on its own thread.
+    pub fn then_stage<U, S>(mut self, name: &str, depth: usize, mut stage: S) -> Pipeline<U>
+    where
+        U: Send + 'static,
+        S: MapStage<T, U> + 'static,
+    {
+        let stat = self.stats.push(name);
+        let rx_in = self.rx.take().expect("pipeline already consumed");
+        let handles = std::mem::take(&mut self.handles);
+        let stats = self.stats.clone();
+        let (tx, rx_out) = sync_channel::<Result<U>>(depth);
+        let handle = spawn_stage(name, move || {
+            let mut buf: Vec<U> = Vec::new();
+            while let Ok(item) = rx_in.recv() {
+                match item {
+                    Ok(t) => {
+                        let t0 = Instant::now();
+                        let r = stage.apply(t, &mut buf);
+                        stat.record(t0.elapsed(), buf.len() as u64);
+                        if let Err(e) = r {
+                            let _ = tx.send(Err(e));
+                            return;
+                        }
+                        for u in buf.drain(..) {
+                            if tx.send(Ok(u)).is_err() {
+                                return; // consumer dropped
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // Forward the upstream error and terminate.
+                        let _ = tx.send(Err(e));
+                        return;
+                    }
+                }
+            }
+            // Upstream finished cleanly: flush pending state.
+            let t0 = Instant::now();
+            let r = stage.flush(&mut buf);
+            stat.record(t0.elapsed(), buf.len() as u64);
+            if let Err(e) = r {
+                let _ = tx.send(Err(e));
+                return;
+            }
+            for u in buf.drain(..) {
+                if tx.send(Ok(u)).is_err() {
+                    return;
+                }
+            }
+        });
+        let mut handles = handles;
+        handles.push(handle);
+        Pipeline { rx: Some(rx_out), handles, stats, delivered: 0 }
+    }
+
+    /// Items handed to the consumer so far.
+    pub fn delivered(&self) -> usize {
+        self.delivered
+    }
+
+    /// Handle onto the per-stage counters (usable after consumption).
+    pub fn stats(&self) -> PipelineStats {
+        self.stats.clone()
+    }
+}
+
+impl<T: Send + 'static> Iterator for Pipeline<T> {
+    type Item = Result<T>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match self.rx.as_ref()?.recv() {
+            Ok(item) => {
+                self.delivered += 1;
+                Some(item)
+            }
+            Err(_) => None, // all senders finished
+        }
+    }
+}
+
+impl<T: Send + 'static> Drop for Pipeline<T> {
+    fn drop(&mut self) {
+        // Disconnect the consumer end first: any stage blocked on send
+        // wakes with an error and unwinds, cascading up to the source.
+        drop(self.rx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+    use std::sync::atomic::AtomicI64;
+
+    #[test]
+    fn single_stage_in_order() {
+        for depth in [0usize, 1, 4] {
+            let pipe = Pipeline::from_iter("src", depth, (0..50).map(Ok));
+            let got: Vec<i32> = pipe.map(|r| r.unwrap()).collect();
+            assert_eq!(got, (0..50).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn chained_transforms() {
+        let pipe = Pipeline::from_iter("src", 2, (0..20).map(Ok))
+            .then("double", 2, |x: i32| Ok(x * 2))
+            .then("inc", 0, |x: i32| Ok(x + 1));
+        let got: Vec<i32> = pipe.map(|r| r.unwrap()).collect();
+        assert_eq!(got, (0..20).map(|x| x * 2 + 1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stateful_stage_batches_and_flushes() {
+        // Groups items into pairs; flush emits the odd remainder.
+        struct Pairs(Vec<i32>);
+        impl MapStage<i32, Vec<i32>> for Pairs {
+            fn apply(&mut self, item: i32, out: &mut Vec<Vec<i32>>) -> Result<()> {
+                self.0.push(item);
+                if self.0.len() == 2 {
+                    out.push(std::mem::take(&mut self.0));
+                }
+                Ok(())
+            }
+            fn flush(&mut self, out: &mut Vec<Vec<i32>>) -> Result<()> {
+                if !self.0.is_empty() {
+                    out.push(std::mem::take(&mut self.0));
+                }
+                Ok(())
+            }
+        }
+        let pipe = Pipeline::from_iter("src", 1, (0..5).map(Ok))
+            .then_stage("pairs", 1, Pairs(Vec::new()));
+        let got: Vec<Vec<i32>> = pipe.map(|r| r.unwrap()).collect();
+        assert_eq!(got, vec![vec![0, 1], vec![2, 3], vec![4]]);
+    }
+
+    #[test]
+    fn source_error_terminates_stream() {
+        let items: Vec<Result<i32>> =
+            vec![Ok(1), Ok(2), Err(Error::data("boom")), Ok(3)];
+        let pipe = Pipeline::from_iter("src", 2, items.into_iter())
+            .then("id", 2, |x: i32| Ok(x));
+        let got: Vec<Result<i32>> = pipe.collect();
+        assert_eq!(got.len(), 3, "nothing may follow the first error");
+        assert_eq!(*got[0].as_ref().unwrap(), 1);
+        assert_eq!(*got[1].as_ref().unwrap(), 2);
+        assert!(got[2].is_err());
+    }
+
+    #[test]
+    fn stage_error_terminates_stream() {
+        let pipe = Pipeline::from_iter("src", 2, (0..10).map(Ok)).then(
+            "fail3",
+            2,
+            |x: i32| {
+                if x == 3 {
+                    Err(Error::data("stage failure"))
+                } else {
+                    Ok(x)
+                }
+            },
+        );
+        let got: Vec<Result<i32>> = pipe.collect();
+        let first_err = got.iter().position(|r| r.is_err()).unwrap();
+        assert_eq!(first_err, 3);
+        assert_eq!(got.len(), 4, "stream must end at the error");
+    }
+
+    #[test]
+    fn early_drop_joins_cleanly() {
+        for depth in [0usize, 1, 3] {
+            let mut pipe = Pipeline::from_iter("src", depth, (0..10_000).map(Ok))
+                .then("id", depth, |x: i32| Ok(x));
+            assert_eq!(pipe.next().unwrap().unwrap(), 0);
+            drop(pipe); // must not hang with thousands of items unread
+        }
+    }
+
+    #[test]
+    fn backpressure_bounds_inflight() {
+        // The source counts items produced; the consumer counts items
+        // received.  With a bounded channel the gap can never exceed
+        // depth (queued) + 1 (in the blocked send) + 1 (just produced).
+        let depth = 2usize;
+        let produced = Arc::new(AtomicI64::new(0));
+        let p = produced.clone();
+        let mut pipe = Pipeline::from_iter(
+            "src",
+            depth,
+            (0..200).map(move |x| {
+                p.fetch_add(1, Ordering::SeqCst);
+                Ok(x)
+            }),
+        );
+        let mut consumed = 0i64;
+        let mut max_gap = 0i64;
+        while let Some(item) = pipe.next() {
+            item.unwrap();
+            consumed += 1;
+            max_gap = max_gap.max(produced.load(Ordering::SeqCst) - consumed);
+        }
+        assert_eq!(consumed, 200);
+        assert!(
+            max_gap <= depth as i64 + 2,
+            "prefetch ran {max_gap} items ahead with depth {depth}"
+        );
+    }
+
+    #[test]
+    fn stats_track_busy_time_and_items() {
+        let pipe = Pipeline::from_iter("src", 2, (0..40).map(Ok))
+            .then("work", 2, |x: u64| {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+                Ok(x)
+            });
+        let stats = pipe.stats();
+        let n: usize = pipe.map(|r| r.unwrap()).count();
+        assert_eq!(n, 40);
+        let snap = stats.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].name, "src");
+        assert_eq!(snap[1].name, "work");
+        assert_eq!(snap[0].items, 40);
+        assert_eq!(snap[1].items, 40);
+        assert!(snap[1].busy_secs > 0.0);
+    }
+}

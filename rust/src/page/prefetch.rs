@@ -2,70 +2,49 @@
 //! "the data pages are streamed from disk via a multi-threaded
 //! pre-fetcher").
 //!
-//! A background thread reads + decodes pages in order and pushes them
-//! into a `sync_channel(depth)`; the training loop pulls them as it
-//! needs them.  The bounded channel is the backpressure mechanism: at
-//! most `depth + 1` pages are ever in flight, which is what caps the
-//! host-memory footprint of out-of-core mode.  `depth = 0` degenerates
-//! to synchronous rendezvous reads (the ablation bench sweeps this).
-
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::Arc;
-use std::thread::JoinHandle;
+//! The prefetcher is a two-stage instance of the generic
+//! [`Pipeline`]: a *read* stage (sequential I/O + checksum over one
+//! persistent descriptor) and a *decode* stage, each on its own thread
+//! behind a `depth`-bounded channel.  The bounded channels are the
+//! backpressure mechanism that caps the host-memory footprint of
+//! out-of-core mode; `depth = 0` degenerates to rendezvous handoff (the
+//! ablation bench sweeps this).  Callers that want extra stages (ELLPACK
+//! conversion, host→device transfer) extend [`read_decode_pipeline`]
+//! with further `then`/`then_stage` calls.
 
 use crate::error::Result;
+use crate::page::pipeline::Pipeline;
 use crate::page::store::{PageFile, Serializable};
 
-/// Streaming iterator over a [`PageFile`], reading ahead on a background
-/// thread.
+/// Build the standard read → decode pipeline over a page file, in page
+/// order.  The read handle is opened up front (page files are immutable
+/// once finished), so the caller keeps its own handle.
+pub fn read_decode_pipeline<T: Serializable + Send + 'static>(
+    file: &PageFile<T>,
+    depth: usize,
+) -> Result<Pipeline<T>> {
+    let mut reader = file.reader()?;
+    let n = file.n_pages();
+    let source = (0..n).map(move |i| reader.read_raw(i));
+    Ok(Pipeline::from_iter("read", depth, source)
+        .then("decode", depth, |bytes: Vec<u8>| T::from_bytes(&bytes)))
+}
+
+/// Streaming iterator over a [`PageFile`], reading ahead on background
+/// threads.
 pub struct Prefetcher<T: Serializable + Send + 'static> {
-    rx: Receiver<Result<T>>,
-    handle: Option<JoinHandle<()>>,
-    cancel: Arc<AtomicBool>,
-    /// Pages delivered so far.
-    delivered: usize,
+    pipe: Pipeline<T>,
 }
 
 impl<T: Serializable + Send + 'static> Prefetcher<T> {
     /// Start prefetching all pages of `file` in order.
-    ///
-    /// The file is re-opened on the reader thread (page files are
-    /// immutable once finished), so the caller keeps its handle.
     pub fn start(file: &PageFile<T>, depth: usize) -> Result<Self> {
-        let path = file.path().to_path_buf();
-        let n_pages = file.n_pages();
-        let (tx, rx) = sync_channel::<Result<T>>(depth);
-        let cancel = Arc::new(AtomicBool::new(false));
-        let cancel_bg = cancel.clone();
-        let handle = std::thread::Builder::new()
-            .name("oocgb-prefetch".into())
-            .spawn(move || {
-                let file = match PageFile::<T>::open(&path) {
-                    Ok(f) => f,
-                    Err(e) => {
-                        let _ = tx.send(Err(e));
-                        return;
-                    }
-                };
-                for i in 0..n_pages {
-                    if cancel_bg.load(Ordering::Relaxed) {
-                        return;
-                    }
-                    let page = file.read_page(i);
-                    let failed = page.is_err();
-                    // send blocks when the channel is full — backpressure.
-                    if tx.send(page).is_err() || failed {
-                        return; // consumer dropped, or error terminates
-                    }
-                }
-            })?;
-        Ok(Prefetcher { rx, handle: Some(handle), cancel, delivered: 0 })
+        Ok(Prefetcher { pipe: read_decode_pipeline(file, depth)? })
     }
 
     /// Pages handed to the consumer so far.
     pub fn delivered(&self) -> usize {
-        self.delivered
+        self.pipe.delivered()
     }
 }
 
@@ -73,24 +52,7 @@ impl<T: Serializable + Send + 'static> Iterator for Prefetcher<T> {
     type Item = Result<T>;
 
     fn next(&mut self) -> Option<Self::Item> {
-        match self.rx.recv() {
-            Ok(item) => {
-                self.delivered += 1;
-                Some(item)
-            }
-            Err(_) => None, // sender finished
-        }
-    }
-}
-
-impl<T: Serializable + Send + 'static> Drop for Prefetcher<T> {
-    fn drop(&mut self) {
-        self.cancel.store(true, Ordering::Relaxed);
-        // Drain the channel so a blocked sender wakes and observes cancel.
-        while self.rx.try_recv().is_ok() {}
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.pipe.next()
     }
 }
 
@@ -146,30 +108,39 @@ mod tests {
         std::fs::remove_dir_all(&d).ok();
     }
 
+    /// Locate page `i`'s (offset, length) by parsing the page-file
+    /// header and index, so corruption lands squarely in that page's
+    /// payload (not in padding or a length field).
+    fn payload_span(bytes: &[u8], i: usize) -> (usize, usize) {
+        // Header: [magic, version, n_pages, index_offset] × u64 LE.
+        let index_offset =
+            u64::from_le_bytes(bytes[24..32].try_into().unwrap()) as usize;
+        // Index: (offset, len, checksum) u64 triples per page.
+        let entry = index_offset + i * 24;
+        let off = u64::from_le_bytes(bytes[entry..entry + 8].try_into().unwrap());
+        let len =
+            u64::from_le_bytes(bytes[entry + 8..entry + 16].try_into().unwrap());
+        (off as usize, len as usize)
+    }
+
     #[test]
     fn read_error_is_surfaced() {
         let d = tmpdir("err");
         let path = d.join("p.bin");
         let f = write_pages(&path, 5);
-        // Corrupt page 2's payload.
+        // Corrupt one byte in the middle of page 2's real payload.
         let mut bytes = std::fs::read(&path).unwrap();
-        let off = {
-            // page payloads start at 32; find page 2 offset via read: easier
-            // to corrupt everything after header + first two pages by
-            // flipping a byte in the middle of the file.
-            bytes.len() / 2
-        };
-        bytes[off] ^= 0xAA;
+        let (off, len) = payload_span(&bytes, 2);
+        bytes[off + len / 2] ^= 0xAA;
         std::fs::write(&path, &bytes).unwrap();
         let pf = Prefetcher::start(&f, 2).unwrap();
         let results: Vec<Result<SparsePage>> = pf.collect();
-        assert!(
-            results.iter().any(|r| r.is_err()),
-            "expected at least one error"
-        );
-        // Stream terminates at the first error (no pages after it).
-        let first_err = results.iter().position(|r| r.is_err()).unwrap();
-        assert_eq!(first_err, results.len() - 1);
+        // Pages 0 and 1 arrive intact; page 2's checksum failure is the
+        // final item (the stream terminates at the first error).
+        assert_eq!(results.len(), 3);
+        assert!(results[0].is_ok() && results[1].is_ok());
+        let err = results[2].as_ref().unwrap_err();
+        assert!(err.to_string().contains("page 2"), "{err}");
         std::fs::remove_dir_all(&d).ok();
     }
 

@@ -181,6 +181,55 @@ impl<T: Serializable> PageFile<T> {
     pub fn iter(&self) -> impl Iterator<Item = Result<T>> + '_ {
         (0..self.n_pages()).map(move |i| self.read_page(i))
     }
+
+    /// A persistent read handle: one open descriptor for a whole sweep.
+    /// `read_page` reopens the file per call, which is fine for random
+    /// probes but not for the pipeline's read stage pulling every page.
+    pub fn reader(&self) -> Result<PageReader<T>> {
+        Ok(PageReader {
+            file: File::open(&self.path)?,
+            index: self.index.clone(),
+            _marker: std::marker::PhantomData,
+        })
+    }
+}
+
+/// Sweeping reader over a finished page file.  Splits I/O from decode so
+/// the two can run as separate pipeline stages: [`PageReader::read_raw`]
+/// returns the checksum-verified payload bytes; `T::from_bytes` is the
+/// decode half.
+pub struct PageReader<T: Serializable> {
+    file: File,
+    index: Vec<(u64, u64, u64)>,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: Serializable> PageReader<T> {
+    pub fn n_pages(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Read page `i`'s payload and verify its checksum (no decode).
+    pub fn read_raw(&mut self, i: usize) -> Result<Vec<u8>> {
+        let (off, len, sum) = *self
+            .index
+            .get(i)
+            .ok_or_else(|| Error::PageStore(format!("page {i} out of range")))?;
+        self.file.seek(SeekFrom::Start(off))?;
+        let mut bytes = vec![0u8; len as usize];
+        self.file
+            .read_exact(&mut bytes)
+            .map_err(|_| Error::PageStore(format!("truncated page {i}")))?;
+        if checksum(&bytes) != sum {
+            return Err(Error::PageStore(format!("checksum mismatch on page {i}")));
+        }
+        Ok(bytes)
+    }
+
+    /// Read and decode page `i`.
+    pub fn read_page(&mut self, i: usize) -> Result<T> {
+        T::from_bytes(&self.read_raw(i)?)
+    }
 }
 
 #[cfg(test)]
@@ -281,6 +330,26 @@ mod tests {
         let path = d.join("pages.bin");
         std::fs::write(&path, vec![7u8; 64]).unwrap();
         assert!(PageFile::<SparsePage>::open(&path).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn reader_splits_io_from_decode() {
+        let d = tmpdir("reader");
+        let path = d.join("pages.bin");
+        let src = pages(4);
+        let mut w = PageFileWriter::create(&path).unwrap();
+        for p in &src {
+            w.write_page(p).unwrap();
+        }
+        let f = w.finish().unwrap();
+        let mut r = f.reader().unwrap();
+        assert_eq!(r.n_pages(), 4);
+        // Raw bytes decode to the same page the typed read returns.
+        let raw = r.read_raw(2).unwrap();
+        assert_eq!(SparsePage::from_bytes(&raw).unwrap(), src[2]);
+        assert_eq!(r.read_page(1).unwrap(), src[1]);
+        assert!(r.read_raw(4).is_err());
         std::fs::remove_dir_all(&d).ok();
     }
 

@@ -31,4 +31,4 @@ pub use builder::TreeBuilder;
 pub use evaluator::SplitCandidate;
 pub use model::{Node, Tree};
 pub use param::TreeParams;
-pub use source::{EllpackSource, InMemorySource};
+pub use source::{EllpackSource, InMemorySource, PageStream, StreamSource};

@@ -1,29 +1,258 @@
-//! Data sources for tree construction — the axis that distinguishes
-//! in-core, out-of-core (streamed), and sampled-compacted training.
+//! Page streams and data sources for tree construction — the axis that
+//! distinguishes in-core, out-of-core (streamed), and sampled-compacted
+//! training.
 //!
-//! Every source yields the same thing (ELLPACK pages in `base_rowid`
-//! order, one full sweep per call), but differs in *where the bytes
-//! live* and what the sweep costs:
+//! The unifying abstraction is [`PageStream`]: a reusable factory of
+//! *sweeps*, where each sweep ([`PageIter`]) yields every ELLPACK page
+//! once, in `base_rowid` order.  In-memory streams hand out cheap
+//! `Arc` clones; disk streams open a fresh read → decode (→ transfer)
+//! [`Pipeline`](crate::page::pipeline::Pipeline) per sweep, so disk I/O
+//! and decode overlap the consumer's compute with bounded backpressure.
+//! Execution modes differ only in how the stream is composed
+//! (see `coordinator/modes.rs`):
 //!
-//! * [`InMemorySource`] — pages in host RAM (CPU in-core, and the
-//!   compacted sample page of Algorithm 7).
-//! * [`DiskSource`] — pages streamed from a page file through the
-//!   threaded prefetcher (CPU out-of-core; paper §2.3).
-//! * [`DeviceResidentSource`] — pages pinned in simulated device memory
-//!   (device in-core; allocation held for the source's lifetime, h2d
-//!   charged once at load).
-//! * [`DeviceStreamSource`] — pages streamed from disk *through the
-//!   interconnect* every sweep (the naive Algorithm 6; this is where
-//!   the PCIe bottleneck shows up).
+//! * CPU in-core — [`MemoryStream`] over host pages.
+//! * Device in-core — [`MemoryStream`] with the pages pinned in
+//!   simulated device memory for the source's lifetime.
+//! * CPU out-of-core — [`DiskStream`] (read → decode stages).
+//! * Device out-of-core, naive Algorithm 6 — [`DiskStream`] with a
+//!   per-page transfer hook (staging alloc + h2d charge) applied as
+//!   each page is delivered; this is where the PCIe bottleneck shows
+//!   up.
+//! * Device out-of-core, Algorithm 7 — a one-shot hooked sweep per
+//!   round feeding the compactor.
+//!
+//! [`EllpackSource`] is the grower-facing sweep interface; the legacy
+//! source types ([`InMemorySource`], [`DiskSource`],
+//! [`DeviceResidentSource`], [`DeviceStreamSource`]) are thin adapters
+//! wiring a composed stream into it.
 
 use std::sync::Arc;
 
 use crate::device::{DeviceAlloc, DeviceContext, Dir};
 use crate::ellpack::EllpackPage;
 use crate::error::Result;
-use crate::page::{PageFile, Prefetcher};
+use crate::page::{read_decode_pipeline, PageFile};
 
-/// A sweepable collection of ELLPACK pages.
+/// A per-page hook applied by a stream's transfer stage.  Returns an
+/// optional staging allocation that is held until the consumer releases
+/// the page (so device budgets see the page while it is in use).
+pub type PageHook = Arc<dyn Fn(&EllpackPage) -> Result<Option<DeviceAlloc>> + Send + Sync>;
+
+/// Standard device transfer hook: stage the page in device memory and
+/// charge one host→device copy (naive Algorithm 6 streaming and the
+/// per-round compaction sweep of Algorithm 7 both pay this per page).
+pub fn h2d_staging_hook(ctx: DeviceContext) -> PageHook {
+    Arc::new(move |page: &EllpackPage| {
+        let bytes = page.memory_bytes() as u64;
+        let staging = ctx.mem.alloc("ellpack_staging", bytes)?;
+        ctx.link.charge(Dir::HostToDevice, bytes);
+        Ok(Some(staging))
+    })
+}
+
+/// A page handed out by a sweep: shared (in-memory streams) or owned
+/// (piped streams), optionally carrying a device staging guard that is
+/// released when the consumer drops the page.
+pub struct PageRef {
+    data: PageData,
+    _staging: Option<DeviceAlloc>,
+}
+
+enum PageData {
+    Shared(Arc<EllpackPage>),
+    Owned(EllpackPage),
+}
+
+impl PageRef {
+    pub fn shared(page: Arc<EllpackPage>) -> PageRef {
+        PageRef { data: PageData::Shared(page), _staging: None }
+    }
+
+    pub fn owned(page: EllpackPage) -> PageRef {
+        PageRef { data: PageData::Owned(page), _staging: None }
+    }
+
+    pub fn with_staging(mut self, guard: DeviceAlloc) -> PageRef {
+        self._staging = Some(guard);
+        self
+    }
+}
+
+impl std::ops::Deref for PageRef {
+    type Target = EllpackPage;
+
+    fn deref(&self) -> &EllpackPage {
+        match &self.data {
+            PageData::Shared(p) => p,
+            PageData::Owned(p) => p,
+        }
+    }
+}
+
+/// A reusable factory of page sweeps.
+pub trait PageStream: Send {
+    /// Total rows across all pages.
+    fn n_rows(&self) -> usize;
+
+    /// Open one full sweep in `base_rowid` order.
+    fn open(&self) -> Result<PageIter>;
+}
+
+/// One sweep over a stream's pages.
+pub enum PageIter {
+    /// In-memory fast path: no threads, no copies.
+    Mem(std::vec::IntoIter<Arc<EllpackPage>>),
+    /// Read → decode pipeline.
+    Owned(crate::page::pipeline::Pipeline<EllpackPage>),
+    /// Read → decode pipeline with a transfer hook applied *at
+    /// delivery*, on the consumer thread.  The simulated copy is pure
+    /// accounting, so running it at delivery keeps exactly one staged
+    /// page budgeted at a time — deterministic OOM thresholds matching
+    /// the paper's synchronous-copy model — while the read/decode
+    /// stages still overlap the consumer's compute.
+    Hooked { pipe: crate::page::pipeline::Pipeline<EllpackPage>, hook: PageHook },
+}
+
+impl PageIter {
+    /// A sweep over already-shared pages.
+    pub fn from_shared(pages: Vec<Arc<EllpackPage>>) -> PageIter {
+        PageIter::Mem(pages.into_iter())
+    }
+}
+
+impl Iterator for PageIter {
+    type Item = Result<PageRef>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let (item, terminate) = match self {
+            PageIter::Mem(it) => (it.next().map(|p| Ok(PageRef::shared(p))), false),
+            PageIter::Owned(p) => (p.next().map(|r| r.map(PageRef::owned)), false),
+            PageIter::Hooked { pipe, hook } => match pipe.next() {
+                None => (None, false),
+                Some(Err(e)) => (Some(Err(e)), true),
+                Some(Ok(page)) => {
+                    let out = match hook(&page) {
+                        Ok(Some(guard)) => {
+                            Ok(PageRef::owned(page).with_staging(guard))
+                        }
+                        Ok(None) => Ok(PageRef::owned(page)),
+                        Err(e) => Err(e),
+                    };
+                    let terminate = out.is_err();
+                    (Some(out), terminate)
+                }
+            },
+        };
+        if terminate {
+            // Errors terminate the sweep (the pipeline contract): drop
+            // the pipe so upstream stages unwind and later `next` calls
+            // yield nothing instead of un-hooked pages.
+            *self = PageIter::Mem(Vec::new().into_iter());
+        }
+        item
+    }
+}
+
+/// Host-resident pages (CPU in-core, the compacted sample page of
+/// Algorithm 7, and — pinned via a retained allocation — device
+/// in-core).
+pub struct MemoryStream {
+    pages: Vec<Arc<EllpackPage>>,
+    n_rows: usize,
+}
+
+impl MemoryStream {
+    pub fn new(pages: Vec<EllpackPage>) -> MemoryStream {
+        Self::from_shared(pages.into_iter().map(Arc::new).collect())
+    }
+
+    pub fn from_shared(pages: Vec<Arc<EllpackPage>>) -> MemoryStream {
+        let n_rows = pages.iter().map(|p| p.n_rows()).sum();
+        MemoryStream { pages, n_rows }
+    }
+
+    pub fn pages(&self) -> &[Arc<EllpackPage>] {
+        &self.pages
+    }
+}
+
+impl PageStream for MemoryStream {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn open(&self) -> Result<PageIter> {
+        Ok(PageIter::from_shared(self.pages.clone()))
+    }
+}
+
+/// Pages streamed from a disk page file; every sweep opens a fresh
+/// read → decode (→ transfer) pipeline with `depth`-bounded channels.
+pub struct DiskStream {
+    file: Arc<PageFile<EllpackPage>>,
+    depth: usize,
+    n_rows: usize,
+    hook: Option<PageHook>,
+}
+
+impl DiskStream {
+    /// Scans the file once to learn the row count; prefer
+    /// [`DiskStream::with_rows`] when the caller already knows it.
+    pub fn new(file: Arc<PageFile<EllpackPage>>, depth: usize) -> Result<DiskStream> {
+        let mut n_rows = 0usize;
+        for p in file.iter() {
+            n_rows += p?.n_rows();
+        }
+        Ok(Self::with_rows(file, depth, n_rows))
+    }
+
+    pub fn with_rows(
+        file: Arc<PageFile<EllpackPage>>,
+        depth: usize,
+        n_rows: usize,
+    ) -> DiskStream {
+        DiskStream { file, depth, n_rows, hook: None }
+    }
+
+    /// Attach a per-page transfer hook, applied as pages are delivered.
+    pub fn with_hook(mut self, hook: PageHook) -> DiskStream {
+        self.hook = Some(hook);
+        self
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.file.n_pages()
+    }
+
+    /// One-shot sweep over a page file without building a stream (the
+    /// per-round compaction and margin sweeps use this).
+    pub fn open_file(
+        file: &PageFile<EllpackPage>,
+        depth: usize,
+        hook: Option<&PageHook>,
+    ) -> Result<PageIter> {
+        let pipe = read_decode_pipeline::<EllpackPage>(file, depth)?;
+        Ok(match hook {
+            Some(hook) => PageIter::Hooked { pipe, hook: hook.clone() },
+            None => PageIter::Owned(pipe),
+        })
+    }
+}
+
+impl PageStream for DiskStream {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn open(&self) -> Result<PageIter> {
+        DiskStream::open_file(&self.file, self.depth, self.hook.as_ref())
+    }
+}
+
+/// A sweepable collection of ELLPACK pages — the grower-facing
+/// interface ([`crate::tree::builder::HistBackend`] sweeps one of these
+/// per tree level).
 pub trait EllpackSource {
     fn n_rows(&self) -> usize;
     /// One full pass over the pages in row order.
@@ -33,27 +262,28 @@ pub trait EllpackSource {
     fn sweeps(&self) -> usize;
 }
 
-/// Host-resident pages.
-pub struct InMemorySource {
-    pages: Vec<EllpackPage>,
-    n_rows: usize,
+/// Adapter: any [`PageStream`] as an [`EllpackSource`].
+pub struct StreamSource {
+    stream: Box<dyn PageStream>,
     sweeps: usize,
+    /// Resources pinned for the source's lifetime (device-resident
+    /// page allocations).
+    _retained: Vec<DeviceAlloc>,
 }
 
-impl InMemorySource {
-    pub fn new(pages: Vec<EllpackPage>) -> InMemorySource {
-        let n_rows = pages.iter().map(|p| p.n_rows()).sum();
-        InMemorySource { pages, n_rows, sweeps: 0 }
+impl StreamSource {
+    pub fn new(stream: Box<dyn PageStream>) -> StreamSource {
+        Self::with_retained(stream, Vec::new())
     }
 
-    pub fn pages(&self) -> &[EllpackPage] {
-        &self.pages
+    pub fn with_retained(stream: Box<dyn PageStream>, retained: Vec<DeviceAlloc>) -> StreamSource {
+        StreamSource { stream, sweeps: 0, _retained: retained }
     }
 }
 
-impl EllpackSource for InMemorySource {
+impl EllpackSource for StreamSource {
     fn n_rows(&self) -> usize {
-        self.n_rows
+        self.stream.n_rows()
     }
 
     fn for_each_page(
@@ -61,53 +291,7 @@ impl EllpackSource for InMemorySource {
         f: &mut dyn FnMut(&EllpackPage) -> Result<()>,
     ) -> Result<()> {
         self.sweeps += 1;
-        for p in &self.pages {
-            f(p)?;
-        }
-        Ok(())
-    }
-
-    fn sweeps(&self) -> usize {
-        self.sweeps
-    }
-}
-
-/// Pages streamed from disk via the prefetcher (one prefetch pass per
-/// sweep).
-pub struct DiskSource {
-    file: Arc<PageFile<EllpackPage>>,
-    depth: usize,
-    n_rows: usize,
-    sweeps: usize,
-}
-
-impl DiskSource {
-    pub fn new(file: Arc<PageFile<EllpackPage>>, depth: usize) -> Result<DiskSource> {
-        // One cheap metadata pass to learn the row count.
-        let mut n_rows = 0usize;
-        for p in file.iter() {
-            n_rows += p?.n_rows();
-        }
-        Ok(DiskSource { file, depth, n_rows, sweeps: 0 })
-    }
-
-    pub fn n_pages(&self) -> usize {
-        self.file.n_pages()
-    }
-}
-
-impl EllpackSource for DiskSource {
-    fn n_rows(&self) -> usize {
-        self.n_rows
-    }
-
-    fn for_each_page(
-        &mut self,
-        f: &mut dyn FnMut(&EllpackPage) -> Result<()>,
-    ) -> Result<()> {
-        self.sweeps += 1;
-        let pf = Prefetcher::start(&self.file, self.depth)?;
-        for page in pf {
+        for page in self.stream.open()? {
             f(&page?)?;
         }
         Ok(())
@@ -118,51 +302,106 @@ impl EllpackSource for DiskSource {
     }
 }
 
+macro_rules! delegate_source {
+    ($ty:ty) => {
+        impl EllpackSource for $ty {
+            fn n_rows(&self) -> usize {
+                self.inner.n_rows()
+            }
+            fn for_each_page(
+                &mut self,
+                f: &mut dyn FnMut(&EllpackPage) -> Result<()>,
+            ) -> Result<()> {
+                self.inner.for_each_page(f)
+            }
+            fn sweeps(&self) -> usize {
+                self.inner.sweeps()
+            }
+        }
+    };
+}
+
+/// Host-resident pages (CPU in-core, and the compacted sample page of
+/// Algorithm 7).
+pub struct InMemorySource {
+    inner: StreamSource,
+}
+
+impl InMemorySource {
+    pub fn new(pages: Vec<EllpackPage>) -> InMemorySource {
+        InMemorySource {
+            inner: StreamSource::new(Box::new(MemoryStream::new(pages))),
+        }
+    }
+}
+
+delegate_source!(InMemorySource);
+
+/// Pages streamed from a page file through the pipeline (CPU
+/// out-of-core; paper §2.3).
+pub struct DiskSource {
+    inner: StreamSource,
+    n_pages: usize,
+}
+
+impl DiskSource {
+    pub fn new(file: Arc<PageFile<EllpackPage>>, depth: usize) -> Result<DiskSource> {
+        let n_pages = file.n_pages();
+        Ok(DiskSource {
+            inner: StreamSource::new(Box::new(DiskStream::new(file, depth)?)),
+            n_pages,
+        })
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+}
+
+delegate_source!(DiskSource);
+
 /// Pages held in simulated device memory for the source's lifetime
 /// (device in-core).  Construction fails with `DeviceOom` when the
 /// matrix doesn't fit — the Table 1 "In-core GPU" limit.
 pub struct DeviceResidentSource {
-    inner: InMemorySource,
-    /// RAII budget registration for every resident page.
-    _allocs: Vec<DeviceAlloc>,
+    inner: StreamSource,
 }
 
 impl DeviceResidentSource {
     pub fn load(pages: Vec<EllpackPage>, ctx: &DeviceContext) -> Result<Self> {
-        let mut allocs = Vec::with_capacity(pages.len());
-        for p in &pages {
-            let bytes = p.memory_bytes() as u64;
-            allocs.push(ctx.mem.alloc("ellpack_resident", bytes)?);
-            ctx.link.charge(Dir::HostToDevice, bytes);
-        }
-        Ok(DeviceResidentSource { inner: InMemorySource::new(pages), _allocs: allocs })
+        let pages: Vec<Arc<EllpackPage>> = pages.into_iter().map(Arc::new).collect();
+        let allocs = load_resident(&pages, ctx)?;
+        Ok(DeviceResidentSource {
+            inner: StreamSource::with_retained(
+                Box::new(MemoryStream::from_shared(pages)),
+                allocs,
+            ),
+        })
     }
 }
 
-impl EllpackSource for DeviceResidentSource {
-    fn n_rows(&self) -> usize {
-        self.inner.n_rows()
-    }
+delegate_source!(DeviceResidentSource);
 
-    fn for_each_page(
-        &mut self,
-        f: &mut dyn FnMut(&EllpackPage) -> Result<()>,
-    ) -> Result<()> {
-        self.inner.for_each_page(f)
+/// Register every page against the device budget and charge one h2d
+/// copy each — the load step of device in-core mode.
+pub fn load_resident(
+    pages: &[Arc<EllpackPage>],
+    ctx: &DeviceContext,
+) -> Result<Vec<DeviceAlloc>> {
+    let mut allocs = Vec::with_capacity(pages.len());
+    for p in pages {
+        let bytes = p.memory_bytes() as u64;
+        allocs.push(ctx.mem.alloc("ellpack_resident", bytes)?);
+        ctx.link.charge(Dir::HostToDevice, bytes);
     }
-
-    fn sweeps(&self) -> usize {
-        self.inner.sweeps()
-    }
+    Ok(allocs)
 }
 
 /// Pages streamed from disk through the interconnect on *every sweep*
-/// (naive Algorithm 6).  Each page transiently occupies device memory
-/// (staging) and charges an h2d transfer — the cost model that makes
-/// the naive algorithm lose, as §3.3 reports.
+/// (naive Algorithm 6) — the cost model that makes the naive algorithm
+/// lose, as §3.3 reports.
 pub struct DeviceStreamSource {
-    disk: DiskSource,
-    ctx: DeviceContext,
+    inner: StreamSource,
 }
 
 impl DeviceStreamSource {
@@ -171,32 +410,15 @@ impl DeviceStreamSource {
         depth: usize,
         ctx: DeviceContext,
     ) -> Result<Self> {
-        Ok(DeviceStreamSource { disk: DiskSource::new(file, depth)?, ctx })
-    }
-}
-
-impl EllpackSource for DeviceStreamSource {
-    fn n_rows(&self) -> usize {
-        self.disk.n_rows()
-    }
-
-    fn for_each_page(
-        &mut self,
-        f: &mut dyn FnMut(&EllpackPage) -> Result<()>,
-    ) -> Result<()> {
-        let ctx = self.ctx.clone();
-        self.disk.for_each_page(&mut |page| {
-            let bytes = page.memory_bytes() as u64;
-            let _staging = ctx.mem.alloc("ellpack_staging", bytes)?;
-            ctx.link.charge(Dir::HostToDevice, bytes);
-            f(page)
+        Ok(DeviceStreamSource {
+            inner: StreamSource::new(Box::new(
+                DiskStream::new(file, depth)?.with_hook(h2d_staging_hook(ctx)),
+            )),
         })
     }
-
-    fn sweeps(&self) -> usize {
-        self.disk.sweeps()
-    }
 }
+
+delegate_source!(DeviceStreamSource);
 
 #[cfg(test)]
 mod tests {
@@ -293,6 +515,29 @@ mod tests {
         let stats = ctx.link.stats();
         assert_eq!(stats.h2d_transfers, 4); // 2 pages × 2 sweeps
         assert_eq!(ctx.mem.used(), 0); // staging freed
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn staging_guard_lives_while_page_is_held() {
+        let d = std::env::temp_dir().join(format!("oocgb-guard-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let mut w = PageFileWriter::create(&d.join("ep.bin")).unwrap();
+        for p in pages(1, 4) {
+            w.write_page(&p).unwrap();
+        }
+        let file = Arc::new(w.finish().unwrap());
+        let ctx = DeviceContext::new(1 << 20);
+        let stream = DiskStream::new(file, 0)
+            .unwrap()
+            .with_hook(h2d_staging_hook(ctx.clone()));
+        let mut sweep = stream.open().unwrap();
+        let page = sweep.next().unwrap().unwrap();
+        // While the consumer holds the page, its staging is budgeted.
+        assert_eq!(ctx.mem.used(), page.memory_bytes() as u64);
+        drop(page);
+        assert_eq!(ctx.mem.used(), 0);
+        drop(sweep);
         std::fs::remove_dir_all(&d).ok();
     }
 }
