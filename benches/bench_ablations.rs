@@ -9,6 +9,9 @@
 //! 5. **Overlapped decode + conversion** — the staged pipeline's win
 //!    over synchronous per-page processing, from measured per-stage
 //!    busy time.
+//! 6. **Shard count** — data-parallel sharding with histogram
+//!    allreduce: fleet-wide link volume and the allreduce tax as the
+//!    simulated device count grows (emits a `BENCH {...}` json line).
 
 #[path = "common.rs"]
 mod common;
@@ -182,6 +185,62 @@ fn ablate_overlapped_conversion() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+fn ablate_shard_count() {
+    header("Ablation 6 — shard count (device-in-core fleet, histogram allreduce)");
+    let rows = scaled(40_000);
+    let rounds = ((10.0 * scale()) as usize).max(3);
+    println!("| shards | time (s) | h2d bytes | d2h bytes | simulated link (s) | peak mem (fleet) |");
+    println!("|--------|----------|-----------|-----------|--------------------|------------------|");
+    let mut sweep = Vec::new();
+    let mut first_nodes: Option<usize> = None;
+    for n_shards in [0usize, 1, 2, 4, 8] {
+        let mut cfg = table2_cfg(ExecMode::DeviceInCore);
+        cfg.n_rounds = rounds;
+        cfg.max_depth = 6;
+        cfg.n_shards = n_shards;
+        // Small pages so the fleet gets real per-shard subsets.
+        cfg.page_size_bytes = 128 * 1024;
+        let (out, wall) = run(synthetic::higgs_like(rows, 18), cfg).unwrap();
+        let link = out.link_stats.clone().unwrap();
+        let peak = out.mem_peak.unwrap();
+        println!(
+            "| {n_shards} | {wall:.2} | {} | {} | {:.3} | {} |",
+            link.h2d_bytes,
+            link.d2h_bytes,
+            link.sim_seconds,
+            oocgb::util::fmt_bytes(peak)
+        );
+        // Shard-count invariance: every sharded fleet grows the same
+        // trees (n_shards = 0 is the legacy unsharded path).
+        let nodes: usize = out.model.trees.iter().map(|t| t.n_nodes()).sum();
+        if n_shards >= 1 {
+            match first_nodes {
+                None => first_nodes = Some(nodes),
+                Some(n) => assert_eq!(n, nodes, "sharded models diverged"),
+            }
+        }
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("n_shards".to_string(), oocgb::util::json::num(n_shards as f64));
+        m.insert("wall_s".to_string(), oocgb::util::json::num(wall));
+        m.insert("h2d_bytes".to_string(), oocgb::util::json::num(link.h2d_bytes as f64));
+        m.insert("d2h_bytes".to_string(), oocgb::util::json::num(link.d2h_bytes as f64));
+        m.insert("link_sim_s".to_string(), oocgb::util::json::num(link.sim_seconds));
+        m.insert("mem_peak_bytes".to_string(), oocgb::util::json::num(peak as f64));
+        sweep.push(oocgb::util::json::Value::Object(m));
+    }
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("bench".to_string(), oocgb::util::json::s("shard_count_sweep"));
+    top.insert("mode".to_string(), oocgb::util::json::s("device-in-core"));
+    top.insert("rows".to_string(), oocgb::util::json::num(rows as f64));
+    top.insert("shards".to_string(), oocgb::util::json::Value::Array(sweep));
+    println!("\nBENCH {}", oocgb::util::json::Value::Object(top).to_json());
+    println!(
+        "\neach extra shard pays one allreduce (d2h + h2d of the level \
+         histogram) per level per device, while per-device resident bytes \
+         shrink — the multi-GPU trade of Mitchell et al."
+    );
+}
+
 fn main() {
     println!("# Ablations");
     ablate_sampler();
@@ -189,4 +248,5 @@ fn main() {
     ablate_page_size();
     ablate_prefetch_depth();
     ablate_overlapped_conversion();
+    ablate_shard_count();
 }

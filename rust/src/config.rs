@@ -129,7 +129,19 @@ pub struct TrainConfig {
 
     // ---- execution ----
     pub mode: ExecMode,
-    /// Simulated device memory budget in bytes.
+    /// Data-parallel shard count.  `0` (default) disables sharding —
+    /// the single-device fast path, bit-identical to pre-sharding
+    /// behavior.  `n >= 1` partitions pages by `base_rowid` across `n`
+    /// simulated devices (each with its own `device_memory_bytes`
+    /// budget in device modes) and allreduces level histograms; the
+    /// trained model is bit-identical for every `n >= 1` over the same
+    /// page set in the streaming modes.  The exception is
+    /// `device-out-of-core` (Algorithm 7): compacted-page boundaries
+    /// follow the fleet size, so that mode is learning-equivalent
+    /// across shard counts, not bit-equivalent.
+    pub n_shards: usize,
+    /// Simulated device memory budget in bytes (per shard when
+    /// sharding).
     pub device_memory_bytes: u64,
     /// Target ELLPACK page size in bytes (paper: 32 MiB).
     pub page_size_bytes: usize,
@@ -175,6 +187,7 @@ impl Default for TrainConfig {
             goss_top_rate: 0.2,
             mvs_lambda: None,
             mode: ExecMode::CpuInCore,
+            n_shards: 0,
             device_memory_bytes: 256 * 1024 * 1024,
             page_size_bytes: 32 * 1024 * 1024,
             prefetch_depth: 2,
@@ -255,6 +268,7 @@ impl TrainConfig {
                     if v == "auto" { None } else { Some(pf(key, v)?) }
             }
             "mode" => self.mode = ExecMode::parse(v)?,
+            "n_shards" => self.n_shards = pf(key, v)?,
             "device_memory_bytes" => self.device_memory_bytes = pf(key, v)?,
             "device_memory_mb" => {
                 self.device_memory_bytes = pf::<u64>(key, v)? * 1024 * 1024
@@ -314,6 +328,9 @@ impl TrainConfig {
         if !(0.0..0.9).contains(&self.eval_fraction) {
             return Err(Error::config("eval_fraction must be in [0, 0.9)"));
         }
+        if self.n_shards > 256 {
+            return Err(Error::config("n_shards must be <= 256"));
+        }
         Ok(())
     }
 
@@ -332,6 +349,7 @@ impl TrainConfig {
         m.insert("sampling_method".into(), s(self.sampling_method.name()));
         m.insert("subsample".into(), num(self.subsample as f64));
         m.insert("mode".into(), s(self.mode.name()));
+        m.insert("n_shards".into(), num(self.n_shards as f64));
         m.insert(
             "device_memory_bytes".into(),
             num(self.device_memory_bytes as f64),
@@ -388,10 +406,12 @@ mod tests {
                 "f=0.3".into(),
                 "device_memory_mb=64".into(),
                 "pipeline_depth=4".into(),
+                "n_shards=4".into(),
             ],
         )
         .unwrap();
         assert_eq!(cfg.pipeline_depth, 4);
+        assert_eq!(cfg.n_shards, 4);
         assert_eq!(cfg.max_depth, 8);
         assert_eq!(cfg.learning_rate, 0.1);
         assert_eq!(cfg.mode, ExecMode::DeviceOutOfCore);
@@ -406,6 +426,7 @@ mod tests {
         assert!(TrainConfig::load(None, &["max_depth".into()]).is_err());
         assert!(TrainConfig::load(None, &["subsample=0".into()]).is_err());
         assert!(TrainConfig::load(None, &["lambda=0".into()]).is_err());
+        assert!(TrainConfig::load(None, &["n_shards=1000".into()]).is_err());
     }
 
     #[test]

@@ -9,11 +9,13 @@
 //! device-resident page every round instead of reusing a persistent
 //! source.
 
+use std::sync::Arc;
+
 use crate::boosting::GbtModel;
 use crate::config::ExecMode;
 use crate::coordinator::modes::{self, TrainData};
 use crate::coordinator::session::{TrainOutcome, TrainSession};
-use crate::device::Dir;
+use crate::device::{DeviceAlloc, Dir, ShardPlan};
 use crate::ellpack::{compact::Compactor, EllpackPage};
 use crate::error::{Error, Result};
 use crate::sampling::Sampler;
@@ -22,8 +24,9 @@ use crate::tree::{
     hist_cpu::CpuHistBackend,
     hist_device::DeviceHistBackend,
     partitioner::RowPartitioner,
-    source::InMemorySource,
-    Tree, TreeBuilder, TreeParams,
+    sharded::{ShardedCpuBackend, ShardedDeviceBackend},
+    source::{h2d_staging_hook, DiskStream, InMemorySource, MemoryStream, StreamSource},
+    EllpackSource, PageStream, ShardedSource, Tree, TreeBuilder, TreeParams,
 };
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
@@ -46,21 +49,55 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
     let mut sample_rows_total = 0usize;
     let mut sampled_rounds = 0usize;
 
-    // Mode-persistent backend + stream-backed source.
-    let mut backend: Box<dyn HistBackend> = match &session.device {
-        Some(dev) => Box::new(DeviceHistBackend::new(
+    // Mode-persistent backend + stream-backed source.  `n_shards >= 1`
+    // engages the sharded data-parallel pipeline — pages partitioned by
+    // `base_rowid` across a fleet of simulated devices (or CPU shard
+    // workers) with per-level histogram allreduce; `0` keeps the
+    // single-device fast path bit-identical to pre-sharding behavior.
+    let plan = if cfg.n_shards >= 1 {
+        Some(ShardPlan::partition(&session.page_rows, cfg.n_shards))
+    } else {
+        None
+    };
+    // Per-shard per-row working buffers (gradient pairs, positions,
+    // prediction cache — 16 B/row), resident for the whole run on each
+    // shard's own device.
+    let mut shard_row_buffers: Vec<DeviceAlloc> = Vec::new();
+    if let (Some(plan), Some(dev)) = (&plan, &session.device) {
+        let fleet = dev.shards.as_ref().expect("sharded device setup");
+        for s in 0..plan.n_shards() {
+            shard_row_buffers
+                .push(fleet.ctx(s).mem.alloc("row_buffers", plan.rows_in(s) as u64 * 16)?);
+        }
+    }
+    let _shard_row_buffers = shard_row_buffers;
+    let mut backend: Box<dyn HistBackend> = match (&session.device, &plan) {
+        (Some(dev), Some(_)) => Box::new(ShardedDeviceBackend::new(
+            dev.rt.clone(),
+            dev.shards.clone().expect("sharded device setup"),
+            cfg.max_bin,
+        )?),
+        (Some(dev), None) => Box::new(DeviceHistBackend::new(
             dev.rt.clone(),
             dev.ctx.clone(),
             cfg.max_bin,
         )?),
-        None => Box::new(CpuHistBackend::new(cfg.threads())),
+        (None, Some(_)) => Box::new(ShardedCpuBackend::new()),
+        (None, None) => Box::new(CpuHistBackend::new(cfg.threads())),
     };
-    let mut persistent_source = modes::open_source(
-        &session.data,
-        session.device.as_ref().map(|d| &d.ctx),
-        &cfg,
-        n_rows,
-    )?;
+    let mut persistent_source: Option<Box<dyn EllpackSource>> = match &plan {
+        Some(plan) => {
+            modes::open_sharded_source(&session.data, plan, session.device.as_ref(), &cfg)?
+                .map(|s| Box::new(s) as Box<dyn EllpackSource>)
+        }
+        None => modes::open_source(
+            &session.data,
+            session.device.as_ref().map(|d| &d.ctx),
+            &cfg,
+            n_rows,
+        )?
+        .map(|s| Box::new(s) as Box<dyn EllpackSource>),
+    };
 
     let sw_total = Stopwatch::start();
     // Early stopping state (XGBoost semantics: best metric so far,
@@ -92,12 +129,19 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
 
         // ---- grow one tree ----
         let tree = if cfg.mode == ExecMode::DeviceOutOfCore {
-            session.build_tree_compacted(
-                &params,
-                backend.as_mut(),
-                &grads,
-                sample.as_ref().map(|s| s.mask.as_slice()),
-            )?
+            let mask = sample.as_ref().map(|s| s.mask.as_slice());
+            match &plan {
+                Some(plan) => session.build_tree_compacted_sharded(
+                    &params,
+                    backend.as_mut(),
+                    &grads,
+                    mask,
+                    plan,
+                )?,
+                None => {
+                    session.build_tree_compacted(&params, backend.as_mut(), &grads, mask)?
+                }
+            }
         } else {
             let source = persistent_source
                 .as_mut()
@@ -108,8 +152,12 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
             };
             let sw = Stopwatch::start();
             let builder = TreeBuilder::new(&params, &session.cuts);
-            let tree =
-                builder.build(backend.as_mut(), source, &grads, &mut partitioner)?;
+            let tree = builder.build(
+                backend.as_mut(),
+                source.as_mut(),
+                &grads,
+                &mut partitioner,
+            )?;
             session.timers.add("grow", sw.elapsed_secs());
             tree
         };
@@ -166,12 +214,24 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
     let train_seconds = sw_total.elapsed_secs();
 
     let (link_stats, compute_stats, mem_peak, mem_capacity) = match &session.device {
-        Some(dev) => (
-            Some(dev.ctx.link.stats()),
-            Some(dev.ctx.compute.stats()),
-            Some(dev.ctx.mem.peak()),
-            Some(dev.ctx.mem.capacity()),
-        ),
+        // Sharded runs report fleet-wide rollups (sums across shards).
+        Some(dev) => match &dev.shards {
+            Some(fleet) => {
+                let mem = fleet.mem_rollup();
+                (
+                    Some(fleet.link_rollup()),
+                    Some(fleet.compute_rollup()),
+                    Some(mem.peak),
+                    Some(mem.capacity),
+                )
+            }
+            None => (
+                Some(dev.ctx.link.stats()),
+                Some(dev.ctx.compute.stats()),
+                Some(dev.ctx.mem.peak()),
+                Some(dev.ctx.mem.capacity()),
+            ),
+        },
         None => (None, None, None, None),
     };
     // Clean the spill directory.
@@ -341,6 +401,91 @@ impl TrainSession {
         let tree = builder.build(backend, &mut source, &sub_grads, &mut partitioner)?;
         self.timers.add("grow", sw.elapsed_secs());
         drop(compact_alloc);
+        Ok(tree)
+    }
+
+    /// Algorithm 7, sharded: every shard compacts the sampled rows of
+    /// *its* pages into one page resident on its own device (hooked
+    /// subset sweep → gather, so each device only stages its own
+    /// pages), then the sharded grower runs over the per-shard
+    /// compacted pages with histogram allreduce.  Compacted pages are
+    /// re-based contiguously in shard order, so gradients/positions
+    /// concatenate the per-shard row maps.
+    fn build_tree_compacted_sharded(
+        &mut self,
+        params: &TreeParams,
+        backend: &mut dyn HistBackend,
+        grads: &[[f32; 2]],
+        mask: Option<&[bool]>,
+        plan: &ShardPlan,
+    ) -> Result<Tree> {
+        let dev = self.device.as_ref().unwrap();
+        let fleet = dev.shards.as_ref().expect("sharded device setup");
+        let TrainData::Disk(file) = &self.data else {
+            return Err(Error::config("compacted mode requires disk pages"));
+        };
+        let full_mask_store;
+        let mask: &[bool] = match mask {
+            Some(m) => m,
+            None => {
+                full_mask_store = vec![true; self.labels.len()];
+                &full_mask_store
+            }
+        };
+        let n_symbols = *self.cuts.ptrs.last().unwrap() + 1;
+
+        let sw = Stopwatch::start();
+        let mut shard_sources = Vec::with_capacity(plan.n_shards());
+        let mut row_map_all: Vec<u64> = Vec::new();
+        let mut next_base = 0u64;
+        for s in 0..plan.n_shards() {
+            let (begin, end) = plan.range(s);
+            let n_sel =
+                mask[begin as usize..end as usize].iter().filter(|&&m| m).count();
+            let ctx = fleet.ctx(s);
+            // Budget the shard's compacted page before filling it.
+            let bytes =
+                EllpackPage::estimated_bytes(n_sel, self.row_stride, n_symbols);
+            let alloc = ctx.mem.alloc("ellpack_compacted", bytes as u64)?;
+            let mut compactor =
+                Compactor::new(mask, n_sel, self.row_stride, n_symbols, self.dense);
+            // The shard's pages stage on its device and cross its link
+            // once per round (the transfer hook charges them).
+            let sweep = DiskStream::with_rows(
+                file.clone(),
+                self.cfg.prefetch_depth,
+                plan.rows_in(s),
+            )
+            .with_page_subset(plan.pages_of(s).to_vec())
+            .with_hook(h2d_staging_hook(ctx.clone()))
+            .open()?;
+            for page in sweep {
+                compactor.push_page(&page?);
+            }
+            let (mut compacted, row_map) = compactor.finish();
+            compacted.base_rowid = next_base;
+            next_base += compacted.n_rows() as u64;
+            // Modeled: the gather reads the shard's pages once and
+            // writes the compacted page.
+            ctx.compute.charge_kernel(compacted.memory_bytes() as u64 * 2);
+            row_map_all.extend(row_map);
+            shard_sources.push(StreamSource::with_retained(
+                Box::new(MemoryStream::from_shared(vec![Arc::new(compacted)])),
+                vec![alloc],
+            ));
+        }
+        self.timers.add("compact", sw.elapsed_secs());
+
+        // Gather the sampled gradients (device-side gather in reality).
+        let sub_grads: Vec<[f32; 2]> =
+            row_map_all.iter().map(|&r| grads[r as usize]).collect();
+        let mut partitioner = RowPartitioner::new(row_map_all.len());
+        let mut source = ShardedSource::new(shard_sources);
+
+        let sw = Stopwatch::start();
+        let builder = TreeBuilder::new(params, &self.cuts);
+        let tree = builder.build(backend, &mut source, &sub_grads, &mut partitioner)?;
+        self.timers.add("grow", sw.elapsed_secs());
         Ok(tree)
     }
 

@@ -26,7 +26,7 @@ use std::sync::Arc;
 
 use crate::config::{ExecMode, TrainConfig};
 use crate::data::SparsePage;
-use crate::device::{DeviceAlloc, DeviceContext, Dir};
+use crate::device::{DeviceAlloc, DeviceContext, Dir, ShardPlan, ShardedDevice};
 use crate::ellpack::{EllpackBuilder, EllpackPage};
 use crate::error::{Error, Result};
 use crate::page::pipeline::Pipeline;
@@ -34,7 +34,8 @@ use crate::page::{PageFile, PageFileWriter, Prefetcher};
 use crate::runtime::Runtime;
 use crate::sketch::{HistogramCuts, SketchBuilder};
 use crate::tree::source::{
-    h2d_staging_hook, load_resident, DiskStream, MemoryStream, PageIter, StreamSource,
+    h2d_staging_hook, load_resident, DiskStream, MemoryStream, PageIter, ShardedSource,
+    StreamSource,
 };
 
 /// Where the quantized training data lives after preprocessing.
@@ -48,10 +49,17 @@ pub(crate) enum TrainData {
 /// Device-mode facilities.
 pub(crate) struct DeviceSetup {
     pub rt: Arc<Runtime>,
+    /// Primary context: the single device, or shard 0 of the fleet
+    /// (preprocessing — sketch staging, conversion, gradient batches —
+    /// runs here in both cases).
     pub ctx: DeviceContext,
+    /// The per-shard device fleet when `cfg.n_shards >= 1`.
+    pub shards: Option<ShardedDevice>,
     /// Long-lived per-row device buffers (gradients, positions,
-    /// prediction cache) — part of every mode's working set.
-    pub _row_buffers: DeviceAlloc,
+    /// prediction cache) — part of every mode's working set.  `None`
+    /// when sharded: each shard budgets its own rows once the shard
+    /// plan exists (`loop.rs`).
+    pub _row_buffers: Option<DeviceAlloc>,
 }
 
 /// Load the AOT runtime and budget the per-row working set (device
@@ -67,11 +75,16 @@ pub(crate) fn device_setup(cfg: &TrainConfig, n_rows: usize) -> Result<Option<De
             cfg.max_bin
         )));
     }
+    if cfg.n_shards >= 1 {
+        let shards = ShardedDevice::new(cfg.n_shards, cfg.device_memory_bytes);
+        let ctx = shards.ctx(0).clone();
+        return Ok(Some(DeviceSetup { rt, ctx, shards: Some(shards), _row_buffers: None }));
+    }
     let ctx = DeviceContext::new(cfg.device_memory_bytes);
     // Per-row working set resident for the whole run: gradient pairs
     // (8 B), positions (4 B), prediction cache (4 B).
     let row_buffers = ctx.mem.alloc("row_buffers", n_rows as u64 * 16)?;
-    Ok(Some(DeviceSetup { rt, ctx, _row_buffers: row_buffers }))
+    Ok(Some(DeviceSetup { rt, ctx, shards: None, _row_buffers: Some(row_buffers) }))
 }
 
 /// Scratch directory for this session's spill files.  The process-wide
@@ -223,13 +236,22 @@ pub(crate) fn build_train_data(
     device: Option<&DeviceContext>,
     cfg: &TrainConfig,
     cache_dir: &Path,
-) -> Result<TrainData> {
+) -> Result<(TrainData, Vec<(u64, usize)>)> {
     let out_of_core = cfg.mode.is_out_of_core();
-    let cap = if out_of_core { cfg.page_size_bytes } else { usize::MAX };
+    // In-core modes normally keep one resident page; sharded runs cap
+    // pages too, so the matrix actually partitions across the fleet
+    // (pages are the placement unit of the shard plan).
+    let cap = if out_of_core || cfg.n_shards >= 1 {
+        cfg.page_size_bytes
+    } else {
+        usize::MAX
+    };
     let builder = EllpackBuilder::new(cuts.clone(), meta.row_stride, meta.dense, cap);
     let depth = cfg.pipeline_depth;
     let pipe = Pipeline::from_iter("csr", depth, csr.into_page_iter()?)
         .then_stage("convert", depth, builder);
+    // (base_rowid, n_rows) per ELLPACK page — the shard plan's input.
+    let mut page_rows = Vec::new();
     if out_of_core {
         std::fs::create_dir_all(cache_dir)?;
         let path = cache_dir.join("ellpack.pages");
@@ -243,15 +265,18 @@ pub(crate) fn build_train_data(
                 let _staging = ctx.mem.alloc("ellpack_convert", bytes)?;
                 ctx.link.charge(Dir::DeviceToHost, bytes);
             }
+            page_rows.push((page.base_rowid, page.n_rows()));
             writer.write_page(&page)?;
         }
-        Ok(TrainData::Disk(Arc::new(writer.finish()?)))
+        Ok((TrainData::Disk(Arc::new(writer.finish()?)), page_rows))
     } else {
         let mut pages = Vec::new();
         for page in pipe {
-            pages.push(Arc::new(page?));
+            let page = page?;
+            page_rows.push((page.base_rowid, page.n_rows()));
+            pages.push(Arc::new(page));
         }
-        Ok(TrainData::HostPages(pages))
+        Ok((TrainData::HostPages(pages), page_rows))
     }
 }
 
@@ -292,6 +317,73 @@ pub(crate) fn open_source(
             cfg.mode.name()
         ))),
     }
+}
+
+/// Assemble the per-shard sweep sources of sharded training: one
+/// [`StreamSource`] per shard over exactly that shard's pages (memory
+/// slices in-core, page-index-subset disk pipelines out-of-core), with
+/// device-mode placement/transport charged against the shard's own
+/// context — each simulated device only ever stages its own pages.
+/// `DeviceOutOfCore` returns `None`: Algorithm 7 compacts per shard,
+/// per round (`loop.rs`).
+pub(crate) fn open_sharded_source(
+    data: &TrainData,
+    plan: &ShardPlan,
+    device: Option<&DeviceSetup>,
+    cfg: &TrainConfig,
+) -> Result<Option<ShardedSource>> {
+    let n = plan.n_shards();
+    let fleet = device.and_then(|d| d.shards.as_ref());
+    let shard_pages = |pages: &[Arc<EllpackPage>], s: usize| -> Vec<Arc<EllpackPage>> {
+        plan.pages_of(s).iter().map(|&i| pages[i].clone()).collect()
+    };
+    let mut shards = Vec::with_capacity(n);
+    match (data, cfg.mode) {
+        (TrainData::HostPages(pages), ExecMode::CpuInCore) => {
+            for s in 0..n {
+                shards.push(StreamSource::new(Box::new(MemoryStream::from_shared(
+                    shard_pages(pages, s),
+                ))));
+            }
+        }
+        (TrainData::HostPages(pages), ExecMode::DeviceInCore) => {
+            let fleet = fleet.expect("sharded device mode without a device fleet");
+            for s in 0..n {
+                let ps = shard_pages(pages, s);
+                let allocs = load_resident(&ps, fleet.ctx(s))?;
+                shards.push(StreamSource::with_retained(
+                    Box::new(MemoryStream::from_shared(ps)),
+                    allocs,
+                ));
+            }
+        }
+        (TrainData::Disk(file), ExecMode::CpuOutOfCore) => {
+            for s in 0..n {
+                shards.push(StreamSource::new(Box::new(
+                    DiskStream::with_rows(file.clone(), cfg.prefetch_depth, plan.rows_in(s))
+                        .with_page_subset(plan.pages_of(s).to_vec()),
+                )));
+            }
+        }
+        (TrainData::Disk(file), ExecMode::DeviceOutOfCoreNaive) => {
+            let fleet = fleet.expect("sharded device mode without a device fleet");
+            for s in 0..n {
+                shards.push(StreamSource::new(Box::new(
+                    DiskStream::with_rows(file.clone(), cfg.prefetch_depth, plan.rows_in(s))
+                        .with_page_subset(plan.pages_of(s).to_vec())
+                        .with_hook(h2d_staging_hook(fleet.ctx(s).clone())),
+                )));
+            }
+        }
+        (TrainData::Disk(_), ExecMode::DeviceOutOfCore) => return Ok(None),
+        _ => {
+            return Err(Error::config(format!(
+                "mode {} is inconsistent with the prepared data layout",
+                cfg.mode.name()
+            )))
+        }
+    }
+    Ok(Some(ShardedSource::new(shards)))
 }
 
 /// One hooked sweep for Algorithm 7's per-round compaction: every page

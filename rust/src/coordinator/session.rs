@@ -28,6 +28,9 @@ pub struct TrainSession {
     pub(crate) row_stride: usize,
     pub(crate) dense: bool,
     pub(crate) data: TrainData,
+    /// (base_rowid, n_rows) per prepared ELLPACK page — the shard
+    /// plan's input in sharded runs.
+    pub(crate) page_rows: Vec<(u64, usize)>,
     pub(crate) labels: Vec<f32>,
     pub(crate) eval: Option<DMatrix>,
     pub(crate) device: Option<DeviceSetup>,
@@ -135,14 +138,17 @@ impl TrainSession {
     }
 
     /// Memory-resident CSR input; OOC modes re-chunk it to the §2.3
-    /// size-capped page premise first.
+    /// size-capped page premise first.  Sharded runs re-chunk too:
+    /// `EllpackBuilder` emits page boundaries only at CSR page
+    /// boundaries, and pages are the shard plan's placement unit — a
+    /// single monolithic CSR page would put the whole matrix on shard 0.
     fn build(
         csr_pages: Vec<SparsePage>,
         labels: Vec<f32>,
         eval: Option<DMatrix>,
         cfg: TrainConfig,
     ) -> Result<TrainSession> {
-        let csr_pages = if cfg.mode.is_out_of_core() {
+        let csr_pages = if cfg.mode.is_out_of_core() || cfg.n_shards >= 1 {
             modes::rechunk_pages(csr_pages, cfg.page_size_bytes)
         } else {
             csr_pages
@@ -185,7 +191,8 @@ impl TrainSession {
 
         let sw = Stopwatch::start();
         let spilled_csr = csr.spilled_path();
-        let data = modes::build_train_data(csr, &meta, &cuts, ctx, &cfg, &cache_dir)?;
+        let (data, page_rows) =
+            modes::build_train_data(csr, &meta, &cuts, ctx, &cfg, &cache_dir)?;
         timers.add("ellpack", sw.elapsed_secs());
         if let Some(path) = spilled_csr {
             // The staged CSR spill is fully consumed; reclaim the disk.
@@ -200,6 +207,7 @@ impl TrainSession {
             row_stride: meta.row_stride,
             dense: meta.dense,
             data,
+            page_rows,
             labels,
             eval,
             device,

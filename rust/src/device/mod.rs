@@ -19,10 +19,12 @@
 
 pub mod interconnect;
 pub mod memory;
+pub mod shard;
 pub mod timing;
 
 pub use interconnect::{Dir, Interconnect, LinkStats};
 pub use memory::{DeviceAlloc, MemStats, MemoryManager};
+pub use shard::{ShardPlan, ShardedDevice};
 pub use timing::ComputeModel;
 
 use std::sync::Arc;

@@ -1,0 +1,312 @@
+//! Multi-device sharding: row-range partitioning of the page set
+//! ([`ShardPlan`]) and the bundle of per-shard simulated devices
+//! ([`ShardedDevice`]).
+//!
+//! Data-parallel training follows Mitchell et al.'s multi-GPU `hist`
+//! design: rows are range-partitioned across devices, every device
+//! builds level histograms over *its* pages only, and the partial
+//! histograms are allreduced before split evaluation.  Pages are the
+//! atomic placement unit — a page is assigned wholly to the shard its
+//! `base_rowid` falls in, so a shard's rows are a contiguous range and
+//! each device only ever stages its own pages.
+
+use crate::device::interconnect::{Dir, LinkStats};
+use crate::device::memory::MemStats;
+use crate::device::DeviceContext;
+
+/// A partition of the (contiguous, `base_rowid`-ordered) page set into
+/// `n_shards` contiguous row ranges.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    n_rows: u64,
+    /// Per shard: `[row_begin, row_end)` of the rows it owns.
+    ranges: Vec<(u64, u64)>,
+    /// Per shard: indices into the original page list, in order.
+    pages_of: Vec<Vec<usize>>,
+}
+
+impl ShardPlan {
+    /// Partition pages — given as `(base_rowid, n_rows)` in `base_rowid`
+    /// order, tiling a contiguous row space — into `n_shards` balanced
+    /// contiguous runs.  Page `p` goes to shard
+    /// `⌊base_rowid(p) · n_shards / total_rows⌋` (clamped), so row
+    /// coverage is exact by construction: every page lands in exactly
+    /// one shard and shard ranges tile `[first_base, total)`.
+    pub fn partition(pages: &[(u64, usize)], n_shards: usize) -> ShardPlan {
+        assert!(n_shards >= 1, "a plan needs at least one shard");
+        let first_base = pages.first().map(|&(b, _)| b).unwrap_or(0);
+        let n_rows: u64 = pages.iter().map(|&(_, r)| r as u64).sum();
+        let mut pages_of = vec![Vec::new(); n_shards];
+        for (i, &(base, _)) in pages.iter().enumerate() {
+            let s = if n_rows == 0 {
+                0
+            } else {
+                // Shift by the first base so plans over re-based page
+                // runs (e.g. an eval split) stay balanced.
+                (((base - first_base) * n_shards as u64) / n_rows)
+                    .min(n_shards as u64 - 1) as usize
+            };
+            pages_of[s].push(i);
+        }
+        let mut ranges = Vec::with_capacity(n_shards);
+        let mut cursor = first_base;
+        for assigned in &pages_of {
+            let begin = cursor;
+            let end = assigned
+                .last()
+                .map(|&i| pages[i].0 + pages[i].1 as u64)
+                .unwrap_or(begin)
+                .max(begin);
+            ranges.push((begin, end));
+            cursor = end;
+        }
+        ShardPlan { n_rows, ranges, pages_of }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Total rows across all shards.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows as usize
+    }
+
+    /// `[row_begin, row_end)` of shard `s`.
+    pub fn range(&self, s: usize) -> (u64, u64) {
+        self.ranges[s]
+    }
+
+    /// Rows owned by shard `s`.
+    pub fn rows_in(&self, s: usize) -> usize {
+        (self.ranges[s].1 - self.ranges[s].0) as usize
+    }
+
+    /// Page indices assigned to shard `s`, in `base_rowid` order.
+    pub fn pages_of(&self, s: usize) -> &[usize] {
+        &self.pages_of[s]
+    }
+
+    /// Shard owning global row `row`.
+    pub fn shard_of_row(&self, row: u64) -> usize {
+        self.ranges
+            .iter()
+            .position(|&(b, e)| row >= b && row < e)
+            .unwrap_or(self.ranges.len() - 1)
+    }
+}
+
+/// One simulated device per shard: independent memory budgets and
+/// interconnect accounting, plus the rollups benches and `TrainOutcome`
+/// report across the fleet.
+#[derive(Clone)]
+pub struct ShardedDevice {
+    shards: Vec<DeviceContext>,
+}
+
+impl ShardedDevice {
+    /// `n_shards` devices, each with its own `capacity`-byte budget.
+    pub fn new(n_shards: usize, capacity: u64) -> ShardedDevice {
+        Self::with_budgets(&vec![capacity; n_shards.max(1)])
+    }
+
+    /// Per-shard budgets (tests use this to starve one shard).
+    pub fn with_budgets(budgets: &[u64]) -> ShardedDevice {
+        assert!(!budgets.is_empty(), "at least one shard required");
+        ShardedDevice {
+            shards: budgets.iter().map(|&b| DeviceContext::new(b)).collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn ctx(&self, s: usize) -> &DeviceContext {
+        &self.shards[s]
+    }
+
+    pub fn contexts(&self) -> &[DeviceContext] {
+        &self.shards
+    }
+
+    /// Charge the level-histogram allreduce: each shard ships its
+    /// partial off-device and receives the reduced copy back (the
+    /// ring-allreduce volume is modeled as one full histogram each way
+    /// per device — the conservative dense-allreduce bound).
+    pub fn charge_allreduce(&self, bytes: u64) {
+        for ctx in &self.shards {
+            ctx.link.charge(Dir::DeviceToHost, bytes);
+            ctx.link.charge(Dir::HostToDevice, bytes);
+        }
+    }
+
+    /// Aggregate memory stats: capacities/used/peak summed, per-tag
+    /// breakdowns merged (peak is the sum of per-shard peaks — the
+    /// fleet-wide footprint bound, not a simultaneous high-water mark).
+    pub fn mem_rollup(&self) -> MemStats {
+        let mut out = MemStats { capacity: 0, used: 0, peak: 0, tags: Vec::new() };
+        for ctx in &self.shards {
+            let s = ctx.mem.stats();
+            out.capacity += s.capacity;
+            out.used += s.used;
+            out.peak += s.peak;
+            for (tag, live, count) in s.tags {
+                if let Some(t) = out.tags.iter_mut().find(|(n, ..)| *n == tag) {
+                    t.1 += live;
+                    t.2 += count;
+                } else {
+                    out.tags.push((tag, live, count));
+                }
+            }
+        }
+        out
+    }
+
+    /// Aggregate interconnect stats across shards.
+    pub fn link_rollup(&self) -> LinkStats {
+        let mut out = LinkStats::default();
+        for ctx in &self.shards {
+            let s = ctx.link.stats();
+            out.h2d_bytes += s.h2d_bytes;
+            out.d2h_bytes += s.d2h_bytes;
+            out.h2d_transfers += s.h2d_transfers;
+            out.d2h_transfers += s.d2h_transfers;
+            out.sim_seconds += s.sim_seconds;
+        }
+        out
+    }
+
+    /// Aggregate modeled kernel time: (seconds summed, kernels summed).
+    pub fn compute_rollup(&self) -> (f64, u64) {
+        let mut secs = 0f64;
+        let mut kernels = 0u64;
+        for ctx in &self.shards {
+            let (s, k) = ctx.compute.stats();
+            secs += s;
+            kernels += k;
+        }
+        (secs, kernels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Contiguous page layout: rows per page → (base, rows) list.
+    fn layout(rows_per_page: &[usize]) -> Vec<(u64, usize)> {
+        let mut out = Vec::new();
+        let mut base = 0u64;
+        for &r in rows_per_page {
+            out.push((base, r));
+            base += r as u64;
+        }
+        out
+    }
+
+    fn check_exact_cover(pages: &[(u64, usize)], plan: &ShardPlan) {
+        // Every page assigned exactly once, in order.
+        let mut seen = Vec::new();
+        for s in 0..plan.n_shards() {
+            seen.extend_from_slice(plan.pages_of(s));
+        }
+        assert_eq!(seen, (0..pages.len()).collect::<Vec<_>>());
+        // Ranges tile the row space with no gaps or overlap.
+        let mut cursor = pages.first().map(|&(b, _)| b).unwrap_or(0);
+        let mut rows = 0usize;
+        for s in 0..plan.n_shards() {
+            let (b, e) = plan.range(s);
+            assert_eq!(b, cursor, "gap before shard {s}");
+            assert!(e >= b);
+            cursor = e;
+            rows += plan.rows_in(s);
+            // Page row sums must match the advertised range.
+            let page_rows: usize =
+                plan.pages_of(s).iter().map(|&i| pages[i].1).sum();
+            assert_eq!(page_rows, plan.rows_in(s), "shard {s}");
+        }
+        assert_eq!(rows, plan.n_rows());
+    }
+
+    #[test]
+    fn partitions_evenly_when_pages_are_uniform() {
+        let pages = layout(&[10; 8]);
+        let plan = ShardPlan::partition(&pages, 4);
+        check_exact_cover(&pages, &plan);
+        for s in 0..4 {
+            assert_eq!(plan.rows_in(s), 20);
+            assert_eq!(plan.pages_of(s).len(), 2);
+        }
+    }
+
+    #[test]
+    fn more_shards_than_pages_leaves_empty_shards() {
+        let pages = layout(&[5, 5]);
+        let plan = ShardPlan::partition(&pages, 4);
+        check_exact_cover(&pages, &plan);
+        let non_empty = (0..4).filter(|&s| plan.rows_in(s) > 0).count();
+        assert_eq!(non_empty, 2);
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        let pages = layout(&[3, 1, 7]);
+        let plan = ShardPlan::partition(&pages, 1);
+        check_exact_cover(&pages, &plan);
+        assert_eq!(plan.range(0), (0, 11));
+        assert_eq!(plan.pages_of(0), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn empty_pages_and_empty_input() {
+        let pages = layout(&[4, 0, 4, 0]);
+        let plan = ShardPlan::partition(&pages, 2);
+        check_exact_cover(&pages, &plan);
+        let plan = ShardPlan::partition(&[], 3);
+        assert_eq!(plan.n_rows(), 0);
+        for s in 0..3 {
+            assert_eq!(plan.rows_in(s), 0);
+        }
+    }
+
+    #[test]
+    fn shard_of_row_matches_ranges() {
+        let pages = layout(&[6, 2, 9, 1, 6]);
+        let plan = ShardPlan::partition(&pages, 3);
+        check_exact_cover(&pages, &plan);
+        for r in 0..plan.n_rows() as u64 {
+            let s = plan.shard_of_row(r);
+            let (b, e) = plan.range(s);
+            assert!(r >= b && r < e, "row {r} not in shard {s} range");
+        }
+    }
+
+    #[test]
+    fn sharded_device_rollups() {
+        let sd = ShardedDevice::with_budgets(&[100, 200]);
+        assert_eq!(sd.n_shards(), 2);
+        let a = sd.ctx(0).mem.alloc("hist", 60).unwrap();
+        let b = sd.ctx(1).mem.alloc("hist", 50).unwrap();
+        let roll = sd.mem_rollup();
+        assert_eq!(roll.capacity, 300);
+        assert_eq!(roll.used, 110);
+        assert_eq!(roll.peak, 110);
+        let hist = roll.tags.iter().find(|(n, ..)| *n == "hist").unwrap();
+        assert_eq!((hist.1, hist.2), (110, 2));
+        drop(a);
+        drop(b);
+        assert_eq!(sd.mem_rollup().used, 0);
+
+        sd.charge_allreduce(1000);
+        let link = sd.link_rollup();
+        assert_eq!(link.h2d_transfers, 2);
+        assert_eq!(link.d2h_transfers, 2);
+        assert_eq!(link.h2d_bytes, 2000);
+        assert_eq!(link.d2h_bytes, 2000);
+
+        sd.ctx(0).compute.charge_kernel(64);
+        sd.ctx(1).compute.charge_kernel(64);
+        assert_eq!(sd.compute_rollup().1, 2);
+    }
+}

@@ -4,25 +4,25 @@
 //! allocator ([`crate::device::MemoryManager`]) returns it when an
 //! allocation would exceed the configured budget, which is exactly the
 //! signal the paper's Table 1 experiment probes for.
+//!
+//! `Display`/`Error` are hand-implemented so the crate builds with zero
+//! external dependencies (the vendored set has no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All failure modes of the oocgb stack.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Filesystem / page-store I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// XLA / PJRT runtime failure (artifact load, compile, execute).
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// Simulated device out-of-memory — the Table 1 signal.
-    #[error("device OOM: requested {requested} B for `{tag}` with {used}/{capacity} B in use")]
     DeviceOom {
         /// Bytes the failed allocation asked for.
         requested: u64,
@@ -35,15 +35,12 @@ pub enum Error {
     },
 
     /// Malformed input data (parser errors, shape mismatches).
-    #[error("data error: {0}")]
     Data(String),
 
     /// Malformed configuration (file, CLI, or invalid combination).
-    #[error("config error: {0}")]
     Config(String),
 
     /// JSON parse error from the hand-rolled parser in [`crate::util::json`].
-    #[error("json error at byte {offset}: {msg}")]
     Json {
         /// Byte offset where parsing failed.
         offset: usize,
@@ -52,10 +49,45 @@ pub enum Error {
     },
 
     /// Corrupt or truncated page file.
-    #[error("page store error: {0}")]
     PageStore(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(msg) => write!(f, "xla error: {msg}"),
+            Error::DeviceOom { requested, used, capacity, tag } => write!(
+                f,
+                "device OOM: requested {requested} B for `{tag}` with \
+                 {used}/{capacity} B in use"
+            ),
+            Error::Data(msg) => write!(f, "data error: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json error at byte {offset}: {msg}")
+            }
+            Error::PageStore(msg) => write!(f, "page store error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -95,5 +127,13 @@ mod tests {
         let e = Error::DeviceOom { requested: 10, used: 5, capacity: 8, tag: "hist" };
         let s = e.to_string();
         assert!(s.contains("hist") && s.contains("10"));
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("io error"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -14,7 +14,12 @@
 //!   histogram / gradient / sampling hot spots, lowered into the same HLO.
 //!
 //! At runtime the [`runtime`] module loads the HLO artifacts through the
-//! PJRT C API (`xla` crate) — Python is never on the training path.
+//! PJRT C API (`xla` crate, behind the off-by-default `xla` feature) or
+//! executes them with a deterministic pure-Rust stub of the same kernel
+//! semantics — Python is never on the training path, and the default
+//! build has zero external dependencies.  Training can additionally be
+//! sharded across several simulated devices (`n_shards`) with an exact
+//! histogram allreduce (see `device/shard.rs` + `tree/sharded.rs`).
 //!
 //! ## Quick start
 //!

@@ -75,7 +75,9 @@ USAGE:
 Common train keys: mode=cpu|cpu-ooc|device|naive-ooc|device-ooc,
   sampling_method=none|uniform|goss|mvs, f=0.3, n_rounds=100, max_depth=8,
   eta=0.1, max_bin=64, device_memory_mb=256, eval_fraction=0.05,
-  verbose=true.  See DESIGN.md for the full list.
+  n_shards=4 (0 = unsharded; >=1 shards pages across simulated devices
+  with histogram allreduce), verbose=true.  See DESIGN.md for the full
+  list.
 ";
 
 /// Tiny flag parser: `--key value` pairs + positional `key=value`

@@ -13,5 +13,5 @@ pub mod pipeline;
 pub mod prefetch;
 pub mod store;
 
-pub use prefetch::{read_decode_pipeline, Prefetcher};
+pub use prefetch::{read_decode_pipeline, read_decode_pipeline_subset, Prefetcher};
 pub use store::{PageFile, PageFileWriter, PageReader, Serializable};

@@ -23,9 +23,19 @@ pub fn read_decode_pipeline<T: Serializable + Send + 'static>(
     file: &PageFile<T>,
     depth: usize,
 ) -> Result<Pipeline<T>> {
+    read_decode_pipeline_subset(file, depth, (0..file.n_pages()).collect())
+}
+
+/// Read → decode pipeline over an explicit page-index subset, in the
+/// given order.  Sharded sweeps use this so each simulated device reads
+/// (and stages) only its own pages instead of filtering after I/O.
+pub fn read_decode_pipeline_subset<T: Serializable + Send + 'static>(
+    file: &PageFile<T>,
+    depth: usize,
+    indices: Vec<usize>,
+) -> Result<Pipeline<T>> {
     let mut reader = file.reader()?;
-    let n = file.n_pages();
-    let source = (0..n).map(move |i| reader.read_raw(i));
+    let source = indices.into_iter().map(move |i| reader.read_raw(i));
     Ok(Pipeline::from_iter("read", depth, source)
         .then("decode", depth, |bytes: Vec<u8>| T::from_bytes(&bytes)))
 }

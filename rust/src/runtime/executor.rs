@@ -16,6 +16,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use crate::runtime::EvalOut;
 
 /// Compiled-artifact cache + typed call surface.
 pub struct Runtime {
@@ -24,18 +25,6 @@ pub struct Runtime {
     executables: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     /// Lifetime execute() count per artifact kind (perf accounting).
     call_counts: Mutex<HashMap<String, u64>>,
-}
-
-/// Split-evaluation output for one node chunk (parallel arrays).
-#[derive(Debug, Clone, Default)]
-pub struct EvalOut {
-    pub gain: Vec<f32>,
-    pub feature: Vec<i32>,
-    pub split_bin: Vec<i32>,
-    /// (g, h) of the left child per node.
-    pub left_sum: Vec<[f32; 2]>,
-    /// (g, h) totals per node.
-    pub total: Vec<[f32; 2]>,
 }
 
 fn as_bytes<T: Copy>(data: &[T]) -> &[u8] {

@@ -1,16 +1,43 @@
-//! PJRT runtime: loads the AOT HLO artifacts and executes them on the
-//! hot path.
+//! Runtime for the AOT compute artifacts — PJRT-backed or stubbed.
 //!
 //! This is the Layer-3 half of the AOT bridge (DESIGN.md §3): Python
 //! lowers the L2 graphs + L1 Pallas kernels to HLO *text* once at build
-//! time; this module parses `artifacts/manifest.json`, compiles each
-//! module on the PJRT CPU client (`xla` crate), and exposes typed entry
-//! points (`histogram`, `gradients`, `mvs_scores`, `evaluate_splits`)
-//! that the device tree builder calls.  Python is never involved at
-//! runtime.
+//! time; at run time the [`Runtime`] exposes typed entry points
+//! (`histogram`, `gradients`, `mvs_scores`, `evaluate_splits`) that the
+//! device tree builder calls.  Python is never involved at runtime.
+//!
+//! Two interchangeable implementations sit behind the same API:
+//!
+//! * **`executor` (feature `xla`)** — parses `artifacts/manifest.json`,
+//!   compiles each HLO module on the PJRT CPU client (`xla` crate) and
+//!   executes it.  Requires the vendored `xla` bindings and built
+//!   artifacts.
+//! * **`stub` (default)** — a deterministic pure-Rust executor with the
+//!   same kernel semantics (mirroring `python/compile/kernels/ref.py`).
+//!   It parses a manifest when one exists and synthesizes the standard
+//!   artifact inventory otherwise, so `cargo test` exercises the full
+//!   device pipeline in a container with no XLA and no built artifacts.
 
+#[cfg(feature = "xla")]
 pub mod executor;
 pub mod manifest;
+#[cfg(not(feature = "xla"))]
+pub mod stub;
 
-pub use executor::{EvalOut, Runtime};
+#[cfg(feature = "xla")]
+pub use executor::Runtime;
 pub use manifest::{ArtifactMeta, Manifest};
+#[cfg(not(feature = "xla"))]
+pub use stub::Runtime;
+
+/// Split-evaluation output for one node chunk (parallel arrays).
+#[derive(Debug, Clone, Default)]
+pub struct EvalOut {
+    pub gain: Vec<f32>,
+    pub feature: Vec<i32>,
+    pub split_bin: Vec<i32>,
+    /// (g, h) of the left child per node.
+    pub left_sum: Vec<[f32; 2]>,
+    /// (g, h) totals per node.
+    pub total: Vec<[f32; 2]>,
+}

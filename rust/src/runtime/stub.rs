@@ -1,0 +1,525 @@
+//! Deterministic CPU stub executor — the default, dependency-free
+//! implementation of the [`Runtime`] API.
+//!
+//! Mirrors the AOT kernel semantics (`python/compile/kernels/ref.py`)
+//! in pure Rust so the whole device pipeline — batching, padding,
+//! node-slot chunking, tile layout, budget/interconnect accounting — is
+//! exercised by `cargo test` in a container with no XLA runtime and no
+//! built artifacts:
+//!
+//! * `histogram` — scatter-add of (g, h) into
+//!   `[node_slots × f_tile × n_bins × 2]`, row order, f32 accumulation
+//!   (zero-gradient padding rows are exactly inert, like the kernel).
+//! * `gradients` — logistic / squared-error pairs in f64, cast to f32.
+//! * `mvs_scores` — ĝ = √(g² + λh²) and its sum.
+//! * `evaluate_splits` — per-(node, feature) cumulative left scan with
+//!   the last bin excluded, `min_child_weight` on both children, strict
+//!   `gain > 0`, lowest (feature, bin) on ties — the same contract
+//!   `tree/evaluator.rs` pins.
+//!
+//! Shapes come from `artifacts/manifest.json` when present; otherwise a
+//! built-in inventory matching `make artifacts` (batches 4096/16384 for
+//! histograms, 8192/65536 for gradients and MVS, bins 64/256, 32
+//! feature tiles × 32 node slots) is synthesized, so `Runtime::load`
+//! never fails on a fresh checkout.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use crate::runtime::EvalOut;
+use crate::util::json::{num, s};
+
+/// Feature-tile width of the synthesized histogram artifacts.
+const STUB_F_TILE: usize = 32;
+/// Node-slot chunk of the synthesized histogram / eval artifacts.
+const STUB_NODE_SLOTS: usize = 32;
+
+/// Deterministic stub runtime (manifest-driven shapes, host math).
+pub struct Runtime {
+    manifest: Manifest,
+    /// Lifetime call count per artifact kind (perf accounting).
+    call_counts: Mutex<HashMap<String, u64>>,
+}
+
+fn meta(
+    name: String,
+    kind: &str,
+    params: &[(&str, f64)],
+    objective: Option<&str>,
+) -> ArtifactMeta {
+    let mut map = std::collections::BTreeMap::new();
+    for (k, v) in params {
+        map.insert((*k).to_string(), num(*v));
+    }
+    if let Some(obj) = objective {
+        map.insert("objective".into(), s(obj));
+    }
+    ArtifactMeta {
+        name: name.clone(),
+        file: Path::new("<stub>").join(name),
+        kind: kind.to_string(),
+        params: map,
+        inputs: Vec::new(),
+        outputs: Vec::new(),
+    }
+}
+
+/// The standard artifact inventory `make artifacts` produces, minus the
+/// HLO files (the stub computes instead of executing).
+fn builtin_manifest() -> Manifest {
+    let mut artifacts = Vec::new();
+    for &bins in &[64usize, 256] {
+        for &batch in &[4096usize, 16384] {
+            artifacts.push(meta(
+                format!("stub_hist_b{batch}_x{bins}"),
+                "histogram",
+                &[
+                    ("batch", batch as f64),
+                    ("bins", bins as f64),
+                    ("features", STUB_F_TILE as f64),
+                    ("nodes", STUB_NODE_SLOTS as f64),
+                ],
+                None,
+            ));
+        }
+        artifacts.push(meta(
+            format!("stub_eval_x{bins}"),
+            "eval_splits",
+            &[
+                ("bins", bins as f64),
+                ("features", STUB_F_TILE as f64),
+                ("nodes", STUB_NODE_SLOTS as f64),
+            ],
+            None,
+        ));
+    }
+    for &batch in &[8192usize, 65536] {
+        for obj in ["logistic", "squared"] {
+            artifacts.push(meta(
+                format!("stub_grad_{obj}_b{batch}"),
+                "gradient",
+                &[("batch", batch as f64)],
+                Some(obj),
+            ));
+        }
+        artifacts.push(meta(
+            format!("stub_mvs_b{batch}"),
+            "mvs",
+            &[("batch", batch as f64)],
+            None,
+        ));
+    }
+    Manifest { artifacts }
+}
+
+impl Runtime {
+    /// Create a runtime over `artifacts_dir`.  A manifest.json there
+    /// fixes the compiled shapes; otherwise the built-in inventory is
+    /// synthesized (no filesystem requirement at all).
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = if artifacts_dir.join("manifest.json").exists() {
+            Manifest::load(artifacts_dir)?
+        } else {
+            builtin_manifest()
+        };
+        Ok(Runtime { manifest, call_counts: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    /// Cumulative calls per artifact kind.
+    pub fn call_counts(&self) -> Vec<(String, u64)> {
+        let mut v: Vec<(String, u64)> = self
+            .call_counts
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, c)| (k.clone(), *c))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// No compilation to warm up; kept for API parity with the PJRT
+    /// executor.
+    pub fn warm_up(&self) -> Result<()> {
+        Ok(())
+    }
+
+    fn count(&self, kind: &str) {
+        *self
+            .call_counts
+            .lock()
+            .unwrap()
+            .entry(kind.to_string())
+            .or_insert(0) += 1;
+    }
+
+    // ---- artifact selection (same contract as the PJRT executor) ----
+
+    fn find(&self, kind: &str, filters: &[(&str, usize)]) -> Result<ArtifactMeta> {
+        self.manifest
+            .of_kind(kind)
+            .into_iter()
+            .find(|a| {
+                filters
+                    .iter()
+                    .all(|(k, v)| a.param_usize(k).map(|x| x == *v).unwrap_or(false))
+            })
+            .cloned()
+            .ok_or_else(|| {
+                Error::config(format!(
+                    "no `{kind}` artifact for {filters:?}; regenerate artifacts"
+                ))
+            })
+    }
+
+    /// Histogram batch sizes available for `bins` (ascending).
+    pub fn hist_batches(&self, bins: usize) -> Vec<usize> {
+        self.manifest
+            .of_kind("histogram")
+            .into_iter()
+            .filter(|a| a.param_usize("bins").map(|b| b == bins).unwrap_or(false))
+            .filter_map(|a| a.param_usize("batch").ok())
+            .collect()
+    }
+
+    /// Histogram feature-tile width (uniform across variants).
+    pub fn hist_feature_tile(&self, bins: usize) -> Result<usize> {
+        self.manifest
+            .of_kind("histogram")
+            .into_iter()
+            .find(|a| a.param_usize("bins").map(|b| b == bins).unwrap_or(false))
+            .ok_or_else(|| Error::config(format!("no histogram artifact with bins={bins}")))?
+            .param_usize("features")
+    }
+
+    /// Node-slot chunk size of the histogram/eval artifacts.
+    pub fn hist_node_slots(&self, bins: usize) -> Result<usize> {
+        self.manifest
+            .of_kind("histogram")
+            .into_iter()
+            .find(|a| a.param_usize("bins").map(|b| b == bins).unwrap_or(false))
+            .ok_or_else(|| Error::config(format!("no histogram artifact with bins={bins}")))?
+            .param_usize("nodes")
+    }
+
+    /// Gradient batch sizes (ascending).
+    pub fn grad_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .manifest
+            .of_kind("gradient")
+            .into_iter()
+            .filter_map(|a| a.param_usize("batch").ok())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    // ---- typed entry points ----
+
+    /// Level-wise histogram for one padded batch (see the PJRT
+    /// executor's doc for the layout contract).
+    pub fn histogram(
+        &self,
+        bins_tile: &[i32],
+        grads: &[f32],
+        node_ids: &[i32],
+        batch: usize,
+        n_bins: usize,
+    ) -> Result<Vec<f32>> {
+        let meta = self.find("histogram", &[("batch", batch), ("bins", n_bins)])?;
+        let f_tile = meta.param_usize("features")?;
+        let slots = meta.param_usize("nodes")?;
+        debug_assert_eq!(bins_tile.len(), batch * f_tile);
+        debug_assert_eq!(grads.len(), batch * 2);
+        debug_assert_eq!(node_ids.len(), batch);
+        self.count("histogram");
+        let mut out = vec![0f32; slots * f_tile * n_bins * 2];
+        for r in 0..batch {
+            let nid = node_ids[r];
+            if nid < 0 || nid as usize >= slots {
+                continue;
+            }
+            let (g, h) = (grads[r * 2], grads[r * 2 + 1]);
+            for f in 0..f_tile {
+                let b = bins_tile[r * f_tile + f];
+                if b < 0 || b as usize >= n_bins {
+                    continue;
+                }
+                let idx = ((nid as usize * f_tile + f) * n_bins + b as usize) * 2;
+                out[idx] += g;
+                out[idx + 1] += h;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Gradient pairs for one padded batch; returns f32[batch × 2].
+    pub fn gradients(
+        &self,
+        preds: &[f32],
+        labels: &[f32],
+        batch: usize,
+        objective: &str,
+    ) -> Result<Vec<f32>> {
+        let tag = match objective {
+            "binary:logistic" => "logistic",
+            "reg:squarederror" => "squared",
+            other => return Err(Error::config(format!("objective `{other}`"))),
+        };
+        self.manifest
+            .of_kind("gradient")
+            .into_iter()
+            .find(|a| {
+                a.param_usize("batch").map(|b| b == batch).unwrap_or(false)
+                    && a.name.contains(tag)
+            })
+            .ok_or_else(|| {
+                Error::config(format!("no gradient artifact b={batch} {tag}"))
+            })?;
+        debug_assert_eq!(preds.len(), batch);
+        debug_assert_eq!(labels.len(), batch);
+        self.count("gradient");
+        let mut out = Vec::with_capacity(batch * 2);
+        match tag {
+            "logistic" => {
+                for i in 0..batch {
+                    let p = 1.0 / (1.0 + (-preds[i] as f64).exp());
+                    let y = labels[i] as f64;
+                    out.push((p - y) as f32);
+                    out.push((p * (1.0 - p)).max(1e-16) as f32);
+                }
+            }
+            _ => {
+                for i in 0..batch {
+                    out.push(preds[i] - labels[i]);
+                    out.push(1.0);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// MVS scores ĝ = √(g² + λh²) and their sum for one padded batch.
+    pub fn mvs_scores(
+        &self,
+        grads: &[f32],
+        lambda: f32,
+        batch: usize,
+    ) -> Result<(Vec<f32>, f32)> {
+        self.find("mvs", &[("batch", batch)])?;
+        debug_assert_eq!(grads.len(), batch * 2);
+        self.count("mvs");
+        let lam = lambda as f64;
+        let mut scores = Vec::with_capacity(batch);
+        let mut total = 0f64;
+        for i in 0..batch {
+            let (g, h) = (grads[i * 2] as f64, grads[i * 2 + 1] as f64);
+            let sc = (g * g + lam * h * h).sqrt();
+            scores.push(sc as f32);
+            total += sc;
+        }
+        Ok((scores, total as f32))
+    }
+
+    /// Best split per node slot from a uniform-layout histogram chunk
+    /// (f32[node_slots × f_tile × n_bins × 2]).  Totals are derived per
+    /// feature from the chunk itself, exactly as the device kernel must
+    /// (it never sees the grower's bookkeeping).
+    pub fn evaluate_splits(
+        &self,
+        hist: &[f32],
+        lambda: f32,
+        gamma: f32,
+        min_child_weight: f32,
+        n_bins: usize,
+    ) -> Result<EvalOut> {
+        let meta = self.find("eval_splits", &[("bins", n_bins)])?;
+        let nodes = meta.param_usize("nodes")?;
+        let f_tile = meta.param_usize("features")?;
+        debug_assert_eq!(hist.len(), nodes * f_tile * n_bins * 2);
+        self.count("eval_splits");
+        let lambda = lambda as f64;
+        let gamma = gamma as f64;
+        let mcw = min_child_weight as f64;
+
+        let mut out = EvalOut {
+            gain: vec![0.0; nodes],
+            feature: vec![-1; nodes],
+            split_bin: vec![-1; nodes],
+            left_sum: vec![[0.0, 0.0]; nodes],
+            total: vec![[0.0, 0.0]; nodes],
+        };
+        for node in 0..nodes {
+            let mut best_gain = 0f64;
+            for f in 0..f_tile {
+                let base = (node * f_tile + f) * n_bins * 2;
+                let fh = &hist[base..base + n_bins * 2];
+                let mut tg = 0f64;
+                let mut th = 0f64;
+                for b in 0..n_bins {
+                    tg += fh[b * 2] as f64;
+                    th += fh[b * 2 + 1] as f64;
+                }
+                if f == 0 {
+                    out.total[node] = [tg as f32, th as f32];
+                }
+                let parent = tg * tg / (th + lambda);
+                let mut gl = 0f64;
+                let mut hl = 0f64;
+                // Last bin excluded: a split there sends everything left.
+                for b in 0..n_bins.saturating_sub(1) {
+                    gl += fh[b * 2] as f64;
+                    hl += fh[b * 2 + 1] as f64;
+                    let gr = tg - gl;
+                    let hr = th - hl;
+                    if hl < mcw || hr < mcw {
+                        continue;
+                    }
+                    let gain = 0.5
+                        * (gl * gl / (hl + lambda) + gr * gr / (hr + lambda) - parent)
+                        - gamma;
+                    // Strictly-greater keeps the lowest (feature, bin)
+                    // on ties — the contract `tree/evaluator.rs` pins.
+                    if gain > best_gain && gain > 0.0 {
+                        best_gain = gain;
+                        out.gain[node] = gain as f32;
+                        out.feature[node] = f as i32;
+                        out.split_bin[node] = b as i32;
+                        out.left_sum[node] = [gl as f32, hl as f32];
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_synthesizes_inventory() {
+        let rt = Runtime::load(Path::new("/nonexistent-oocgb-stub")).unwrap();
+        assert_eq!(rt.platform(), "stub-cpu");
+        assert_eq!(rt.hist_batches(64), vec![4096, 16384]);
+        assert_eq!(rt.hist_batches(256), vec![4096, 16384]);
+        assert!(rt.hist_batches(128).is_empty());
+        assert_eq!(rt.hist_feature_tile(64).unwrap(), STUB_F_TILE);
+        assert_eq!(rt.hist_node_slots(64).unwrap(), STUB_NODE_SLOTS);
+        assert_eq!(rt.grad_batches(), vec![8192, 65536]);
+        rt.warm_up().unwrap();
+    }
+
+    #[test]
+    fn histogram_scatter_adds() {
+        let rt = Runtime::load(Path::new("/nonexistent-oocgb-stub")).unwrap();
+        let batch = 4096usize;
+        let f_tile = STUB_F_TILE;
+        let mut bins = vec![0i32; batch * f_tile];
+        let mut grads = vec![0f32; batch * 2];
+        let mut nids = vec![0i32; batch];
+        // Row 0 → node 1, all features in bin 3, g=2, h=1.
+        for f in 0..f_tile {
+            bins[f] = 3;
+        }
+        grads[0] = 2.0;
+        grads[1] = 1.0;
+        nids[0] = 1;
+        // Row 1 → same node/bin, g=-0.5.
+        for f in 0..f_tile {
+            bins[f_tile + f] = 3;
+        }
+        grads[2] = -0.5;
+        grads[3] = 1.0;
+        nids[1] = 1;
+        let out = rt.histogram(&bins, &grads, &nids, batch, 64).unwrap();
+        let idx = (f_tile * 64 + 3) * 2; // node 1, feature 0, bin 3
+        assert_eq!(out[idx], 1.5);
+        assert_eq!(out[idx + 1], 2.0);
+        // Node 0 (all the zero-gradient padding) stays empty.
+        assert!(out[..f_tile * 64 * 2].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn gradients_match_objectives() {
+        let rt = Runtime::load(Path::new("/nonexistent-oocgb-stub")).unwrap();
+        let b = 8192usize;
+        let mut preds = vec![0f32; b];
+        let mut labels = vec![0f32; b];
+        preds[0] = 0.0;
+        labels[0] = 1.0;
+        let out = rt.gradients(&preds, &labels, b, "binary:logistic").unwrap();
+        assert!((out[0] - (0.5 - 1.0)).abs() < 1e-6);
+        assert!((out[1] - 0.25).abs() < 1e-6);
+        let out = rt.gradients(&preds, &labels, b, "reg:squarederror").unwrap();
+        assert_eq!(out[0], -1.0);
+        assert_eq!(out[1], 1.0);
+        assert!(rt.gradients(&preds, &labels, b, "rank:ndcg").is_err());
+    }
+
+    #[test]
+    fn eval_splits_finds_planted_split() {
+        // Same construction as rust/tests/runtime_numeric.rs.
+        let rt = Runtime::load(Path::new("/nonexistent-oocgb-stub")).unwrap();
+        let n_bins = 64usize;
+        let f_tile = STUB_F_TILE;
+        let slots = STUB_NODE_SLOTS;
+        let mut hist = vec![0f32; slots * f_tile * n_bins * 2];
+        let f = 3usize;
+        for b in 0..n_bins {
+            let idx = (f * n_bins + b) * 2;
+            hist[idx] = if b < 20 { -1.0 } else { 1.0 };
+            hist[idx + 1] = 1.0;
+        }
+        for of in 0..f_tile {
+            if of == f {
+                continue;
+            }
+            let idx = (of * n_bins + 5) * 2;
+            hist[idx] = (n_bins as f32) - 40.0;
+            hist[idx + 1] = n_bins as f32;
+        }
+        let out = rt.evaluate_splits(&hist, 1.0, 0.0, 1.0, n_bins).unwrap();
+        assert_eq!(out.feature[0], f as i32);
+        assert_eq!(out.split_bin[0], 19);
+        assert!((out.left_sum[0][0] + 20.0).abs() < 1e-3);
+        assert!((out.left_sum[0][1] - 20.0).abs() < 1e-3);
+        for n in 1..slots {
+            assert_eq!(out.feature[n], -1, "slot {n}");
+        }
+    }
+
+    #[test]
+    fn manifest_on_disk_wins() {
+        // A manifest.json in the artifacts dir overrides the builtin
+        // inventory (shape source of truth stays the build).
+        let d = std::env::temp_dir().join(format!("oocgb-stub-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(
+            d.join("manifest.json"),
+            r#"{"format": 1, "artifacts": [
+                {"name": "h", "file": "h.hlo.txt", "kind": "histogram",
+                 "params": {"batch": 128, "bins": 64, "features": 8, "nodes": 4}}
+            ]}"#,
+        )
+        .unwrap();
+        let rt = Runtime::load(&d).unwrap();
+        assert_eq!(rt.hist_batches(64), vec![128]);
+        assert_eq!(rt.hist_feature_tile(64).unwrap(), 8);
+        assert_eq!(rt.hist_node_slots(64).unwrap(), 4);
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

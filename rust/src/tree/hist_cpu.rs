@@ -160,10 +160,11 @@ impl HistBackend for CpuHistBackend {
 }
 
 /// Fused RepartitionInstances + BuildHistograms over one row range of a
-/// page (the per-thread worker body).
+/// page (the per-thread worker body; the sharded backend reuses it for
+/// per-shard partial histograms).
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn process_rows(
+pub(crate) fn process_rows(
     page: &crate::ellpack::EllpackPage,
     pos_chunk: &mut [u32],
     row0: usize,

@@ -1,6 +1,6 @@
 //! Device histogram backend — the `gpu_hist` analogue (paper §2.2
 //! Algorithm 1), executing the AOT Pallas histogram kernel and the
-//! split-evaluation graph through PJRT.
+//! split-evaluation graph through the [`Runtime`] (PJRT or stub).
 //!
 //! Per level (chunked by the artifact's node-slot width):
 //!
@@ -12,6 +12,13 @@
 //! 2. run the `eval_splits` artifact per feature tile and merge the
 //!    per-tile winners (lowest global feature wins ties).
 //!
+//! The batching / tiling / accounting machinery lives in
+//! [`DeviceHistCore`] with the device context passed per sweep, so the
+//! single-device backend ([`DeviceHistBackend`]) and the multi-shard
+//! fan-out ([`crate::tree::sharded::ShardedDeviceBackend`]) share one
+//! kernel-dispatch path — the sharded backend just points each sweep at
+//! a different shard's context and feeds the partials to the allreduce.
+//!
 //! Device-memory accounting: the level histogram + batch staging buffers
 //! are allocated against the simulated budget for the duration of the
 //! chunk; the accumulated histogram is charged as one d2h transfer per
@@ -21,7 +28,7 @@
 
 use std::sync::Arc;
 
-use crate::device::{DeviceContext, Dir};
+use crate::device::{DeviceAlloc, DeviceContext, Dir};
 use crate::error::Result;
 use crate::runtime::Runtime;
 use crate::sketch::HistogramCuts;
@@ -32,10 +39,11 @@ use crate::tree::param::TreeParams;
 use crate::tree::partitioner::RowPartitioner;
 use crate::tree::source::EllpackSource;
 
-/// PJRT-backed histogram builder.
-pub struct DeviceHistBackend {
+/// Shared kernel-dispatch core: batching, tiling, staging buffers, and
+/// the per-chunk sweep — parameterized over the device context so one
+/// instance can serve several simulated devices.
+pub(crate) struct DeviceHistCore {
     rt: Arc<Runtime>,
-    ctx: DeviceContext,
     /// Uniform bin width the artifacts were compiled for.
     n_bins: usize,
     f_tile: usize,
@@ -47,8 +55,8 @@ pub struct DeviceHistBackend {
     nids_buf: Vec<i32>,
 }
 
-impl DeviceHistBackend {
-    pub fn new(rt: Arc<Runtime>, ctx: DeviceContext, n_bins: usize) -> Result<Self> {
+impl DeviceHistCore {
+    pub fn new(rt: Arc<Runtime>, n_bins: usize) -> Result<Self> {
         let f_tile = rt.hist_feature_tile(n_bins)?;
         let slots = rt.hist_node_slots(n_bins)?;
         let batches = rt.hist_batches(n_bins);
@@ -57,9 +65,8 @@ impl DeviceHistBackend {
                 "no histogram artifacts for max_bin={n_bins} (compiled: 64, 256)"
             )));
         }
-        Ok(DeviceHistBackend {
+        Ok(DeviceHistCore {
             rt,
-            ctx,
             n_bins,
             f_tile,
             slots,
@@ -70,6 +77,21 @@ impl DeviceHistBackend {
         })
     }
 
+    /// Node slots per chunk (the artifact's compiled width).
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Flattened length of one feature tile's histogram.
+    pub fn tile_len(&self) -> usize {
+        self.slots * self.f_tile * self.n_bins * 2
+    }
+
+    /// Feature tiles needed to cover `nf` features.
+    pub fn n_tiles(&self, nf: usize) -> usize {
+        crate::util::div_ceil(nf, self.f_tile)
+    }
+
     /// Pick the smallest compiled batch ≥ `rows`, or the largest.
     fn pick_batch(&self, rows: usize) -> usize {
         *self
@@ -77,6 +99,197 @@ impl DeviceHistBackend {
             .iter()
             .find(|&&b| b >= rows)
             .unwrap_or(self.batches.last().unwrap())
+    }
+
+    /// Sweep `source` once for one node chunk, calling
+    /// `sink(tile, partial)` with each kernel invocation's
+    /// `[slots × f_tile × n_bins × 2]` output.  On the first sweep of a
+    /// level (`apply` set) the previous level's splits are applied to
+    /// the partitioner, fused into the same pass.  Returns the chunk's
+    /// (histogram, staging) allocations so the caller keeps them
+    /// budgeted through evaluation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sweep_chunk(
+        &mut self,
+        ctx: &DeviceContext,
+        source: &mut dyn EllpackSource,
+        grads: &[[f32; 2]],
+        partitioner: &mut RowPartitioner,
+        tree: &Tree,
+        cuts: &HistogramCuts,
+        chunk: &[u32],
+        apply: Option<usize>,
+        sink: &mut dyn FnMut(usize, &[f32]),
+    ) -> Result<(DeviceAlloc, DeviceAlloc)> {
+        let nf = cuts.n_features();
+        let n_tiles = self.n_tiles(nf);
+        let tile_len = self.tile_len();
+        let pad_bin = (self.n_bins - 1) as i32;
+        let min_node = *chunk.iter().min().unwrap() as usize;
+        let max_node = *chunk.iter().max().unwrap() as usize;
+        let mut slot_of = vec![-1i32; max_node - min_node + 1];
+        for (slot, node) in chunk.iter().enumerate() {
+            slot_of[*node as usize - min_node] = slot as i32;
+        }
+
+        // Device allocations for this chunk: level histogram (all
+        // tiles) + one batch of staging (bins/grads/nids).  Staging is
+        // sized by the largest batch this source can actually need (the
+        // compacted page of Algorithm 7 is small — sizing to the max
+        // compiled batch would waste budget).
+        let max_batch = self.pick_batch(source.n_rows()) as u64;
+        let hist_alloc = ctx.mem.alloc("histogram", (n_tiles * tile_len * 4) as u64)?;
+        let staging_alloc = ctx
+            .mem
+            .alloc("batch_staging", max_batch * (self.f_tile as u64 * 4 + 12))?;
+
+        source.for_each_page(&mut |page| {
+            let base = page.base_rowid as usize;
+            let n = page.n_rows();
+            // Fused RepartitionInstances (host-side; positions are
+            // device-resident in the real implementation).
+            if let Some(level) = apply {
+                partitioner.apply_splits_page(page, tree, cuts, level);
+            }
+            let positions = partitioner.positions();
+            let mut row = 0usize;
+            while row < n {
+                let remaining = n - row;
+                let batch = self.pick_batch(remaining);
+                let used = remaining.min(batch);
+                // Stage gradients + node slots (zeros pad the tail and
+                // out-of-chunk rows — exactly inert).
+                self.grads_buf.clear();
+                self.grads_buf.resize(batch * 2, 0.0);
+                self.nids_buf.clear();
+                self.nids_buf.resize(batch, 0);
+                let mut any_active = false;
+                for i in 0..used {
+                    let p = positions[base + row + i];
+                    if p == RowPartitioner::INACTIVE {
+                        continue;
+                    }
+                    let p = p as usize;
+                    if p < min_node || p > max_node {
+                        continue;
+                    }
+                    let slot = slot_of[p - min_node];
+                    if slot < 0 {
+                        continue;
+                    }
+                    let g = grads[base + row + i];
+                    self.grads_buf[i * 2] = g[0];
+                    self.grads_buf[i * 2 + 1] = g[1];
+                    self.nids_buf[i] = slot;
+                    any_active = true;
+                }
+                if any_active {
+                    for t in 0..n_tiles {
+                        self.bins_buf.clear();
+                        self.bins_buf.resize(batch * self.f_tile, pad_bin);
+                        page.fill_device_tile(
+                            cuts,
+                            row,
+                            batch,
+                            t * self.f_tile,
+                            self.f_tile,
+                            pad_bin,
+                            &mut self.bins_buf,
+                        );
+                        let part = self.rt.histogram(
+                            &self.bins_buf,
+                            &self.grads_buf,
+                            &self.nids_buf,
+                            batch,
+                            self.n_bins,
+                        )?;
+                        // Modeled kernel time: ELLPACK reads (~1.25 B
+                        // per quantized entry on device), gradient +
+                        // node-id reads, atomic hist updates (8 B per
+                        // (row, feature)).
+                        ctx.compute.charge_kernel(
+                            (used * self.f_tile) as u64 * 9 + used as u64 * 12,
+                        );
+                        sink(t, &part);
+                    }
+                }
+                row += used;
+            }
+            Ok(())
+        })?;
+        Ok((hist_alloc, staging_alloc))
+    }
+
+    /// Evaluate one chunk's accumulated tiles on `ctx` and merge the
+    /// per-tile winners (lowest global feature wins ties).  `totals`
+    /// must be the (G, H) bookkeeping entries parallel to `chunk`.
+    pub fn evaluate_chunk(
+        &self,
+        ctx: &DeviceContext,
+        acc: &[Vec<f32>],
+        chunk: &[u32],
+        totals: &[(f64, f64)],
+        params: &TreeParams,
+        nf: usize,
+    ) -> Result<Vec<SplitCandidate>> {
+        let tile_len = self.tile_len();
+        let mut best: Vec<SplitCandidate> = chunk
+            .iter()
+            .enumerate()
+            .map(|(slot, _)| {
+                let t = totals[slot];
+                SplitCandidate::none(t.0, t.1)
+            })
+            .collect();
+        for (t, tile) in acc.iter().enumerate() {
+            let ev = self.rt.evaluate_splits(
+                tile,
+                params.lambda,
+                params.gamma,
+                params.min_child_weight,
+                self.n_bins,
+            )?;
+            // Modeled: cumsum + gain scan reads the tile ~3×.
+            ctx.compute.charge_kernel(3 * tile_len as u64 * 4);
+            for slot in 0..chunk.len() {
+                if ev.feature[slot] < 0 {
+                    continue;
+                }
+                let gf = t * self.f_tile + ev.feature[slot] as usize;
+                if gf >= nf {
+                    continue; // padded feature (defensive; can't win)
+                }
+                let cand = &mut best[slot];
+                // Strictly-greater keeps the lowest tile on ties,
+                // matching the CPU evaluator's lowest-feature rule.
+                if ev.gain[slot] > cand.gain && ev.gain[slot] > 0.0 {
+                    *cand = SplitCandidate {
+                        gain: ev.gain[slot],
+                        feature: gf as i32,
+                        split_bin: ev.split_bin[slot],
+                        left_g: ev.left_sum[slot][0] as f64,
+                        left_h: ev.left_sum[slot][1] as f64,
+                        total_g: cand.total_g,
+                        total_h: cand.total_h,
+                        valid: true,
+                    };
+                }
+            }
+        }
+        Ok(best)
+    }
+}
+
+/// Single-device histogram builder (device in-core and the Algorithm
+/// 6/7 out-of-core modes).
+pub struct DeviceHistBackend {
+    core: DeviceHistCore,
+    ctx: DeviceContext,
+}
+
+impl DeviceHistBackend {
+    pub fn new(rt: Arc<Runtime>, ctx: DeviceContext, n_bins: usize) -> Result<Self> {
+        Ok(DeviceHistBackend { core: DeviceHistCore::new(rt, n_bins)?, ctx })
     }
 }
 
@@ -95,115 +308,31 @@ impl HistBackend for DeviceHistBackend {
         totals: &[(f64, f64)],
     ) -> Result<Vec<SplitCandidate>> {
         let nf = cuts.n_features();
-        let n_tiles = crate::util::div_ceil(nf, self.f_tile);
-        let tile_len = self.slots * self.f_tile * self.n_bins * 2;
+        let n_tiles = self.core.n_tiles(nf);
+        let tile_len = self.core.tile_len();
+        let slots = self.core.slots();
         let mut out = Vec::with_capacity(active.len());
-        let pad_bin = (self.n_bins - 1) as i32;
 
         let mut first_sweep = true;
-        for (chunk_idx, chunk) in active.chunks(self.slots).enumerate() {
-            let min_node = *chunk.iter().min().unwrap() as usize;
-            let max_node = *chunk.iter().max().unwrap() as usize;
-            let mut slot_of = vec![-1i32; max_node - min_node + 1];
-            for (slot, node) in chunk.iter().enumerate() {
-                slot_of[*node as usize - min_node] = slot as i32;
-            }
-
-            // Device allocations for this chunk: level histogram (all
-            // tiles) + one batch of staging (bins/grads/nids).
-            // Staging is sized by the largest batch this source can
-            // actually need (the compacted page of Algorithm 7 is small
-            // — sizing to the max compiled batch would waste budget).
-            let max_batch = self.pick_batch(source.n_rows()) as u64;
-            let _hist_alloc = self
-                .ctx
-                .mem
-                .alloc("histogram", (n_tiles * tile_len * 4) as u64)?;
-            let _staging_alloc = self
-                .ctx
-                .mem
-                .alloc("batch_staging", max_batch * (self.f_tile as u64 * 4 + 12))?;
-
+        for (chunk_idx, chunk) in active.chunks(slots).enumerate() {
             // Host accumulator, one contiguous block per feature tile.
             let mut acc: Vec<Vec<f32>> = vec![vec![0.0; tile_len]; n_tiles];
             let apply = if first_sweep { apply_level } else { None };
-
-            source.for_each_page(&mut |page| {
-                let base = page.base_rowid as usize;
-                let n = page.n_rows();
-                // Fused RepartitionInstances (host-side; positions are
-                // device-resident in the real implementation).
-                if apply.is_some() {
-                    partitioner.apply_splits_page(page, tree, cuts, apply.unwrap());
-                }
-                let positions = partitioner.positions();
-                let mut row = 0usize;
-                while row < n {
-                    let remaining = n - row;
-                    let batch = self.pick_batch(remaining);
-                    let used = remaining.min(batch);
-                    // Stage gradients + node slots (zeros pad the tail
-                    // and out-of-chunk rows — exactly inert).
-                    self.grads_buf.clear();
-                    self.grads_buf.resize(batch * 2, 0.0);
-                    self.nids_buf.clear();
-                    self.nids_buf.resize(batch, 0);
-                    let mut any_active = false;
-                    for i in 0..used {
-                        let p = positions[base + row + i];
-                        if p == RowPartitioner::INACTIVE {
-                            continue;
-                        }
-                        let p = p as usize;
-                        if p < min_node || p > max_node {
-                            continue;
-                        }
-                        let slot = slot_of[p - min_node];
-                        if slot < 0 {
-                            continue;
-                        }
-                        let g = grads[base + row + i];
-                        self.grads_buf[i * 2] = g[0];
-                        self.grads_buf[i * 2 + 1] = g[1];
-                        self.nids_buf[i] = slot;
-                        any_active = true;
+            let allocs = self.core.sweep_chunk(
+                &self.ctx,
+                source,
+                grads,
+                partitioner,
+                tree,
+                cuts,
+                chunk,
+                apply,
+                &mut |t, part| {
+                    for (a, b) in acc[t].iter_mut().zip(part.iter()) {
+                        *a += *b;
                     }
-                    if any_active {
-                        for t in 0..n_tiles {
-                            self.bins_buf.clear();
-                            self.bins_buf.resize(batch * self.f_tile, pad_bin);
-                            page.fill_device_tile(
-                                cuts,
-                                row,
-                                batch,
-                                t * self.f_tile,
-                                self.f_tile,
-                                pad_bin,
-                                &mut self.bins_buf,
-                            );
-                            let part = self.rt.histogram(
-                                &self.bins_buf,
-                                &self.grads_buf,
-                                &self.nids_buf,
-                                batch,
-                                self.n_bins,
-                            )?;
-                            // Modeled kernel time: ELLPACK reads (~1.25 B
-                            // per quantized entry on device), gradient +
-                            // node-id reads, atomic hist updates (8 B per
-                            // (row, feature)).
-                            self.ctx.compute.charge_kernel(
-                                (used * self.f_tile) as u64 * 9 + used as u64 * 12,
-                            );
-                            for (a, b) in acc[t].iter_mut().zip(part.iter()) {
-                                *a += *b;
-                            }
-                        }
-                    }
-                    row += used;
-                }
-                Ok(())
-            })?;
+                },
+            )?;
             first_sweep = false;
 
             // One d2h transfer for the level histogram.
@@ -211,51 +340,16 @@ impl HistBackend for DeviceHistBackend {
                 .link
                 .charge(Dir::DeviceToHost, (n_tiles * tile_len * 4) as u64);
 
-            // Evaluate per tile on device, merge winners on host.
-            let mut best: Vec<SplitCandidate> = chunk
-                .iter()
-                .enumerate()
-                .map(|(slot, _)| {
-                    let t = totals[chunk_idx * self.slots + slot];
-                    SplitCandidate::none(t.0, t.1)
-                })
-                .collect();
-            for t in 0..n_tiles {
-                let ev = self.rt.evaluate_splits(
-                    &acc[t],
-                    params.lambda,
-                    params.gamma,
-                    params.min_child_weight,
-                    self.n_bins,
-                )?;
-                // Modeled: cumsum + gain scan reads the tile ~3×.
-                self.ctx.compute.charge_kernel(3 * tile_len as u64 * 4);
-                for slot in 0..chunk.len() {
-                    if ev.feature[slot] < 0 {
-                        continue;
-                    }
-                    let gf = t * self.f_tile + ev.feature[slot] as usize;
-                    if gf >= nf {
-                        continue; // padded feature (defensive; can't win)
-                    }
-                    let cand = &mut best[slot];
-                    // Strictly-greater keeps the lowest tile on ties,
-                    // matching the CPU evaluator's lowest-feature rule.
-                    if ev.gain[slot] > cand.gain && ev.gain[slot] > 0.0 {
-                        *cand = SplitCandidate {
-                            gain: ev.gain[slot],
-                            feature: gf as i32,
-                            split_bin: ev.split_bin[slot],
-                            left_g: ev.left_sum[slot][0] as f64,
-                            left_h: ev.left_sum[slot][1] as f64,
-                            total_g: cand.total_g,
-                            total_h: cand.total_h,
-                            valid: true,
-                        };
-                    }
-                }
-            }
-            out.extend(best);
+            let base = chunk_idx * slots;
+            out.extend(self.core.evaluate_chunk(
+                &self.ctx,
+                &acc,
+                chunk,
+                &totals[base..base + chunk.len()],
+                params,
+                nf,
+            )?);
+            drop(allocs);
         }
         Ok(out)
     }

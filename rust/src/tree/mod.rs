@@ -17,7 +17,14 @@
 //! (`RepartitionInstances`) with histogram accumulation
 //! (`BuildHistograms`) — the access pattern that makes out-of-core
 //! streaming sequential, which is the heart of the paper's design.
+//!
+//! Multi-device data parallelism rides the same two axes:
+//! [`sharded::ShardedCpuBackend`] / [`sharded::ShardedDeviceBackend`]
+//! fan the sweep out over a [`source::ShardedSource`] (one per-shard
+//! stream each) and sum the partial level histograms with the exact,
+//! order-stable allreduce in [`allreduce`] before split evaluation.
 
+pub mod allreduce;
 pub mod builder;
 pub mod evaluator;
 pub mod hist_cpu;
@@ -25,10 +32,12 @@ pub mod hist_device;
 pub mod model;
 pub mod param;
 pub mod partitioner;
+pub mod sharded;
 pub mod source;
 
 pub use builder::TreeBuilder;
 pub use evaluator::SplitCandidate;
 pub use model::{Node, Tree};
 pub use param::TreeParams;
-pub use source::{EllpackSource, InMemorySource, PageStream, StreamSource};
+pub use sharded::{ShardedCpuBackend, ShardedDeviceBackend};
+pub use source::{EllpackSource, InMemorySource, PageStream, ShardedSource, StreamSource};

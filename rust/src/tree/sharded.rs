@@ -1,0 +1,432 @@
+//! Sharded histogram backends: per-shard partial histograms + the
+//! order-stable allreduce of `tree/allreduce.rs`.
+//!
+//! Both backends implement [`HistBackend`] over a
+//! [`ShardedSource`](crate::tree::source::ShardedSource) (obtained via
+//! [`EllpackSource::as_sharded`]): every shard sweeps only its own
+//! pages, accumulates fixed-point partial level histograms, and the
+//! partials are reduced in shard order before split evaluation — so the
+//! grower sees one logical histogram while data placement stays plural.
+//!
+//! Because page partials are quantized at *page* granularity and the
+//! cross-page/cross-shard reduction is exact integer addition, the
+//! grown model is bit-identical for every shard count over the same
+//! page set (`rust/tests/sharding.rs` proves N ∈ {1, 2, 4} identity).
+
+use std::sync::Arc;
+
+use crate::device::ShardedDevice;
+use crate::error::{Error, Result};
+use crate::runtime::Runtime;
+use crate::sketch::HistogramCuts;
+use crate::tree::allreduce;
+use crate::tree::builder::HistBackend;
+use crate::tree::evaluator::{evaluate_node, SplitCandidate};
+use crate::tree::hist_cpu::process_rows;
+use crate::tree::hist_device::DeviceHistCore;
+use crate::tree::model::Tree;
+use crate::tree::param::TreeParams;
+use crate::tree::partitioner::RowPartitioner;
+use crate::tree::source::EllpackSource;
+
+fn require_sharded<'a>(
+    source: &'a mut dyn EllpackSource,
+) -> Result<&'a mut crate::tree::source::ShardedSource> {
+    source.as_sharded().ok_or_else(|| {
+        Error::config("sharded histogram backend requires a sharded source")
+    })
+}
+
+/// CPU fan-out backend: one single-threaded partial-histogram pass per
+/// shard (sharding, not threads, is the parallel axis), exact
+/// allreduce, host split evaluation.
+pub struct ShardedCpuBackend {
+    /// Max nodes per histogram allocation (wide levels are chunked).
+    chunk_nodes: usize,
+    // Reused buffers.
+    page_hist: Vec<f32>,
+    shard_acc: Vec<i64>,
+    reduced: Vec<i64>,
+    level_hist: Vec<f32>,
+}
+
+impl ShardedCpuBackend {
+    pub fn new() -> ShardedCpuBackend {
+        ShardedCpuBackend {
+            chunk_nodes: 64,
+            page_hist: Vec::new(),
+            shard_acc: Vec::new(),
+            reduced: Vec::new(),
+            level_hist: Vec::new(),
+        }
+    }
+
+    /// Override the node-chunk width (ablation).
+    pub fn with_chunk_nodes(mut self, chunk: usize) -> Self {
+        self.chunk_nodes = chunk.max(1);
+        self
+    }
+}
+
+impl Default for ShardedCpuBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HistBackend for ShardedCpuBackend {
+    fn best_splits(
+        &mut self,
+        source: &mut dyn EllpackSource,
+        grads: &[[f32; 2]],
+        partitioner: &mut RowPartitioner,
+        tree: &Tree,
+        cuts: &HistogramCuts,
+        params: &TreeParams,
+        active: &[u32],
+        _level: usize,
+        apply_level: Option<usize>,
+        totals: &[(f64, f64)],
+    ) -> Result<Vec<SplitCandidate>> {
+        let sharded = require_sharded(source)?;
+        let total_bins = *cuts.ptrs.last().unwrap() as usize;
+        let hist_len_per_node = total_bins * 2;
+        let mut out = Vec::with_capacity(active.len());
+
+        let min_node = *active.iter().min().unwrap() as usize;
+        let max_node = *active.iter().max().unwrap() as usize;
+        let mut slot_of = vec![-1i32; max_node - min_node + 1];
+
+        let mut first_sweep = true;
+        for (chunk_idx, chunk) in active.chunks(self.chunk_nodes).enumerate() {
+            slot_of.iter_mut().for_each(|s| *s = -1);
+            for (slot, node) in chunk.iter().enumerate() {
+                slot_of[*node as usize - min_node] = slot as i32;
+            }
+            let hist_len = chunk.len() * hist_len_per_node;
+            self.reduced.clear();
+            self.reduced.resize(hist_len, 0);
+            // First sweep of the level fuses the previous level's
+            // position update; each shard routes only its own rows, so
+            // applying on every shard's first sweep touches each row
+            // exactly once.
+            let apply = if first_sweep { apply_level } else { None };
+            let slot_ref = &slot_of;
+
+            for s in 0..sharded.n_shards() {
+                self.shard_acc.clear();
+                self.shard_acc.resize(hist_len, 0);
+                let page_hist = &mut self.page_hist;
+                let shard_acc = &mut self.shard_acc;
+                sharded.shard_sources_mut()[s].for_each_page(&mut |page| {
+                    // Page-granular partials: pages don't change with
+                    // the shard count, so quantizing here makes the
+                    // reduction sharding-invariant (see allreduce.rs).
+                    page_hist.clear();
+                    page_hist.resize(hist_len, 0.0);
+                    let base = page.base_rowid as usize;
+                    let n = page.n_rows();
+                    let positions = partitioner.positions_mut();
+                    process_rows(
+                        page,
+                        &mut positions[base..base + n],
+                        0,
+                        base,
+                        grads,
+                        tree,
+                        cuts,
+                        apply,
+                        min_node,
+                        max_node,
+                        slot_ref,
+                        hist_len_per_node,
+                        page_hist,
+                    );
+                    allreduce::quantize_add(page_hist, shard_acc);
+                    Ok(())
+                })?;
+                // Allreduce: exact, shard-order-stable reduction.
+                allreduce::add_partial(&self.shard_acc, &mut self.reduced);
+            }
+            first_sweep = false;
+
+            allreduce::dequantize_into(&self.reduced, &mut self.level_hist);
+            let chunk_total_base = chunk_idx * self.chunk_nodes;
+            for (slot, _node) in chunk.iter().enumerate() {
+                let hist = &self.level_hist
+                    [slot * hist_len_per_node..(slot + 1) * hist_len_per_node];
+                let total = totals[chunk_total_base + slot];
+                out.push(evaluate_node(
+                    hist,
+                    cuts,
+                    total,
+                    params.lambda,
+                    params.gamma,
+                    params.min_child_weight,
+                ));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Device fan-out backend: one simulated device per shard, each
+/// sweeping its own pages through the shared kernel-dispatch core
+/// ([`DeviceHistCore`]); kernel partials are quantized into per-shard
+/// fixed-point tiles, allreduced (with per-shard interconnect charges),
+/// and evaluated once on shard 0.
+pub struct ShardedDeviceBackend {
+    core: DeviceHistCore,
+    devices: ShardedDevice,
+    // Reused per-tile accumulators (multi-MiB at max_bin=64 — reallocating
+    // them per chunk × shard × level would dominate the sweep).
+    shard_acc: Vec<Vec<i64>>,
+    reduced: Vec<Vec<i64>>,
+    acc_f32: Vec<Vec<f32>>,
+}
+
+impl ShardedDeviceBackend {
+    pub fn new(
+        rt: Arc<Runtime>,
+        devices: ShardedDevice,
+        n_bins: usize,
+    ) -> Result<ShardedDeviceBackend> {
+        Ok(ShardedDeviceBackend {
+            core: DeviceHistCore::new(rt, n_bins)?,
+            devices,
+            shard_acc: Vec::new(),
+            reduced: Vec::new(),
+            acc_f32: Vec::new(),
+        })
+    }
+}
+
+/// Clear `bufs` to `n_tiles` zeroed tiles of `tile_len`, reusing the
+/// existing allocations.
+fn reset_tiles(bufs: &mut Vec<Vec<i64>>, n_tiles: usize, tile_len: usize) {
+    bufs.resize(n_tiles, Vec::new());
+    for t in bufs.iter_mut() {
+        t.clear();
+        t.resize(tile_len, 0);
+    }
+}
+
+impl HistBackend for ShardedDeviceBackend {
+    fn best_splits(
+        &mut self,
+        source: &mut dyn EllpackSource,
+        grads: &[[f32; 2]],
+        partitioner: &mut RowPartitioner,
+        tree: &Tree,
+        cuts: &HistogramCuts,
+        params: &TreeParams,
+        active: &[u32],
+        _level: usize,
+        apply_level: Option<usize>,
+        totals: &[(f64, f64)],
+    ) -> Result<Vec<SplitCandidate>> {
+        let sharded = require_sharded(source)?;
+        let ShardedDeviceBackend { core, devices, shard_acc, reduced, acc_f32 } = self;
+        if sharded.n_shards() != devices.n_shards() {
+            return Err(Error::config(format!(
+                "source has {} shards but the device fleet has {}",
+                sharded.n_shards(),
+                devices.n_shards()
+            )));
+        }
+        let nf = cuts.n_features();
+        let n_tiles = core.n_tiles(nf);
+        let tile_len = core.tile_len();
+        let slots = core.slots();
+        let mut out = Vec::with_capacity(active.len());
+
+        let mut first_sweep = true;
+        for (chunk_idx, chunk) in active.chunks(slots).enumerate() {
+            reset_tiles(reduced, n_tiles, tile_len);
+            let apply = if first_sweep { apply_level } else { None };
+            for s in 0..devices.n_shards() {
+                // Kernel outputs are deterministic per (page, batch,
+                // tile) — none of which depend on the shard count — so
+                // quantizing each partial keeps the reduction exact and
+                // sharding-invariant.
+                reset_tiles(shard_acc, n_tiles, tile_len);
+                let allocs = core.sweep_chunk(
+                    devices.ctx(s),
+                    &mut sharded.shard_sources_mut()[s],
+                    grads,
+                    partitioner,
+                    tree,
+                    cuts,
+                    chunk,
+                    apply,
+                    &mut |t, part| allreduce::quantize_add(part, &mut shard_acc[t]),
+                )?;
+                for t in 0..n_tiles {
+                    allreduce::add_partial(&shard_acc[t], &mut reduced[t]);
+                }
+                drop(allocs);
+            }
+            first_sweep = false;
+
+            // Allreduce transport: each shard ships its partial level
+            // histogram and receives the reduced copy.
+            devices.charge_allreduce((n_tiles * tile_len * 4) as u64);
+
+            acc_f32.resize(n_tiles, Vec::new());
+            for (tile, v) in reduced.iter().zip(acc_f32.iter_mut()) {
+                allreduce::dequantize_into(tile, v);
+            }
+            // Post-allreduce evaluation runs once, on shard 0.
+            let base = chunk_idx * slots;
+            out.extend(core.evaluate_chunk(
+                devices.ctx(0),
+                acc_f32,
+                chunk,
+                &totals[base..base + chunk.len()],
+                params,
+                nf,
+            )?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ellpack::builder::convert_in_core;
+    use crate::tree::hist_cpu::CpuHistBackend;
+    use crate::tree::source::{MemoryStream, ShardedSource, StreamSource};
+    use crate::util::rng::Rng;
+
+    /// Random dense pages + gradients with signal on feature 1.
+    fn setup(
+        rows_per_page: usize,
+        n_pages: usize,
+    ) -> (Vec<crate::ellpack::EllpackPage>, Vec<[f32; 2]>, HistogramCuts) {
+        let mut rng = Rng::new(11);
+        let mut csr = crate::data::SparsePage::new(3);
+        let mut grads = Vec::new();
+        let rows = rows_per_page * n_pages;
+        for _ in 0..rows {
+            let vals: Vec<f32> = (0..3).map(|_| rng.next_f32()).collect();
+            let g = if vals[1] < 0.42 { -1.0 } else { 1.0 };
+            csr.push_dense_row(&vals);
+            grads.push([g, 1.0f32]);
+        }
+        let cuts = HistogramCuts::build(&[csr.clone()], 3, 16).unwrap();
+        let big = convert_in_core(&[csr], &cuts, 3, true);
+        // Re-cut the single page into equal chunks.
+        let mut pages = Vec::new();
+        for p in 0..n_pages {
+            let mut w = crate::ellpack::page::EllpackWriter::new(
+                rows_per_page,
+                3,
+                big.n_symbols(),
+                true,
+            );
+            let mut scratch = vec![0u32; 3];
+            for r in 0..rows_per_page {
+                big.unpack_row_into(p * rows_per_page + r, &mut scratch);
+                w.push_row(&scratch);
+            }
+            pages.push(w.finish((p * rows_per_page) as u64));
+        }
+        (pages, grads, cuts)
+    }
+
+    fn sharded_over(
+        pages: &[crate::ellpack::EllpackPage],
+        n_shards: usize,
+    ) -> ShardedSource {
+        let shared: Vec<std::sync::Arc<crate::ellpack::EllpackPage>> =
+            pages.iter().cloned().map(std::sync::Arc::new).collect();
+        let plan: Vec<(u64, usize)> =
+            pages.iter().map(|p| (p.base_rowid, p.n_rows())).collect();
+        let plan = crate::device::ShardPlan::partition(&plan, n_shards);
+        let mut shards = Vec::new();
+        for s in 0..n_shards {
+            let ps: Vec<_> =
+                plan.pages_of(s).iter().map(|&i| shared[i].clone()).collect();
+            shards.push(StreamSource::new(Box::new(MemoryStream::from_shared(ps))));
+        }
+        ShardedSource::new(shards)
+    }
+
+    fn root_split(
+        backend: &mut dyn HistBackend,
+        source: &mut dyn EllpackSource,
+        grads: &[[f32; 2]],
+        cuts: &HistogramCuts,
+        rows: usize,
+    ) -> SplitCandidate {
+        let mut part = RowPartitioner::new(rows);
+        let tree = Tree::single_leaf(0.0);
+        let params = TreeParams::default();
+        let tg: f64 = grads.iter().map(|g| g[0] as f64).sum();
+        let th: f64 = grads.iter().map(|g| g[1] as f64).sum();
+        backend
+            .best_splits(
+                source, grads, &mut part, &tree, cuts, &params, &[0], 0, None,
+                &[(tg, th)],
+            )
+            .unwrap()[0]
+    }
+
+    #[test]
+    fn shard_count_does_not_change_candidates() {
+        let (pages, grads, cuts) = setup(60, 6);
+        let rows = 360;
+        let mut reference = None;
+        for n_shards in [1usize, 2, 3, 6] {
+            let mut src = sharded_over(&pages, n_shards);
+            let mut be = ShardedCpuBackend::new();
+            let c = root_split(&mut be, &mut src, &grads, &cuts, rows);
+            assert!(c.valid);
+            let key = (
+                c.feature,
+                c.split_bin,
+                c.gain.to_bits(),
+                c.left_g.to_bits(),
+                c.left_h.to_bits(),
+            );
+            match &reference {
+                None => reference = Some(key),
+                Some(r) => assert_eq!(*r, key, "n_shards={n_shards}"),
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_cpu_agrees_with_plain_cpu_backend() {
+        let (pages, grads, cuts) = setup(80, 4);
+        let rows = 320;
+        let mut src = sharded_over(&pages, 2);
+        let mut sharded = ShardedCpuBackend::new();
+        let c_sh = root_split(&mut sharded, &mut src, &grads, &cuts, rows);
+        let mut plain_src =
+            crate::tree::source::InMemorySource::new(pages.clone());
+        let mut plain = CpuHistBackend::new(1);
+        let c_pl = root_split(&mut plain, &mut plain_src, &grads, &cuts, rows);
+        // Same decision; gains agree to quantization noise.
+        assert_eq!((c_sh.feature, c_sh.split_bin), (c_pl.feature, c_pl.split_bin));
+        assert!((c_sh.gain - c_pl.gain).abs() < 1e-4 * c_pl.gain.abs().max(1.0));
+    }
+
+    #[test]
+    fn plain_source_is_rejected() {
+        let (pages, grads, cuts) = setup(10, 2);
+        let mut src = crate::tree::source::InMemorySource::new(pages);
+        let mut be = ShardedCpuBackend::new();
+        let mut part = RowPartitioner::new(20);
+        let tree = Tree::single_leaf(0.0);
+        let params = TreeParams::default();
+        let err = be
+            .best_splits(
+                &mut src, &grads, &mut part, &tree, &cuts, &params, &[0], 0, None,
+                &[(0.0, 20.0)],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("sharded source"), "{err}");
+    }
+}

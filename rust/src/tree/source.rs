@@ -32,7 +32,7 @@ use std::sync::Arc;
 use crate::device::{DeviceAlloc, DeviceContext, Dir};
 use crate::ellpack::EllpackPage;
 use crate::error::Result;
-use crate::page::{read_decode_pipeline, PageFile};
+use crate::page::{read_decode_pipeline, read_decode_pipeline_subset, PageFile};
 
 /// A per-page hook applied by a stream's transfer stage.  Returns an
 /// optional staging allocation that is held until the consumer releases
@@ -189,11 +189,14 @@ impl PageStream for MemoryStream {
 
 /// Pages streamed from a disk page file; every sweep opens a fresh
 /// read → decode (→ transfer) pipeline with `depth`-bounded channels.
+/// An optional page-index subset restricts the sweep to one shard's
+/// pages (the read stage then never touches sibling shards' bytes).
 pub struct DiskStream {
     file: Arc<PageFile<EllpackPage>>,
     depth: usize,
     n_rows: usize,
     hook: Option<PageHook>,
+    pages: Option<Vec<usize>>,
 }
 
 impl DiskStream {
@@ -212,7 +215,7 @@ impl DiskStream {
         depth: usize,
         n_rows: usize,
     ) -> DiskStream {
-        DiskStream { file, depth, n_rows, hook: None }
+        DiskStream { file, depth, n_rows, hook: None, pages: None }
     }
 
     /// Attach a per-page transfer hook, applied as pages are delivered.
@@ -221,8 +224,19 @@ impl DiskStream {
         self
     }
 
+    /// Restrict sweeps to the given page indices (a shard's pages), in
+    /// the given order.  `n_rows` passed at construction must match the
+    /// subset's row count.
+    pub fn with_page_subset(mut self, indices: Vec<usize>) -> DiskStream {
+        self.pages = Some(indices);
+        self
+    }
+
     pub fn n_pages(&self) -> usize {
-        self.file.n_pages()
+        match &self.pages {
+            Some(idx) => idx.len(),
+            None => self.file.n_pages(),
+        }
     }
 
     /// One-shot sweep over a page file without building a stream (the
@@ -246,7 +260,15 @@ impl PageStream for DiskStream {
     }
 
     fn open(&self) -> Result<PageIter> {
-        DiskStream::open_file(&self.file, self.depth, self.hook.as_ref())
+        let Some(idx) = &self.pages else {
+            return DiskStream::open_file(&self.file, self.depth, self.hook.as_ref());
+        };
+        let pipe =
+            read_decode_pipeline_subset::<EllpackPage>(&self.file, self.depth, idx.clone())?;
+        Ok(match &self.hook {
+            Some(hook) => PageIter::Hooked { pipe, hook: hook.clone() },
+            None => PageIter::Owned(pipe),
+        })
     }
 }
 
@@ -260,6 +282,13 @@ pub trait EllpackSource {
         -> Result<()>;
     /// Number of sweeps performed (perf accounting).
     fn sweeps(&self) -> usize;
+    /// The sharded fan-out view, when this source is one.  Sharded
+    /// histogram backends use it to sweep each shard separately and
+    /// allreduce the partials; plain sources return `None` and are
+    /// swept whole.
+    fn as_sharded(&mut self) -> Option<&mut ShardedSource> {
+        None
+    }
 }
 
 /// Adapter: any [`PageStream`] as an [`EllpackSource`].
@@ -279,6 +308,13 @@ impl StreamSource {
     pub fn with_retained(stream: Box<dyn PageStream>, retained: Vec<DeviceAlloc>) -> StreamSource {
         StreamSource { stream, sweeps: 0, _retained: retained }
     }
+
+    /// Open one counted sweep.  Exposed so multi-stream consumers (the
+    /// sharded source) can hold several shards' pipelines open at once.
+    pub fn open_sweep(&mut self) -> Result<PageIter> {
+        self.sweeps += 1;
+        self.stream.open()
+    }
 }
 
 impl EllpackSource for StreamSource {
@@ -290,8 +326,7 @@ impl EllpackSource for StreamSource {
         &mut self,
         f: &mut dyn FnMut(&EllpackPage) -> Result<()>,
     ) -> Result<()> {
-        self.sweeps += 1;
-        for page in self.stream.open()? {
+        for page in self.open_sweep()? {
             f(&page?)?;
         }
         Ok(())
@@ -299,6 +334,67 @@ impl EllpackSource for StreamSource {
 
     fn sweeps(&self) -> usize {
         self.sweeps
+    }
+}
+
+/// One [`StreamSource`] per shard, in shard (row-range) order — the
+/// plural data placement of multi-device training.  Sharded histogram
+/// backends pull the per-shard sources out via
+/// [`EllpackSource::as_sharded`]; generic consumers get a global
+/// base_rowid-ordered sweep that opens *every* shard's pipeline up
+/// front (so shard prefetchers overlap) and drains them in order.  An
+/// error while draining drops all open pipelines, which unwinds and
+/// joins every shard's stage threads — the multi-stream extension of
+/// the pipeline's drop-joins-threads contract.
+pub struct ShardedSource {
+    shards: Vec<StreamSource>,
+    sweeps: usize,
+}
+
+impl ShardedSource {
+    pub fn new(shards: Vec<StreamSource>) -> ShardedSource {
+        assert!(!shards.is_empty(), "sharded source needs at least one shard");
+        ShardedSource { shards, sweeps: 0 }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard sources, in shard order (backends sweep these).
+    pub fn shard_sources_mut(&mut self) -> &mut [StreamSource] {
+        &mut self.shards
+    }
+}
+
+impl EllpackSource for ShardedSource {
+    fn n_rows(&self) -> usize {
+        self.shards.iter().map(|s| s.n_rows()).sum()
+    }
+
+    fn for_each_page(
+        &mut self,
+        f: &mut dyn FnMut(&EllpackPage) -> Result<()>,
+    ) -> Result<()> {
+        self.sweeps += 1;
+        let mut iters = Vec::with_capacity(self.shards.len());
+        for s in &mut self.shards {
+            iters.push(s.open_sweep()?);
+        }
+        for it in &mut iters {
+            for page in it {
+                f(&page?)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn sweeps(&self) -> usize {
+        self.sweeps
+    }
+
+    fn as_sharded(&mut self) -> Option<&mut ShardedSource> {
+        Some(self)
     }
 }
 
@@ -516,6 +612,57 @@ mod tests {
         assert_eq!(stats.h2d_transfers, 4); // 2 pages × 2 sweeps
         assert_eq!(ctx.mem.used(), 0); // staging freed
         std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn disk_subset_sweeps_only_shard_pages() {
+        let d = std::env::temp_dir().join(format!("oocgb-subset-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let mut w = PageFileWriter::create(&d.join("ep.bin")).unwrap();
+        for p in pages(5, 4) {
+            w.write_page(&p).unwrap();
+        }
+        let file = Arc::new(w.finish().unwrap());
+        let stream = DiskStream::with_rows(file, 1, 8).with_page_subset(vec![1, 3]);
+        assert_eq!(stream.n_pages(), 2);
+        let seen: Vec<u64> = stream
+            .open()
+            .unwrap()
+            .map(|p| p.unwrap().base_rowid)
+            .collect();
+        assert_eq!(seen, vec![4, 12]);
+        // Sweeps are repeatable.
+        assert_eq!(stream.open().unwrap().count(), 2);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn sharded_source_sweeps_shards_in_order() {
+        let ps: Vec<Arc<EllpackPage>> = pages(4, 3).into_iter().map(Arc::new).collect();
+        let shard = |range: std::ops::Range<usize>| {
+            StreamSource::new(Box::new(MemoryStream::from_shared(
+                ps[range].to_vec(),
+            )))
+        };
+        let mut src = ShardedSource::new(vec![shard(0..2), shard(2..3), shard(3..4)]);
+        assert_eq!(src.n_shards(), 3);
+        assert_eq!(EllpackSource::n_rows(&src), 12);
+        let mut seen = Vec::new();
+        src.for_each_page(&mut |p| {
+            seen.push(p.base_rowid);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![0, 3, 6, 9]);
+        assert_eq!(src.sweeps(), 1);
+        assert!(src.as_sharded().is_some());
+        // Per-shard sources are individually sweepable (backend path).
+        let n: usize = src.shard_sources_mut()[1]
+            .open_sweep()
+            .unwrap()
+            .map(|p| p.unwrap().n_rows())
+            .sum();
+        assert_eq!(n, 3);
     }
 
     #[test]

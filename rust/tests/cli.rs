@@ -114,12 +114,15 @@ fn bad_config_key_reports_error() {
 
 #[test]
 fn info_lists_artifacts_if_built() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
+    // The stub runtime synthesizes an inventory, so this runs on default
+    // builds too; PJRT builds need `make artifacts` first.
+    if cfg!(feature = "xla") && !std::path::Path::new("artifacts/manifest.json").exists()
+    {
         return;
     }
     let out = bin().arg("info").output().unwrap();
     assert!(out.status.success());
     let stdout = String::from_utf8_lossy(&out.stdout);
-    assert!(stdout.contains("PJRT platform"));
+    assert!(stdout.contains("platform"));
     assert!(stdout.contains("hist_b"));
 }

@@ -1,0 +1,421 @@
+//! Multi-device sharded training: equivalence, partitioning, and
+//! failure-path integration tests.
+//!
+//! The load-bearing property is **shard-count invariance**: because the
+//! sharded backends quantize page-granular partial histograms into
+//! fixed point and allreduce with exact integer addition
+//! (`tree/allreduce.rs`), training with 1, 2, or 4 shards over the same
+//! page set must produce *bit-identical* models — dense or sparse,
+//! in-core or out-of-core.
+
+use std::sync::Arc;
+
+use oocgb::boosting::GbtModel;
+use oocgb::config::{ExecMode, SamplingMethod, TrainConfig};
+use oocgb::coordinator::TrainSession;
+use oocgb::data::{synthetic, DMatrix, SparsePage};
+use oocgb::device::{ShardPlan, ShardedDevice};
+use oocgb::ellpack::page::EllpackWriter;
+use oocgb::page::PageFileWriter;
+use oocgb::tree::source::{h2d_staging_hook, DiskStream, ShardedSource, StreamSource};
+use oocgb::tree::EllpackSource;
+use oocgb::util::prop::run_prop;
+use oocgb::util::rng::Rng;
+
+/// Stub builds always have a runtime; PJRT builds need built artifacts.
+fn device_runtime_ready() -> bool {
+    if cfg!(not(feature = "xla")) {
+        return true;
+    }
+    let ok = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists();
+    if !ok {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn shard_cfg(mode: ExecMode, n_shards: usize, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.mode = mode;
+    cfg.n_shards = n_shards;
+    cfg.n_rounds = 4;
+    cfg.max_depth = 4;
+    cfg.max_bin = 16;
+    cfg.learning_rate = 0.4;
+    cfg.eval_fraction = 0.0;
+    cfg.seed = seed;
+    // Force several pages in OOC modes so shards get real subsets.
+    cfg.page_size_bytes = 4 * 1024;
+    cfg
+}
+
+fn train_model(data: DMatrix, cfg: TrainConfig) -> GbtModel {
+    TrainSession::from_memory(data, cfg).unwrap().train().unwrap().model
+}
+
+/// Bit-exact model comparison (floats compared via their bits).
+fn assert_models_identical(a: &GbtModel, b: &GbtModel, what: &str) {
+    assert_eq!(a.trees.len(), b.trees.len(), "{what}: tree count");
+    for (ti, (ta, tb)) in a.trees.iter().zip(&b.trees).enumerate() {
+        assert_eq!(ta.nodes.len(), tb.nodes.len(), "{what}: tree {ti} size");
+        for (ni, (na, nb)) in ta.nodes.iter().zip(&tb.nodes).enumerate() {
+            let ka = (
+                na.split_feature,
+                na.split_bin,
+                na.split_value.to_bits(),
+                na.left,
+                na.right,
+                na.weight.to_bits(),
+                na.gain.to_bits(),
+                na.sum_grad.to_bits(),
+                na.sum_hess.to_bits(),
+                na.depth,
+            );
+            let kb = (
+                nb.split_feature,
+                nb.split_bin,
+                nb.split_value.to_bits(),
+                nb.left,
+                nb.right,
+                nb.weight.to_bits(),
+                nb.gain.to_bits(),
+                nb.sum_grad.to_bits(),
+                nb.sum_hess.to_bits(),
+                nb.depth,
+            );
+            assert_eq!(ka, kb, "{what}: tree {ti} node {ni}");
+        }
+    }
+}
+
+/// Random sparse binary-classification data (exercises the null-symbol
+/// path the device modes reject but CPU sharding must handle).
+fn sparse_data(rows: usize, seed: u64) -> DMatrix {
+    let mut rng = Rng::new(seed);
+    let mut page = SparsePage::new(6);
+    let mut labels = Vec::new();
+    for _ in 0..rows {
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        let mut signal = 0f32;
+        for c in 0..6u32 {
+            if rng.bernoulli(0.55) {
+                let v = rng.next_f32();
+                if c == 2 {
+                    signal = v;
+                }
+                cols.push(c);
+                vals.push(v);
+            }
+        }
+        page.push_row(&cols, &vals);
+        labels.push(if signal > 0.45 { 1.0 } else { 0.0 });
+    }
+    DMatrix::from_page(page, labels).unwrap()
+}
+
+/// The headline acceptance test: N = 1 vs N = 4 (and 2) model identity,
+/// dense and sparse, in-core and out-of-core.
+#[test]
+fn prop_shard_equivalence_cpu_modes() {
+    run_prop("shard-count invariance (cpu)", 4, |g| {
+        let rows = g.usize_in(400..1200);
+        let seed = g.u64();
+        for mode in [ExecMode::CpuInCore, ExecMode::CpuOutOfCore] {
+            for dense in [true, false] {
+                let data = if dense {
+                    synthetic::higgs_like(rows, seed)
+                } else {
+                    sparse_data(rows, seed)
+                };
+                let reference =
+                    train_model(data.clone(), shard_cfg(mode, 1, seed));
+                for n_shards in [2usize, 4] {
+                    let m = train_model(
+                        data.clone(),
+                        shard_cfg(mode, n_shards, seed),
+                    );
+                    assert_models_identical(
+                        &reference,
+                        &m,
+                        &format!("{mode:?} dense={dense} n={n_shards}"),
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Sampling composes with sharding: the mask is drawn from a stream
+/// independent of data placement, so sampled runs stay shard-invariant.
+#[test]
+fn shard_equivalence_with_uniform_sampling() {
+    let data = synthetic::higgs_like(900, 77);
+    let mk = |n: usize| {
+        let mut cfg = shard_cfg(ExecMode::CpuOutOfCore, n, 77);
+        cfg.sampling_method = SamplingMethod::Uniform;
+        cfg.subsample = 0.6;
+        train_model(data.clone(), cfg)
+    };
+    let m1 = mk(1);
+    let m3 = mk(3);
+    assert_models_identical(&m1, &m3, "uniform-sampled ooc n=3");
+}
+
+/// More shards than pages: the empty shards contribute empty partials
+/// and the model is still identical.
+#[test]
+fn shard_equivalence_more_shards_than_pages() {
+    let data = synthetic::higgs_like(300, 5);
+    let mut cfg = shard_cfg(ExecMode::CpuOutOfCore, 1, 5);
+    cfg.page_size_bytes = 64 * 1024; // few pages
+    let reference = train_model(data.clone(), cfg.clone());
+    cfg.n_shards = 8;
+    let m8 = train_model(data, cfg);
+    assert_models_identical(&reference, &m8, "n=8 over few pages");
+}
+
+/// Device in-core sharding through the runtime (stub or PJRT): the
+/// per-batch kernel partials quantize identically for every fleet
+/// size, so device models are shard-invariant too.
+#[test]
+fn shard_equivalence_device_in_core() {
+    if !device_runtime_ready() {
+        return;
+    }
+    let data = synthetic::higgs_like(1500, 21);
+    let mk = |n: usize| {
+        let mut cfg = shard_cfg(ExecMode::DeviceInCore, n, 21);
+        cfg.max_bin = 64; // compiled artifact width
+        train_model(data.clone(), cfg)
+    };
+    let m1 = mk(1);
+    let m2 = mk(2);
+    let m4 = mk(4);
+    assert_models_identical(&m1, &m2, "device-in-core n=2");
+    assert_models_identical(&m1, &m4, "device-in-core n=4");
+}
+
+/// Sharded Algorithm 6 (naive streaming): every shard stages only its
+/// own pages, and the model still matches the single-shard run.
+#[test]
+fn shard_equivalence_device_naive_ooc() {
+    if !device_runtime_ready() {
+        return;
+    }
+    let data = synthetic::higgs_like(1200, 33);
+    let mk = |n: usize| {
+        let mut cfg = shard_cfg(ExecMode::DeviceOutOfCoreNaive, n, 33);
+        cfg.max_bin = 64;
+        train_model(data.clone(), cfg)
+    };
+    let m1 = mk(1);
+    let m2 = mk(2);
+    assert_models_identical(&m1, &m2, "naive-ooc n=2");
+}
+
+/// Sharded Algorithm 7 (per-shard compaction) trains, samples, and
+/// stays within every shard's budget.  (Compacted page boundaries
+/// depend on the fleet size, so this mode is learning-equivalent, not
+/// bit-equivalent.)
+#[test]
+fn sharded_compacted_mode_learns_and_respects_budgets() {
+    if !device_runtime_ready() {
+        return;
+    }
+    let data = synthetic::higgs_like(4000, 9);
+    let mut cfg = shard_cfg(ExecMode::DeviceOutOfCore, 3, 9);
+    cfg.max_bin = 64;
+    cfg.n_rounds = 6;
+    cfg.eval_fraction = 0.2;
+    cfg.sampling_method = SamplingMethod::Mvs;
+    cfg.subsample = 0.5;
+    cfg.page_size_bytes = 16 * 1024;
+    let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
+    assert_eq!(out.model.trees.len(), 6);
+    let (_, auc) = *out.eval_history.last().unwrap();
+    assert!(auc > 0.6, "auc={auc}");
+    // Fleet rollup: capacity is summed across 3 shards and the peak
+    // stayed within it.
+    assert_eq!(out.mem_capacity.unwrap(), 3 * 256 * 1024 * 1024);
+    assert!(out.mem_peak.unwrap() <= out.mem_capacity.unwrap());
+    // The allreduce showed up on the link in both directions.
+    let link = out.link_stats.unwrap();
+    assert!(link.d2h_transfers > 0 && link.h2d_transfers > 0);
+}
+
+// ---- ShardPlan partitioning (satellite: coverage properties) ----
+
+/// Every row is covered exactly once for arbitrary page layouts —
+/// including rechunked boundaries (uneven pages) and empty pages.
+#[test]
+fn prop_shard_plan_covers_every_row_once() {
+    run_prop("shard plan exact row cover", 40, |g| {
+        let n_pages = g.usize_in(1..20);
+        let mut pages = Vec::new();
+        let mut base = 0u64;
+        for _ in 0..n_pages {
+            // Zero-row pages model rechunk edge cases.
+            let rows = if g.bool() { g.usize_in(0..50) } else { g.usize_in(1..8) };
+            pages.push((base, rows));
+            base += rows as u64;
+        }
+        let total = base;
+        for n_shards in [1usize, 2, 3, 4, 7, 16] {
+            let plan = ShardPlan::partition(&pages, n_shards);
+            assert_eq!(plan.n_rows() as u64, total);
+            // Each page appears in exactly one shard, in order.
+            let mut seen = Vec::new();
+            for s in 0..plan.n_shards() {
+                seen.extend_from_slice(plan.pages_of(s));
+            }
+            assert_eq!(seen, (0..n_pages).collect::<Vec<_>>());
+            // Shard ranges tile [0, total) and agree with page sums.
+            let mut cursor = 0u64;
+            for s in 0..plan.n_shards() {
+                let (b, e) = plan.range(s);
+                assert_eq!(b, cursor, "shard {s} gap (n={n_shards})");
+                let rows: usize = plan.pages_of(s).iter().map(|&i| pages[i].1).sum();
+                assert_eq!(rows, plan.rows_in(s));
+                cursor = e;
+            }
+            assert_eq!(cursor, total);
+            // Row → shard lookup is consistent with ownership.
+            for r in (0..total).step_by(7.max(total as usize / 13 + 1)) {
+                let s = plan.shard_of_row(r);
+                let (b, e) = plan.range(s);
+                assert!(r >= b && r < e);
+            }
+        }
+    });
+}
+
+/// The plan built from a real session's rechunked spill: every trained
+/// row routed through exactly one shard (this goes through the whole
+/// from_page_stream → rechunk → convert path).
+#[test]
+fn shard_plan_matches_rechunked_session_pages() {
+    let data = synthetic::higgs_like(700, 13);
+    let pages = data.to_sized_pages(1024);
+    // Uneven page boundaries by construction.
+    assert!(pages.len() > 3);
+    let metas: Vec<(u64, usize)> =
+        pages.iter().map(|p| (p.base_rowid, p.n_rows())).collect();
+    let plan = ShardPlan::partition(&metas, 3);
+    let covered: usize = (0..3).map(|s| plan.rows_in(s)).sum();
+    assert_eq!(covered, 700);
+}
+
+// ---- Per-shard failure paths (satellite: OOM teardown) ----
+
+/// Write an ELLPACK page file of `n` pages × `rows` rows.
+fn ellpack_file(
+    dir: &std::path::Path,
+    n: usize,
+    rows: usize,
+) -> Arc<oocgb::page::PageFile<oocgb::ellpack::EllpackPage>> {
+    let mut w = PageFileWriter::create(&dir.join("ep.bin")).unwrap();
+    let mut base = 0u64;
+    for i in 0..n {
+        let mut ew = EllpackWriter::new(rows, 2, 16, true);
+        for r in 0..rows {
+            ew.push_row(&[(i + r) as u32 % 15, r as u32 % 15]);
+        }
+        w.write_page(&ew.finish(base)).unwrap();
+        base += rows as u64;
+    }
+    Arc::new(w.finish().unwrap())
+}
+
+/// One starved shard OOMs mid-sweep; the sharded source's open
+/// pipelines (all shards' read/decode threads are already running) are
+/// torn down and joined without deadlock, and every sibling shard's
+/// staging is freed.
+#[test]
+fn starved_shard_oom_tears_down_sibling_pipelines() {
+    let d = std::env::temp_dir()
+        .join(format!("oocgb-shard-oom-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    let file = ellpack_file(&d, 6, 64);
+    // Shard 1 can't stage a single page; shards 0 and 2 are roomy.
+    let fleet = ShardedDevice::with_budgets(&[1 << 20, 16, 1 << 20]);
+    let mut shards = Vec::new();
+    for (s, idx) in [vec![0usize, 1], vec![2, 3], vec![4, 5]].into_iter().enumerate()
+    {
+        shards.push(StreamSource::new(Box::new(
+            DiskStream::with_rows(file.clone(), 2, 128)
+                .with_page_subset(idx)
+                .with_hook(h2d_staging_hook(fleet.ctx(s).clone())),
+        )));
+    }
+    let mut source = ShardedSource::new(shards);
+    let mut pages_seen = 0usize;
+    let err = source
+        .for_each_page(&mut |_| {
+            pages_seen += 1;
+            Ok(())
+        })
+        .unwrap_err();
+    assert!(err.is_device_oom(), "unexpected error: {err}");
+    // Shard 0 delivered its pages before the starved shard failed.
+    assert_eq!(pages_seen, 2);
+    // All staging guards released on teardown — nothing leaks.
+    for s in 0..3 {
+        assert_eq!(fleet.ctx(s).mem.used(), 0, "shard {s} leaked staging");
+    }
+    // The source is reusable after the failed sweep: same error again,
+    // no deadlock (the multi-stream drop-joins-threads contract).
+    assert!(source.for_each_page(&mut |_| Ok(())).unwrap_err().is_device_oom());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+/// Session-level: a sharded device run whose per-shard budget can't
+/// hold its working set surfaces DeviceOom from construction-time
+/// staging/loading, with no hang.
+#[test]
+fn sharded_session_surfaces_device_oom() {
+    if !device_runtime_ready() {
+        return;
+    }
+    let data = synthetic::higgs_like(20_000, 3);
+    let mut cfg = shard_cfg(ExecMode::DeviceInCore, 4, 3);
+    cfg.max_bin = 64;
+    cfg.device_memory_bytes = 96 * 1024; // holds row buffers, not pages
+    let err = match TrainSession::from_memory(data, cfg) {
+        Err(e) => e,
+        Ok(s) => match s.train() {
+            Err(e) => e,
+            Ok(_) => panic!("expected a sharded OOM"),
+        },
+    };
+    assert!(err.is_device_oom(), "unexpected error: {err}");
+}
+
+/// Sharded naive streaming with a starved fleet: the OOM arrives from
+/// inside a level sweep (per-shard histogram/staging allocations while
+/// sibling shard pipelines exist), and the session still unwinds
+/// cleanly.
+#[test]
+fn sharded_naive_ooc_oom_during_level_sweep_unwinds() {
+    if !device_runtime_ready() {
+        return;
+    }
+    let data = synthetic::higgs_like(30_000, 41);
+    let mut cfg = shard_cfg(ExecMode::DeviceOutOfCoreNaive, 3, 41);
+    cfg.max_bin = 64;
+    cfg.page_size_bytes = 256 * 1024;
+    // Enough for preprocessing's transient staging and the per-shard
+    // row buffers, but not for a level's histogram + batch staging
+    // (≈ 0.5 MiB + ≥ 0.5 MiB at the compiled shapes).
+    cfg.device_memory_bytes = 1024 * 1024;
+    let err = match TrainSession::from_memory(data, cfg) {
+        Err(e) => e,
+        Ok(s) => match s.train() {
+            Err(e) => e,
+            Ok(_) => panic!("expected a sharded OOM"),
+        },
+    };
+    assert!(err.is_device_oom(), "unexpected error: {err}");
+}
