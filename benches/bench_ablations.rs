@@ -12,6 +12,9 @@
 //! 6. **Shard count** — data-parallel sharding with histogram
 //!    allreduce: fleet-wide link volume and the allreduce tax as the
 //!    simulated device count grows (emits a `BENCH {...}` json line).
+//! 7. **Page transport** — codec × device page cache: bit-packed disk
+//!    frames vs raw, and LRU-cached repeat sweeps vs cold streaming
+//!    (emits a `BENCH {...}` json line).
 
 #[path = "common.rs"]
 mod common;
@@ -21,9 +24,14 @@ use std::sync::Arc;
 use common::*;
 use oocgb::config::{ExecMode, SamplingMethod};
 use oocgb::data::{synthetic, SparsePage};
-use oocgb::ellpack::EllpackBuilder;
-use oocgb::page::{read_decode_pipeline, PageFileWriter};
+use oocgb::device::{DeviceContext, PageCache};
+use oocgb::ellpack::page::EllpackWriter;
+use oocgb::ellpack::{EllpackBuilder, EllpackPage};
+use oocgb::page::{read_decode_pipeline, PageCodec, PageFile, PageFileWriter};
 use oocgb::sketch::HistogramCuts;
+use oocgb::tree::source::{cached_h2d_hook, h2d_staging_hook, DiskStream};
+use oocgb::tree::PageStream;
+use oocgb::util::rng::Rng;
 use oocgb::util::timer::Stopwatch;
 
 fn ablate_sampler() {
@@ -241,6 +249,167 @@ fn ablate_shard_count() {
     );
 }
 
+fn ablate_page_transport() {
+    header("Ablation 7 — page transport: codec × device page cache");
+    use oocgb::util::json::{num, s, Value};
+
+    // Table-1-shaped pages: 500 features × 64 bins.  The raw wire
+    // format spends ceil(log2(32001)) = 15 bits on every entry; the
+    // per-column frame-of-reference codec needs 6.
+    let stride = 500usize;
+    let n_symbols = stride as u32 * 64 + 1;
+    let rows_per_page = scaled(2_000).min(2_000);
+    let n_pages = 6usize;
+    let dir = std::env::temp_dir().join(format!("oocgb-ablate7-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let write_file = |codec: PageCodec| -> Arc<PageFile<EllpackPage>> {
+        // Same seed per codec: identical pages, different frames.
+        let mut rng = Rng::new(2020);
+        let path = dir.join(format!("pages-{}.bin", codec.name()));
+        let mut w = PageFileWriter::with_codec(&path, codec).unwrap();
+        let mut row = vec![0u32; stride];
+        for p in 0..n_pages {
+            let mut pw = EllpackWriter::new(rows_per_page, stride, n_symbols, true);
+            for _ in 0..rows_per_page {
+                for (k, v) in row.iter_mut().enumerate() {
+                    *v = k as u32 * 64 + (rng.next_u64() % 64) as u32;
+                }
+                pw.push_row(&row);
+            }
+            w.write_page(&pw.finish((p * rows_per_page) as u64)).unwrap();
+        }
+        Arc::new(w.finish().unwrap())
+    };
+    let raw = write_file(PageCodec::Raw);
+    let bp = write_file(PageCodec::BitPack);
+    let disk_ratio = raw.payload_bytes() as f64 / bp.payload_bytes() as f64;
+
+    // The h2d hook charges encoded frame bytes, so a cold streaming
+    // sweep moves the same ratio fewer bytes across the link.
+    let sweep_h2d = |file: &Arc<PageFile<EllpackPage>>| -> u64 {
+        let ctx = DeviceContext::new(512 << 20);
+        let stream = DiskStream::with_rows(file.clone(), 2, n_pages * rows_per_page)
+            .with_hook(h2d_staging_hook(ctx.clone()));
+        for p in stream.open().unwrap() {
+            p.unwrap();
+        }
+        ctx.link.stats().h2d_bytes
+    };
+    let (h2d_raw, h2d_bp) = (sweep_h2d(&raw), sweep_h2d(&bp));
+    println!("| codec | disk bytes | cold-sweep h2d bytes | ratio vs raw |");
+    println!("|-------|------------|----------------------|--------------|");
+    println!("| raw | {} | {h2d_raw} | 1.00 |", raw.payload_bytes());
+    println!("| bitpack | {} | {h2d_bp} | {disk_ratio:.2} |", bp.payload_bytes());
+    assert!(
+        disk_ratio >= 2.0 && h2d_raw as f64 >= 2.0 * h2d_bp as f64,
+        "bit-packing must at least halve disk + h2d bytes at 64 bins: {disk_ratio:.2}"
+    );
+
+    // Device page cache over the bit-packed file: with a whole-file
+    // budget, every sweep after the first hits and charges zero link
+    // bytes; an undersized budget thrashes in LRU order instead.
+    let cache_sweeps = |budget: u64, sweeps: usize| {
+        let ctx = DeviceContext::new(512 << 20);
+        let cache = Arc::new(PageCache::new(budget));
+        let stream = DiskStream::with_rows(bp.clone(), 2, n_pages * rows_per_page)
+            .with_cache(cache.clone())
+            .with_hook(cached_h2d_hook(ctx.clone(), cache.clone()));
+        for _ in 0..sweeps {
+            for p in stream.open().unwrap() {
+                p.unwrap();
+            }
+        }
+        (cache.stats(), ctx.link.stats().h2d_bytes)
+    };
+    let resident: u64 =
+        (0..n_pages).map(|i| bp.read_page(i).unwrap().memory_bytes() as u64).sum();
+    let (full, h2d_full) = cache_sweeps(resident + 64, 3);
+    let (small, h2d_small) = cache_sweeps(resident / 3, 3);
+    println!("\n| cache budget | sweeps | hits | misses | evictions | h2d bytes |");
+    println!("|--------------|--------|------|--------|-----------|-----------|");
+    println!(
+        "| whole file | 3 | {} | {} | {} | {h2d_full} |",
+        full.hits, full.misses, full.evictions
+    );
+    println!(
+        "| 1/3 file | 3 | {} | {} | {} | {h2d_small} |",
+        small.hits, small.misses, small.evictions
+    );
+    assert_eq!(full.misses, n_pages as u64);
+    assert_eq!(full.hits, 2 * n_pages as u64);
+    assert_eq!(h2d_full, bp.payload_bytes(), "cache hits must charge zero link bytes");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // End-to-end: naive device streaming re-reads the page file every
+    // tree level, so codec and cache savings compound per round.
+    let rows = scaled(40_000);
+    let rounds = ((10.0 * scale()) as usize).max(3);
+    println!("\n| codec | cache | h2d bytes | simulated link (s) | hits | misses |");
+    println!("|-------|-------|-----------|--------------------|------|--------|");
+    let mut arms = Vec::new();
+    let mut nodes_seen: Option<usize> = None;
+    let mut h2d_by_arm = Vec::new();
+    for (codec, cache_mb) in
+        [(PageCodec::Raw, 0u64), (PageCodec::BitPack, 0), (PageCodec::BitPack, 64)]
+    {
+        let mut cfg = table2_cfg(ExecMode::DeviceOutOfCoreNaive);
+        cfg.n_rounds = rounds;
+        cfg.max_depth = 6;
+        cfg.page_size_bytes = 256 * 1024;
+        cfg.page_codec = codec;
+        cfg.page_cache_bytes = cache_mb * 1024 * 1024;
+        let (out, _) = run(synthetic::higgs_like(rows, 21), cfg).unwrap();
+        let link = out.link_stats.clone().unwrap();
+        let (hits, misses) = out
+            .cache_stats
+            .map(|c| (c.hits, c.misses))
+            .unwrap_or((0, 0));
+        println!(
+            "| {} | {} MiB | {} | {:.3} | {hits} | {misses} |",
+            codec.name(),
+            cache_mb,
+            link.h2d_bytes,
+            link.sim_seconds
+        );
+        // Transport must not change the model: same trees whatever the
+        // codec or cache setting.
+        let nodes: usize = out.model.trees.iter().map(|t| t.n_nodes()).sum();
+        match nodes_seen {
+            None => nodes_seen = Some(nodes),
+            Some(n) => assert_eq!(n, nodes, "transport settings changed the model"),
+        }
+        h2d_by_arm.push(link.h2d_bytes);
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("codec".to_string(), s(codec.name()));
+        m.insert("cache_mb".to_string(), num(cache_mb as f64));
+        m.insert("h2d_bytes".to_string(), num(link.h2d_bytes as f64));
+        m.insert("link_sim_s".to_string(), num(link.sim_seconds));
+        m.insert("cache_hits".to_string(), num(hits as f64));
+        m.insert("cache_misses".to_string(), num(misses as f64));
+        arms.push(Value::Object(m));
+    }
+    assert!(
+        h2d_by_arm[2] < h2d_by_arm[1] && h2d_by_arm[1] < h2d_by_arm[0],
+        "each transport layer must strictly shrink h2d: {h2d_by_arm:?}"
+    );
+
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("bench".to_string(), s("page_transport"));
+    top.insert("disk_ratio_64bin".to_string(), num(disk_ratio));
+    top.insert("raw_payload_bytes".to_string(), num(raw.payload_bytes() as f64));
+    top.insert("bitpack_payload_bytes".to_string(), num(bp.payload_bytes() as f64));
+    top.insert("cache_full_hits".to_string(), num(full.hits as f64));
+    top.insert("cache_small_evictions".to_string(), num(small.evictions as f64));
+    top.insert("rows".to_string(), num(rows as f64));
+    top.insert("arms".to_string(), Value::Array(arms));
+    println!("\nBENCH {}", Value::Object(top).to_json());
+    println!(
+        "\nbit-packing halves what out-of-core training reads and ships per \
+         sweep; the LRU cache then removes repeat-sweep transfers entirely \
+         while the budget holds the working set."
+    );
+}
+
 fn main() {
     println!("# Ablations");
     ablate_sampler();
@@ -249,4 +418,5 @@ fn main() {
     ablate_prefetch_depth();
     ablate_overlapped_conversion();
     ablate_shard_count();
+    ablate_page_transport();
 }

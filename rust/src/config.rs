@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::error::{Error, Result};
+use crate::page::codec::PageCodec;
 use crate::util::json::Value;
 
 /// Which training pipeline to run — the six modes of Table 2.
@@ -145,6 +146,15 @@ pub struct TrainConfig {
     pub device_memory_bytes: u64,
     /// Target ELLPACK page size in bytes (paper: 32 MiB).
     pub page_size_bytes: usize,
+    /// Frame codec for spilled ELLPACK pages.  Bit-packing is lossless
+    /// (the trained model is bit-identical to `raw`) and shrinks both
+    /// disk and simulated h2d bytes, at the cost of encode/decode work
+    /// that overlaps I/O in the pipeline.
+    pub page_codec: PageCodec,
+    /// Device-memory budget for the resident page cache in out-of-core
+    /// device modes (0 = cache disabled).  Carved out of
+    /// `device_memory_bytes`, per shard when sharding.
+    pub page_cache_bytes: u64,
     /// Prefetcher queue depth (pages in flight per read/decode stage).
     pub prefetch_depth: usize,
     /// Bounded-channel depth for the preprocessing pipeline stages
@@ -190,6 +200,8 @@ impl Default for TrainConfig {
             n_shards: 0,
             device_memory_bytes: 256 * 1024 * 1024,
             page_size_bytes: 32 * 1024 * 1024,
+            page_codec: PageCodec::BitPack,
+            page_cache_bytes: 0,
             prefetch_depth: 2,
             pipeline_depth: 2,
             n_threads: 0,
@@ -277,6 +289,11 @@ impl TrainConfig {
             "page_size_mb" => {
                 self.page_size_bytes = pf::<usize>(key, v)? * 1024 * 1024
             }
+            "page_codec" => self.page_codec = PageCodec::parse(v)?,
+            "page_cache_bytes" => self.page_cache_bytes = pf(key, v)?,
+            "page_cache_mb" => {
+                self.page_cache_bytes = pf::<u64>(key, v)? * 1024 * 1024
+            }
             "prefetch_depth" => self.prefetch_depth = pf(key, v)?,
             "pipeline_depth" => self.pipeline_depth = pf(key, v)?,
             "n_threads" | "nthread" => self.n_threads = pf(key, v)?,
@@ -331,6 +348,12 @@ impl TrainConfig {
         if self.n_shards > 256 {
             return Err(Error::config("n_shards must be <= 256"));
         }
+        if self.page_cache_bytes > 0 && self.page_cache_bytes >= self.device_memory_bytes
+        {
+            return Err(Error::config(
+                "page_cache_bytes must leave device memory for working state",
+            ));
+        }
         Ok(())
     }
 
@@ -355,6 +378,8 @@ impl TrainConfig {
             num(self.device_memory_bytes as f64),
         );
         m.insert("page_size_bytes".into(), num(self.page_size_bytes as f64));
+        m.insert("page_codec".into(), s(self.page_codec.name()));
+        m.insert("page_cache_bytes".into(), num(self.page_cache_bytes as f64));
         m.insert("prefetch_depth".into(), num(self.prefetch_depth as f64));
         m.insert("pipeline_depth".into(), num(self.pipeline_depth as f64));
         m.insert("seed".into(), num(self.seed as f64));
@@ -407,11 +432,15 @@ mod tests {
                 "device_memory_mb=64".into(),
                 "pipeline_depth=4".into(),
                 "n_shards=4".into(),
+                "page_codec=raw".into(),
+                "page_cache_mb=16".into(),
             ],
         )
         .unwrap();
         assert_eq!(cfg.pipeline_depth, 4);
         assert_eq!(cfg.n_shards, 4);
+        assert_eq!(cfg.page_codec, PageCodec::Raw);
+        assert_eq!(cfg.page_cache_bytes, 16 * 1024 * 1024);
         assert_eq!(cfg.max_depth, 8);
         assert_eq!(cfg.learning_rate, 0.1);
         assert_eq!(cfg.mode, ExecMode::DeviceOutOfCore);
@@ -427,6 +456,13 @@ mod tests {
         assert!(TrainConfig::load(None, &["subsample=0".into()]).is_err());
         assert!(TrainConfig::load(None, &["lambda=0".into()]).is_err());
         assert!(TrainConfig::load(None, &["n_shards=1000".into()]).is_err());
+        assert!(TrainConfig::load(None, &["page_codec=zip".into()]).is_err());
+        // Cache can't swallow the whole device budget.
+        assert!(TrainConfig::load(
+            None,
+            &["device_memory_mb=64".into(), "page_cache_mb=64".into()]
+        )
+        .is_err());
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::boosting::GbtModel;
 use crate::config::ExecMode;
 use crate::coordinator::modes::{self, TrainData};
 use crate::coordinator::session::{TrainOutcome, TrainSession};
-use crate::device::{DeviceAlloc, Dir, ShardPlan};
+use crate::device::{CacheStats, DeviceAlloc, Dir, ShardPlan};
 use crate::ellpack::{compact::Compactor, EllpackPage};
 use crate::error::{Error, Result};
 use crate::sampling::Sampler;
@@ -25,7 +25,10 @@ use crate::tree::{
     hist_device::DeviceHistBackend,
     partitioner::RowPartitioner,
     sharded::{ShardedCpuBackend, ShardedDeviceBackend},
-    source::{h2d_staging_hook, DiskStream, InMemorySource, MemoryStream, StreamSource},
+    source::{
+        cached_h2d_hook, h2d_staging_hook, DiskStream, InMemorySource, MemoryStream,
+        StreamSource,
+    },
     EllpackSource, PageStream, ShardedSource, Tree, TreeBuilder, TreeParams,
 };
 use crate::util::rng::Rng;
@@ -90,13 +93,8 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
             modes::open_sharded_source(&session.data, plan, session.device.as_ref(), &cfg)?
                 .map(|s| Box::new(s) as Box<dyn EllpackSource>)
         }
-        None => modes::open_source(
-            &session.data,
-            session.device.as_ref().map(|d| &d.ctx),
-            &cfg,
-            n_rows,
-        )?
-        .map(|s| Box::new(s) as Box<dyn EllpackSource>),
+        None => modes::open_source(&session.data, session.device.as_ref(), &cfg, n_rows)?
+            .map(|s| Box::new(s) as Box<dyn EllpackSource>),
     };
 
     let sw_total = Stopwatch::start();
@@ -234,6 +232,18 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
         },
         None => (None, None, None, None),
     };
+    // Page-cache rollup across the fleet (or the single device).
+    let cache_stats = session.device.as_ref().and_then(|dev| {
+        if dev.page_caches.is_empty() {
+            None
+        } else {
+            let mut total = CacheStats::default();
+            for c in &dev.page_caches {
+                total.add(&c.stats());
+            }
+            Some(total)
+        }
+    });
     // Clean the spill directory.
     if matches!(session.data, TrainData::Disk(_)) {
         let _ = std::fs::remove_dir_all(&session.cache_dir);
@@ -247,6 +257,7 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
         compute_stats,
         mem_peak,
         mem_capacity,
+        cache_stats,
         mean_sample_rows: if sampled_rounds > 0 {
             sample_rows_total as f64 / sampled_rounds as f64
         } else {
@@ -378,8 +389,9 @@ impl TrainSession {
         let mut compactor =
             Compactor::new(mask, n_selected, self.row_stride, n_symbols, self.dense);
         // Each source page is staged on device and moves across the
-        // link once per round (the transfer hook charges it).
-        for page in modes::compaction_sweep(file, &dev.ctx, &self.cfg)? {
+        // link once per round (the transfer hook charges it; cached
+        // pages skip the link).
+        for page in modes::compaction_sweep(file, dev, &self.cfg)? {
             compactor.push_page(&page?);
         }
         let (compacted, row_map) = compactor.finish();
@@ -450,15 +462,21 @@ impl TrainSession {
             let mut compactor =
                 Compactor::new(mask, n_sel, self.row_stride, n_symbols, self.dense);
             // The shard's pages stage on its device and cross its link
-            // once per round (the transfer hook charges them).
-            let sweep = DiskStream::with_rows(
+            // once per round (the transfer hook charges them; cached
+            // pages skip both).
+            let stream = DiskStream::with_rows(
                 file.clone(),
                 self.cfg.prefetch_depth,
                 plan.rows_in(s),
             )
-            .with_page_subset(plan.pages_of(s).to_vec())
-            .with_hook(h2d_staging_hook(ctx.clone()))
-            .open()?;
+            .with_page_subset(plan.pages_of(s).to_vec());
+            let stream = match dev.page_caches.get(s) {
+                Some(cache) => stream
+                    .with_cache(cache.clone())
+                    .with_hook(cached_h2d_hook(ctx.clone(), cache.clone())),
+                None => stream.with_hook(h2d_staging_hook(ctx.clone())),
+            };
+            let sweep = stream.open()?;
             for page in sweep {
                 compactor.push_page(&page?);
             }

@@ -26,7 +26,7 @@ use std::sync::Arc;
 
 use crate::config::{ExecMode, TrainConfig};
 use crate::data::SparsePage;
-use crate::device::{DeviceAlloc, DeviceContext, Dir, ShardPlan, ShardedDevice};
+use crate::device::{DeviceAlloc, DeviceContext, Dir, PageCache, ShardPlan, ShardedDevice};
 use crate::ellpack::{EllpackBuilder, EllpackPage};
 use crate::error::{Error, Result};
 use crate::page::pipeline::Pipeline;
@@ -34,8 +34,8 @@ use crate::page::{PageFile, PageFileWriter, Prefetcher};
 use crate::runtime::Runtime;
 use crate::sketch::{HistogramCuts, SketchBuilder};
 use crate::tree::source::{
-    h2d_staging_hook, load_resident, DiskStream, MemoryStream, PageIter, ShardedSource,
-    StreamSource,
+    cached_h2d_hook, h2d_staging_hook, load_resident, DiskStream, MemoryStream, PageIter,
+    ShardedSource, StreamSource,
 };
 
 /// Where the quantized training data lives after preprocessing.
@@ -60,6 +60,13 @@ pub(crate) struct DeviceSetup {
     /// when sharded: each shard budgets its own rows once the shard
     /// plan exists (`loop.rs`).
     pub _row_buffers: Option<DeviceAlloc>,
+    /// Resident page caches for out-of-core device sweeps, one per
+    /// shard (index-aligned with the fleet; a single entry when
+    /// unsharded).  Empty when `page_cache_bytes` is 0 or the mode
+    /// never re-reads pages.  Each cache allocates through its shard's
+    /// `MemoryManager`, so cached pages show up in `MemStats` under the
+    /// `page_cache` tag.
+    pub page_caches: Vec<Arc<PageCache>>,
 }
 
 /// Load the AOT runtime and budget the per-row working set (device
@@ -75,16 +82,36 @@ pub(crate) fn device_setup(cfg: &TrainConfig, n_rows: usize) -> Result<Option<De
             cfg.max_bin
         )));
     }
+    let caches = |n: usize| -> Vec<Arc<PageCache>> {
+        if cfg.page_cache_bytes > 0 && cfg.mode.is_out_of_core() {
+            (0..n).map(|_| Arc::new(PageCache::new(cfg.page_cache_bytes))).collect()
+        } else {
+            Vec::new()
+        }
+    };
     if cfg.n_shards >= 1 {
         let shards = ShardedDevice::new(cfg.n_shards, cfg.device_memory_bytes);
         let ctx = shards.ctx(0).clone();
-        return Ok(Some(DeviceSetup { rt, ctx, shards: Some(shards), _row_buffers: None }));
+        let page_caches = caches(cfg.n_shards);
+        return Ok(Some(DeviceSetup {
+            rt,
+            ctx,
+            shards: Some(shards),
+            _row_buffers: None,
+            page_caches,
+        }));
     }
     let ctx = DeviceContext::new(cfg.device_memory_bytes);
     // Per-row working set resident for the whole run: gradient pairs
     // (8 B), positions (4 B), prediction cache (4 B).
     let row_buffers = ctx.mem.alloc("row_buffers", n_rows as u64 * 16)?;
-    Ok(Some(DeviceSetup { rt, ctx, shards: None, _row_buffers: Some(row_buffers) }))
+    Ok(Some(DeviceSetup {
+        rt,
+        ctx,
+        shards: None,
+        _row_buffers: Some(row_buffers),
+        page_caches: caches(1),
+    }))
 }
 
 /// Scratch directory for this session's spill files.  The process-wide
@@ -255,7 +282,7 @@ pub(crate) fn build_train_data(
     if out_of_core {
         std::fs::create_dir_all(cache_dir)?;
         let path = cache_dir.join("ellpack.pages");
-        let mut writer = PageFileWriter::create(&path)?;
+        let mut writer = PageFileWriter::with_codec(&path, cfg.page_codec)?;
         for page in pipe {
             let page = page?;
             if let Some(ctx) = device {
@@ -285,7 +312,7 @@ pub(crate) fn build_train_data(
 /// compaction sweep every round instead ([`compaction_sweep`]).
 pub(crate) fn open_source(
     data: &TrainData,
-    device: Option<&DeviceContext>,
+    device: Option<&DeviceSetup>,
     cfg: &TrainConfig,
     n_rows: usize,
 ) -> Result<Option<StreamSource>> {
@@ -294,7 +321,7 @@ pub(crate) fn open_source(
             Box::new(MemoryStream::from_shared(pages.clone())),
         ))),
         (TrainData::HostPages(pages), ExecMode::DeviceInCore) => {
-            let ctx = device.expect("device mode without device context");
+            let ctx = &device.expect("device mode without device context").ctx;
             let allocs = load_resident(pages, ctx)?;
             Ok(Some(StreamSource::with_retained(
                 Box::new(MemoryStream::from_shared(pages.clone())),
@@ -305,11 +332,15 @@ pub(crate) fn open_source(
             Box::new(DiskStream::with_rows(file.clone(), cfg.prefetch_depth, n_rows)),
         ))),
         (TrainData::Disk(file), ExecMode::DeviceOutOfCoreNaive) => {
-            let ctx = device.expect("device mode without device context");
-            Ok(Some(StreamSource::new(Box::new(
-                DiskStream::with_rows(file.clone(), cfg.prefetch_depth, n_rows)
-                    .with_hook(h2d_staging_hook(ctx.clone())),
-            ))))
+            let dev = device.expect("device mode without device context");
+            let stream = DiskStream::with_rows(file.clone(), cfg.prefetch_depth, n_rows);
+            let stream = match dev.page_caches.first() {
+                Some(cache) => stream
+                    .with_cache(cache.clone())
+                    .with_hook(cached_h2d_hook(dev.ctx.clone(), cache.clone())),
+                None => stream.with_hook(h2d_staging_hook(dev.ctx.clone())),
+            };
+            Ok(Some(StreamSource::new(Box::new(stream))))
         }
         (TrainData::Disk(_), ExecMode::DeviceOutOfCore) => Ok(None),
         _ => Err(Error::config(format!(
@@ -368,11 +399,17 @@ pub(crate) fn open_sharded_source(
         (TrainData::Disk(file), ExecMode::DeviceOutOfCoreNaive) => {
             let fleet = fleet.expect("sharded device mode without a device fleet");
             for s in 0..n {
-                shards.push(StreamSource::new(Box::new(
+                let stream =
                     DiskStream::with_rows(file.clone(), cfg.prefetch_depth, plan.rows_in(s))
-                        .with_page_subset(plan.pages_of(s).to_vec())
-                        .with_hook(h2d_staging_hook(fleet.ctx(s).clone())),
-                )));
+                        .with_page_subset(plan.pages_of(s).to_vec());
+                let ctx = fleet.ctx(s).clone();
+                let stream = match device.and_then(|d| d.page_caches.get(s)) {
+                    Some(cache) => stream
+                        .with_cache(cache.clone())
+                        .with_hook(cached_h2d_hook(ctx, cache.clone())),
+                    None => stream.with_hook(h2d_staging_hook(ctx)),
+                };
+                shards.push(StreamSource::new(Box::new(stream)));
             }
         }
         (TrainData::Disk(_), ExecMode::DeviceOutOfCore) => return Ok(None),
@@ -387,15 +424,20 @@ pub(crate) fn open_sharded_source(
 }
 
 /// One hooked sweep for Algorithm 7's per-round compaction: every page
-/// is staged on device and charged across the link before the
-/// compactor gathers its sampled rows.
+/// is staged on device (or served from the resident cache, skipping the
+/// link) and charged across the link before the compactor gathers its
+/// sampled rows.
 pub(crate) fn compaction_sweep(
     file: &PageFile<EllpackPage>,
-    ctx: &DeviceContext,
+    dev: &DeviceSetup,
     cfg: &TrainConfig,
 ) -> Result<PageIter> {
-    let hook = h2d_staging_hook(ctx.clone());
-    DiskStream::open_file(file, cfg.prefetch_depth, Some(&hook))
+    let cache = dev.page_caches.first();
+    let hook = match cache {
+        Some(cache) => cached_h2d_hook(dev.ctx.clone(), cache.clone()),
+        None => h2d_staging_hook(dev.ctx.clone()),
+    };
+    DiskStream::open_file(file, cfg.prefetch_depth, Some(&hook), cache)
 }
 
 /// One host-side pass over the prepared data (margin updates): the
@@ -403,7 +445,7 @@ pub(crate) fn compaction_sweep(
 pub(crate) fn data_sweep(data: &TrainData, depth: usize) -> Result<PageIter> {
     match data {
         TrainData::HostPages(pages) => Ok(PageIter::from_shared(pages.clone())),
-        TrainData::Disk(file) => DiskStream::open_file(file, depth, None),
+        TrainData::Disk(file) => DiskStream::open_file(file, depth, None, None),
     }
 }
 

@@ -52,6 +52,9 @@ pub struct TrainOutcome {
     pub compute_stats: Option<(f64, u64)>,
     pub mem_peak: Option<u64>,
     pub mem_capacity: Option<u64>,
+    /// Device page-cache counters, rolled up across shards (device
+    /// out-of-core modes with `page_cache_bytes > 0` only).
+    pub cache_stats: Option<crate::device::CacheStats>,
     /// Mean selected rows per sampled round.
     pub mean_sample_rows: f64,
 }

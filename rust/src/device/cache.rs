@@ -1,0 +1,210 @@
+//! Device-side LRU page cache.
+//!
+//! Out-of-core sweeps re-read the same ELLPACK pages every round; when
+//! some device memory is spare, keeping the hottest pages resident lets
+//! repeat sweeps skip both the disk read and the host→device transfer
+//! entirely.  The cache is capacity-bounded twice over: by its own byte
+//! `budget` (a config knob) and by the device [`MemoryManager`] it
+//! allocates through — an admission that would overrun either is
+//! declined gracefully rather than erroring, since caching is an
+//! optimisation, never a correctness requirement.
+//!
+//! Eviction is least-recently-used via a monotonic access stamp; with
+//! sweeps touching pages in a deterministic order, hit/miss/eviction
+//! counts are deterministic too, which the transport bench relies on.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::device::memory::{DeviceAlloc, MemoryManager};
+use crate::ellpack::EllpackPage;
+
+/// Counters a cache (or a fleet of per-shard caches) accumulates.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Decompressed bytes currently resident.
+    pub resident_bytes: u64,
+    pub resident_pages: u64,
+}
+
+impl CacheStats {
+    /// Fold another cache's counters in (per-shard rollup).
+    pub fn add(&mut self, o: &CacheStats) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.evictions += o.evictions;
+        self.resident_bytes += o.resident_bytes;
+        self.resident_pages += o.resident_pages;
+    }
+}
+
+struct Entry {
+    page: Arc<EllpackPage>,
+    /// Holds the page's bytes against the device budget while cached.
+    _alloc: DeviceAlloc,
+    stamp: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: HashMap<usize, Entry>,
+    clock: u64,
+    used: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Capacity-bounded LRU cache of decompressed ELLPACK pages, keyed by
+/// page index within the (single, immutable) page file of a sweep.
+pub struct PageCache {
+    budget: u64,
+    inner: Mutex<Inner>,
+}
+
+impl PageCache {
+    pub fn new(budget: u64) -> PageCache {
+        PageCache { budget, inner: Mutex::new(Inner::default()) }
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Look up page `index`; a hit refreshes its recency stamp.
+    pub fn lookup(&self, index: usize) -> Option<Arc<EllpackPage>> {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        match inner.entries.get_mut(&index) {
+            Some(e) => {
+                inner.clock += 1;
+                e.stamp = inner.clock;
+                inner.hits += 1;
+                Some(Arc::clone(&e.page))
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Try to make `page` resident, evicting least-recently-used entries
+    /// as needed.  Returns whether the page is resident afterwards; a
+    /// page too big for the budget, or a device allocation failure, just
+    /// declines admission.
+    pub fn admit(&self, index: usize, page: Arc<EllpackPage>, mem: &Arc<MemoryManager>) -> bool {
+        let bytes = page.memory_bytes() as u64;
+        if bytes > self.budget {
+            return false;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        if inner.entries.contains_key(&index) {
+            return true;
+        }
+        while inner.used + bytes > self.budget {
+            let oldest = inner
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(&k, _)| k)
+                .expect("used > 0 implies a resident entry");
+            let evicted = inner.entries.remove(&oldest).unwrap();
+            inner.used -= evicted.page.memory_bytes() as u64;
+            inner.evictions += 1;
+        }
+        let Ok(alloc) = mem.alloc("page_cache", bytes) else {
+            return false;
+        };
+        inner.clock += 1;
+        inner.used += bytes;
+        inner.entries.insert(index, Entry { page, _alloc: alloc, stamp: inner.clock });
+        true
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            resident_bytes: inner.used,
+            resident_pages: inner.entries.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ellpack::page::EllpackWriter;
+
+    fn page(rows: usize) -> Arc<EllpackPage> {
+        let mut w = EllpackWriter::new(rows, 2, 16, true);
+        for r in 0..rows {
+            w.push_row(&[r as u32 % 15, (r as u32 + 1) % 15]);
+        }
+        Arc::new(w.finish(0))
+    }
+
+    #[test]
+    fn evicts_in_lru_order() {
+        let p = page(4);
+        let bytes = p.memory_bytes() as u64;
+        let mem = Arc::new(MemoryManager::new(bytes * 16));
+        let cache = PageCache::new(bytes * 2); // room for two pages
+        assert!(cache.admit(0, p.clone(), &mem));
+        assert!(cache.admit(1, p.clone(), &mem));
+        // Touch 0 so 1 becomes least recently used.
+        assert!(cache.lookup(0).is_some());
+        assert!(cache.admit(2, p.clone(), &mem));
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.resident_pages, 2);
+        assert!(cache.lookup(1).is_none(), "LRU page 1 should be gone");
+        assert!(cache.lookup(0).is_some());
+        assert!(cache.lookup(2).is_some());
+        // Device accounting matches residency the whole way.
+        assert_eq!(mem.used(), 2 * bytes);
+    }
+
+    #[test]
+    fn device_pressure_declines_admission() {
+        let p = page(4);
+        let bytes = p.memory_bytes() as u64;
+        let mem = Arc::new(MemoryManager::new(bytes + bytes / 2));
+        let cache = PageCache::new(bytes * 8); // cache budget is not the limit
+        assert!(cache.admit(0, p.clone(), &mem));
+        // The device is now too full; admission declines without error
+        // and without evicting what already fits.
+        assert!(!cache.admit(1, p.clone(), &mem));
+        assert_eq!(cache.stats().resident_pages, 1);
+        assert!(cache.lookup(0).is_some());
+    }
+
+    #[test]
+    fn oversized_page_rejected_outright() {
+        let p = page(64);
+        let mem = Arc::new(MemoryManager::new(1 << 20));
+        let cache = PageCache::new(8); // smaller than any page
+        assert!(!cache.admit(0, p, &mem));
+        assert_eq!(cache.stats().resident_pages, 0);
+        assert_eq!(mem.used(), 0);
+    }
+
+    #[test]
+    fn readmitting_resident_page_is_idempotent() {
+        let p = page(4);
+        let bytes = p.memory_bytes() as u64;
+        let mem = Arc::new(MemoryManager::new(bytes * 4));
+        let cache = PageCache::new(bytes * 4);
+        assert!(cache.admit(0, p.clone(), &mem));
+        assert!(cache.admit(0, p.clone(), &mem));
+        assert_eq!(cache.stats().resident_pages, 1);
+        assert_eq!(mem.used(), bytes);
+    }
+}

@@ -17,11 +17,13 @@
 //!   `latency + bytes / bandwidth` of simulated transfer time, recorded
 //!   separately from wall-clock so benches can report both.
 
+pub mod cache;
 pub mod interconnect;
 pub mod memory;
 pub mod shard;
 pub mod timing;
 
+pub use cache::{CacheStats, PageCache};
 pub use interconnect::{Dir, Interconnect, LinkStats};
 pub use memory::{DeviceAlloc, MemStats, MemoryManager};
 pub use shard::{ShardPlan, ShardedDevice};

@@ -9,9 +9,14 @@
 //! backpressure caps memory at a few pages per stage.  [`Prefetcher`]
 //! is the canonical read→decode instance of that pipeline.
 
+pub mod codec;
 pub mod pipeline;
 pub mod prefetch;
 pub mod store;
 
-pub use prefetch::{read_decode_pipeline, read_decode_pipeline_subset, Prefetcher};
-pub use store::{PageFile, PageFileWriter, PageReader, Serializable};
+pub use codec::PageCodec;
+pub use prefetch::{
+    read_decode_pipeline, read_decode_pipeline_subset, staged_ellpack_pipeline, Prefetcher,
+    StagedPage,
+};
+pub use store::{decode_frame, PageFile, PageFileWriter, PageReader, Serializable};

@@ -12,9 +12,13 @@
 //! conversion, host→device transfer) extend [`read_decode_pipeline`]
 //! with further `then`/`then_stage` calls.
 
+use std::sync::Arc;
+
+use crate::device::PageCache;
+use crate::ellpack::EllpackPage;
 use crate::error::Result;
 use crate::page::pipeline::Pipeline;
-use crate::page::store::{PageFile, Serializable};
+use crate::page::store::{decode_frame, PageFile, Serializable};
 
 /// Build the standard read → decode pipeline over a page file, in page
 /// order.  The read handle is opened up front (page files are immutable
@@ -35,9 +39,67 @@ pub fn read_decode_pipeline_subset<T: Serializable + Send + 'static>(
     indices: Vec<usize>,
 ) -> Result<Pipeline<T>> {
     let mut reader = file.reader()?;
+    let version = file.version();
     let source = indices.into_iter().map(move |i| reader.read_raw(i));
     Ok(Pipeline::from_iter("read", depth, source)
-        .then("decode", depth, |bytes: Vec<u8>| T::from_bytes(&bytes)))
+        .then("decode", depth, move |bytes: Vec<u8>| decode_frame(version, &bytes)))
+}
+
+/// One ELLPACK page as delivered by [`staged_ellpack_pipeline`]:
+/// the decoded page plus the transport facts the h2d hooks need —
+/// how many bytes actually crossed the wire for it, and whether it
+/// was served from the device-side cache (in which case nothing did).
+pub struct StagedPage {
+    pub page: Arc<EllpackPage>,
+    /// Index of the page within its file.
+    pub index: usize,
+    /// Encoded frame bytes read from disk (0 on a cache hit) — this is
+    /// also what a host→device copy of the compressed frame would cost.
+    pub wire_bytes: u64,
+    /// True when the page was already resident in the device cache.
+    pub from_cache: bool,
+}
+
+enum Fetched {
+    Cached(Arc<EllpackPage>, usize),
+    Frame(Vec<u8>, usize),
+}
+
+/// Read → decode pipeline for ELLPACK pages that consults an optional
+/// device-side [`PageCache`] in the read stage: hits skip both the disk
+/// read and the decode, and are flagged so downstream hooks charge zero
+/// interconnect bytes.  Decompression runs on the decode thread, so it
+/// overlaps the next page's I/O under the same bounded-channel
+/// backpressure as [`read_decode_pipeline_subset`].
+pub fn staged_ellpack_pipeline(
+    file: &PageFile<EllpackPage>,
+    depth: usize,
+    indices: Vec<usize>,
+    cache: Option<Arc<PageCache>>,
+) -> Result<Pipeline<StagedPage>> {
+    let mut reader = file.reader()?;
+    let version = file.version();
+    let source = indices.into_iter().map(move |i| match &cache {
+        Some(c) => match c.lookup(i) {
+            Some(page) => Ok(Fetched::Cached(page, i)),
+            None => reader.read_raw(i).map(|b| Fetched::Frame(b, i)),
+        },
+        None => reader.read_raw(i).map(|b| Fetched::Frame(b, i)),
+    });
+    Ok(Pipeline::from_iter("read", depth, source).then(
+        "decode",
+        depth,
+        move |fetched: Fetched| match fetched {
+            Fetched::Cached(page, index) => {
+                Ok(StagedPage { page, index, wire_bytes: 0, from_cache: true })
+            }
+            Fetched::Frame(bytes, index) => {
+                let wire_bytes = bytes.len() as u64;
+                let page: EllpackPage = decode_frame(version, &bytes)?;
+                Ok(StagedPage { page: Arc::new(page), index, wire_bytes, from_cache: false })
+            }
+        },
+    ))
 }
 
 /// Streaming iterator over a [`PageFile`], reading ahead on background

@@ -1,24 +1,52 @@
 //! On-disk page file: `[magic | version | page count | offset index |
-//! pages...]`, every page length-prefixed and CRC-checked.
+//! frames...]`, every frame length-prefixed and CRC-checked.
 //!
 //! The format is deliberately simple — the paper's contribution is the
 //! access *pattern* (sequential streaming), not the container — but it
 //! detects truncation and corruption, which the failure-injection tests
 //! exercise.
+//!
+//! Version 2 adds one codec-id byte at the head of every frame
+//! (`[codec_id u8][payload]`), so files are self-describing across the
+//! codecs in `page/codec.rs` and the length + checksum in the index
+//! cover the whole frame.  Version 1 files (no codec byte, implicitly
+//! raw) still open and read.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
+use crate::page::codec::{self, PageCodec, CODEC_RAW};
 
 const MAGIC: u64 = 0x4F4F_4347_4250_4147; // "OOCGBPAG"
-const VERSION: u64 = 1;
+const VERSION: u64 = 2;
+/// Oldest on-disk version this build still reads.
+const MIN_VERSION: u64 = 1;
 
 /// Types that can live in a page file.
+///
+/// `to_bytes`/`from_bytes` are the raw wire format; `encode`/`decode`
+/// are the codec-aware framing hooks.  The defaults ignore the codec
+/// selection and always write raw — page types with a real compressed
+/// representation (ELLPACK) override both.
 pub trait Serializable: Sized {
     fn to_bytes(&self) -> Vec<u8>;
     fn from_bytes(bytes: &[u8]) -> Result<Self>;
+
+    /// Encode for a v2 frame: `(codec_id, payload)`.
+    fn encode(&self, _codec: PageCodec) -> (u8, Vec<u8>) {
+        (CODEC_RAW, self.to_bytes())
+    }
+
+    /// Decode a v2 frame payload tagged with `codec_id`.
+    fn decode(codec_id: u8, bytes: &[u8]) -> Result<Self> {
+        if codec_id == CODEC_RAW {
+            Self::from_bytes(bytes)
+        } else {
+            Err(Error::PageStore(format!("unknown page codec id {codec_id}")))
+        }
+    }
 }
 
 impl Serializable for crate::data::SparsePage {
@@ -37,11 +65,26 @@ impl Serializable for crate::ellpack::EllpackPage {
     fn from_bytes(bytes: &[u8]) -> Result<Self> {
         crate::ellpack::EllpackPage::from_bytes(bytes)
     }
+    fn encode(&self, sel: PageCodec) -> (u8, Vec<u8>) {
+        match sel {
+            PageCodec::Raw => (codec::CODEC_RAW, self.to_bytes()),
+            PageCodec::BitPack => (codec::CODEC_BITPACK, codec::encode_bitpack(self)),
+        }
+    }
+    fn decode(codec_id: u8, bytes: &[u8]) -> Result<Self> {
+        match codec_id {
+            codec::CODEC_RAW => Self::from_bytes(bytes),
+            codec::CODEC_BITPACK => codec::decode_bitpack(bytes),
+            other => Err(Error::PageStore(format!("unknown page codec id {other}"))),
+        }
+    }
 }
 
-/// FNV-1a — cheap integrity check per page.
-fn checksum(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a fold step — lets the writer hash a frame's codec byte and
+/// payload without concatenating them.
+fn fnv_update(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x1000_0000_01b3);
@@ -49,10 +92,46 @@ fn checksum(bytes: &[u8]) -> u64 {
     h
 }
 
+/// FNV-1a — cheap integrity check per frame.
+fn checksum(bytes: &[u8]) -> u64 {
+    fnv_update(FNV_OFFSET, bytes)
+}
+
+/// Read frame `i` from an open descriptor and verify its checksum — the
+/// one shared verify path under both [`PageFile::read_page`] and
+/// [`PageReader::read_raw`].
+fn read_verified(file: &mut File, index: &[(u64, u64, u64)], i: usize) -> Result<Vec<u8>> {
+    let (off, len, sum) = *index
+        .get(i)
+        .ok_or_else(|| Error::PageStore(format!("page {i} out of range")))?;
+    file.seek(SeekFrom::Start(off))?;
+    let mut bytes = vec![0u8; len as usize];
+    file.read_exact(&mut bytes)
+        .map_err(|_| Error::PageStore(format!("truncated page {i}")))?;
+    if checksum(&bytes) != sum {
+        return Err(Error::PageStore(format!("checksum mismatch on page {i}")));
+    }
+    Ok(bytes)
+}
+
+/// Decode one checksum-verified frame according to the file version:
+/// v1 frames are bare raw payloads; v2 frames lead with a codec-id
+/// byte.  This is the pipeline's decode-stage entry point.
+pub fn decode_frame<T: Serializable>(version: u64, frame: &[u8]) -> Result<T> {
+    if version < 2 {
+        return T::from_bytes(frame);
+    }
+    let Some((&codec_id, payload)) = frame.split_first() else {
+        return Err(Error::PageStore("empty page frame".into()));
+    };
+    T::decode(codec_id, payload)
+}
+
 /// Streaming page-file writer.
 pub struct PageFileWriter<T: Serializable> {
     path: PathBuf,
     file: BufWriter<File>,
+    codec: PageCodec,
     offsets: Vec<(u64, u64, u64)>, // (offset, len, checksum)
     pos: u64,
     _marker: std::marker::PhantomData<T>,
@@ -60,6 +139,12 @@ pub struct PageFileWriter<T: Serializable> {
 
 impl<T: Serializable> PageFileWriter<T> {
     pub fn create(path: &Path) -> Result<Self> {
+        Self::with_codec(path, PageCodec::Raw)
+    }
+
+    /// Create a writer whose frames are encoded with `codec` (for page
+    /// types without a compressed representation this degrades to raw).
+    pub fn with_codec(path: &Path, codec: PageCodec) -> Result<Self> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
@@ -69,19 +154,22 @@ impl<T: Serializable> PageFileWriter<T> {
         Ok(PageFileWriter {
             path: path.to_path_buf(),
             file,
+            codec,
             offsets: Vec::new(),
             pos: 32,
             _marker: std::marker::PhantomData,
         })
     }
 
-    /// Append one page.
+    /// Append one page as a `[codec_id][payload]` frame.
     pub fn write_page(&mut self, page: &T) -> Result<()> {
-        let bytes = page.to_bytes();
-        let sum = checksum(&bytes);
-        self.file.write_all(&bytes)?;
-        self.offsets.push((self.pos, bytes.len() as u64, sum));
-        self.pos += bytes.len() as u64;
+        let (id, payload) = page.encode(self.codec);
+        let sum = fnv_update(fnv_update(FNV_OFFSET, &[id]), &payload);
+        self.file.write_all(&[id])?;
+        self.file.write_all(&payload)?;
+        let len = payload.len() as u64 + 1;
+        self.offsets.push((self.pos, len, sum));
+        self.pos += len;
         Ok(())
     }
 
@@ -112,6 +200,7 @@ impl<T: Serializable> PageFileWriter<T> {
 /// A readable page file.
 pub struct PageFile<T: Serializable> {
     path: PathBuf,
+    version: u64,
     index: Vec<(u64, u64, u64)>,
     _marker: std::marker::PhantomData<T>,
 }
@@ -126,8 +215,9 @@ impl<T: Serializable> PageFile<T> {
         if g(0) != MAGIC {
             return Err(Error::PageStore(format!("bad magic in {}", path.display())));
         }
-        if g(1) != VERSION {
-            return Err(Error::PageStore(format!("unsupported version {}", g(1))));
+        let version = g(1);
+        if !(MIN_VERSION..=VERSION).contains(&version) {
+            return Err(Error::PageStore(format!("unsupported version {version}")));
         }
         let n_pages = g(2) as usize;
         let index_offset = g(3);
@@ -143,7 +233,12 @@ impl<T: Serializable> PageFile<T> {
                 u64::from_le_bytes(buf[16..24].try_into().unwrap()),
             ));
         }
-        Ok(PageFile { path: path.to_path_buf(), index, _marker: std::marker::PhantomData })
+        Ok(PageFile {
+            path: path.to_path_buf(),
+            version,
+            index,
+            _marker: std::marker::PhantomData,
+        })
     }
 
     pub fn n_pages(&self) -> usize {
@@ -154,26 +249,22 @@ impl<T: Serializable> PageFile<T> {
         &self.path
     }
 
-    /// Total bytes of page payload (disk footprint of the dataset).
+    /// On-disk format version (frames carry a codec byte from v2 on).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Total bytes of page frames (disk footprint of the dataset; with
+    /// a compressing codec this is the *compressed* footprint).
     pub fn payload_bytes(&self) -> u64 {
         self.index.iter().map(|(_, len, _)| len).sum()
     }
 
     /// Read and decode page `i`, verifying its checksum.
     pub fn read_page(&self, i: usize) -> Result<T> {
-        let (off, len, sum) = *self
-            .index
-            .get(i)
-            .ok_or_else(|| Error::PageStore(format!("page {i} out of range")))?;
         let mut f = File::open(&self.path)?;
-        f.seek(SeekFrom::Start(off))?;
-        let mut bytes = vec![0u8; len as usize];
-        f.read_exact(&mut bytes)
-            .map_err(|_| Error::PageStore(format!("truncated page {i}")))?;
-        if checksum(&bytes) != sum {
-            return Err(Error::PageStore(format!("checksum mismatch on page {i}")));
-        }
-        T::from_bytes(&bytes)
+        let frame = read_verified(&mut f, &self.index, i)?;
+        decode_frame(self.version, &frame)
     }
 
     /// Sequential iterator (no prefetch; see [`crate::page::Prefetcher`]
@@ -188,6 +279,7 @@ impl<T: Serializable> PageFile<T> {
     pub fn reader(&self) -> Result<PageReader<T>> {
         Ok(PageReader {
             file: File::open(&self.path)?,
+            version: self.version,
             index: self.index.clone(),
             _marker: std::marker::PhantomData,
         })
@@ -196,10 +288,11 @@ impl<T: Serializable> PageFile<T> {
 
 /// Sweeping reader over a finished page file.  Splits I/O from decode so
 /// the two can run as separate pipeline stages: [`PageReader::read_raw`]
-/// returns the checksum-verified payload bytes; `T::from_bytes` is the
+/// returns the checksum-verified frame bytes; [`decode_frame`] is the
 /// decode half.
 pub struct PageReader<T: Serializable> {
     file: File,
+    version: u64,
     index: Vec<(u64, u64, u64)>,
     _marker: std::marker::PhantomData<T>,
 }
@@ -209,26 +302,20 @@ impl<T: Serializable> PageReader<T> {
         self.index.len()
     }
 
-    /// Read page `i`'s payload and verify its checksum (no decode).
+    /// On-disk format version of the underlying file.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Read page `i`'s frame and verify its checksum (no decode).
     pub fn read_raw(&mut self, i: usize) -> Result<Vec<u8>> {
-        let (off, len, sum) = *self
-            .index
-            .get(i)
-            .ok_or_else(|| Error::PageStore(format!("page {i} out of range")))?;
-        self.file.seek(SeekFrom::Start(off))?;
-        let mut bytes = vec![0u8; len as usize];
-        self.file
-            .read_exact(&mut bytes)
-            .map_err(|_| Error::PageStore(format!("truncated page {i}")))?;
-        if checksum(&bytes) != sum {
-            return Err(Error::PageStore(format!("checksum mismatch on page {i}")));
-        }
-        Ok(bytes)
+        read_verified(&mut self.file, &self.index, i)
     }
 
     /// Read and decode page `i`.
     pub fn read_page(&mut self, i: usize) -> Result<T> {
-        T::from_bytes(&self.read_raw(i)?)
+        let frame = self.read_raw(i)?;
+        decode_frame(self.version, &frame)
     }
 }
 
@@ -266,6 +353,7 @@ mod tests {
         }
         let f = w.finish().unwrap();
         assert_eq!(f.n_pages(), 5);
+        assert_eq!(f.version(), VERSION);
         for (i, p) in src.iter().enumerate() {
             assert_eq!(&f.read_page(i).unwrap(), p);
         }
@@ -345,9 +433,11 @@ mod tests {
         let f = w.finish().unwrap();
         let mut r = f.reader().unwrap();
         assert_eq!(r.n_pages(), 4);
-        // Raw bytes decode to the same page the typed read returns.
+        // Raw frame bytes decode to the same page the typed read
+        // returns (first byte is the codec id).
         let raw = r.read_raw(2).unwrap();
-        assert_eq!(SparsePage::from_bytes(&raw).unwrap(), src[2]);
+        assert_eq!(raw[0], CODEC_RAW);
+        assert_eq!(decode_frame::<SparsePage>(f.version(), &raw).unwrap(), src[2]);
         assert_eq!(r.read_page(1).unwrap(), src[1]);
         assert!(r.read_raw(4).is_err());
         std::fs::remove_dir_all(&d).ok();
@@ -368,5 +458,112 @@ mod tests {
         let f = w.finish().unwrap();
         assert_eq!(f.read_page(0).unwrap(), page);
         std::fs::remove_dir_all(&d).ok();
+    }
+
+    /// Write the same pages raw and bit-packed: both decode
+    /// identically, and the bit-packed file is smaller on disk.
+    #[test]
+    fn ellpack_bitpack_file_roundtrip_and_shrinks() {
+        use crate::ellpack::page::EllpackWriter;
+        let d = tmpdir("bitpack");
+        let make_pages = || {
+            (0..3).map(|i| {
+                // Wide global alphabet, narrow per-column ranges.
+                let mut ew = EllpackWriter::new(64, 8, 8 * 64 + 1, true);
+                for r in 0..64 {
+                    let row: Vec<u32> =
+                        (0..8).map(|k| k as u32 * 64 + ((r + i) % 64) as u32).collect();
+                    ew.push_row(&row);
+                }
+                ew.finish(i as u64 * 64)
+            })
+        };
+        let mut wr = PageFileWriter::create(&d.join("raw.bin")).unwrap();
+        let mut wb =
+            PageFileWriter::with_codec(&d.join("bp.bin"), PageCodec::BitPack).unwrap();
+        for p in make_pages() {
+            wr.write_page(&p).unwrap();
+            wb.write_page(&p).unwrap();
+        }
+        let fr = wr.finish().unwrap();
+        let fb = wb.finish().unwrap();
+        assert!(fb.payload_bytes() < fr.payload_bytes());
+        for (i, p) in make_pages().enumerate() {
+            assert_eq!(fb.read_page(i).unwrap(), p);
+            assert_eq!(fr.read_page(i).unwrap(), p);
+        }
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    /// Corrupting a *compressed* frame's payload still surfaces as a
+    /// checksum error before the codec ever sees it.
+    #[test]
+    fn corrupt_compressed_frame_detected() {
+        use crate::ellpack::page::EllpackWriter;
+        let d = tmpdir("bp-corrupt");
+        let path = d.join("bp.bin");
+        let mut w = PageFileWriter::with_codec(&path, PageCodec::BitPack).unwrap();
+        for i in 0..2 {
+            let mut ew = EllpackWriter::new(16, 4, 100, true);
+            for r in 0..16 {
+                ew.push_row(&[r as u32, 50, 60, 70]);
+            }
+            w.write_page(&ew.finish(i * 16)).unwrap();
+        }
+        let f = w.finish().unwrap();
+        let (off, len, _) = f.index[1];
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[off as usize + len as usize / 2] ^= 0x5A;
+        std::fs::write(&path, &bytes).unwrap();
+        let f = PageFile::<crate::ellpack::EllpackPage>::open(&path).unwrap();
+        assert!(f.read_page(0).is_ok());
+        let err = f.read_page(1).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    /// Hand-craft a version-1 file (no codec bytes): it must still open
+    /// and decode — old spills stay readable.
+    #[test]
+    fn version_1_files_still_load() {
+        let d = tmpdir("v1");
+        let path = d.join("old.bin");
+        let src = pages(2);
+        let mut body: Vec<u8> = vec![0u8; 32];
+        let mut index = Vec::new();
+        for p in &src {
+            let payload = Serializable::to_bytes(p);
+            index.push((body.len() as u64, payload.len() as u64, checksum(&payload)));
+            body.extend_from_slice(&payload);
+        }
+        let index_offset = body.len() as u64;
+        for (off, len, sum) in &index {
+            body.extend_from_slice(&off.to_le_bytes());
+            body.extend_from_slice(&len.to_le_bytes());
+            body.extend_from_slice(&sum.to_le_bytes());
+        }
+        body[0..8].copy_from_slice(&MAGIC.to_le_bytes());
+        body[8..16].copy_from_slice(&1u64.to_le_bytes());
+        body[16..24].copy_from_slice(&(src.len() as u64).to_le_bytes());
+        body[24..32].copy_from_slice(&index_offset.to_le_bytes());
+        std::fs::write(&path, &body).unwrap();
+        let f = PageFile::<SparsePage>::open(&path).unwrap();
+        assert_eq!(f.version(), 1);
+        for (i, p) in src.iter().enumerate() {
+            assert_eq!(&f.read_page(i).unwrap(), p);
+        }
+        // The persistent reader honors the old framing too.
+        let mut r = f.reader().unwrap();
+        assert_eq!(r.read_page(1).unwrap(), src[1]);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    /// An unknown codec id in a v2 frame errors instead of
+    /// misdecoding.
+    #[test]
+    fn unknown_codec_id_rejected() {
+        let err = decode_frame::<SparsePage>(2, &[99, 1, 2, 3]).unwrap_err();
+        assert!(err.to_string().contains("codec"), "{err}");
+        assert!(decode_frame::<SparsePage>(2, &[]).is_err());
     }
 }

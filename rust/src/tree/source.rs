@@ -29,48 +29,65 @@
 
 use std::sync::Arc;
 
-use crate::device::{DeviceAlloc, DeviceContext, Dir};
+use crate::device::{DeviceAlloc, DeviceContext, Dir, PageCache};
 use crate::ellpack::EllpackPage;
 use crate::error::Result;
-use crate::page::{read_decode_pipeline, read_decode_pipeline_subset, PageFile};
+use crate::page::{staged_ellpack_pipeline, PageFile, StagedPage};
 
-/// A per-page hook applied by a stream's transfer stage.  Returns an
-/// optional staging allocation that is held until the consumer releases
-/// the page (so device budgets see the page while it is in use).
-pub type PageHook = Arc<dyn Fn(&EllpackPage) -> Result<Option<DeviceAlloc>> + Send + Sync>;
+/// A per-page hook applied by a stream's transfer stage.  The hook sees
+/// the staged page plus its transport facts (encoded wire bytes, cache
+/// residency) and returns an optional staging allocation that is held
+/// until the consumer releases the page (so device budgets see the page
+/// while it is in use).
+pub type PageHook = Arc<dyn Fn(&StagedPage) -> Result<Option<DeviceAlloc>> + Send + Sync>;
 
 /// Standard device transfer hook: stage the page in device memory and
-/// charge one host→device copy (naive Algorithm 6 streaming and the
-/// per-round compaction sweep of Algorithm 7 both pay this per page).
+/// charge one host→device copy of the page's *encoded* frame — the
+/// compressed codec shrinks the wire cost, the staging footprint stays
+/// the decompressed size (naive Algorithm 6 streaming and the per-round
+/// compaction sweep of Algorithm 7 both pay this per page).
 pub fn h2d_staging_hook(ctx: DeviceContext) -> PageHook {
-    Arc::new(move |page: &EllpackPage| {
-        let bytes = page.memory_bytes() as u64;
-        let staging = ctx.mem.alloc("ellpack_staging", bytes)?;
-        ctx.link.charge(Dir::HostToDevice, bytes);
+    Arc::new(move |staged: &StagedPage| {
+        if staged.from_cache {
+            return Ok(None);
+        }
+        let staging = ctx.mem.alloc("ellpack_staging", staged.page.memory_bytes() as u64)?;
+        ctx.link.charge(Dir::HostToDevice, staged.wire_bytes);
         Ok(Some(staging))
     })
 }
 
-/// A page handed out by a sweep: shared (in-memory streams) or owned
-/// (piped streams), optionally carrying a device staging guard that is
-/// released when the consumer drops the page.
-pub struct PageRef {
-    data: PageData,
-    _staging: Option<DeviceAlloc>,
+/// Device transfer hook with a resident cache above it: pages already
+/// in the cache charge nothing; freshly read pages are admitted (their
+/// bytes then live under the cache's budget rather than a transient
+/// staging alloc) and pay one h2d copy of the encoded frame.  When the
+/// cache declines a page — over budget or device pressure — the hook
+/// degrades to plain per-sweep staging for that page.
+pub fn cached_h2d_hook(ctx: DeviceContext, cache: Arc<PageCache>) -> PageHook {
+    Arc::new(move |staged: &StagedPage| {
+        if staged.from_cache {
+            return Ok(None);
+        }
+        if cache.admit(staged.index, Arc::clone(&staged.page), &ctx.mem) {
+            ctx.link.charge(Dir::HostToDevice, staged.wire_bytes);
+            return Ok(None);
+        }
+        let staging = ctx.mem.alloc("ellpack_staging", staged.page.memory_bytes() as u64)?;
+        ctx.link.charge(Dir::HostToDevice, staged.wire_bytes);
+        Ok(Some(staging))
+    })
 }
 
-enum PageData {
-    Shared(Arc<EllpackPage>),
-    Owned(EllpackPage),
+/// A page handed out by a sweep, optionally carrying a device staging
+/// guard that is released when the consumer drops the page.
+pub struct PageRef {
+    page: Arc<EllpackPage>,
+    _staging: Option<DeviceAlloc>,
 }
 
 impl PageRef {
     pub fn shared(page: Arc<EllpackPage>) -> PageRef {
-        PageRef { data: PageData::Shared(page), _staging: None }
-    }
-
-    pub fn owned(page: EllpackPage) -> PageRef {
-        PageRef { data: PageData::Owned(page), _staging: None }
+        PageRef { page, _staging: None }
     }
 
     pub fn with_staging(mut self, guard: DeviceAlloc) -> PageRef {
@@ -83,10 +100,7 @@ impl std::ops::Deref for PageRef {
     type Target = EllpackPage;
 
     fn deref(&self) -> &EllpackPage {
-        match &self.data {
-            PageData::Shared(p) => p,
-            PageData::Owned(p) => p,
-        }
+        &self.page
     }
 }
 
@@ -103,15 +117,16 @@ pub trait PageStream: Send {
 pub enum PageIter {
     /// In-memory fast path: no threads, no copies.
     Mem(std::vec::IntoIter<Arc<EllpackPage>>),
-    /// Read → decode pipeline.
-    Owned(crate::page::pipeline::Pipeline<EllpackPage>),
+    /// Read → decode pipeline (cache-aware; see
+    /// [`staged_ellpack_pipeline`]).
+    Owned(crate::page::pipeline::Pipeline<StagedPage>),
     /// Read → decode pipeline with a transfer hook applied *at
     /// delivery*, on the consumer thread.  The simulated copy is pure
     /// accounting, so running it at delivery keeps exactly one staged
     /// page budgeted at a time — deterministic OOM thresholds matching
     /// the paper's synchronous-copy model — while the read/decode
     /// stages still overlap the consumer's compute.
-    Hooked { pipe: crate::page::pipeline::Pipeline<EllpackPage>, hook: PageHook },
+    Hooked { pipe: crate::page::pipeline::Pipeline<StagedPage>, hook: PageHook },
 }
 
 impl PageIter {
@@ -127,16 +142,18 @@ impl Iterator for PageIter {
     fn next(&mut self) -> Option<Self::Item> {
         let (item, terminate) = match self {
             PageIter::Mem(it) => (it.next().map(|p| Ok(PageRef::shared(p))), false),
-            PageIter::Owned(p) => (p.next().map(|r| r.map(PageRef::owned)), false),
+            PageIter::Owned(p) => {
+                (p.next().map(|r| r.map(|s| PageRef::shared(s.page))), false)
+            }
             PageIter::Hooked { pipe, hook } => match pipe.next() {
                 None => (None, false),
                 Some(Err(e)) => (Some(Err(e)), true),
-                Some(Ok(page)) => {
-                    let out = match hook(&page) {
+                Some(Ok(staged)) => {
+                    let out = match hook(&staged) {
                         Ok(Some(guard)) => {
-                            Ok(PageRef::owned(page).with_staging(guard))
+                            Ok(PageRef::shared(staged.page).with_staging(guard))
                         }
-                        Ok(None) => Ok(PageRef::owned(page)),
+                        Ok(None) => Ok(PageRef::shared(staged.page)),
                         Err(e) => Err(e),
                     };
                     let terminate = out.is_err();
@@ -197,6 +214,7 @@ pub struct DiskStream {
     n_rows: usize,
     hook: Option<PageHook>,
     pages: Option<Vec<usize>>,
+    cache: Option<Arc<PageCache>>,
 }
 
 impl DiskStream {
@@ -215,12 +233,21 @@ impl DiskStream {
         depth: usize,
         n_rows: usize,
     ) -> DiskStream {
-        DiskStream { file, depth, n_rows, hook: None, pages: None }
+        DiskStream { file, depth, n_rows, hook: None, pages: None, cache: None }
     }
 
     /// Attach a per-page transfer hook, applied as pages are delivered.
     pub fn with_hook(mut self, hook: PageHook) -> DiskStream {
         self.hook = Some(hook);
+        self
+    }
+
+    /// Consult a device-side page cache in the read stage: resident
+    /// pages skip the disk read and decode, and reach the hook flagged
+    /// `from_cache`.  Pair with [`cached_h2d_hook`] so fresh pages get
+    /// admitted.
+    pub fn with_cache(mut self, cache: Arc<PageCache>) -> DiskStream {
+        self.cache = Some(cache);
         self
     }
 
@@ -245,8 +272,10 @@ impl DiskStream {
         file: &PageFile<EllpackPage>,
         depth: usize,
         hook: Option<&PageHook>,
+        cache: Option<&Arc<PageCache>>,
     ) -> Result<PageIter> {
-        let pipe = read_decode_pipeline::<EllpackPage>(file, depth)?;
+        let indices = (0..file.n_pages()).collect();
+        let pipe = staged_ellpack_pipeline(file, depth, indices, cache.cloned())?;
         Ok(match hook {
             Some(hook) => PageIter::Hooked { pipe, hook: hook.clone() },
             None => PageIter::Owned(pipe),
@@ -260,11 +289,12 @@ impl PageStream for DiskStream {
     }
 
     fn open(&self) -> Result<PageIter> {
-        let Some(idx) = &self.pages else {
-            return DiskStream::open_file(&self.file, self.depth, self.hook.as_ref());
+        let indices = match &self.pages {
+            Some(idx) => idx.clone(),
+            None => (0..self.file.n_pages()).collect(),
         };
         let pipe =
-            read_decode_pipeline_subset::<EllpackPage>(&self.file, self.depth, idx.clone())?;
+            staged_ellpack_pipeline(&self.file, self.depth, indices, self.cache.clone())?;
         Ok(match &self.hook {
             Some(hook) => PageIter::Hooked { pipe, hook: hook.clone() },
             None => PageIter::Owned(pipe),

@@ -216,6 +216,63 @@ fn shard_equivalence_device_naive_ooc() {
     assert_models_identical(&m1, &m2, "naive-ooc n=2");
 }
 
+/// The page codec is pure transport: raw and bit-packed spills decode
+/// to the same pages, so the trained model is bit-identical across
+/// `page_codec` settings (dense and sparse, CPU out-of-core).
+#[test]
+fn prop_codec_choice_is_bit_invariant_cpu_ooc() {
+    run_prop("page-codec invariance (cpu ooc)", 3, |g| {
+        let rows = g.usize_in(300..900);
+        let seed = g.u64();
+        for dense in [true, false] {
+            let data = if dense {
+                synthetic::higgs_like(rows, seed)
+            } else {
+                sparse_data(rows, seed)
+            };
+            let mut raw_cfg = shard_cfg(ExecMode::CpuOutOfCore, 0, seed);
+            raw_cfg.page_codec = oocgb::page::PageCodec::Raw;
+            let mut bp_cfg = shard_cfg(ExecMode::CpuOutOfCore, 0, seed);
+            bp_cfg.page_codec = oocgb::page::PageCodec::BitPack;
+            let m_raw = train_model(data.clone(), raw_cfg);
+            let m_bp = train_model(data, bp_cfg);
+            assert_models_identical(&m_raw, &m_bp, &format!("codec dense={dense}"));
+        }
+    });
+}
+
+/// The device page cache only short-circuits transport accounting —
+/// the pages the grower sweeps are the same, so models with the cache
+/// on and off are bit-identical (naive streaming, and both codecs).
+#[test]
+fn cache_is_bit_invariant_device_naive_ooc() {
+    if !device_runtime_ready() {
+        return;
+    }
+    let data = synthetic::higgs_like(1200, 91);
+    let mk = |cache_bytes: u64, codec: oocgb::page::PageCodec| {
+        let mut cfg = shard_cfg(ExecMode::DeviceOutOfCoreNaive, 0, 91);
+        cfg.max_bin = 64;
+        cfg.page_cache_bytes = cache_bytes;
+        cfg.page_codec = codec;
+        train_model(data.clone(), cfg)
+    };
+    let reference = mk(0, oocgb::page::PageCodec::Raw);
+    for codec in [oocgb::page::PageCodec::Raw, oocgb::page::PageCodec::BitPack] {
+        let m = mk(32 * 1024 * 1024, codec);
+        assert_models_identical(
+            &reference,
+            &m,
+            &format!("cache=32MiB codec={}", codec.name()),
+        );
+    }
+    assert_models_identical(
+        &reference,
+        &mk(0, oocgb::page::PageCodec::BitPack),
+        "cache=off codec=bitpack",
+    );
+}
+
 /// Sharded Algorithm 7 (per-shard compaction) trains, samples, and
 /// stays within every shard's budget.  (Compacted page boundaries
 /// depend on the fleet size, so this mode is learning-equivalent, not

@@ -1,0 +1,266 @@
+//! Page transport integration tests: codec round-trips at the file
+//! level, corruption surfacing through the staged pipeline, and the
+//! device-side LRU cache's interconnect accounting.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use oocgb::config::ExecMode;
+use oocgb::coordinator::TrainSession;
+use oocgb::data::synthetic;
+use oocgb::device::{DeviceContext, PageCache};
+use oocgb::ellpack::page::EllpackWriter;
+use oocgb::ellpack::EllpackPage;
+use oocgb::page::codec::{decode_bitpack, encode_bitpack};
+use oocgb::page::{staged_ellpack_pipeline, PageCodec, PageFile, PageFileWriter};
+use oocgb::tree::source::{cached_h2d_hook, h2d_staging_hook, DiskStream};
+use oocgb::tree::PageStream;
+use oocgb::util::prop::run_prop;
+use oocgb::util::rng::Rng;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("oocgb-transport-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A random page: `rows` rows over `stride` columns with symbols drawn
+/// from `[0, n_symbols - 1)`; rows are randomly shortened (null-padded)
+/// when `sparse`.
+fn random_page(
+    rng: &mut Rng,
+    rows: usize,
+    stride: usize,
+    n_symbols: usize,
+    sparse: bool,
+    base: u64,
+) -> EllpackPage {
+    let mut w = EllpackWriter::new(rows, stride, n_symbols as u32, !sparse);
+    let mut row = Vec::new();
+    for _ in 0..rows {
+        row.clear();
+        let len = if sparse { (rng.next_u64() as usize) % (stride + 1) } else { stride };
+        for _ in 0..len {
+            row.push((rng.next_u64() % (n_symbols as u64 - 1)) as u32);
+        }
+        w.push_row(&row);
+    }
+    w.finish(base)
+}
+
+/// Satellite: codec round-trips across the bin-count spectrum —
+/// `n_bins` ∈ {1, 2, 255, 256, 4096} (the stored alphabet is one null
+/// symbol wider), empty pages, and all-sparse rows.
+#[test]
+fn prop_bitpack_roundtrip_across_bin_counts() {
+    run_prop("bitpack round-trip", 8, |g| {
+        let mut rng = Rng::new(g.u64());
+        for n_bins in [1usize, 2, 255, 256, 4096] {
+            let n_symbols = n_bins + 1;
+            let rows = g.usize_in(0..40);
+            let stride = g.usize_in(1..7);
+            let sparse = g.bool();
+            let page = random_page(&mut rng, rows, stride, n_symbols, sparse, g.u64());
+            let enc = encode_bitpack(&page);
+            let dec = decode_bitpack(&enc).unwrap();
+            assert_eq!(dec, page, "n_bins={n_bins} rows={rows} sparse={sparse}");
+        }
+        // All-sparse: every row fully null.
+        let mut w = EllpackWriter::new(9, 4, 257, false);
+        for _ in 0..9 {
+            w.push_row(&[]);
+        }
+        let page = w.finish(3);
+        assert_eq!(decode_bitpack(&encode_bitpack(&page)).unwrap(), page);
+    });
+}
+
+/// Locate page `i`'s frame (offset, length) by parsing the page-file
+/// header and index, so corruption lands squarely inside that frame.
+fn frame_span(bytes: &[u8], i: usize) -> (usize, usize) {
+    // Header: [magic, version, n_pages, index_offset] × u64 LE; index:
+    // (offset, len, checksum) u64 triples per page.
+    let index_offset = u64::from_le_bytes(bytes[24..32].try_into().unwrap()) as usize;
+    let entry = index_offset + i * 24;
+    let off = u64::from_le_bytes(bytes[entry..entry + 8].try_into().unwrap());
+    let len = u64::from_le_bytes(bytes[entry + 8..entry + 16].try_into().unwrap());
+    (off as usize, len as usize)
+}
+
+/// A corrupted *compressed* frame surfaces as a checksum error from the
+/// staged read → decode pipeline (before the codec sees the bytes), and
+/// the sweep terminates at the bad page.
+#[test]
+fn corrupt_bitpack_frame_fails_staged_pipeline() {
+    let d = tmpdir("corrupt");
+    let path = d.join("bp.bin");
+    let mut w = PageFileWriter::with_codec(&path, PageCodec::BitPack).unwrap();
+    let mut rng = Rng::new(11);
+    let mut base = 0u64;
+    for _ in 0..3 {
+        w.write_page(&random_page(&mut rng, 32, 4, 257, false, base)).unwrap();
+        base += 32;
+    }
+    w.finish().unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let (off, len) = frame_span(&bytes, 1);
+    bytes[off + len / 2] ^= 0x3C;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let f = PageFile::<EllpackPage>::open(&path).unwrap();
+    let results: Vec<_> =
+        staged_ellpack_pipeline(&f, 2, (0..3).collect(), None).unwrap().collect();
+    assert_eq!(results.len(), 2, "sweep must stop at the corrupt page");
+    assert!(results[0].is_ok());
+    let err = results[1].as_ref().unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+fn ellpack_file(dir: &std::path::Path, codec: PageCodec, n: usize, rows: usize) -> PageFile<EllpackPage> {
+    let mut w = PageFileWriter::with_codec(&dir.join("ep.bin"), codec).unwrap();
+    let mut rng = Rng::new(7);
+    let mut base = 0u64;
+    for _ in 0..n {
+        w.write_page(&random_page(&mut rng, rows, 3, 65, false, base)).unwrap();
+        base += rows as u64;
+    }
+    w.finish().unwrap()
+}
+
+/// Acceptance: cache hits charge zero interconnect bytes.  With a cache
+/// big enough for the whole file, sweep 2+ moves nothing across the
+/// link and reads nothing from disk, while the cached pages stay
+/// budgeted against device memory.
+#[test]
+fn cache_hits_charge_zero_h2d_bytes() {
+    let d = tmpdir("hits");
+    let file = Arc::new(ellpack_file(&d, PageCodec::BitPack, 4, 64));
+    let total_bytes: u64 = (0..4).map(|i| file.read_page(i).unwrap().memory_bytes() as u64).sum();
+    let ctx = DeviceContext::new(64 << 20);
+    let cache = Arc::new(PageCache::new(total_bytes + 64));
+    let stream = DiskStream::with_rows(file.clone(), 2, 256)
+        .with_cache(cache.clone())
+        .with_hook(cached_h2d_hook(ctx.clone(), cache.clone()));
+
+    for p in stream.open().unwrap() {
+        p.unwrap();
+    }
+    let after_first = ctx.link.stats();
+    assert_eq!(after_first.h2d_transfers, 4);
+    assert_eq!(after_first.h2d_bytes, file.payload_bytes());
+
+    for _ in 0..2 {
+        for p in stream.open().unwrap() {
+            p.unwrap();
+        }
+    }
+    let after_third = ctx.link.stats();
+    assert_eq!(after_third.h2d_bytes, after_first.h2d_bytes, "hits must charge 0 bytes");
+    assert_eq!(after_third.h2d_transfers, after_first.h2d_transfers);
+
+    let stats = cache.stats();
+    assert_eq!(stats.hits, 8); // 4 pages × sweeps 2 and 3
+    assert_eq!(stats.misses, 4); // first sweep only
+    assert_eq!(stats.evictions, 0);
+    assert_eq!(stats.resident_pages, 4);
+    // Cached pages are the only device residency left between sweeps.
+    assert_eq!(ctx.mem.used(), total_bytes);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+/// A cache smaller than the sweep thrashes predictably: sequential
+/// sweeps over more pages than fit evict in LRU order, and every
+/// delivered page still lands on the link.
+#[test]
+fn undersized_cache_evicts_and_still_charges_misses() {
+    let d = tmpdir("thrash");
+    let file = Arc::new(ellpack_file(&d, PageCodec::Raw, 6, 64));
+    let page_bytes = file.read_page(0).unwrap().memory_bytes() as u64;
+    let ctx = DeviceContext::new(64 << 20);
+    let cache = Arc::new(PageCache::new(page_bytes * 2)); // 2 of 6 pages fit
+    let stream = DiskStream::with_rows(file.clone(), 2, 384)
+        .with_cache(cache.clone())
+        .with_hook(cached_h2d_hook(ctx.clone(), cache.clone()));
+    for _ in 0..2 {
+        for p in stream.open().unwrap() {
+            p.unwrap();
+        }
+    }
+    let stats = cache.stats();
+    // Sequential scan over 6 pages with room for 2 never re-hits.
+    assert_eq!(stats.hits, 0);
+    assert_eq!(stats.misses, 12);
+    assert_eq!(stats.evictions, 10);
+    assert_eq!(stats.resident_pages, 2);
+    assert_eq!(ctx.link.stats().h2d_transfers, 12);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+/// The plain (uncached) hook charges the *encoded* frame size: the same
+/// pages cost fewer h2d bytes through the bit-packed file than the raw
+/// one, every sweep.
+#[test]
+fn bitpack_file_moves_fewer_wire_bytes() {
+    let d_raw = tmpdir("wire-raw");
+    let d_bp = tmpdir("wire-bp");
+    let raw = Arc::new(ellpack_file(&d_raw, PageCodec::Raw, 3, 128));
+    let bp = Arc::new(ellpack_file(&d_bp, PageCodec::BitPack, 3, 128));
+    assert!(bp.payload_bytes() < raw.payload_bytes());
+    let charged = |file: &Arc<PageFile<EllpackPage>>| {
+        let ctx = DeviceContext::new(64 << 20);
+        let stream = DiskStream::with_rows(file.clone(), 1, 384)
+            .with_hook(h2d_staging_hook(ctx.clone()));
+        for p in stream.open().unwrap() {
+            p.unwrap();
+        }
+        ctx.link.stats().h2d_bytes
+    };
+    assert_eq!(charged(&raw), raw.payload_bytes());
+    assert_eq!(charged(&bp), bp.payload_bytes());
+    std::fs::remove_dir_all(&d_raw).ok();
+    std::fs::remove_dir_all(&d_bp).ok();
+}
+
+/// Stub builds always have a runtime; PJRT builds need built artifacts.
+fn device_runtime_ready() -> bool {
+    if cfg!(not(feature = "xla")) {
+        return true;
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists()
+}
+
+/// End-to-end: a naive-streaming device session with the cache on
+/// reports cache counters in its outcome and moves strictly fewer h2d
+/// bytes than the same session with the cache off.
+#[test]
+fn session_cache_reduces_h2d_and_reports_stats() {
+    if !device_runtime_ready() {
+        return;
+    }
+    let run = |cache_bytes: u64| {
+        let mut cfg = oocgb::config::TrainConfig::default();
+        cfg.mode = ExecMode::DeviceOutOfCoreNaive;
+        cfg.n_rounds = 4;
+        cfg.max_depth = 3;
+        cfg.max_bin = 64;
+        cfg.eval_fraction = 0.0;
+        cfg.seed = 19;
+        cfg.page_size_bytes = 8 * 1024;
+        cfg.page_cache_bytes = cache_bytes;
+        let data = synthetic::higgs_like(1500, 19);
+        TrainSession::from_memory(data, cfg).unwrap().train().unwrap()
+    };
+    let cold = run(0);
+    assert!(cold.cache_stats.is_none());
+    let cached = run(32 * 1024 * 1024);
+    let stats = cached.cache_stats.expect("cache enabled → stats reported");
+    assert!(stats.hits > 0, "repeat sweeps must hit: {stats:?}");
+    let (h2d_cold, h2d_cached) =
+        (cold.link_stats.unwrap().h2d_bytes, cached.link_stats.unwrap().h2d_bytes);
+    assert!(
+        h2d_cached < h2d_cold,
+        "cache must shrink transport: {h2d_cached} vs {h2d_cold}"
+    );
+}
