@@ -6,8 +6,12 @@
 //! entirely.  The cache is capacity-bounded twice over: by its own byte
 //! `budget` (a config knob) and by the device [`MemoryManager`] it
 //! allocates through — an admission that would overrun either is
-//! declined gracefully rather than erroring, since caching is an
-//! optimisation, never a correctness requirement.
+//! declined gracefully rather than erroring (and a declined admission
+//! never evicts what is already resident), since caching is an
+//! optimisation, never a correctness requirement.  When some *other*
+//! allocation fails because cached pages hold the device, callers
+//! shrink the cache with [`PageCache::evict_lru`] and retry — see
+//! `cached_h2d_hook` in `tree/source.rs`.
 //!
 //! Eviction is least-recently-used via a monotonic access stamp; with
 //! sweeps touching pages in a deterministic order, hit/miss/eviction
@@ -106,6 +110,12 @@ impl PageCache {
         if inner.entries.contains_key(&index) {
             return true;
         }
+        // Allocate before evicting: if the device declines, the resident
+        // set is untouched — evicting first would drain useful pages one
+        // by one under sustained pressure without ever admitting.
+        let Ok(alloc) = mem.alloc("page_cache", bytes) else {
+            return false;
+        };
         while inner.used + bytes > self.budget {
             let oldest = inner
                 .entries
@@ -117,12 +127,27 @@ impl PageCache {
             inner.used -= evicted.page.memory_bytes() as u64;
             inner.evictions += 1;
         }
-        let Ok(alloc) = mem.alloc("page_cache", bytes) else {
-            return false;
-        };
         inner.clock += 1;
         inner.used += bytes;
         inner.entries.insert(index, Entry { page, _alloc: alloc, stamp: inner.clock });
+        true
+    }
+
+    /// Evict the least-recently-used entry, releasing its device bytes.
+    /// Returns false when the cache is empty.  Callers under external
+    /// allocation pressure (e.g. a staging alloc that just failed) use
+    /// this to shrink the cache and retry — cached pages must never turn
+    /// a run that fits without the cache into an OOM failure.
+    pub fn evict_lru(&self) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let Some(oldest) = inner.entries.iter().min_by_key(|(_, e)| e.stamp).map(|(&k, _)| k)
+        else {
+            return false;
+        };
+        let evicted = inner.entries.remove(&oldest).unwrap();
+        inner.used -= evicted.page.memory_bytes() as u64;
+        inner.evictions += 1;
         true
     }
 
@@ -184,6 +209,45 @@ mod tests {
         assert!(!cache.admit(1, p.clone(), &mem));
         assert_eq!(cache.stats().resident_pages, 1);
         assert!(cache.lookup(0).is_some());
+    }
+
+    #[test]
+    fn failed_admission_does_not_drain_residents() {
+        // Cache budget would force an eviction AND the device is full:
+        // the admission must decline with the resident set intact, not
+        // trade a useful page for an allocation that then fails.
+        let p = page(4);
+        let bytes = p.memory_bytes() as u64;
+        let mem = Arc::new(MemoryManager::new(2 * bytes + bytes / 2));
+        let cache = PageCache::new(bytes * 2);
+        assert!(cache.admit(0, p.clone(), &mem));
+        assert!(cache.admit(1, p.clone(), &mem));
+        assert!(!cache.admit(2, p.clone(), &mem));
+        let s = cache.stats();
+        assert_eq!(s.resident_pages, 2);
+        assert_eq!(s.evictions, 0);
+        assert!(cache.lookup(0).is_some());
+        assert!(cache.lookup(1).is_some());
+        assert_eq!(mem.used(), 2 * bytes);
+    }
+
+    #[test]
+    fn evict_lru_frees_device_bytes() {
+        let p = page(4);
+        let bytes = p.memory_bytes() as u64;
+        let mem = Arc::new(MemoryManager::new(bytes * 8));
+        let cache = PageCache::new(bytes * 8);
+        assert!(cache.admit(0, p.clone(), &mem));
+        assert!(cache.admit(1, p.clone(), &mem));
+        assert!(cache.lookup(0).is_some()); // 1 is now LRU
+        assert!(cache.evict_lru());
+        assert!(cache.lookup(1).is_none());
+        assert!(cache.lookup(0).is_some());
+        assert_eq!(mem.used(), bytes);
+        assert!(cache.evict_lru());
+        assert!(!cache.evict_lru(), "empty cache has nothing to evict");
+        assert_eq!(mem.used(), 0);
+        assert_eq!(cache.stats().evictions, 2);
     }
 
     #[test]

@@ -256,73 +256,121 @@ fn bad(msg: impl Into<String>) -> Error {
     Error::PageStore(msg.into())
 }
 
+/// Bounds-checked little-endian reader over an untrusted payload.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(bytes: &'a [u8]) -> Cursor<'a> {
+        Cursor { bytes, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        if self.remaining() < 8 {
+            return Err(bad("truncated bitpack payload"));
+        }
+        let v = u64::from_le_bytes(self.bytes[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        Ok(v)
+    }
+}
+
 /// Decode a payload produced by [`encode_bitpack`], with bounds checks
 /// on every field (corrupted payloads must error, never panic).
 pub fn decode_bitpack(bytes: &[u8]) -> Result<EllpackPage> {
-    let mut pos = 0usize;
-    let mut u64_at = |bytes: &[u8]| -> Result<u64> {
-        let end = pos + 8;
-        if end > bytes.len() {
-            return Err(bad("truncated bitpack payload"));
-        }
-        let v = u64::from_le_bytes(bytes[pos..end].try_into().unwrap());
-        pos = end;
-        Ok(v)
-    };
+    let mut cur = Cursor::new(bytes);
 
-    let n_rows = u64_at(bytes)? as usize;
-    let stride = u64_at(bytes)? as usize;
-    let n_symbols64 = u64_at(bytes)?;
-    let base_rowid = u64_at(bytes)?;
-    let dense = u64_at(bytes)? != 0;
+    // Header fields are untrusted: each must be bounded against the
+    // payload (or the address space) before it sizes an allocation or
+    // enters offset arithmetic.
+    let n_rows64 = cur.u64()?;
+    let stride64 = cur.u64()?;
+    let n_symbols64 = cur.u64()?;
+    let base_rowid = cur.u64()?;
+    let dense = cur.u64()? != 0;
     if !(2..=u32::MAX as u64).contains(&n_symbols64) {
         return Err(bad("bitpack: bad symbol count"));
     }
     let n_symbols = n_symbols64 as u32;
     let null = n_symbols - 1;
 
-    // Row-length runs.
-    let n_runs = u64_at(bytes)? as usize;
-    if n_runs > n_rows {
-        return Err(bad("bitpack: more runs than rows"));
+    // Row-length runs.  Parsed without preallocating by the claimed
+    // n_rows — the runs themselves (16 payload bytes each) must cover
+    // it exactly, which caps n_rows before anything is sized by it.
+    let n_runs64 = cur.u64()?;
+    if n_runs64 > (cur.remaining() / 16) as u64 {
+        return Err(bad("bitpack: run count exceeds payload"));
     }
-    let mut eff_len = Vec::with_capacity(n_rows);
-    for _ in 0..n_runs {
-        let count = u64_at(bytes)? as usize;
-        let len = u64_at(bytes)? as usize;
-        if len > stride || count > n_rows - eff_len.len() {
+    let mut runs = Vec::with_capacity(n_runs64 as usize);
+    let mut covered_rows = 0u64;
+    for _ in 0..n_runs64 {
+        let count = cur.u64()?;
+        let len = cur.u64()?;
+        covered_rows = covered_rows
+            .checked_add(count)
+            .filter(|&t| t <= n_rows64)
+            .ok_or_else(|| bad("bitpack: bad row-length run"))?;
+        if len > stride64 {
             return Err(bad("bitpack: bad row-length run"));
         }
-        eff_len.extend(std::iter::repeat(len).take(count));
+        runs.push((count, len as usize));
     }
-    if eff_len.len() != n_rows {
+    if covered_rows != n_rows64 {
         return Err(bad("bitpack: row-length runs do not cover all rows"));
     }
 
-    // Column headers.
-    if bytes.len() < pos + stride * 6 {
+    // The decoded page allocates ceil(n_rows·stride·bits/64) words and
+    // one usize per row; reject dimensions whose products overflow or
+    // exceed Vec's isize::MAX-byte limit so construction cannot panic.
+    let bits = u64::from(64 - u64::from(n_symbols - 1).leading_zeros());
+    let fits = n_rows64 <= isize::MAX as u64 / 8
+        && n_rows64
+            .checked_mul(stride64)
+            .and_then(|e| e.checked_mul(bits))
+            .is_some_and(|b| b <= isize::MAX as u64);
+    if !fits {
+        return Err(bad("bitpack: page dimensions overflow"));
+    }
+    let n_rows = n_rows64 as usize;
+    let stride = stride64 as usize;
+
+    let mut eff_len = Vec::with_capacity(n_rows);
+    for &(count, len) in &runs {
+        eff_len.extend(std::iter::repeat(len).take(count as usize));
+    }
+
+    // Column headers: 6 bytes each, so stride is bounded by what's left.
+    if stride > cur.remaining() / 6 {
         return Err(bad("truncated bitpack column headers"));
     }
     let mut cols = Vec::with_capacity(stride);
     for _ in 0..stride {
-        let min = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
-        let width = bytes[pos + 4] as u32;
-        let has_null = bytes[pos + 5] != 0;
-        pos += 6;
+        let at = cur.pos;
+        let min = u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
+        let width = bytes[at + 4] as u32;
+        let has_null = bytes[at + 5] != 0;
+        cur.pos = at + 6;
         if width > 32 {
             return Err(bad("bitpack: column width > 32"));
         }
         cols.push(ColInfo { min, width, has_null });
     }
 
-    // Packed words.
-    let n_words = u64_at(bytes)? as usize;
-    if bytes.len() < pos + n_words * 8 {
+    // Packed words: 8 bytes each, bounded by the remaining payload.
+    let n_words64 = cur.u64()?;
+    if n_words64 > (cur.remaining() / 8) as u64 {
         return Err(bad("truncated bitpack body"));
     }
+    let n_words = n_words64 as usize;
     let mut words = Vec::with_capacity(n_words);
     for i in 0..n_words {
-        let a = pos + i * 8;
+        let a = cur.pos + i * 8;
         words.push(u64::from_le_bytes(bytes[a..a + 8].try_into().unwrap()));
     }
 
@@ -335,7 +383,8 @@ pub fn decode_bitpack(bytes: &[u8]) -> Result<EllpackPage> {
     }
     let need_bits: u64 =
         cols.iter().zip(&covered).map(|(c, &n)| c.width as u64 * n).sum();
-    if (n_words as u64) < need_bits.div_ceil(64) {
+    // (n_words ≤ isize::MAX/8, so the bit count cannot overflow u64.)
+    if (n_words as u64) * 64 < need_bits {
         return Err(bad("bitpack: word count too small for entries"));
     }
 
@@ -471,6 +520,29 @@ mod tests {
             b[i] ^= 0xFF;
             let _ = decode_bitpack(&b);
         }
+    }
+
+    #[test]
+    fn huge_header_fields_rejected_not_panicking() {
+        let mut rng = Rng::new(13);
+        let p = random_page(&mut rng, 6, 3, 40);
+        let enc = encode_bitpack(&p);
+        // n_rows at offset 0, stride at 8, n_words after the runs
+        // (n_runs at 40, 16 bytes each) and column headers (6 bytes
+        // each).  Overwriting each with u64::MAX must yield an error —
+        // not a capacity-overflow panic, wrapped offset arithmetic, or
+        // a multi-GB allocation attempt.
+        let n_runs = u64::from_le_bytes(enc[40..48].try_into().unwrap()) as usize;
+        let words_off = 48 + n_runs * 16 + p.row_stride() * 6;
+        for off in [0, 8, words_off] {
+            let mut b = enc.clone();
+            b[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+            assert!(decode_bitpack(&b).is_err(), "offset {off}");
+        }
+        // A run count that overflows the row total must also error.
+        let mut b = enc.clone();
+        b[48..56].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_bitpack(&b).is_err());
     }
 
     #[test]

@@ -62,7 +62,10 @@ pub fn h2d_staging_hook(ctx: DeviceContext) -> PageHook {
 /// bytes then live under the cache's budget rather than a transient
 /// staging alloc) and pay one h2d copy of the encoded frame.  When the
 /// cache declines a page — over budget or device pressure — the hook
-/// degrades to plain per-sweep staging for that page.
+/// degrades to plain per-sweep staging for that page, evicting resident
+/// pages to make room if the staging alloc itself fails: the cache is
+/// an optimisation and must never turn a run that fits without it into
+/// a device OOM.
 pub fn cached_h2d_hook(ctx: DeviceContext, cache: Arc<PageCache>) -> PageHook {
     Arc::new(move |staged: &StagedPage| {
         if staged.from_cache {
@@ -72,7 +75,16 @@ pub fn cached_h2d_hook(ctx: DeviceContext, cache: Arc<PageCache>) -> PageHook {
             ctx.link.charge(Dir::HostToDevice, staged.wire_bytes);
             return Ok(None);
         }
-        let staging = ctx.mem.alloc("ellpack_staging", staged.page.memory_bytes() as u64)?;
+        let staging = loop {
+            match ctx.mem.alloc("ellpack_staging", staged.page.memory_bytes() as u64) {
+                Ok(a) => break a,
+                Err(e) => {
+                    if !cache.evict_lru() {
+                        return Err(e);
+                    }
+                }
+            }
+        };
         ctx.link.charge(Dir::HostToDevice, staged.wire_bytes);
         Ok(Some(staging))
     })
@@ -693,6 +705,43 @@ mod tests {
             .map(|p| p.unwrap().n_rows())
             .sum();
         assert_eq!(n, 3);
+    }
+
+    #[test]
+    fn cached_stream_evicts_under_staging_pressure() {
+        // Device fits 2.5 pages; the cache budget alone would admit 4.
+        // Sweeping 3 pages must still succeed: when the third page can
+        // be neither admitted nor staged, the hook evicts a resident
+        // page and retries instead of surfacing a device OOM — with the
+        // cache on, a run that fits with it off must never hard-fail.
+        let d = std::env::temp_dir().join(format!("oocgb-evict-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let mut w = PageFileWriter::create(&d.join("ep.bin")).unwrap();
+        let ps = pages(3, 4);
+        let bytes = ps[0].memory_bytes() as u64;
+        for p in &ps {
+            w.write_page(p).unwrap();
+        }
+        let file = Arc::new(w.finish().unwrap());
+        let ctx = DeviceContext::new(2 * bytes + bytes / 2);
+        let cache = Arc::new(PageCache::new(4 * bytes));
+        let stream = DiskStream::new(file, 1)
+            .unwrap()
+            .with_cache(cache.clone())
+            .with_hook(cached_h2d_hook(ctx.clone(), cache.clone()));
+        for p in stream.open().unwrap() {
+            p.unwrap();
+        }
+        assert!(cache.stats().evictions >= 1);
+        // Second sweep: one page is still resident and charges nothing.
+        for p in stream.open().unwrap() {
+            p.unwrap();
+        }
+        let s = cache.stats();
+        assert!(s.hits >= 1);
+        assert_eq!(ctx.link.stats().h2d_transfers, 5); // 6 deliveries − 1 hit
+        assert_eq!(ctx.mem.used(), s.resident_bytes);
+        std::fs::remove_dir_all(&d).ok();
     }
 
     #[test]
