@@ -160,6 +160,24 @@ pub struct TrainConfig {
     /// Bounded-channel depth for the preprocessing pipeline stages
     /// (CSR staging, ELLPACK conversion); 0 = rendezvous handoff.
     pub pipeline_depth: usize,
+    /// Self-tune pipeline depths from per-stage busy-time measurements
+    /// (`page/tuner.rs`).  Depth only bounds in-flight items, so tuning
+    /// never changes the trained model.  A depth knob that was set
+    /// explicitly (CLI/config file) is honored verbatim even with
+    /// `auto_tune` on.
+    pub auto_tune: bool,
+    /// Inclusive depth bounds the tuner may explore.
+    pub tune_min_depth: usize,
+    pub tune_max_depth: usize,
+    /// `prefetch_depth` was set explicitly — the tuner must not touch it.
+    pub prefetch_depth_set: bool,
+    /// `pipeline_depth` was set explicitly — ditto.
+    pub pipeline_depth_set: bool,
+    /// Run the eval sweep as a pipeline branch overlapping the next
+    /// round's gradient pass (joined at the round boundary, so
+    /// `eval_history`, early stopping, and the trained model are
+    /// bit-identical to the synchronous path).
+    pub async_eval: bool,
     /// Worker threads for CPU histogram building (0 = all cores).
     pub n_threads: usize,
     /// Directory holding AOT artifacts (manifest.json + *.hlo.txt).
@@ -204,6 +222,12 @@ impl Default for TrainConfig {
             page_cache_bytes: 0,
             prefetch_depth: 2,
             pipeline_depth: 2,
+            auto_tune: true,
+            tune_min_depth: 1,
+            tune_max_depth: 8,
+            prefetch_depth_set: false,
+            pipeline_depth_set: false,
+            async_eval: true,
             n_threads: 0,
             artifacts_dir: "artifacts".into(),
             cache_dir: std::env::temp_dir()
@@ -294,8 +318,18 @@ impl TrainConfig {
             "page_cache_mb" => {
                 self.page_cache_bytes = pf::<u64>(key, v)? * 1024 * 1024
             }
-            "prefetch_depth" => self.prefetch_depth = pf(key, v)?,
-            "pipeline_depth" => self.pipeline_depth = pf(key, v)?,
+            "prefetch_depth" => {
+                self.prefetch_depth = pf(key, v)?;
+                self.prefetch_depth_set = true;
+            }
+            "pipeline_depth" => {
+                self.pipeline_depth = pf(key, v)?;
+                self.pipeline_depth_set = true;
+            }
+            "auto_tune" => self.auto_tune = pf(key, v)?,
+            "tune_min_depth" => self.tune_min_depth = pf(key, v)?,
+            "tune_max_depth" => self.tune_max_depth = pf(key, v)?,
+            "async_eval" => self.async_eval = pf(key, v)?,
             "n_threads" | "nthread" => self.n_threads = pf(key, v)?,
             "artifacts_dir" => self.artifacts_dir = v.to_string(),
             "cache_dir" => self.cache_dir = v.to_string(),
@@ -354,7 +388,32 @@ impl TrainConfig {
                 "page_cache_bytes must leave device memory for working state",
             ));
         }
+        if self.tune_min_depth > self.tune_max_depth {
+            return Err(Error::config("tune_min_depth must be <= tune_max_depth"));
+        }
+        if self.tune_max_depth > 64 {
+            return Err(Error::config("tune_max_depth must be <= 64"));
+        }
         Ok(())
+    }
+
+    /// Whether the tuner may adapt the sweep prefetch depth: opted in
+    /// and not pinned by an explicit `prefetch_depth=`.
+    pub fn tune_prefetch(&self) -> bool {
+        self.auto_tune && !self.prefetch_depth_set
+    }
+
+    /// Channel depth for the one-shot preprocessing pipeline (CSR
+    /// staging → ELLPACK conversion).  That pipeline runs once, so
+    /// there is nothing to adapt round-over-round; when auto-tuning
+    /// owns the knob it picks double-buffering on both sides of the
+    /// convert stage, clamped to the configured bounds.
+    pub fn effective_pipeline_depth(&self) -> usize {
+        if !self.auto_tune || self.pipeline_depth_set {
+            self.pipeline_depth
+        } else {
+            4usize.clamp(self.tune_min_depth, self.tune_max_depth)
+        }
     }
 
     /// Dump as a JSON object (for experiment logs).
@@ -382,6 +441,8 @@ impl TrainConfig {
         m.insert("page_cache_bytes".into(), num(self.page_cache_bytes as f64));
         m.insert("prefetch_depth".into(), num(self.prefetch_depth as f64));
         m.insert("pipeline_depth".into(), num(self.pipeline_depth as f64));
+        m.insert("auto_tune".into(), Value::Bool(self.auto_tune));
+        m.insert("async_eval".into(), Value::Bool(self.async_eval));
         m.insert("seed".into(), num(self.seed as f64));
         Value::Object(m)
     }
@@ -463,6 +524,39 @@ mod tests {
             &["device_memory_mb=64".into(), "page_cache_mb=64".into()]
         )
         .is_err());
+    }
+
+    #[test]
+    fn explicit_depths_pin_the_tuner() {
+        let cfg = TrainConfig::default();
+        assert!(cfg.auto_tune && cfg.async_eval, "tuning/async eval default on");
+        assert!(cfg.tune_prefetch());
+        assert_eq!(cfg.effective_pipeline_depth(), 4, "auto picks double-buffering");
+
+        // An explicit depth is honored verbatim even with auto_tune on.
+        let cfg = TrainConfig::load(
+            None,
+            &["prefetch_depth=3".into(), "pipeline_depth=1".into()],
+        )
+        .unwrap();
+        assert!(cfg.auto_tune);
+        assert!(!cfg.tune_prefetch());
+        assert_eq!(cfg.prefetch_depth, 3);
+        assert_eq!(cfg.effective_pipeline_depth(), 1);
+
+        // auto_tune=false freezes both knobs at their defaults.
+        let cfg = TrainConfig::load(None, &["auto_tune=false".into()]).unwrap();
+        assert!(!cfg.tune_prefetch());
+        assert_eq!(cfg.effective_pipeline_depth(), 2);
+
+        // Bounds are validated and clamp the auto pick.
+        assert!(TrainConfig::load(
+            None,
+            &["tune_min_depth=5".into(), "tune_max_depth=2".into()]
+        )
+        .is_err());
+        let cfg = TrainConfig::load(None, &["tune_max_depth=2".into()]).unwrap();
+        assert_eq!(cfg.effective_pipeline_depth(), 2);
     }
 
     #[test]

@@ -8,16 +8,34 @@
 //! (`ExecMode::DeviceOutOfCore`) compacts the sampled rows into a fresh
 //! device-resident page every round instead of reusing a persistent
 //! source.
+//!
+//! Two pieces of round-loop plumbing live here as well:
+//!
+//! * **Depth tuning** — every sweep the loop opens goes through one
+//!   [`modes::SweepControl`], so a [`PipelineTuner`] can diff the shared
+//!   stage counters at each round boundary and nudge the prefetch depth
+//!   for the *next* round's sweeps (see `page::tuner`).  Depth only
+//!   bounds in-flight pages; results are depth-independent.
+//! * **Async evaluation** — with `async_eval` on, eval-split scoring
+//!   runs on a worker thread that overlaps the *next* round's gradient
+//!   pass, with a round-boundary join before sampling so the rng
+//!   stream, `eval_history`, and early stopping are bit-identical to
+//!   the synchronous path (the worker replays `GbtModel::predict`'s
+//!   exact f32 accumulation order, one tree at a time).
 
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 
-use crate::boosting::GbtModel;
+use crate::boosting::{GbtModel, Metric, Objective};
 use crate::config::ExecMode;
-use crate::coordinator::modes::{self, TrainData};
+use crate::coordinator::modes::{self, SweepControl, TrainData};
 use crate::coordinator::session::{TrainOutcome, TrainSession};
+use crate::data::DMatrix;
 use crate::device::{CacheStats, DeviceAlloc, Dir, ShardPlan};
 use crate::ellpack::{compact::Compactor, EllpackPage};
 use crate::error::{Error, Result};
+use crate::page::tuner::PipelineTuner;
 use crate::sampling::Sampler;
 use crate::tree::{
     builder::HistBackend,
@@ -88,13 +106,33 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
         (None, Some(_)) => Box::new(ShardedCpuBackend::new()),
         (None, None) => Box::new(CpuHistBackend::new(cfg.threads())),
     };
+    // One control block for every sweep this run opens: a shared depth
+    // knob (read at sweep-open time) plus shared stage counters the
+    // tuner diffs at round boundaries.
+    let ctl = SweepControl::new(&cfg);
+    let mut tuner = if cfg.tune_prefetch() {
+        Some(PipelineTuner::new(
+            ctl.stats.clone(),
+            ctl.depth.clone(),
+            cfg.tune_min_depth,
+            cfg.tune_max_depth,
+        ))
+    } else {
+        None
+    };
     let mut persistent_source: Option<Box<dyn EllpackSource>> = match &plan {
-        Some(plan) => {
-            modes::open_sharded_source(&session.data, plan, session.device.as_ref(), &cfg)?
+        Some(plan) => modes::open_sharded_source(
+            &session.data,
+            plan,
+            session.device.as_ref(),
+            &cfg,
+            &ctl,
+        )?
+        .map(|s| Box::new(s) as Box<dyn EllpackSource>),
+        None => {
+            modes::open_source(&session.data, session.device.as_ref(), &cfg, n_rows, &ctl)?
                 .map(|s| Box::new(s) as Box<dyn EllpackSource>)
         }
-        None => modes::open_source(&session.data, session.device.as_ref(), &cfg, n_rows)?
-            .map(|s| Box::new(s) as Box<dyn EllpackSource>),
     };
 
     let sw_total = Stopwatch::start();
@@ -106,11 +144,52 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
         f64::INFINITY
     };
     let mut since_best = 0usize;
+    // Async eval: move the eval split onto a worker thread that scores
+    // each finished tree while the main loop runs the next round's
+    // gradient pass.  The join happens at the next round boundary
+    // (before sampling), so the rng stream, `eval_history`, and
+    // early-stop behavior are bit-identical to the synchronous path.
+    let eval_worker = if cfg.async_eval && cfg.eval_every > 0 && session.eval.is_some() {
+        let eval = session.eval.take().expect("checked above");
+        Some(EvalWorker::spawn(
+            eval,
+            session.metric,
+            session.objective,
+            model.base_margin,
+            n_cols,
+        ))
+    } else {
+        None
+    };
+    // Round index (0-based) whose async eval result is still in flight.
+    let mut pending_eval: Option<usize> = None;
     for round in 0..cfg.n_rounds {
         // ---- gradients ----
         let sw = Stopwatch::start();
         session.compute_gradients(&margins, &mut grads)?;
         session.timers.add("gradients", sw.elapsed_secs());
+
+        // ---- join last round's async eval (round boundary) ----
+        // Runs after this round's gradient pass (the overlapped work)
+        // but before sampling, so an early stop leaves the rng stream
+        // untouched — exactly as if the loop had broken at the previous
+        // round's end, as the synchronous path does.
+        if let Some(prev) = pending_eval.take() {
+            let worker = eval_worker.as_ref().expect("pending eval implies worker");
+            let (m, busy) = worker.join()?;
+            session.timers.add("eval", busy);
+            if record_eval(
+                &cfg,
+                session.metric,
+                prev + 1,
+                m,
+                &mut eval_history,
+                &mut best_metric,
+                &mut since_best,
+            ) {
+                break;
+            }
+        }
 
         // ---- sampling (paper §3.4) ----
         let sw = Stopwatch::start();
@@ -135,10 +214,15 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
                     &grads,
                     mask,
                     plan,
+                    &ctl,
                 )?,
-                None => {
-                    session.build_tree_compacted(&params, backend.as_mut(), &grads, mask)?
-                }
+                None => session.build_tree_compacted(
+                    &params,
+                    backend.as_mut(),
+                    &grads,
+                    mask,
+                    &ctl,
+                )?,
             }
         } else {
             let source = persistent_source
@@ -162,53 +246,60 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
 
         // ---- margin update (one sweep of the full data) ----
         let sw = Stopwatch::start();
-        session.update_margins(&tree, &mut margins)?;
+        session.update_margins(&tree, &mut margins, &ctl)?;
         session.timers.add("predict", sw.elapsed_secs());
         model.trees.push(tree);
 
         // ---- evaluation ----
-        if let Some(eval) = &session.eval {
-            if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
-                let sw = Stopwatch::start();
-                let preds = model.predict(eval);
-                let m = session.metric.compute(&preds, eval.labels());
-                session.timers.add("eval", sw.elapsed_secs());
-                if cfg.verbose {
-                    eprintln!(
-                        "[{}] round {:>4}  {} = {:.5}",
-                        cfg.mode.name(),
-                        round + 1,
-                        session.metric.name(),
-                        m
-                    );
-                }
-                eval_history.push((round + 1, m));
-                if cfg.early_stopping_rounds > 0 {
-                    let improved = if session.metric.maximize() {
-                        m > best_metric
-                    } else {
-                        m < best_metric
-                    };
-                    if improved {
-                        best_metric = m;
-                        since_best = 0;
-                    } else {
-                        since_best += 1;
-                        if since_best >= cfg.early_stopping_rounds {
-                            if cfg.verbose {
-                                eprintln!(
-                                    "early stop at round {} (best {} = {best_metric:.5})",
-                                    round + 1,
-                                    session.metric.name()
-                                );
-                            }
-                            break;
-                        }
-                    }
-                }
+        let eval_due = cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0;
+        if let Some(worker) = &eval_worker {
+            // Every tree goes to the worker (eval margins accumulate
+            // each round); only eval-due rounds produce a result to
+            // join at the next round boundary.
+            worker.push(model.trees.last().expect("tree just pushed").clone(), eval_due)?;
+            if eval_due {
+                pending_eval = Some(round);
+            }
+        } else if let (Some(eval), true) = (&session.eval, eval_due) {
+            let sw = Stopwatch::start();
+            let preds = model.predict(eval);
+            let m = session.metric.compute(&preds, eval.labels());
+            session.timers.add("eval", sw.elapsed_secs());
+            if record_eval(
+                &cfg,
+                session.metric,
+                round + 1,
+                m,
+                &mut eval_history,
+                &mut best_metric,
+                &mut since_best,
+            ) {
+                break;
             }
         }
+
+        // ---- depth tuning (round boundary) ----
+        if let Some(t) = tuner.as_mut() {
+            t.observe_round();
+        }
     }
+    // The final round's eval has no next gradient pass to overlap with;
+    // join it here so the history always ends with the last eval round.
+    if let Some(prev) = pending_eval.take() {
+        let worker = eval_worker.as_ref().expect("pending eval implies worker");
+        let (m, busy) = worker.join()?;
+        session.timers.add("eval", busy);
+        record_eval(
+            &cfg,
+            session.metric,
+            prev + 1,
+            m,
+            &mut eval_history,
+            &mut best_metric,
+            &mut since_best,
+        );
+    }
+    drop(eval_worker);
     let train_seconds = sw_total.elapsed_secs();
 
     let (link_stats, compute_stats, mem_peak, mem_capacity) = match &session.device {
@@ -263,7 +354,145 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
         } else {
             n_rows as f64
         },
+        final_prefetch_depth: ctl.depth.get(),
+        depth_adjustments: tuner.as_ref().map_or(0, |t| t.adjustments()),
     })
+}
+
+/// Record one eval result: history, verbose line, early-stop patience.
+/// Returns `true` when training should stop.  Shared by the synchronous
+/// eval path and the async round-boundary join so both are byte-for-byte
+/// the same bookkeeping.
+fn record_eval(
+    cfg: &crate::config::TrainConfig,
+    metric: Metric,
+    round_1based: usize,
+    m: f64,
+    eval_history: &mut Vec<(usize, f64)>,
+    best_metric: &mut f64,
+    since_best: &mut usize,
+) -> bool {
+    if cfg.verbose {
+        eprintln!(
+            "[{}] round {:>4}  {} = {:.5}",
+            cfg.mode.name(),
+            round_1based,
+            metric.name(),
+            m
+        );
+    }
+    eval_history.push((round_1based, m));
+    if cfg.early_stopping_rounds == 0 {
+        return false;
+    }
+    let improved = if metric.maximize() { m > *best_metric } else { m < *best_metric };
+    if improved {
+        *best_metric = m;
+        *since_best = 0;
+        return false;
+    }
+    *since_best += 1;
+    if *since_best >= cfg.early_stopping_rounds {
+        if cfg.verbose {
+            eprintln!(
+                "early stop at round {} (best {} = {:.5})",
+                round_1based,
+                metric.name(),
+                *best_metric
+            );
+        }
+        return true;
+    }
+    false
+}
+
+/// Background eval-split scorer.  Owns the eval `DMatrix` and a margin
+/// vector initialised to the model's base margin; each received tree is
+/// folded into the margins in the *same per-row f32 accumulation order*
+/// as [`GbtModel::predict`] (base + tree₀ + tree₁ + …), so the metric it
+/// reports is bit-identical to a synchronous full re-predict.  One
+/// result is in flight at most (the driver joins at every round
+/// boundary), so rendezvous-depth channels are enough.
+struct EvalWorker {
+    tx: Option<SyncSender<(Tree, bool)>>,
+    rx: Receiver<(f64, f64)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl EvalWorker {
+    fn spawn(
+        eval: DMatrix,
+        metric: Metric,
+        objective: Objective,
+        base_margin: f32,
+        n_features: usize,
+    ) -> EvalWorker {
+        let (tx, in_rx) = sync_channel::<(Tree, bool)>(1);
+        let (out_tx, rx) = sync_channel::<(f64, f64)>(1);
+        let handle = std::thread::Builder::new()
+            .name("oocgb-eval".into())
+            .spawn(move || {
+                let n_rows = eval.n_rows();
+                let mut margins = vec![base_margin; n_rows];
+                let mut dense = vec![f32::NAN; n_features];
+                let mut preds = vec![0f32; n_rows];
+                // Busy seconds since the last reported result — folded
+                // into the "eval" timer at each join.
+                let mut busy = 0f64;
+                while let Ok((tree, eval_due)) = in_rx.recv() {
+                    let sw = Stopwatch::start();
+                    for r in 0..n_rows {
+                        dense.iter_mut().for_each(|v| *v = f32::NAN);
+                        let (cols, vals) = eval.row(r);
+                        for (c, v) in cols.iter().zip(vals) {
+                            dense[*c as usize] = *v;
+                        }
+                        margins[r] += tree.predict_raw(&dense);
+                    }
+                    if eval_due {
+                        for (p, m) in preds.iter_mut().zip(&margins) {
+                            *p = objective.transform(*m);
+                        }
+                        let m = metric.compute(&preds, eval.labels());
+                        busy += sw.elapsed_secs();
+                        if out_tx.send((m, busy)).is_err() {
+                            return; // driver gone (error path) — wind down
+                        }
+                        busy = 0.0;
+                    } else {
+                        busy += sw.elapsed_secs();
+                    }
+                }
+            })
+            .expect("spawn eval worker thread");
+        EvalWorker { tx: Some(tx), rx, handle: Some(handle) }
+    }
+
+    /// Hand the worker this round's tree; `eval_due` rounds produce a
+    /// result that must be joined before the next one is pushed.
+    fn push(&self, tree: Tree, eval_due: bool) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("push after shutdown")
+            .send((tree, eval_due))
+            .map_err(|_| Error::data("async eval worker terminated unexpectedly"))
+    }
+
+    /// Block for the in-flight result: (metric, worker busy seconds).
+    fn join(&self) -> Result<(f64, f64)> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::data("async eval worker terminated unexpectedly"))
+    }
+}
+
+impl Drop for EvalWorker {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the tree channel → worker exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 impl TrainSession {
@@ -365,6 +594,7 @@ impl TrainSession {
         backend: &mut dyn HistBackend,
         grads: &[[f32; 2]],
         mask: Option<&[bool]>,
+        ctl: &SweepControl,
     ) -> Result<Tree> {
         let dev = self.device.as_ref().unwrap();
         let TrainData::Disk(file) = &self.data else {
@@ -391,7 +621,7 @@ impl TrainSession {
         // Each source page is staged on device and moves across the
         // link once per round (the transfer hook charges it; cached
         // pages skip the link).
-        for page in modes::compaction_sweep(file, dev, &self.cfg)? {
+        for page in modes::compaction_sweep(file, dev, ctl)? {
             compactor.push_page(&page?);
         }
         let (compacted, row_map) = compactor.finish();
@@ -430,6 +660,7 @@ impl TrainSession {
         grads: &[[f32; 2]],
         mask: Option<&[bool]>,
         plan: &ShardPlan,
+        ctl: &SweepControl,
     ) -> Result<Tree> {
         let dev = self.device.as_ref().unwrap();
         let fleet = dev.shards.as_ref().expect("sharded device setup");
@@ -469,7 +700,9 @@ impl TrainSession {
                 self.cfg.prefetch_depth,
                 plan.rows_in(s),
             )
-            .with_page_subset(plan.pages_of(s).to_vec());
+            .with_page_subset(plan.pages_of(s).to_vec())
+            .with_depth_control(ctl.depth.clone())
+            .with_stats(ctl.stats.clone());
             let stream = match dev.page_caches.get(s) {
                 Some(cache) => stream
                     .with_cache(cache.clone())
@@ -509,8 +742,13 @@ impl TrainSession {
 
     /// margin[r] += tree(r) for every training row — one sweep of the
     /// full data (host-side traversal; see DESIGN.md §cost-model).
-    fn update_margins(&mut self, tree: &Tree, margins: &mut [f32]) -> Result<()> {
-        for page in modes::data_sweep(&self.data, self.cfg.prefetch_depth)? {
+    fn update_margins(
+        &mut self,
+        tree: &Tree,
+        margins: &mut [f32],
+        ctl: &SweepControl,
+    ) -> Result<()> {
+        for page in modes::data_sweep(&self.data, ctl)? {
             let page = page?;
             let base = page.base_rowid as usize;
             for r in 0..page.n_rows() {
@@ -671,6 +909,143 @@ mod tests {
         for (a, b) in out_stream.model.trees.iter().zip(&out_mem.model.trees) {
             assert_eq!(a.n_nodes(), b.n_nodes());
         }
+    }
+
+    /// Eval histories compared at full f64 precision — the async eval
+    /// worker must reproduce the synchronous path bit for bit.
+    fn history_bits(h: &[(usize, f64)]) -> Vec<(usize, u64)> {
+        h.iter().map(|&(r, m)| (r, m.to_bits())).collect()
+    }
+
+    fn sparse_fixture(n: usize, seed: u64) -> DMatrix {
+        let mut page = SparsePage::new(4);
+        let mut labels = Vec::new();
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            let x = rng.next_f32();
+            if i % 3 == 0 {
+                page.push_row(&[1], &[x]);
+            } else {
+                page.push_row(&[0, 2], &[x, rng.next_f32() * 2.0]);
+            }
+            labels.push(if x > 0.5 { 1.0 } else { 0.0 });
+        }
+        DMatrix::from_page(page, labels).unwrap()
+    }
+
+    #[test]
+    fn async_eval_is_bit_identical_to_sync() {
+        for mode in [ExecMode::CpuInCore, ExecMode::CpuOutOfCore] {
+            for sparse in [false, true] {
+                let data = if sparse {
+                    sparse_fixture(900, 11)
+                } else {
+                    synthetic::higgs_like(1200, 11)
+                };
+                let mut cfg = quick_cfg(mode);
+                cfg.n_rounds = 6;
+                cfg.page_size_bytes = 8 * 1024;
+                let mut cfg_sync = cfg.clone();
+                cfg_sync.async_eval = false;
+                let out_async =
+                    TrainSession::from_memory(data.clone(), cfg).unwrap().train().unwrap();
+                let out_sync =
+                    TrainSession::from_memory(data, cfg_sync).unwrap().train().unwrap();
+                assert_eq!(
+                    history_bits(&out_async.eval_history),
+                    history_bits(&out_sync.eval_history),
+                    "mode {mode:?} sparse {sparse}"
+                );
+                assert_eq!(out_async.model.trees.len(), out_sync.model.trees.len());
+            }
+        }
+    }
+
+    #[test]
+    fn eval_on_final_round_joins_after_loop() {
+        // eval_every divides n_rounds: the last eval has no next round
+        // to overlap with and must be joined after the loop.
+        for async_eval in [true, false] {
+            let data = synthetic::higgs_like(800, 12);
+            let mut cfg = quick_cfg(ExecMode::CpuInCore);
+            cfg.n_rounds = 6;
+            cfg.eval_every = 3;
+            cfg.async_eval = async_eval;
+            let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
+            assert_eq!(out.model.trees.len(), 6);
+            let rounds: Vec<usize> = out.eval_history.iter().map(|e| e.0).collect();
+            assert_eq!(rounds, vec![3, 6], "async={async_eval}");
+        }
+    }
+
+    #[test]
+    fn eval_interval_beyond_rounds_trains_fully_with_empty_history() {
+        for async_eval in [true, false] {
+            let data = synthetic::higgs_like(800, 12);
+            let mut cfg = quick_cfg(ExecMode::CpuInCore);
+            cfg.n_rounds = 4;
+            cfg.eval_every = 9; // never due
+            cfg.early_stopping_rounds = 2; // can never trigger
+            cfg.async_eval = async_eval;
+            let out = TrainSession::from_memory(data, cfg).unwrap().train().unwrap();
+            assert_eq!(out.model.trees.len(), 4, "async={async_eval}");
+            assert!(out.eval_history.is_empty());
+        }
+    }
+
+    #[test]
+    fn early_stop_boundaries_agree_across_eval_schedules() {
+        // Sweep schedules where patience runs out exactly at (or near)
+        // the final eval — the async join must stop on the same round,
+        // keep the same trees, and log the same history as sync.
+        for (n_rounds, eval_every, patience) in [(8, 1, 7), (8, 2, 3), (9, 3, 2), (6, 6, 1)]
+        {
+            for lr in [1.5f32, 0.5] {
+                let data = synthetic::higgs_like(800, 6);
+                let mut cfg = quick_cfg(ExecMode::CpuInCore);
+                cfg.n_rounds = n_rounds;
+                cfg.max_depth = 2;
+                cfg.learning_rate = lr;
+                cfg.eval_every = eval_every;
+                cfg.early_stopping_rounds = patience;
+                let mut cfg_sync = cfg.clone();
+                cfg_sync.async_eval = false;
+                let a = TrainSession::from_memory(data.clone(), cfg)
+                    .unwrap()
+                    .train()
+                    .unwrap();
+                let s =
+                    TrainSession::from_memory(data, cfg_sync).unwrap().train().unwrap();
+                let tag = format!("rounds={n_rounds} every={eval_every} patience={patience} lr={lr}");
+                assert_eq!(a.model.trees.len(), s.model.trees.len(), "{tag}");
+                assert_eq!(
+                    history_bits(&a.eval_history),
+                    history_bits(&s.eval_history),
+                    "{tag}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tuner_reports_depth_and_pinning_disables_it() {
+        let data = synthetic::higgs_like(2000, 13);
+        let mut cfg = quick_cfg(ExecMode::CpuOutOfCore);
+        cfg.page_size_bytes = 4 * 1024;
+        let out =
+            TrainSession::from_memory(data.clone(), cfg.clone()).unwrap().train().unwrap();
+        assert!(
+            out.final_prefetch_depth >= cfg.tune_min_depth
+                && out.final_prefetch_depth <= cfg.tune_max_depth,
+            "depth {} outside bounds",
+            out.final_prefetch_depth
+        );
+        // Explicitly setting the depth pins it: no tuner moves at all.
+        let mut pinned = cfg;
+        pinned.set_str("prefetch_depth", "3").unwrap();
+        let out2 = TrainSession::from_memory(data, pinned).unwrap().train().unwrap();
+        assert_eq!(out2.final_prefetch_depth, 3);
+        assert_eq!(out2.depth_adjustments, 0);
     }
 
     #[test]

@@ -29,8 +29,9 @@ use crate::data::SparsePage;
 use crate::device::{DeviceAlloc, DeviceContext, Dir, PageCache, ShardPlan, ShardedDevice};
 use crate::ellpack::{EllpackBuilder, EllpackPage};
 use crate::error::{Error, Result};
-use crate::page::pipeline::Pipeline;
-use crate::page::{PageFile, PageFileWriter, Prefetcher};
+use crate::page::pipeline::{Pipeline, PipelineStats};
+use crate::page::tuner::DepthControl;
+use crate::page::{read_decode_pipeline, PageFile, PageFileWriter, Prefetcher};
 use crate::runtime::Runtime;
 use crate::sketch::{HistogramCuts, SketchBuilder};
 use crate::tree::source::{
@@ -188,12 +189,20 @@ impl CsrSource {
         }
     }
 
-    /// Consume into an owned-page iterator feeding the conversion
-    /// pipeline.
-    fn into_page_iter(self) -> Result<Box<dyn Iterator<Item = Result<SparsePage>> + Send>> {
+    /// Consume into the head of the conversion pipeline.  The spilled
+    /// path *extends* the prefetcher's own read → decode pipeline with
+    /// further stages rather than wrapping it in a fresh source stage:
+    /// wrapping would clock the inner pipeline's recv-wait as "csr"
+    /// busy time (the iterator's `next()` blocks on a channel), which
+    /// poisoned the widest-stage stats the depth tuner reads.
+    fn into_pipeline(self, depth: usize) -> Result<Pipeline<SparsePage>> {
         Ok(match self {
-            CsrSource::Memory(pages) => Box::new(pages.into_iter().map(Ok)),
-            CsrSource::Spilled { file, depth } => Box::new(Prefetcher::start(&file, depth)?),
+            CsrSource::Memory(pages) => {
+                Pipeline::from_iter("csr", depth, pages.into_iter().map(Ok))
+            }
+            CsrSource::Spilled { file, depth: spill_depth } => {
+                read_decode_pipeline(&file, spill_depth)?
+            }
         })
     }
 
@@ -274,9 +283,8 @@ pub(crate) fn build_train_data(
         usize::MAX
     };
     let builder = EllpackBuilder::new(cuts.clone(), meta.row_stride, meta.dense, cap);
-    let depth = cfg.pipeline_depth;
-    let pipe = Pipeline::from_iter("csr", depth, csr.into_page_iter()?)
-        .then_stage("convert", depth, builder);
+    let depth = cfg.effective_pipeline_depth();
+    let pipe = csr.into_pipeline(depth)?.then_stage("convert", depth, builder);
     // (base_rowid, n_rows) per ELLPACK page — the shard plan's input.
     let mut page_rows = Vec::new();
     if out_of_core {
@@ -307,6 +315,26 @@ pub(crate) fn build_train_data(
     }
 }
 
+/// Shared wiring between the per-round sweep pipelines and the depth
+/// tuner: every disk-backed sweep reads its channel depth from `depth`
+/// at open time and accumulates stage counters into `stats`.  One
+/// instance serves the whole run (all shards share it, so the fleet's
+/// depths move together and their same-named stage counters merge —
+/// the tuner sees fleet-wide stage widths).
+pub(crate) struct SweepControl {
+    pub depth: Arc<DepthControl>,
+    pub stats: PipelineStats,
+}
+
+impl SweepControl {
+    pub fn new(cfg: &TrainConfig) -> SweepControl {
+        SweepControl {
+            depth: DepthControl::new(cfg.prefetch_depth),
+            stats: PipelineStats::new(),
+        }
+    }
+}
+
 /// Assemble the persistent per-mode sweep source the grower uses.
 /// `DeviceOutOfCore` returns `None`: Algorithm 7 opens a fresh hooked
 /// compaction sweep every round instead ([`compaction_sweep`]).
@@ -315,6 +343,7 @@ pub(crate) fn open_source(
     device: Option<&DeviceSetup>,
     cfg: &TrainConfig,
     n_rows: usize,
+    ctl: &SweepControl,
 ) -> Result<Option<StreamSource>> {
     match (data, cfg.mode) {
         (TrainData::HostPages(pages), ExecMode::CpuInCore) => Ok(Some(StreamSource::new(
@@ -329,11 +358,17 @@ pub(crate) fn open_source(
             )))
         }
         (TrainData::Disk(file), ExecMode::CpuOutOfCore) => Ok(Some(StreamSource::new(
-            Box::new(DiskStream::with_rows(file.clone(), cfg.prefetch_depth, n_rows)),
+            Box::new(
+                DiskStream::with_rows(file.clone(), cfg.prefetch_depth, n_rows)
+                    .with_depth_control(ctl.depth.clone())
+                    .with_stats(ctl.stats.clone()),
+            ),
         ))),
         (TrainData::Disk(file), ExecMode::DeviceOutOfCoreNaive) => {
             let dev = device.expect("device mode without device context");
-            let stream = DiskStream::with_rows(file.clone(), cfg.prefetch_depth, n_rows);
+            let stream = DiskStream::with_rows(file.clone(), cfg.prefetch_depth, n_rows)
+                .with_depth_control(ctl.depth.clone())
+                .with_stats(ctl.stats.clone());
             let stream = match dev.page_caches.first() {
                 Some(cache) => stream
                     .with_cache(cache.clone())
@@ -362,6 +397,7 @@ pub(crate) fn open_sharded_source(
     plan: &ShardPlan,
     device: Option<&DeviceSetup>,
     cfg: &TrainConfig,
+    ctl: &SweepControl,
 ) -> Result<Option<ShardedSource>> {
     let n = plan.n_shards();
     let fleet = device.and_then(|d| d.shards.as_ref());
@@ -392,7 +428,9 @@ pub(crate) fn open_sharded_source(
             for s in 0..n {
                 shards.push(StreamSource::new(Box::new(
                     DiskStream::with_rows(file.clone(), cfg.prefetch_depth, plan.rows_in(s))
-                        .with_page_subset(plan.pages_of(s).to_vec()),
+                        .with_page_subset(plan.pages_of(s).to_vec())
+                        .with_depth_control(ctl.depth.clone())
+                        .with_stats(ctl.stats.clone()),
                 )));
             }
         }
@@ -401,7 +439,9 @@ pub(crate) fn open_sharded_source(
             for s in 0..n {
                 let stream =
                     DiskStream::with_rows(file.clone(), cfg.prefetch_depth, plan.rows_in(s))
-                        .with_page_subset(plan.pages_of(s).to_vec());
+                        .with_page_subset(plan.pages_of(s).to_vec())
+                        .with_depth_control(ctl.depth.clone())
+                        .with_stats(ctl.stats.clone());
                 let ctx = fleet.ctx(s).clone();
                 let stream = match device.and_then(|d| d.page_caches.get(s)) {
                     Some(cache) => stream
@@ -430,22 +470,24 @@ pub(crate) fn open_sharded_source(
 pub(crate) fn compaction_sweep(
     file: &PageFile<EllpackPage>,
     dev: &DeviceSetup,
-    cfg: &TrainConfig,
+    ctl: &SweepControl,
 ) -> Result<PageIter> {
     let cache = dev.page_caches.first();
     let hook = match cache {
         Some(cache) => cached_h2d_hook(dev.ctx.clone(), cache.clone()),
         None => h2d_staging_hook(dev.ctx.clone()),
     };
-    DiskStream::open_file(file, cfg.prefetch_depth, Some(&hook), cache)
+    DiskStream::open_file(file, ctl.depth.get(), Some(&hook), cache, Some(&ctl.stats))
 }
 
 /// One host-side pass over the prepared data (margin updates): the
 /// in-memory fast path, or a read → decode pipeline for disk pages.
-pub(crate) fn data_sweep(data: &TrainData, depth: usize) -> Result<PageIter> {
+pub(crate) fn data_sweep(data: &TrainData, ctl: &SweepControl) -> Result<PageIter> {
     match data {
         TrainData::HostPages(pages) => Ok(PageIter::from_shared(pages.clone())),
-        TrainData::Disk(file) => DiskStream::open_file(file, depth, None, None),
+        TrainData::Disk(file) => {
+            DiskStream::open_file(file, ctl.depth.get(), None, None, Some(&ctl.stats))
+        }
     }
 }
 

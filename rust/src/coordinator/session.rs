@@ -57,6 +57,13 @@ pub struct TrainOutcome {
     pub cache_stats: Option<crate::device::CacheStats>,
     /// Mean selected rows per sampled round.
     pub mean_sample_rows: f64,
+    /// Prefetch/pipeline depth in effect when the run finished — the
+    /// tuner's final setting, or the configured depth when tuning is
+    /// off.
+    pub final_prefetch_depth: usize,
+    /// Depth changes the pipeline tuner applied over the run (0 when
+    /// `auto_tune` is off or the stage profile never justified a move).
+    pub depth_adjustments: u64,
 }
 
 impl TrainSession {

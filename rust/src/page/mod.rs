@@ -13,10 +13,12 @@ pub mod codec;
 pub mod pipeline;
 pub mod prefetch;
 pub mod store;
+pub mod tuner;
 
 pub use codec::PageCodec;
 pub use prefetch::{
-    read_decode_pipeline, read_decode_pipeline_subset, staged_ellpack_pipeline, Prefetcher,
-    StagedPage,
+    read_decode_pipeline, read_decode_pipeline_subset, staged_ellpack_pipeline,
+    staged_ellpack_pipeline_in, Prefetcher, StagedPage,
 };
 pub use store::{decode_frame, PageFile, PageFileWriter, PageReader, Serializable};
+pub use tuner::{DepthControl, PipelineTuner};

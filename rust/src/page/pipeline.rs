@@ -19,13 +19,34 @@
 //!   accumulates CSR rows and emits size-capped ELLPACK pages, plus a
 //!   final flush at end of input).
 //!
-//! Every stage keeps a busy-time counter ([`PipelineStats`]), which the
-//! ablation bench uses to model synchronous (Σ stage busy) versus
-//! overlapped (max stage busy) sweep cost.
+//! ## Busy vs blocked accounting
+//!
+//! Every stage keeps two time counters ([`PipelineStats`]):
+//!
+//! * **busy** — time spent inside the stage's own work: the source
+//!   iterator's `next()` for [`Pipeline::from_iter`], `apply`/`flush`
+//!   for downstream stages.
+//! * **blocked** — time spent waiting on the stage's channels: a full
+//!   downstream channel (`send`) or an empty upstream channel (`recv`).
+//!
+//! The distinction is what lets the depth tuner ([`crate::page::tuner`])
+//! find the *widest* stage: a stage with large blocked time is a victim
+//! of its neighbours, not a bottleneck, and chasing it would tune the
+//! wrong knob.  One caveat is inherent: `from_iter` cannot see inside
+//! the iterator it is handed, so if that iterator is itself backed by a
+//! channel (another pipeline, a `Prefetcher`), its recv-wait is
+//! misattributed as busy.  Callers must extend the inner pipeline with
+//! `then`/`then_stage` instead of re-wrapping it — see
+//! `CsrSource::into_pipeline` in `coordinator/modes.rs`.
+//!
+//! Stats handles are shared and keyed by stage name: building a second
+//! pipeline against the same [`PipelineStats`] accumulates into the
+//! same counters, so per-round sweeps that rebuild their pipeline every
+//! round still produce one monotone counter set the tuner can diff.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -43,12 +64,13 @@ pub trait MapStage<T, U>: Send {
     }
 }
 
-/// Per-stage busy-time and throughput counters (updated atomically from
-/// the stage thread).
+/// Per-stage time and throughput counters (updated atomically from the
+/// stage thread).
 #[derive(Debug)]
 struct StageStat {
     name: String,
     busy_nanos: AtomicU64,
+    blocked_nanos: AtomicU64,
     items: AtomicU64,
 }
 
@@ -58,44 +80,69 @@ impl StageStat {
             .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
         self.items.fetch_add(items, Ordering::Relaxed);
     }
+
+    fn record_blocked(&self, elapsed: std::time::Duration) {
+        self.blocked_nanos
+            .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
 }
 
 /// A point-in-time view of one stage's counters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StageSnapshot {
     pub name: String,
-    /// Seconds the stage thread spent doing work (not blocked on its
-    /// channels).
+    /// Seconds the stage thread spent doing its own work (source
+    /// `next()`, `apply`, `flush`).
     pub busy_secs: f64,
+    /// Seconds the stage thread spent waiting on its channels (full
+    /// downstream send, empty upstream recv) — backpressure, not work.
+    pub blocked_secs: f64,
     /// Items the stage produced.
     pub items: u64,
 }
 
-/// Cloneable handle onto a pipeline's stage counters; stays readable
-/// after the pipeline itself has been consumed or dropped.
+/// Cloneable, shared handle onto stage counters.  Counters are keyed by
+/// stage name and created on first use, so pipelines rebuilt every
+/// sweep against the same handle keep accumulating into one monotone
+/// counter set; the handle stays readable after every pipeline built
+/// from it has been consumed or dropped.
 #[derive(Clone, Default)]
 pub struct PipelineStats {
-    stages: Vec<Arc<StageStat>>,
+    stages: Arc<Mutex<Vec<Arc<StageStat>>>>,
 }
 
 impl PipelineStats {
-    fn push(&mut self, name: &str) -> Arc<StageStat> {
+    pub fn new() -> PipelineStats {
+        PipelineStats::default()
+    }
+
+    /// Find the counter set for `name`, creating it (at the end of the
+    /// stage order) on first use.
+    fn stage(&self, name: &str) -> Arc<StageStat> {
+        let mut stages = self.stages.lock().unwrap();
+        if let Some(s) = stages.iter().find(|s| s.name == name) {
+            return s.clone();
+        }
         let stat = Arc::new(StageStat {
             name: name.to_string(),
             busy_nanos: AtomicU64::new(0),
+            blocked_nanos: AtomicU64::new(0),
             items: AtomicU64::new(0),
         });
-        self.stages.push(stat.clone());
+        stages.push(stat.clone());
         stat
     }
 
-    /// Snapshot every stage, in pipeline order.
+    /// Snapshot every stage, in first-seen order.
     pub fn snapshot(&self) -> Vec<StageSnapshot> {
         self.stages
+            .lock()
+            .unwrap()
             .iter()
             .map(|s| StageSnapshot {
                 name: s.name.clone(),
                 busy_secs: s.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+                blocked_secs: s.blocked_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
                 items: s.items.load(Ordering::Relaxed),
             })
             .collect()
@@ -127,13 +174,29 @@ pub struct Pipeline<T: Send + 'static> {
 impl<T: Send + 'static> Pipeline<T> {
     /// Start a pipeline from a producing iterator, which runs on its
     /// own thread and feeds a `depth`-bounded channel.  An `Err` item
-    /// ends the stream after being delivered.
+    /// ends the stream after being delivered.  Stage counters live in a
+    /// fresh [`PipelineStats`]; use [`Pipeline::from_iter_in`] to
+    /// accumulate into an existing handle instead.
     pub fn from_iter<I>(name: &str, depth: usize, iter: I) -> Pipeline<T>
     where
         I: Iterator<Item = Result<T>> + Send + 'static,
     {
-        let mut stats = PipelineStats::default();
-        let stat = stats.push(name);
+        Self::from_iter_in(&PipelineStats::default(), name, depth, iter)
+    }
+
+    /// Like [`Pipeline::from_iter`], but records stage counters into
+    /// `stats` (shared, keyed by name) so repeated sweeps accumulate.
+    pub fn from_iter_in<I>(
+        stats: &PipelineStats,
+        name: &str,
+        depth: usize,
+        iter: I,
+    ) -> Pipeline<T>
+    where
+        I: Iterator<Item = Result<T>> + Send + 'static,
+    {
+        let stats = stats.clone();
+        let stat = stats.stage(name);
         let (tx, rx) = sync_channel::<Result<T>>(depth);
         let handle = spawn_stage(name, move || {
             let mut iter = iter;
@@ -147,7 +210,10 @@ impl<T: Send + 'static> Pipeline<T> {
                         let stop = item.is_err();
                         // send blocks when the channel is full — that is
                         // the backpressure that caps in-flight items.
-                        if tx.send(item).is_err() || stop {
+                        let t0 = Instant::now();
+                        let sent = tx.send(item).is_ok();
+                        stat.record_blocked(t0.elapsed());
+                        if !sent || stop {
                             return;
                         }
                     }
@@ -182,14 +248,18 @@ impl<T: Send + 'static> Pipeline<T> {
         U: Send + 'static,
         S: MapStage<T, U> + 'static,
     {
-        let stat = self.stats.push(name);
+        let stat = self.stats.stage(name);
         let rx_in = self.rx.take().expect("pipeline already consumed");
         let handles = std::mem::take(&mut self.handles);
         let stats = self.stats.clone();
         let (tx, rx_out) = sync_channel::<Result<U>>(depth);
         let handle = spawn_stage(name, move || {
             let mut buf: Vec<U> = Vec::new();
-            while let Ok(item) = rx_in.recv() {
+            loop {
+                let t0 = Instant::now();
+                let received = rx_in.recv();
+                stat.record_blocked(t0.elapsed());
+                let Ok(item) = received else { break };
                 match item {
                     Ok(t) => {
                         let t0 = Instant::now();
@@ -199,11 +269,13 @@ impl<T: Send + 'static> Pipeline<T> {
                             let _ = tx.send(Err(e));
                             return;
                         }
+                        let t0 = Instant::now();
                         for u in buf.drain(..) {
                             if tx.send(Ok(u)).is_err() {
                                 return; // consumer dropped
                             }
                         }
+                        stat.record_blocked(t0.elapsed());
                     }
                     Err(e) => {
                         // Forward the upstream error and terminate.
@@ -405,5 +477,61 @@ mod tests {
         assert_eq!(snap[0].items, 40);
         assert_eq!(snap[1].items, 40);
         assert!(snap[1].busy_secs > 0.0);
+    }
+
+    #[test]
+    fn blocked_time_is_not_busy_time() {
+        // Pin the busy/blocked semantics the tuner depends on: a fast
+        // producer feeding a slow consumer spends its time *blocked* on
+        // the full channel, and none of that wait may leak into busy.
+        let pipe = Pipeline::from_iter("fast-src", 1, (0..20).map(Ok)).then(
+            "slow",
+            0,
+            |x: u64| {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                Ok(x)
+            },
+        );
+        let stats = pipe.stats();
+        let n: usize = pipe.map(|r| r.unwrap()).count();
+        assert_eq!(n, 20);
+        let snap = stats.snapshot();
+        let src = &snap[0];
+        let slow = &snap[1];
+        // The producer waited on backpressure for roughly the consumer's
+        // total work time; its own work was trivial.
+        assert!(
+            src.blocked_secs > src.busy_secs * 4.0,
+            "producer blocked {:.6}s should dwarf busy {:.6}s",
+            src.blocked_secs,
+            src.busy_secs
+        );
+        // The slow stage's work is busy, not blocked-on-recv.
+        assert!(slow.busy_secs >= 0.020, "20 × 2ms of real work");
+        assert!(
+            slow.busy_secs > slow.blocked_secs,
+            "consumer is the bottleneck: busy {:.6}s vs blocked {:.6}s",
+            slow.busy_secs,
+            slow.blocked_secs
+        );
+    }
+
+    #[test]
+    fn shared_stats_accumulate_across_pipelines() {
+        // Rebuilding a pipeline every sweep against one handle must
+        // accumulate counters per stage name, not grow new stages.
+        let stats = PipelineStats::new();
+        for _ in 0..3 {
+            let pipe = Pipeline::from_iter_in(&stats, "read", 2, (0..10).map(Ok))
+                .then("decode", 2, |x: i32| Ok(x + 1));
+            let n = pipe.map(|r| r.unwrap()).count();
+            assert_eq!(n, 10);
+        }
+        let snap = stats.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].name, "read");
+        assert_eq!(snap[1].name, "decode");
+        assert_eq!(snap[0].items, 30);
+        assert_eq!(snap[1].items, 30);
     }
 }

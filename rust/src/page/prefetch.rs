@@ -17,7 +17,7 @@ use std::sync::Arc;
 use crate::device::PageCache;
 use crate::ellpack::EllpackPage;
 use crate::error::Result;
-use crate::page::pipeline::Pipeline;
+use crate::page::pipeline::{Pipeline, PipelineStats};
 use crate::page::store::{decode_frame, PageFile, Serializable};
 
 /// Build the standard read → decode pipeline over a page file, in page
@@ -77,6 +77,20 @@ pub fn staged_ellpack_pipeline(
     indices: Vec<usize>,
     cache: Option<Arc<PageCache>>,
 ) -> Result<Pipeline<StagedPage>> {
+    staged_ellpack_pipeline_in(&PipelineStats::default(), file, depth, indices, cache)
+}
+
+/// [`staged_ellpack_pipeline`] recording its stage counters into a
+/// shared [`PipelineStats`] handle.  Per-round sweeps rebuild this
+/// pipeline every round; accumulating into one handle is what gives the
+/// depth tuner a monotone counter set to diff at round boundaries.
+pub fn staged_ellpack_pipeline_in(
+    stats: &PipelineStats,
+    file: &PageFile<EllpackPage>,
+    depth: usize,
+    indices: Vec<usize>,
+    cache: Option<Arc<PageCache>>,
+) -> Result<Pipeline<StagedPage>> {
     let mut reader = file.reader()?;
     let version = file.version();
     let source = indices.into_iter().map(move |i| match &cache {
@@ -86,7 +100,7 @@ pub fn staged_ellpack_pipeline(
         },
         None => reader.read_raw(i).map(|b| Fetched::Frame(b, i)),
     });
-    Ok(Pipeline::from_iter("read", depth, source).then(
+    Ok(Pipeline::from_iter_in(stats, "read", depth, source).then(
         "decode",
         depth,
         move |fetched: Fetched| match fetched {

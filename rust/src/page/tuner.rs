@@ -1,0 +1,269 @@
+//! Self-tuning pipeline depths.
+//!
+//! The out-of-core sweeps rebuild their read→decode(→h2d) pipeline
+//! every round, and the right channel depth depends on the machine: on
+//! a fast disk the decode stage is widest and extra buffering only
+//! wastes memory, while balanced stages benefit from deeper channels
+//! that smooth per-item jitter.  Rather than asking the user to guess
+//! `prefetch_depth`, a [`PipelineTuner`] watches the cumulative
+//! [`PipelineStats`] the sweeps accumulate, diffs them at every round
+//! boundary, and nudges a shared [`DepthControl`] that the next sweep
+//! reads when it assembles its channels.
+//!
+//! Two properties keep this safe:
+//!
+//! * **Depth never changes results.**  Channel depth only bounds how
+//!   many items are in flight; item order and content are unaffected,
+//!   so the tuner can act on wall-clock measurements without breaking
+//!   the bit-for-bit determinism the equivalence tests pin.
+//! * **Busy, not blocked.**  The widest stage is the one with the most
+//!   *busy* time ([`StageSnapshot::busy_secs`]); blocked time is
+//!   backpressure from a neighbour and chasing it would tune the wrong
+//!   stage (see the busy/blocked split in `page/pipeline.rs`).
+//!
+//! The policy is deliberately simple and deterministic given the same
+//! measurements (the tuning bench replays it on synthetic profiles):
+//! if the widest stage dominates the round (its busy time exceeds
+//! twice everyone else's put together), deeper channels cannot create
+//! overlap that does not exist — step the depth down toward
+//! `min_depth` and give the memory back.  Otherwise the stages are
+//! comparable, overlap is real, and deeper channels absorb jitter —
+//! step up toward `max_depth`.  One step per round, clamped to the
+//! configured bounds; rounds with no traffic or negligible signal hold
+//! the current depth.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::page::pipeline::{PipelineStats, StageSnapshot};
+
+/// Rounds with less than this much total busy time carry no usable
+/// signal (timer noise dominates) and leave the depth unchanged.
+const MIN_SIGNAL_SECS: f64 = 1e-4;
+
+/// A shared, atomically-updated channel depth.  Sweep assembly reads it
+/// when building a pipeline; the tuner writes it at round boundaries.
+#[derive(Debug)]
+pub struct DepthControl {
+    depth: AtomicUsize,
+}
+
+impl DepthControl {
+    pub fn new(initial: usize) -> Arc<DepthControl> {
+        Arc::new(DepthControl { depth: AtomicUsize::new(initial) })
+    }
+
+    pub fn get(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    pub fn set(&self, depth: usize) {
+        self.depth.store(depth, Ordering::Relaxed);
+    }
+}
+
+/// What one round of measurements asks of the depth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Adjust {
+    /// Stages are comparable: overlap is real, deepen the channels.
+    Grow,
+    /// One stage dominates: depth cannot help, reclaim buffer memory.
+    Shrink,
+    /// No traffic or negligible signal this round.
+    Hold,
+}
+
+/// Decide a depth adjustment from one round's per-stage busy-time
+/// deltas.  Free function so the tuning bench can replay the exact
+/// production policy on synthetic profiles.
+pub fn decide(deltas: &[StageSnapshot]) -> Adjust {
+    // Stages that moved no items this round (e.g. a cache-hit sweep
+    // that skipped decode) are spectators, not candidates.
+    let active: Vec<&StageSnapshot> = deltas.iter().filter(|s| s.items > 0).collect();
+    let total: f64 = active.iter().map(|s| s.busy_secs).sum();
+    if active.len() < 2 || total < MIN_SIGNAL_SECS {
+        return Adjust::Hold;
+    }
+    let widest = active
+        .iter()
+        .map(|s| s.busy_secs)
+        .fold(0.0f64, f64::max);
+    let others = total - widest;
+    if widest > 2.0 * others {
+        Adjust::Shrink
+    } else {
+        Adjust::Grow
+    }
+}
+
+/// Round-boundary controller: diffs cumulative [`PipelineStats`]
+/// snapshots and steps a [`DepthControl`] within `[min_depth,
+/// max_depth]`.
+pub struct PipelineTuner {
+    stats: PipelineStats,
+    control: Arc<DepthControl>,
+    min_depth: usize,
+    max_depth: usize,
+    /// Cumulative snapshot at the previous round boundary.
+    last: Vec<StageSnapshot>,
+    adjustments: u64,
+}
+
+impl PipelineTuner {
+    pub fn new(
+        stats: PipelineStats,
+        control: Arc<DepthControl>,
+        min_depth: usize,
+        max_depth: usize,
+    ) -> PipelineTuner {
+        let last = stats.snapshot();
+        PipelineTuner { stats, control, min_depth, max_depth, last, adjustments: 0 }
+    }
+
+    /// Per-stage deltas accumulated since the previous observation.
+    fn deltas(&mut self) -> Vec<StageSnapshot> {
+        let now = self.stats.snapshot();
+        let deltas = now
+            .iter()
+            .map(|s| {
+                let prev = self.last.iter().find(|p| p.name == s.name);
+                StageSnapshot {
+                    name: s.name.clone(),
+                    busy_secs: s.busy_secs - prev.map_or(0.0, |p| p.busy_secs),
+                    blocked_secs: s.blocked_secs - prev.map_or(0.0, |p| p.blocked_secs),
+                    items: s.items - prev.map_or(0, |p| p.items),
+                }
+            })
+            .collect();
+        self.last = now;
+        deltas
+    }
+
+    /// Observe one finished round; returns the new depth when it
+    /// changed.
+    pub fn observe_round(&mut self) -> Option<usize> {
+        let deltas = self.deltas();
+        let cur = self.control.get();
+        let next = match decide(&deltas) {
+            Adjust::Grow => cur.saturating_add(1).min(self.max_depth),
+            Adjust::Shrink => cur.saturating_sub(1).max(self.min_depth),
+            Adjust::Hold => cur,
+        };
+        if next == cur {
+            return None;
+        }
+        self.control.set(next);
+        self.adjustments += 1;
+        Some(next)
+    }
+
+    /// Number of depth changes applied so far.
+    pub fn adjustments(&self) -> u64 {
+        self.adjustments
+    }
+
+    pub fn depth(&self) -> usize {
+        self.control.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::page::pipeline::Pipeline;
+
+    fn snap(name: &str, busy: f64, blocked: f64, items: u64) -> StageSnapshot {
+        StageSnapshot { name: name.to_string(), busy_secs: busy, blocked_secs: blocked, items }
+    }
+
+    #[test]
+    fn balanced_stages_grow() {
+        let deltas = vec![snap("read", 0.010, 0.0, 8), snap("decode", 0.008, 0.0, 8)];
+        assert_eq!(decide(&deltas), Adjust::Grow);
+    }
+
+    #[test]
+    fn dominant_stage_shrinks() {
+        let deltas = vec![snap("read", 0.050, 0.0, 8), snap("decode", 0.002, 0.0, 8)];
+        assert_eq!(decide(&deltas), Adjust::Shrink);
+    }
+
+    #[test]
+    fn blocked_time_does_not_elect_the_widest_stage() {
+        // read spent most of its wall-clock blocked on a full channel;
+        // its *busy* time is small, so decode dominates and the policy
+        // must not read the blocked wait as read-side width.
+        let deltas = vec![snap("read", 0.002, 0.300, 8), snap("decode", 0.050, 0.0, 8)];
+        assert_eq!(decide(&deltas), Adjust::Shrink);
+    }
+
+    #[test]
+    fn quiet_round_holds() {
+        assert_eq!(decide(&[]), Adjust::Hold);
+        assert_eq!(decide(&[snap("read", 0.5, 0.0, 0)]), Adjust::Hold);
+        let tiny = vec![snap("read", 1e-6, 0.0, 4), snap("decode", 1e-6, 0.0, 4)];
+        assert_eq!(decide(&tiny), Adjust::Hold);
+    }
+
+    #[test]
+    fn tuner_steps_and_clamps_within_bounds() {
+        let stats = PipelineStats::new();
+        let control = DepthControl::new(2);
+        let mut tuner = PipelineTuner::new(stats.clone(), control.clone(), 1, 4);
+        // Drive genuinely balanced traffic (the same sleep on both
+        // sides) through shared stats each round; the tuner should walk
+        // the depth up one step per round and clamp at max_depth.
+        for round in 0..4 {
+            let pipe = Pipeline::from_iter_in(
+                &stats,
+                "read",
+                2,
+                (0..64).map(|x| {
+                    std::thread::sleep(std::time::Duration::from_micros(30));
+                    Ok(x)
+                }),
+            )
+            .then("decode", 2, |x: u64| {
+                std::thread::sleep(std::time::Duration::from_micros(30));
+                Ok(x * 2)
+            });
+            assert_eq!(pipe.map(|r| r.unwrap()).count(), 64);
+            tuner.observe_round();
+            assert!(tuner.depth() <= 4, "round {round} overshot max depth");
+            assert!(tuner.depth() >= 1);
+        }
+        // Balanced profiles grow toward (and stop at) the cap.
+        assert_eq!(tuner.depth(), 4);
+        assert_eq!(tuner.adjustments(), 2, "2→3→4 then clamp");
+    }
+
+    #[test]
+    fn deltas_reset_between_observations() {
+        let stats = PipelineStats::new();
+        let control = DepthControl::new(2);
+        let mut tuner = PipelineTuner::new(stats.clone(), control.clone(), 0, 8);
+        let pipe = Pipeline::from_iter_in(&stats, "read", 2, (0..32).map(Ok));
+        assert_eq!(pipe.map(|r| r.unwrap()).count(), 32);
+        tuner.observe_round();
+        // No new traffic: the second observation must see zero deltas
+        // (cumulative counters were absorbed into `last`) and hold.
+        let before = tuner.depth();
+        assert_eq!(tuner.observe_round(), None);
+        assert_eq!(tuner.depth(), before);
+    }
+
+    #[test]
+    fn shrink_clamps_at_min_depth() {
+        let control = DepthControl::new(1);
+        let stats = PipelineStats::new();
+        let mut tuner = PipelineTuner::new(stats, control.clone(), 1, 8);
+        // Hand-crafted dominant profile via decide(): the tuner's
+        // control must not go below min_depth even under repeated
+        // shrink pressure.
+        control.set(1);
+        let deltas = vec![snap("read", 0.5, 0.0, 8), snap("decode", 0.001, 0.0, 8)];
+        assert_eq!(decide(&deltas), Adjust::Shrink);
+        assert_eq!(tuner.observe_round(), None, "no traffic in stats → hold");
+        assert_eq!(control.get(), 1);
+    }
+}

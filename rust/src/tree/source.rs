@@ -32,7 +32,9 @@ use std::sync::Arc;
 use crate::device::{DeviceAlloc, DeviceContext, Dir, PageCache};
 use crate::ellpack::EllpackPage;
 use crate::error::Result;
-use crate::page::{staged_ellpack_pipeline, PageFile, StagedPage};
+use crate::page::pipeline::PipelineStats;
+use crate::page::tuner::DepthControl;
+use crate::page::{staged_ellpack_pipeline_in, PageFile, StagedPage};
 
 /// A per-page hook applied by a stream's transfer stage.  The hook sees
 /// the staged page plus its transport facts (encoded wire bytes, cache
@@ -227,6 +229,12 @@ pub struct DiskStream {
     hook: Option<PageHook>,
     pages: Option<Vec<usize>>,
     cache: Option<Arc<PageCache>>,
+    /// When set, each sweep reads its channel depth here at open time —
+    /// the depth tuner's write side (`page/tuner.rs`).
+    control: Option<Arc<DepthControl>>,
+    /// When set, sweeps accumulate their stage counters here instead of
+    /// a per-sweep handle, giving the tuner round-over-round deltas.
+    stats: Option<PipelineStats>,
 }
 
 impl DiskStream {
@@ -245,7 +253,16 @@ impl DiskStream {
         depth: usize,
         n_rows: usize,
     ) -> DiskStream {
-        DiskStream { file, depth, n_rows, hook: None, pages: None, cache: None }
+        DiskStream {
+            file,
+            depth,
+            n_rows,
+            hook: None,
+            pages: None,
+            cache: None,
+            control: None,
+            stats: None,
+        }
     }
 
     /// Attach a per-page transfer hook, applied as pages are delivered.
@@ -271,6 +288,20 @@ impl DiskStream {
         self
     }
 
+    /// Read the channel depth for each sweep from a shared
+    /// [`DepthControl`] at open time (the tuner adjusts it between
+    /// rounds; depth only bounds in-flight pages, never results).
+    pub fn with_depth_control(mut self, control: Arc<DepthControl>) -> DiskStream {
+        self.control = Some(control);
+        self
+    }
+
+    /// Accumulate per-sweep stage counters into a shared handle.
+    pub fn with_stats(mut self, stats: PipelineStats) -> DiskStream {
+        self.stats = Some(stats);
+        self
+    }
+
     pub fn n_pages(&self) -> usize {
         match &self.pages {
             Some(idx) => idx.len(),
@@ -279,15 +310,24 @@ impl DiskStream {
     }
 
     /// One-shot sweep over a page file without building a stream (the
-    /// per-round compaction and margin sweeps use this).
+    /// per-round compaction and margin sweeps use this).  `stats` may
+    /// be `None` for fire-and-forget sweeps.
     pub fn open_file(
         file: &PageFile<EllpackPage>,
         depth: usize,
         hook: Option<&PageHook>,
         cache: Option<&Arc<PageCache>>,
+        stats: Option<&PipelineStats>,
     ) -> Result<PageIter> {
         let indices = (0..file.n_pages()).collect();
-        let pipe = staged_ellpack_pipeline(file, depth, indices, cache.cloned())?;
+        let fresh = PipelineStats::default();
+        let pipe = staged_ellpack_pipeline_in(
+            stats.unwrap_or(&fresh),
+            file,
+            depth,
+            indices,
+            cache.cloned(),
+        )?;
         Ok(match hook {
             Some(hook) => PageIter::Hooked { pipe, hook: hook.clone() },
             None => PageIter::Owned(pipe),
@@ -305,8 +345,15 @@ impl PageStream for DiskStream {
             Some(idx) => idx.clone(),
             None => (0..self.file.n_pages()).collect(),
         };
-        let pipe =
-            staged_ellpack_pipeline(&self.file, self.depth, indices, self.cache.clone())?;
+        let depth = self.control.as_ref().map_or(self.depth, |c| c.get());
+        let fresh = PipelineStats::default();
+        let pipe = staged_ellpack_pipeline_in(
+            self.stats.as_ref().unwrap_or(&fresh),
+            &self.file,
+            depth,
+            indices,
+            self.cache.clone(),
+        )?;
         Ok(match &self.hook {
             Some(hook) => PageIter::Hooked { pipe, hook: hook.clone() },
             None => PageIter::Owned(pipe),
@@ -741,6 +788,34 @@ mod tests {
         assert!(s.hits >= 1);
         assert_eq!(ctx.link.stats().h2d_transfers, 5); // 6 deliveries − 1 hit
         assert_eq!(ctx.mem.used(), s.resident_bytes);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn depth_control_and_stats_feed_the_tuner() {
+        let d = std::env::temp_dir().join(format!("oocgb-ctl-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let mut w = PageFileWriter::create(&d.join("ep.bin")).unwrap();
+        for p in pages(4, 3) {
+            w.write_page(&p).unwrap();
+        }
+        let file = Arc::new(w.finish().unwrap());
+        let control = DepthControl::new(0);
+        let stats = PipelineStats::new();
+        let stream = DiskStream::with_rows(file, 7, 12)
+            .with_depth_control(control.clone())
+            .with_stats(stats.clone());
+        // Depth comes from the control at open time, not the fixed field.
+        assert_eq!(stream.open().unwrap().count(), 4);
+        control.set(3); // tuner adjusts between rounds
+        assert_eq!(stream.open().unwrap().count(), 4);
+        // Both sweeps accumulated into the shared read/decode counters.
+        let snap = stats.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].name, "read");
+        assert_eq!(snap[1].name, "decode");
+        assert_eq!(snap[0].items, 8, "4 pages × 2 sweeps");
+        assert_eq!(snap[1].items, 8);
         std::fs::remove_dir_all(&d).ok();
     }
 

@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Diff emitted `BENCH {json}` lines against committed snapshots.
+
+Usage:
+    cargo bench --bench bench_ablations | tee bench.out
+    python3 tools/check_bench_snapshots.py bench.out [more-outputs...]
+
+Rules enforced:
+
+1. No committed ``benches/BENCH_*.json`` may carry ``"provisional": true``
+   — snapshots must hold measured/derived numbers, never placeholders
+   (and no field may be null).
+2. For every snapshot whose ``bench`` name matches an emitted BENCH
+   line, each snapshot field must match the emitted value: exact for
+   ints/strings/bools, within a relative tolerance for floats (modeled
+   seconds survive f64 accumulation-order differences; everything else
+   in the snapshots is deterministic by construction).
+3. A snapshot with no matching BENCH line in the provided outputs is an
+   error (the bench arm was removed or renamed without updating the
+   snapshot), unless no output files were given (provisional-only mode).
+
+Keys named ``note`` or starting with ``_`` are documentation and are
+not compared.
+"""
+
+import json
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SNAP_DIR = REPO / "benches"
+REL_TOL = 1e-6
+ABS_TOL = 1e-12
+
+BENCH_LINE = re.compile(r"^BENCH (\{.*\})\s*$")
+
+
+def fail(msg: str) -> None:
+    print(f"error: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_doc_key(key: str) -> bool:
+    return key == "note" or key.startswith("_")
+
+
+def check_no_nulls(value, path, where):
+    if value is None:
+        fail(f"{where}: field {path} is null — snapshots must be fully measured")
+    if isinstance(value, dict):
+        for k, v in value.items():
+            if not is_doc_key(k):
+                check_no_nulls(v, f"{path}.{k}", where)
+    if isinstance(value, list):
+        for i, v in enumerate(value):
+            check_no_nulls(v, f"{path}[{i}]", where)
+
+
+def diff(snap, got, path, where):
+    """Every non-doc snapshot field must match the emitted value."""
+    if isinstance(snap, dict):
+        if not isinstance(got, dict):
+            fail(f"{where}: {path} is an object in the snapshot but not in the BENCH line")
+        for k, v in snap.items():
+            if is_doc_key(k):
+                continue
+            if k not in got:
+                fail(f"{where}: {path}.{k} missing from the emitted BENCH line")
+            diff(v, got[k], f"{path}.{k}", where)
+        return
+    if isinstance(snap, list):
+        if not isinstance(got, list) or len(snap) != len(got):
+            fail(f"{where}: {path} length/type mismatch (snapshot {snap!r} vs emitted {got!r})")
+        for i, (a, b) in enumerate(zip(snap, got)):
+            diff(a, b, f"{path}[{i}]", where)
+        return
+    if isinstance(snap, bool) or isinstance(got, bool):
+        if snap is not got:
+            fail(f"{where}: {path}: snapshot {snap!r} != emitted {got!r}")
+        return
+    if isinstance(snap, float) and not float(snap).is_integer() or (
+        isinstance(got, float) and not float(got).is_integer()
+    ):
+        a, b = float(snap), float(got)
+        if abs(a - b) > max(ABS_TOL, REL_TOL * max(abs(a), abs(b))):
+            fail(f"{where}: {path}: snapshot {a!r} differs from emitted {b!r} beyond tolerance")
+        return
+    if isinstance(snap, (int, float)) and isinstance(got, (int, float)):
+        if float(snap) != float(got):
+            fail(f"{where}: {path}: snapshot {snap!r} != emitted {got!r}")
+        return
+    if snap != got:
+        fail(f"{where}: {path}: snapshot {snap!r} != emitted {got!r}")
+
+
+def main() -> None:
+    snapshots = {}
+    for f in sorted(SNAP_DIR.glob("BENCH_*.json")):
+        snap = json.loads(f.read_text())
+        where = f.relative_to(REPO)
+        if snap.get("provisional"):
+            fail(f"{where} is marked provisional — replace it with measured numbers")
+        check_no_nulls(snap, "$", where)
+        name = snap.get("bench")
+        if not name:
+            fail(f"{where} has no \"bench\" name field")
+        snapshots[name] = (snap, where)
+
+    emitted = {}
+    for arg in sys.argv[1:]:
+        for line in Path(arg).read_text().splitlines():
+            m = BENCH_LINE.match(line)
+            if m:
+                obj = json.loads(m.group(1))
+                emitted[obj.get("bench")] = obj
+
+    if sys.argv[1:]:
+        for name, (snap, where) in snapshots.items():
+            if name not in emitted:
+                fail(f"{where}: no `BENCH` line named {name!r} in the provided bench output")
+            diff(snap, emitted[name], "$", where)
+            print(f"ok: {where} matches emitted bench `{name}`")
+    else:
+        for _, where in snapshots.values():
+            print(f"ok: {where} is non-provisional and fully populated")
+
+
+if __name__ == "__main__":
+    main()
