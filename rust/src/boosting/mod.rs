@@ -7,7 +7,9 @@
 pub mod metrics;
 pub mod model;
 pub mod objective;
+pub mod persist;
 
 pub use metrics::Metric;
 pub use model::GbtModel;
 pub use objective::Objective;
+pub use persist::{load_bundle, load_model_auto, save_bundle, ModelBundle};

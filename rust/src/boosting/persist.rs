@@ -1,0 +1,328 @@
+//! Binary model bundle: a trained [`GbtModel`] plus (optionally) the
+//! [`HistogramCuts`] it was trained with, in a versioned length-prefix +
+//! FNV-checksum container following the `page/store.rs` framing
+//! conventions.
+//!
+//! ```text
+//! [magic u64][version u64][n_sections u64][reserved u64]
+//! section × n: [tag u64][len u64][payload len bytes][fnv64(payload)]
+//! ```
+//!
+//! All integers are little-endian; floats are stored as their IEEE bit
+//! patterns, so a load is *bit-exact* — the serving layer's compile-time
+//! `split_value == cut` check survives a save/load cycle.  Unknown
+//! section tags are skipped (length-prefixing makes them skippable), so
+//! old binaries open files with future sections.
+//!
+//! The JSON dump ([`GbtModel::save`]) remains the human-readable
+//! interchange format; this container is what `serve` loads — it keeps
+//! the cuts next to the forest so the binned scoring path can be
+//! compiled without re-sketching the training data.
+
+use std::path::Path;
+
+use crate::boosting::objective::Objective;
+use crate::boosting::GbtModel;
+use crate::error::{Error, Result};
+use crate::page::store::checksum;
+use crate::sketch::HistogramCuts;
+use crate::tree::{Node, Tree};
+
+const MAGIC: u64 = 0x4F4F_4347_424D_444C; // "OOCGBMDL"
+const VERSION: u64 = 1;
+const TAG_MODEL: u64 = 1;
+const TAG_CUTS: u64 = 2;
+
+/// A loaded bundle: the forest, and the training-time cuts when the
+/// file carries them.
+#[derive(Clone, Debug)]
+pub struct ModelBundle {
+    pub model: GbtModel,
+    pub cuts: Option<HistogramCuts>,
+}
+
+/// Write `model` (and `cuts`, when given) to `path` as a bundle.
+pub fn save_bundle(
+    path: &Path,
+    model: &GbtModel,
+    cuts: Option<&HistogramCuts>,
+) -> Result<()> {
+    let mut sections: Vec<(u64, Vec<u8>)> = vec![(TAG_MODEL, encode_model(model))];
+    if let Some(c) = cuts {
+        sections.push((TAG_CUTS, encode_cuts(c)));
+    }
+    let mut out = Vec::new();
+    put_u64(&mut out, MAGIC);
+    put_u64(&mut out, VERSION);
+    put_u64(&mut out, sections.len() as u64);
+    put_u64(&mut out, 0); // reserved
+    for (tag, payload) in &sections {
+        put_u64(&mut out, *tag);
+        put_u64(&mut out, payload.len() as u64);
+        out.extend_from_slice(payload);
+        put_u64(&mut out, checksum(payload));
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Load a bundle written by [`save_bundle`], verifying magic, version,
+/// and every section checksum.
+pub fn load_bundle(path: &Path) -> Result<ModelBundle> {
+    let bytes = std::fs::read(path)?;
+    let mut r = Cursor::new(&bytes);
+    let magic = r.u64("magic")?;
+    if magic != MAGIC {
+        return Err(Error::data(format!(
+            "model bundle: bad magic {magic:#018x} (not a bundle file)"
+        )));
+    }
+    let version = r.u64("version")?;
+    if version == 0 || version > VERSION {
+        return Err(Error::data(format!(
+            "model bundle: unsupported version {version} (this build reads <= {VERSION})"
+        )));
+    }
+    let n_sections = r.u64("section count")?;
+    r.u64("reserved")?;
+    let mut model = None;
+    let mut cuts = None;
+    for i in 0..n_sections {
+        let tag = r.u64("section tag")?;
+        let len = r.u64("section length")? as usize;
+        let payload = r.bytes(len, "section payload")?;
+        let sum = r.u64("section checksum")?;
+        if checksum(payload) != sum {
+            return Err(Error::data(format!(
+                "model bundle: checksum mismatch on section {i} (tag {tag}) — file corrupted"
+            )));
+        }
+        match tag {
+            TAG_MODEL => model = Some(decode_model(payload)?),
+            TAG_CUTS => cuts = Some(decode_cuts(payload)?),
+            _ => {} // future section: skippable by construction
+        }
+    }
+    let model = model
+        .ok_or_else(|| Error::data("model bundle: no model section"))?;
+    Ok(ModelBundle { model, cuts })
+}
+
+/// Load a model from either format: bundle files are detected by magic,
+/// anything else is parsed as the JSON dump (with no cuts).
+pub fn load_model_auto(path: &Path) -> Result<ModelBundle> {
+    let is_bundle = std::fs::File::open(path).ok().and_then(|mut f| {
+        use std::io::Read;
+        let mut head = [0u8; 8];
+        f.read_exact(&mut head).ok()?;
+        Some(u64::from_le_bytes(head) == MAGIC)
+    });
+    if is_bundle == Some(true) {
+        load_bundle(path)
+    } else {
+        Ok(ModelBundle { model: GbtModel::load(path)?, cuts: None })
+    }
+}
+
+// ---- model payload ----
+// u8 objective | f32 base_margin | u64 n_features | u64 n_trees
+// per tree: u64 n_nodes, then per node the full `Node` (floats as bit
+// patterns, leaf children usize::MAX ↔ u64::MAX) so a round trip is
+// field-for-field exact.
+
+fn encode_model(m: &GbtModel) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.push(match m.objective {
+        Objective::Logistic => 0u8,
+        Objective::Squared => 1u8,
+    });
+    b.extend_from_slice(&m.base_margin.to_bits().to_le_bytes());
+    put_u64(&mut b, m.n_features as u64);
+    put_u64(&mut b, m.trees.len() as u64);
+    for t in &m.trees {
+        put_u64(&mut b, t.nodes.len() as u64);
+        for n in &t.nodes {
+            b.extend_from_slice(&n.split_feature.to_le_bytes());
+            b.extend_from_slice(&n.split_bin.to_le_bytes());
+            b.extend_from_slice(&n.split_value.to_bits().to_le_bytes());
+            put_u64(&mut b, usize_to_u64(n.left));
+            put_u64(&mut b, usize_to_u64(n.right));
+            b.extend_from_slice(&n.weight.to_bits().to_le_bytes());
+            b.extend_from_slice(&n.gain.to_bits().to_le_bytes());
+            put_u64(&mut b, n.sum_grad.to_bits());
+            put_u64(&mut b, n.sum_hess.to_bits());
+            put_u64(&mut b, n.depth as u64);
+        }
+    }
+    b
+}
+
+fn decode_model(payload: &[u8]) -> Result<GbtModel> {
+    let mut r = Cursor::new(payload);
+    let objective = match r.u8("objective")? {
+        0 => Objective::Logistic,
+        1 => Objective::Squared,
+        o => return Err(Error::data(format!("model bundle: unknown objective id {o}"))),
+    };
+    let base_margin = f32::from_bits(r.u32("base_margin")?);
+    let n_features = r.u64("n_features")? as usize;
+    let n_trees = r.u64("n_trees")? as usize;
+    let mut trees = Vec::with_capacity(n_trees.min(1 << 20));
+    for t in 0..n_trees {
+        let n_nodes = r.u64("n_nodes")? as usize;
+        let mut nodes = Vec::with_capacity(n_nodes.min(1 << 24));
+        for i in 0..n_nodes {
+            let split_feature = r.u32("split_feature")? as i32;
+            let split_bin = r.u32("split_bin")? as i32;
+            let split_value = f32::from_bits(r.u32("split_value")?);
+            let left = u64_to_usize(r.u64("left")?);
+            let right = u64_to_usize(r.u64("right")?);
+            let weight = f32::from_bits(r.u32("weight")?);
+            let gain = f32::from_bits(r.u32("gain")?);
+            let sum_grad = f64::from_bits(r.u64("sum_grad")?);
+            let sum_hess = f64::from_bits(r.u64("sum_hess")?);
+            let depth = r.u64("depth")? as usize;
+            if split_feature >= 0
+                && (left == usize::MAX
+                    || right == usize::MAX
+                    || left >= n_nodes
+                    || right >= n_nodes)
+            {
+                return Err(Error::data(format!(
+                    "model bundle: tree {t} node {i} has children out of range"
+                )));
+            }
+            nodes.push(Node {
+                split_feature,
+                split_bin,
+                split_value,
+                left,
+                right,
+                weight,
+                gain,
+                sum_grad,
+                sum_hess,
+                depth,
+            });
+        }
+        trees.push(Tree { nodes });
+    }
+    if !r.at_end() {
+        return Err(Error::data("model bundle: trailing bytes in model section"));
+    }
+    Ok(GbtModel { objective, base_margin, trees, n_features })
+}
+
+// ---- cuts payload ----
+// u64 n_ptrs + u32s | u64 n_values + f32 bit patterns | u64 n_mins + f32s
+
+fn encode_cuts(c: &HistogramCuts) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, c.ptrs.len() as u64);
+    for p in &c.ptrs {
+        b.extend_from_slice(&p.to_le_bytes());
+    }
+    put_u64(&mut b, c.values.len() as u64);
+    for v in &c.values {
+        b.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    put_u64(&mut b, c.min_vals.len() as u64);
+    for v in &c.min_vals {
+        b.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    b
+}
+
+fn decode_cuts(payload: &[u8]) -> Result<HistogramCuts> {
+    let mut r = Cursor::new(payload);
+    let n_ptrs = r.u64("n_ptrs")? as usize;
+    let mut ptrs = Vec::with_capacity(n_ptrs.min(1 << 24));
+    for _ in 0..n_ptrs {
+        ptrs.push(r.u32("ptr")?);
+    }
+    let n_values = r.u64("n_values")? as usize;
+    let mut values = Vec::with_capacity(n_values.min(1 << 26));
+    for _ in 0..n_values {
+        values.push(f32::from_bits(r.u32("cut value")?));
+    }
+    let n_mins = r.u64("n_mins")? as usize;
+    let mut min_vals = Vec::with_capacity(n_mins.min(1 << 24));
+    for _ in 0..n_mins {
+        min_vals.push(f32::from_bits(r.u32("min value")?));
+    }
+    if !r.at_end() {
+        return Err(Error::data("model bundle: trailing bytes in cuts section"));
+    }
+    if ptrs.is_empty() || *ptrs.last().unwrap() as usize != values.len() {
+        return Err(Error::data("model bundle: cuts ptrs/values disagree"));
+    }
+    Ok(HistogramCuts { ptrs, values, min_vals })
+}
+
+// ---- little helpers ----
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn usize_to_u64(v: usize) -> u64 {
+    if v == usize::MAX {
+        u64::MAX
+    } else {
+        v as u64
+    }
+}
+
+fn u64_to_usize(v: u64) -> usize {
+    if v == u64::MAX {
+        usize::MAX
+    } else {
+        v as usize
+    }
+}
+
+/// Bounds-checked little-endian reader over a byte slice — every read
+/// names the field it was after, so truncation errors say what's
+/// missing.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(bytes: &'a [u8]) -> Cursor<'a> {
+        Cursor { bytes, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.bytes.len() - self.pos < n {
+            return Err(Error::data(format!(
+                "model bundle: truncated reading {what} (need {n} bytes at offset {})",
+                self.pos
+            )));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.bytes(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.bytes(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.bytes(8, what)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn at_end(&self) -> bool {
+        self.pos == self.bytes.len()
+    }
+}

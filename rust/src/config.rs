@@ -457,6 +457,68 @@ impl TrainConfig {
     }
 }
 
+/// Serving-layer configuration (`serve` CLI verb + [`crate::serve::Batcher`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Largest batch the collector dispatches.
+    pub batch_max: usize,
+    /// Longest a batch waits for co-riders after its first request (µs).
+    pub max_wait_us: usize,
+    /// Bounded submit-queue depth (backpressure bound).
+    pub queue_depth: usize,
+    /// Scoring worker threads behind the batcher.
+    pub workers: usize,
+    /// Rows per accumulator block in the scoring engine.
+    pub block_rows: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            batch_max: 256,
+            max_wait_us: 2000,
+            queue_depth: 1024,
+            workers: 2,
+            block_rows: 64,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Set a single parameter from its string form (CLI override path).
+    pub fn set_str(&mut self, key: &str, v: &str) -> Result<()> {
+        fn pf<T: std::str::FromStr>(key: &str, v: &str) -> Result<T> {
+            v.parse()
+                .map_err(|_| Error::config(format!("bad value `{v}` for `{key}`")))
+        }
+        match key {
+            "batch_max" => self.batch_max = pf(key, v)?,
+            "max_wait_us" => self.max_wait_us = pf(key, v)?,
+            "queue_depth" => self.queue_depth = pf(key, v)?,
+            "workers" => self.workers = pf(key, v)?,
+            "block_rows" => self.block_rows = pf(key, v)?,
+            _ => return Err(Error::config(format!("unknown serve key `{key}`"))),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.batch_max == 0 || self.batch_max > 65536 {
+            return Err(Error::config("batch_max must be in [1, 65536]"));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::config("queue_depth must be >= 1"));
+        }
+        if self.workers == 0 {
+            return Err(Error::config("workers must be >= 1"));
+        }
+        if self.block_rows == 0 {
+            return Err(Error::config("block_rows must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -464,6 +526,25 @@ mod tests {
     #[test]
     fn defaults_are_valid() {
         TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn serve_config_overrides_and_validation() {
+        let mut cfg = ServeConfig::default();
+        cfg.validate().unwrap();
+        cfg.set_str("batch_max", "32").unwrap();
+        cfg.set_str("max_wait_us", "500").unwrap();
+        cfg.set_str("workers", "4").unwrap();
+        assert_eq!(cfg.batch_max, 32);
+        assert_eq!(cfg.max_wait_us, 500);
+        assert_eq!(cfg.workers, 4);
+        cfg.validate().unwrap();
+        assert!(cfg.set_str("nope", "1").is_err());
+        cfg.set_str("batch_max", "0").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.set_str("batch_max", "8").unwrap();
+        cfg.set_str("workers", "0").unwrap();
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -341,6 +341,7 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
     }
     Ok(TrainOutcome {
         model,
+        cuts: session.cuts.clone(),
         eval_history,
         train_seconds,
         timers: session.timers.clone(),

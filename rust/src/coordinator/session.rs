@@ -42,6 +42,10 @@ pub struct TrainSession {
 #[derive(Debug)]
 pub struct TrainOutcome {
     pub model: GbtModel,
+    /// The histogram cuts the model was trained against — what the
+    /// serving layer compiles binned thresholds from (bundled next to
+    /// the model by `train --model-out *.bin`).
+    pub cuts: Arc<HistogramCuts>,
     /// (round, metric) pairs for the eval split.
     pub eval_history: Vec<(usize, f64)>,
     pub train_seconds: f64,

@@ -46,6 +46,7 @@ pub mod error;
 pub mod page;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod sketch;
 pub mod tree;
 pub mod util;

@@ -5,7 +5,9 @@
 //!
 //! * `train`   — train a model (any of the six execution modes).
 //! * `datagen` — write a synthetic dataset (LibSVM or CSV).
-//! * `predict` — score a dataset with a saved model.
+//! * `predict` — score a dataset with a saved model (naive tree walk).
+//! * `score`   — batch-score through the compiled serving engine.
+//! * `serve`   — drive the batching request front and report latency.
 //! * `info`    — show the AOT artifact inventory and PJRT platform.
 //!
 //! Training parameters are `key=value` pairs (XGBoost-style), optionally
@@ -23,13 +25,16 @@
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use oocgb::boosting::GbtModel;
-use oocgb::config::TrainConfig;
+use std::sync::Arc;
+
+use oocgb::boosting::{load_model_auto, save_bundle, ModelBundle};
+use oocgb::config::{ServeConfig, TrainConfig};
 use oocgb::coordinator::TrainSession;
 use oocgb::data::synthetic::{self, ClassificationSpec};
 use oocgb::data::{csv, libsvm, DMatrix};
 use oocgb::error::{Error, Result};
 use oocgb::runtime::Runtime;
+use oocgb::serve::{Batcher, CompiledForest, RowInput, ScoringEngine};
 use oocgb::util::fmt_bytes;
 
 fn main() -> ExitCode {
@@ -48,6 +53,8 @@ fn run(args: &[String]) -> Result<()> {
         Some("train") => cmd_train(&args[1..]),
         Some("datagen") => cmd_datagen(&args[1..]),
         Some("predict") => cmd_predict(&args[1..]),
+        Some("score") => cmd_score(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
         Some("--help") | Some("-h") | None => {
             print!("{}", USAGE);
@@ -68,9 +75,18 @@ USAGE:
                 [--model-out model.json] [key=value ...]
   oocgb datagen --kind higgs|classification --rows N [--cols N]
                 --out FILE [--format libsvm|csv] [--seed N]
-  oocgb predict --model model.json --data FILE [--format libsvm|csv]
-                [--out preds.txt]
+  oocgb predict --model model.json|model.bin --data FILE
+                [--format libsvm|csv] [--out preds.txt]
+  oocgb score   --model model.bin --data FILE [--format libsvm|csv]
+                [--out preds.txt] [workers=2 block_rows=64]
+  oocgb serve   --model model.bin --data FILE [--format libsvm|csv]
+                [--out preds.txt] [batch_max=256 max_wait_us=2000
+                queue_depth=1024 workers=2 block_rows=64]
   oocgb info    [--artifacts DIR]
+
+`train --model-out model.bin` writes a binary bundle (model + histogram
+cuts) that `score`/`serve` compile into the flat binned scoring engine;
+a `.json` model still works for `predict`/`score` via the raw tree walk.
 
 Common train keys: mode=cpu|cpu-ooc|device|naive-ooc|device-ooc,
   sampling_method=none|uniform|goss|mvs, f=0.3, n_rounds=100, max_depth=8,
@@ -208,7 +224,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
         eprintln!("device memory peak: {} / {}", fmt_bytes(peak), fmt_bytes(cap));
     }
     if let Some(path) = model_out {
-        outcome.model.save(&path)?;
+        if path.extension().and_then(|e| e.to_str()) == Some("bin") {
+            save_bundle(&path, &outcome.model, Some(&*outcome.cuts))?;
+        } else {
+            outcome.model.save(&path)?;
+        }
         eprintln!("model written to {}", path.display());
     }
     Ok(())
@@ -254,10 +274,14 @@ fn cmd_datagen(args: &[String]) -> Result<()> {
 
 fn cmd_predict(args: &[String]) -> Result<()> {
     let flags = Flags::parse(args)?;
-    let model = GbtModel::load(Path::new(flags.require("model")?))?;
+    let model = load_model_auto(Path::new(flags.require("model")?))?.model;
     let data = load_data(flags.require("data")?, flags.get("format"))?;
     let preds = model.predict(&data);
-    match flags.get("out") {
+    write_preds(&preds, flags.get("out"))
+}
+
+fn write_preds(preds: &[f32], out: Option<&str>) -> Result<()> {
+    match out {
         Some(path) => {
             let text: String = preds.iter().map(|p| format!("{p}\n")).collect();
             std::fs::write(path, text)?;
@@ -270,6 +294,86 @@ fn cmd_predict(args: &[String]) -> Result<()> {
         }
     }
     Ok(())
+}
+
+fn serve_config(overrides: &[String]) -> Result<ServeConfig> {
+    let mut cfg = ServeConfig::default();
+    for ov in overrides {
+        let (k, v) = ov
+            .split_once('=')
+            .ok_or_else(|| Error::config(format!("override `{ov}` is not key=value")))?;
+        cfg.set_str(k.trim(), v.trim())?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn load_scoring_data(flags: &Flags, bundle: &ModelBundle) -> Result<DMatrix> {
+    let data = load_data(flags.require("data")?, flags.get("format"))?;
+    if data.n_cols() > bundle.model.n_features {
+        return Err(Error::data(format!(
+            "data has {} columns but the model was trained on {}",
+            data.n_cols(),
+            bundle.model.n_features
+        )));
+    }
+    Ok(data)
+}
+
+/// Batch scoring through the compiled engine (bundles with cuts); JSON
+/// models fall back to the naive per-row tree walk with identical bits.
+fn cmd_score(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let cfg = serve_config(&flags.overrides)?;
+    let bundle = load_model_auto(Path::new(flags.require("model")?))?;
+    let data = load_scoring_data(&flags, &bundle)?;
+    let preds = match &bundle.cuts {
+        Some(cuts) => {
+            let forest = Arc::new(CompiledForest::compile(&bundle.model, cuts)?);
+            let engine = ScoringEngine::new(forest)
+                .with_block_rows(cfg.block_rows)
+                .with_workers(cfg.workers);
+            engine.score_dmatrix(&data, Some(cuts))?
+        }
+        None => {
+            eprintln!("model has no bundled cuts; scoring with the naive walk");
+            bundle.model.predict(&data)
+        }
+    };
+    write_preds(&preds, flags.get("out"))
+}
+
+/// Feed every data row through the batching request front one request
+/// at a time (the serving traffic shape), then report latency/throughput.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let cfg = serve_config(&flags.overrides)?;
+    let bundle = load_model_auto(Path::new(flags.require("model")?))?;
+    let cuts = bundle.cuts.as_ref().ok_or_else(|| {
+        Error::config(
+            "serve needs a binary bundle with cuts — retrain with --model-out model.bin",
+        )
+    })?;
+    let data = load_scoring_data(&flags, &bundle)?;
+    let forest = Arc::new(CompiledForest::compile(&bundle.model, cuts)?);
+    let engine = Arc::new(
+        ScoringEngine::new(Arc::clone(&forest)).with_block_rows(cfg.block_rows),
+    );
+    let batcher = Batcher::new(engine, &cfg);
+    let mut replies = Vec::with_capacity(data.n_rows());
+    for r in 0..data.n_rows() {
+        let (cols, vals) = data.row(r);
+        let mut syms = vec![0u32; forest.n_features];
+        forest.quantize_row_into(cuts, cols, vals, &mut syms);
+        replies.push(batcher.submit(RowInput::Binned(syms))?);
+    }
+    let preds = replies
+        .into_iter()
+        .map(|r| r.wait())
+        .collect::<Result<Vec<f32>>>()?;
+    eprintln!("{}", batcher.report());
+    drop(batcher);
+    write_preds(&preds, flags.get("out"))
 }
 
 fn cmd_info(args: &[String]) -> Result<()> {

@@ -83,8 +83,9 @@ impl Serializable for crate::ellpack::EllpackPage {
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 
 /// FNV-1a fold step — lets the writer hash a frame's codec byte and
-/// payload without concatenating them.
-fn fnv_update(mut h: u64, bytes: &[u8]) -> u64 {
+/// payload without concatenating them.  Shared with the model-bundle
+/// format (`boosting/persist.rs`) so the whole repo has one checksum.
+pub(crate) fn fnv_update(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x1000_0000_01b3);
@@ -93,7 +94,7 @@ fn fnv_update(mut h: u64, bytes: &[u8]) -> u64 {
 }
 
 /// FNV-1a — cheap integrity check per frame.
-fn checksum(bytes: &[u8]) -> u64 {
+pub(crate) fn checksum(bytes: &[u8]) -> u64 {
     fnv_update(FNV_OFFSET, bytes)
 }
 

@@ -1,0 +1,240 @@
+//! Concurrent request front: coalesce single-row scoring requests into
+//! bounded batches under a max-wait deadline.
+//!
+//! Topology mirrors `page/pipeline.rs`: bounded `sync_channel`s at
+//! every hop so a slow consumer exerts backpressure instead of growing
+//! queues without bound.
+//!
+//! ```text
+//! submit() ──sync_channel(queue_depth)──▶ collector ──sync_channel(workers)──▶ worker pool
+//!    ▲                                      │                                    │
+//!    └── blocks when the queue is full      │ flushes at batch_max or            │ scores via the
+//!        (try_submit errors instead)        │ max_wait after the first           │ Scorer, replies
+//!                                          │ request of a batch                 │ per request
+//! ```
+//!
+//! Each request carries a oneshot reply channel; workers answer every
+//! member of a batch in batch order, so replies can never cross wires.
+//! Dropping the [`Batcher`] closes the submit side, lets the collector
+//! flush its final partial batch, then joins the collector and every
+//! worker — pending requests are answered, not abandoned.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::error::{Error, Result};
+use crate::serve::engine::{RowInput, Scorer};
+use crate::serve::metrics::{ServeReport, ServeStats};
+
+/// One queued request: the row, its submit time (for latency), and the
+/// oneshot reply slot.
+struct ServeRequest {
+    input: RowInput,
+    submitted: Instant,
+    reply: SyncSender<Result<f32>>,
+}
+
+/// Handle for one in-flight request; [`Reply::wait`] blocks until the
+/// worker answers.
+pub struct Reply {
+    rx: Receiver<Result<f32>>,
+}
+
+impl Reply {
+    /// Block until the prediction (or scoring error) arrives.
+    pub fn wait(self) -> Result<f32> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(Error::data("serving engine shut down before replying")),
+        }
+    }
+}
+
+/// The batching request front over any [`Scorer`].
+pub struct Batcher {
+    submit_tx: Option<SyncSender<ServeRequest>>,
+    collector: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<ServeStats>,
+    n_features: usize,
+}
+
+impl Batcher {
+    pub fn new(scorer: Arc<dyn Scorer>, cfg: &ServeConfig) -> Batcher {
+        let n_features = scorer.n_features();
+        let (submit_tx, submit_rx) = mpsc::sync_channel::<ServeRequest>(cfg.queue_depth);
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<Vec<ServeRequest>>(cfg.workers);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let stats = Arc::new(ServeStats::new());
+
+        let batch_max = cfg.batch_max;
+        let max_wait = Duration::from_micros(cfg.max_wait_us as u64);
+        let collector = std::thread::spawn(move || {
+            collect_loop(submit_rx, batch_tx, batch_max, max_wait)
+        });
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for _ in 0..cfg.workers {
+            let rx = Arc::clone(&batch_rx);
+            let scorer = Arc::clone(&scorer);
+            let stats = Arc::clone(&stats);
+            workers.push(std::thread::spawn(move || worker_loop(rx, scorer, stats)));
+        }
+
+        Batcher {
+            submit_tx: Some(submit_tx),
+            collector: Some(collector),
+            workers,
+            stats,
+            n_features,
+        }
+    }
+
+    /// Enqueue one row, blocking while the submit queue is full
+    /// (bounded-channel backpressure).
+    pub fn submit(&self, input: RowInput) -> Result<Reply> {
+        let (req, reply) = self.request(input)?;
+        self.submit_tx
+            .as_ref()
+            .expect("submit after shutdown")
+            .send(req)
+            .map_err(|_| Error::data("serving engine shut down"))?;
+        Ok(reply)
+    }
+
+    /// Enqueue one row without blocking; errors when the queue is full.
+    pub fn try_submit(&self, input: RowInput) -> Result<Reply> {
+        let (req, reply) = self.request(input)?;
+        match self.submit_tx.as_ref().expect("submit after shutdown").try_send(req) {
+            Ok(()) => Ok(reply),
+            Err(TrySendError::Full(_)) => {
+                Err(Error::data("serving queue full — request rejected"))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                Err(Error::data("serving engine shut down"))
+            }
+        }
+    }
+
+    pub fn report(&self) -> ServeReport {
+        self.stats.report()
+    }
+
+    pub fn stats(&self) -> &Arc<ServeStats> {
+        &self.stats
+    }
+
+    fn request(&self, input: RowInput) -> Result<(ServeRequest, Reply)> {
+        // Validate the row shape here so one malformed request fails
+        // alone instead of failing everyone sharing its batch.
+        let len = match &input {
+            RowInput::Raw(v) => v.len(),
+            RowInput::Binned(s) => s.len(),
+        };
+        if len != self.n_features {
+            return Err(Error::data(format!(
+                "request row has {len} features, engine expects {}",
+                self.n_features
+            )));
+        }
+        let (tx, rx) = mpsc::sync_channel::<Result<f32>>(1);
+        let req = ServeRequest { input, submitted: Instant::now(), reply: tx };
+        Ok((req, Reply { rx }))
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // Close the submit side; the collector drains what's queued,
+        // flushes its final partial batch, and exits, which closes the
+        // batch channel and lets the workers drain and exit in turn.
+        self.submit_tx.take();
+        if let Some(c) = self.collector.take() {
+            let _ = c.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Collector: start a batch at the first request, then fill it until
+/// `batch_max` rows or `max_wait` past the batch's start, whichever
+/// comes first.
+fn collect_loop(
+    rx: Receiver<ServeRequest>,
+    tx: SyncSender<Vec<ServeRequest>>,
+    batch_max: usize,
+    max_wait: Duration,
+) {
+    loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break, // submit side closed, nothing queued
+        };
+        let deadline = Instant::now() + max_wait;
+        let mut batch = vec![first];
+        let mut shutdown = false;
+        while batch.len() < batch_max {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        if tx.send(batch).is_err() {
+            break; // all workers gone
+        }
+        if shutdown {
+            break;
+        }
+    }
+}
+
+/// Worker: pull a batch, score it, answer every member in batch order,
+/// record stats.
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Vec<ServeRequest>>>>,
+    scorer: Arc<dyn Scorer>,
+    stats: Arc<ServeStats>,
+) {
+    loop {
+        // Hold the lock only for the recv so idle workers queue fairly.
+        let batch = match rx.lock().unwrap().recv() {
+            Ok(b) => b,
+            Err(_) => break, // collector gone and queue drained
+        };
+        let (inputs, meta): (Vec<RowInput>, Vec<(Instant, SyncSender<Result<f32>>)>) =
+            batch.into_iter().map(|r| (r.input, (r.submitted, r.reply))).unzip();
+        let started = Instant::now();
+        let result = scorer.score_rows(&inputs);
+        let service_secs = started.elapsed().as_secs_f64();
+        match result {
+            Ok(preds) => {
+                let mut lats = Vec::with_capacity(meta.len());
+                for ((submitted, reply), p) in meta.into_iter().zip(preds) {
+                    lats.push(submitted.elapsed().as_secs_f64());
+                    // A caller that dropped its Reply just misses out.
+                    let _ = reply.send(Ok(p));
+                }
+                stats.record_batch(lats.len(), service_secs, &lats);
+            }
+            Err(e) => {
+                let msg = format!("batch scoring failed: {e}");
+                for (_, reply) in meta {
+                    let _ = reply.send(Err(Error::data(msg.clone())));
+                }
+            }
+        }
+    }
+}

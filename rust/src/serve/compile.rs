@@ -1,0 +1,276 @@
+//! Forest compilation: [`crate::boosting::GbtModel`] → flat SoA node
+//! arrays scoring directly on binned `u32` features.
+//!
+//! The trained model is an arena of 64-byte [`crate::tree::Node`]s per
+//! tree — pointer-chasing through them per row touches one scattered
+//! cache line per visit and compares `f32`s.  The compiled layout packs
+//! the per-visit hot fields into four contiguous arrays
+//! (`feature`/`bin_threshold`/`left`/`right`, 16 bytes per node) plus
+//! cold arrays for the raw-float fallback and leaf values, and
+//! pre-quantizes every threshold against the same ELLPACK
+//! [`HistogramCuts`] the model was trained with:
+//!
+//! ```text
+//! gthr = cuts.ptrs[f] + split_bin          (a *global* symbol)
+//! go_left(sym) = sym == null || sym <= gthr
+//! ```
+//!
+//! Feature `f`'s symbols occupy `[ptrs[f], ptrs[f+1])`, so the integer
+//! compare `sym <= gthr` is exactly `(sym - ptrs[f]) as i32 <=
+//! split_bin` — the [`crate::tree::Tree::traverse`] binned semantics —
+//! *except* for the null symbol (`total_bins`), which is numerically
+//! above every threshold but must route LEFT (missing-goes-left); hence
+//! the explicit equality test.  Equivalence to `GbtModel::predict` on
+//! both paths is proved bit-for-bit by the property tests in
+//! `tests/serving.rs`.
+
+use crate::boosting::objective::Objective;
+use crate::boosting::GbtModel;
+use crate::error::{Error, Result};
+use crate::sketch::HistogramCuts;
+
+/// Leaf sentinel in [`CompiledForest::feature`].
+pub const LEAF: u32 = u32::MAX;
+
+/// A trained forest flattened for serving.  All trees live in one set
+/// of arrays; `roots[t]` is tree `t`'s root index and child indices are
+/// absolute.
+#[derive(Clone, Debug)]
+pub struct CompiledForest {
+    /// Split feature per node, or [`LEAF`].
+    feature: Vec<u32>,
+    /// Global-symbol threshold: `sym <= bin_threshold` goes left
+    /// (null-symbol rows go left unconditionally).
+    bin_threshold: Vec<u32>,
+    /// Raw-value threshold: `v.is_nan() || v <= raw_threshold` goes left.
+    raw_threshold: Vec<f32>,
+    /// Absolute child indices.
+    left: Vec<u32>,
+    right: Vec<u32>,
+    /// Leaf output (meaningful when `feature == LEAF`, 0 otherwise).
+    value: Vec<f32>,
+    /// Root node index of each tree, in boosting order.
+    roots: Vec<u32>,
+    /// CSR feature offsets copied from the cuts — maps a global symbol
+    /// back to its feature for sparse ELLPACK rows.
+    ptrs: Vec<u32>,
+    /// The missing/padding symbol (= total bins); also the alphabet is
+    /// `null_symbol + 1` symbols.
+    null_symbol: u32,
+    pub objective: Objective,
+    pub base_margin: f32,
+    pub n_features: usize,
+}
+
+impl CompiledForest {
+    /// Compile `model` against the cuts it was trained with.
+    ///
+    /// Fails loudly when the model and cuts disagree (feature counts,
+    /// bin ranges, or a `split_value` that is not the cut at
+    /// `(feature, split_bin)`) — scoring a forest against foreign cuts
+    /// would silently change predictions on the binned path.
+    pub fn compile(model: &GbtModel, cuts: &HistogramCuts) -> Result<CompiledForest> {
+        if model.n_features != cuts.n_features() {
+            return Err(Error::data(format!(
+                "compile: model has {} features but cuts have {}",
+                model.n_features,
+                cuts.n_features()
+            )));
+        }
+        let n_nodes: usize = model.trees.iter().map(|t| t.nodes.len()).sum();
+        let mut c = CompiledForest {
+            feature: Vec::with_capacity(n_nodes),
+            bin_threshold: Vec::with_capacity(n_nodes),
+            raw_threshold: Vec::with_capacity(n_nodes),
+            left: Vec::with_capacity(n_nodes),
+            right: Vec::with_capacity(n_nodes),
+            value: Vec::with_capacity(n_nodes),
+            roots: Vec::with_capacity(model.trees.len()),
+            ptrs: cuts.ptrs.clone(),
+            null_symbol: *cuts.ptrs.last().unwrap(),
+            objective: model.objective,
+            base_margin: model.base_margin,
+            n_features: model.n_features,
+        };
+        for (t, tree) in model.trees.iter().enumerate() {
+            let base = c.feature.len();
+            c.roots.push(base as u32);
+            for (i, n) in tree.nodes.iter().enumerate() {
+                if n.is_leaf() {
+                    c.feature.push(LEAF);
+                    c.bin_threshold.push(0);
+                    c.raw_threshold.push(0.0);
+                    c.left.push(0);
+                    c.right.push(0);
+                    c.value.push(n.weight);
+                    continue;
+                }
+                let f = n.split_feature as usize;
+                if f >= c.n_features {
+                    return Err(Error::data(format!(
+                        "compile: tree {t} node {i} splits feature {f} of {}",
+                        c.n_features
+                    )));
+                }
+                let bins = cuts.n_bins(f);
+                if n.split_bin < 0 || n.split_bin as usize >= bins {
+                    return Err(Error::data(format!(
+                        "compile: tree {t} node {i} split_bin {} outside feature {f}'s {bins} bins",
+                        n.split_bin
+                    )));
+                }
+                let cut = cuts.split_value(f, n.split_bin as u32);
+                if cut.to_bits() != n.split_value.to_bits() {
+                    return Err(Error::data(format!(
+                        "compile: tree {t} node {i} split_value {} != cut {cut} at (f{f}, bin {}) — \
+                         model was trained against different cuts",
+                        n.split_value, n.split_bin
+                    )));
+                }
+                if n.left >= tree.nodes.len() || n.right >= tree.nodes.len() {
+                    return Err(Error::data(format!(
+                        "compile: tree {t} node {i} child out of range"
+                    )));
+                }
+                c.feature.push(f as u32);
+                c.bin_threshold.push(cuts.ptrs[f] + n.split_bin as u32);
+                c.raw_threshold.push(n.split_value);
+                c.left.push((base + n.left) as u32);
+                c.right.push((base + n.right) as u32);
+                c.value.push(0.0);
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.roots.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.feature.len()
+    }
+
+    /// The reserved missing symbol (= total bins across all features).
+    pub fn null_symbol(&self) -> u32 {
+        self.null_symbol
+    }
+
+    /// Symbol alphabet size the binned path expects
+    /// (`EllpackPage::n_symbols` of pages built from the same cuts).
+    pub fn total_symbols(&self) -> u32 {
+        self.null_symbol + 1
+    }
+
+    /// Feature offsets (`cuts.ptrs` copy) — `[ptrs[f], ptrs[f+1])` is
+    /// feature `f`'s global-symbol range.
+    pub fn feature_ptrs(&self) -> &[u32] {
+        &self.ptrs
+    }
+
+    /// Feature owning global symbol `sym` (callers guarantee
+    /// `sym < null_symbol`).
+    #[inline]
+    pub fn symbol_feature(&self, sym: u32) -> usize {
+        debug_assert!(sym < self.null_symbol);
+        // partition_point: first f+1 with ptrs[f+1] > sym.
+        self.ptrs.partition_point(|&p| p <= sym) - 1
+    }
+
+    /// Margin contribution of tree `t` for one dense row of *global*
+    /// symbols (`syms[f]` is feature f's symbol, or the null symbol for
+    /// missing).
+    #[inline]
+    pub fn tree_margin_binned(&self, t: usize, syms: &[u32]) -> f32 {
+        let null = self.null_symbol;
+        let mut i = self.roots[t] as usize;
+        loop {
+            let f = self.feature[i];
+            if f == LEAF {
+                return self.value[i];
+            }
+            let sym = syms[f as usize];
+            i = if sym == null || sym <= self.bin_threshold[i] {
+                self.left[i] as usize
+            } else {
+                self.right[i] as usize
+            };
+        }
+    }
+
+    /// Margin contribution of tree `t` for one dense row of raw values
+    /// (missing = NaN) — the fallback path for unbinned inputs.
+    #[inline]
+    pub fn tree_margin_raw(&self, t: usize, features: &[f32]) -> f32 {
+        let mut i = self.roots[t] as usize;
+        loop {
+            let f = self.feature[i];
+            if f == LEAF {
+                return self.value[i];
+            }
+            let v = features[f as usize];
+            i = if v.is_nan() || v <= self.raw_threshold[i] {
+                self.left[i] as usize
+            } else {
+                self.right[i] as usize
+            };
+        }
+    }
+
+    /// Instrumented binned walk: same routing as
+    /// [`Self::tree_margin_binned`], invoking `visit` with every node
+    /// index touched (bench census / cost-model input).  Returns the
+    /// leaf value so callers can bind the census to real scoring.
+    pub fn walk_binned(
+        &self,
+        t: usize,
+        syms: &[u32],
+        mut visit: impl FnMut(usize),
+    ) -> f32 {
+        let null = self.null_symbol;
+        let mut i = self.roots[t] as usize;
+        loop {
+            visit(i);
+            let f = self.feature[i];
+            if f == LEAF {
+                return self.value[i];
+            }
+            let sym = syms[f as usize];
+            i = if sym == null || sym <= self.bin_threshold[i] {
+                self.left[i] as usize
+            } else {
+                self.right[i] as usize
+            };
+        }
+    }
+
+    /// Quantize one sparse raw row (`cols`/`vals`) into dense global
+    /// symbols using the compiled cuts layout: absent features and NaN
+    /// values become the null symbol.  `cuts` must be the compile-time
+    /// cuts (the engine's CLI path threads them through).
+    pub fn quantize_row_into(
+        &self,
+        cuts: &HistogramCuts,
+        cols: &[u32],
+        vals: &[f32],
+        out: &mut [u32],
+    ) {
+        debug_assert_eq!(out.len(), self.n_features);
+        out.iter_mut().for_each(|s| *s = self.null_symbol);
+        for (c, v) in cols.iter().zip(vals) {
+            let f = *c as usize;
+            out[f] = if v.is_nan() {
+                self.null_symbol
+            } else {
+                cuts.ptrs[f] + cuts.search_bin(f, *v)
+            };
+        }
+    }
+
+    /// Hot-field bytes per node in this layout (`feature` +
+    /// `bin_threshold` + `left` + `right`) — the serving bench's
+    /// bytes-per-visit input.
+    pub fn hot_bytes_per_node() -> usize {
+        4 * std::mem::size_of::<u32>()
+    }
+}

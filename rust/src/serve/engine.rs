@@ -1,0 +1,297 @@
+//! Batched scoring engine over a [`CompiledForest`].
+//!
+//! The hot loop walks **row-block outer, tree inner**: a block of
+//! `block_rows` margin accumulators stays in registers/L1 while each
+//! tree's compact SoA node set is reused across every row of the block
+//! — the reuse that makes the compiled layout beat the per-row
+//! pointer-chasing walk (`bench_ablations` arm 9 quantifies it).  Per
+//! row the accumulation order is exactly
+//! [`crate::boosting::GbtModel::predict`]'s (`base_margin + tree0 +
+//! tree1 + …`, then the objective transform), so engine output is
+//! bit-identical to the model on both the binned and raw paths.
+//!
+//! Large batches additionally shard across `workers` scoped threads on
+//! disjoint row ranges — rows are independent, so sharding cannot
+//! change bits.
+
+use std::sync::Arc;
+
+use crate::data::DMatrix;
+use crate::ellpack::EllpackPage;
+use crate::error::{Error, Result};
+use crate::serve::compile::CompiledForest;
+use crate::sketch::HistogramCuts;
+
+/// One scoring request row, as the request front receives it.
+#[derive(Clone, Debug)]
+pub enum RowInput {
+    /// Dense raw features, one value per feature, missing = NaN.
+    Raw(Vec<f32>),
+    /// Dense global bin symbols, one per feature, missing = null symbol.
+    Binned(Vec<u32>),
+}
+
+/// Anything the batcher can score — the engine in production, gated
+/// stubs in tests.
+pub trait Scorer: Send + Sync {
+    fn n_features(&self) -> usize;
+    /// Transformed predictions for a mixed batch, in input order.
+    fn score_rows(&self, rows: &[RowInput]) -> Result<Vec<f32>>;
+}
+
+/// The serving engine: compiled forest + blocking/sharding policy.
+#[derive(Clone, Debug)]
+pub struct ScoringEngine {
+    forest: Arc<CompiledForest>,
+    block_rows: usize,
+    workers: usize,
+}
+
+impl ScoringEngine {
+    pub fn new(forest: Arc<CompiledForest>) -> ScoringEngine {
+        ScoringEngine { forest, block_rows: 64, workers: 1 }
+    }
+
+    /// Rows per accumulator block (≥ 1).
+    pub fn with_block_rows(mut self, block_rows: usize) -> ScoringEngine {
+        self.block_rows = block_rows.max(1);
+        self
+    }
+
+    /// Scoped worker threads for large batches (≥ 1).
+    pub fn with_workers(mut self, workers: usize) -> ScoringEngine {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn forest(&self) -> &Arc<CompiledForest> {
+        &self.forest
+    }
+
+    /// Score a batch of dense binned rows (`syms` is row-major,
+    /// `n_features` symbols per row).
+    pub fn score_binned_batch(&self, syms: &[u32]) -> Result<Vec<f32>> {
+        let rows = self.batch_rows(syms.len())?;
+        let mut out = vec![0f32; rows];
+        self.sharded(rows, |begin, o| {
+            let nf = self.forest.n_features;
+            self.score_chunk_binned(&syms[begin * nf..(begin + o.len()) * nf], o);
+        }, &mut out);
+        Ok(out)
+    }
+
+    /// Score a batch of dense raw rows (`feats` is row-major,
+    /// `n_features` values per row, missing = NaN).
+    pub fn score_raw_batch(&self, feats: &[f32]) -> Result<Vec<f32>> {
+        let rows = self.batch_rows(feats.len())?;
+        let mut out = vec![0f32; rows];
+        self.sharded(rows, |begin, o| {
+            let nf = self.forest.n_features;
+            self.score_chunk_raw(&feats[begin * nf..(begin + o.len()) * nf], o);
+        }, &mut out);
+        Ok(out)
+    }
+
+    /// Score every row of an ELLPACK page built from the compile-time
+    /// cuts.  Dense pages are read in place; sparse pages densify each
+    /// row by mapping global symbols back to features.
+    pub fn score_page(&self, page: &EllpackPage) -> Result<Vec<f32>> {
+        if page.n_symbols() != self.forest.total_symbols() {
+            return Err(Error::data(format!(
+                "score_page: page alphabet {} != compiled forest's {} — \
+                 page was built with different cuts",
+                page.n_symbols(),
+                self.forest.total_symbols()
+            )));
+        }
+        let nf = self.forest.n_features;
+        let null = self.forest.null_symbol();
+        let mut syms = vec![null; page.n_rows() * nf];
+        let mut scratch = vec![0u32; page.row_stride()];
+        for r in 0..page.n_rows() {
+            page.unpack_row_into(r, &mut scratch);
+            let dst = &mut syms[r * nf..(r + 1) * nf];
+            if page.is_dense() {
+                // Dense pages put feature f at position f (stride = nf).
+                dst.copy_from_slice(&scratch[..nf]);
+            } else {
+                for &sym in scratch.iter() {
+                    if sym != null {
+                        dst[self.forest.symbol_feature(sym)] = sym;
+                    }
+                }
+            }
+        }
+        self.score_binned_batch(&syms)
+    }
+
+    /// Score a DMatrix: quantized against `cuts` onto the binned path
+    /// when given (bit-identical to `GbtModel::predict` by the cuts
+    /// contract), or densified to NaN-filled raw rows otherwise.
+    pub fn score_dmatrix(
+        &self,
+        data: &DMatrix,
+        cuts: Option<&HistogramCuts>,
+    ) -> Result<Vec<f32>> {
+        let nf = self.forest.n_features;
+        let rows = data.n_rows();
+        match cuts {
+            Some(cuts) => {
+                let mut syms = vec![self.forest.null_symbol(); rows * nf];
+                for r in 0..rows {
+                    let (cols, vals) = data.row(r);
+                    self.forest.quantize_row_into(
+                        cuts,
+                        cols,
+                        vals,
+                        &mut syms[r * nf..(r + 1) * nf],
+                    );
+                }
+                self.score_binned_batch(&syms)
+            }
+            None => {
+                let mut feats = vec![f32::NAN; rows * nf];
+                for r in 0..rows {
+                    let (cols, vals) = data.row(r);
+                    let dst = &mut feats[r * nf..(r + 1) * nf];
+                    for (c, v) in cols.iter().zip(vals) {
+                        dst[*c as usize] = *v;
+                    }
+                }
+                self.score_raw_batch(&feats)
+            }
+        }
+    }
+
+    fn batch_rows(&self, flat_len: usize) -> Result<usize> {
+        let nf = self.forest.n_features;
+        if nf == 0 {
+            return Err(Error::data("scoring engine requires n_features > 0"));
+        }
+        if flat_len % nf != 0 {
+            return Err(Error::data(format!(
+                "batch length {flat_len} is not a multiple of {nf} features"
+            )));
+        }
+        Ok(flat_len / nf)
+    }
+
+    /// Run `score(row_begin, out_chunk)` over disjoint row ranges, on
+    /// scoped threads when the batch and worker count warrant it.
+    fn sharded(
+        &self,
+        rows: usize,
+        score: impl Fn(usize, &mut [f32]) + Sync,
+        out: &mut [f32],
+    ) {
+        let shards = self.workers.min(rows.max(1));
+        if shards <= 1 {
+            score(0, out);
+            return;
+        }
+        let chunk = crate::util::div_ceil(rows, shards);
+        std::thread::scope(|s| {
+            for (i, o) in out.chunks_mut(chunk).enumerate() {
+                let score = &score;
+                s.spawn(move || score(i * chunk, o));
+            }
+        });
+    }
+
+    /// Blocked binned scoring over one contiguous chunk: row-block
+    /// outer, tree inner, per-row accumulation in boosting order.
+    fn score_chunk_binned(&self, syms: &[u32], out: &mut [f32]) {
+        let nf = self.forest.n_features;
+        let base = self.forest.base_margin;
+        let mut b = 0usize;
+        while b < out.len() {
+            let n = (out.len() - b).min(self.block_rows);
+            let acc = &mut out[b..b + n];
+            acc.iter_mut().for_each(|m| *m = base);
+            for t in 0..self.forest.n_trees() {
+                for (i, m) in acc.iter_mut().enumerate() {
+                    let row = &syms[(b + i) * nf..(b + i + 1) * nf];
+                    *m += self.forest.tree_margin_binned(t, row);
+                }
+            }
+            for m in acc.iter_mut() {
+                *m = self.forest.objective.transform(*m);
+            }
+            b += n;
+        }
+    }
+
+    /// Raw-float fallback, same blocked structure.
+    fn score_chunk_raw(&self, feats: &[f32], out: &mut [f32]) {
+        let nf = self.forest.n_features;
+        let base = self.forest.base_margin;
+        let mut b = 0usize;
+        while b < out.len() {
+            let n = (out.len() - b).min(self.block_rows);
+            let acc = &mut out[b..b + n];
+            acc.iter_mut().for_each(|m| *m = base);
+            for t in 0..self.forest.n_trees() {
+                for (i, m) in acc.iter_mut().enumerate() {
+                    let row = &feats[(b + i) * nf..(b + i + 1) * nf];
+                    *m += self.forest.tree_margin_raw(t, row);
+                }
+            }
+            for m in acc.iter_mut() {
+                *m = self.forest.objective.transform(*m);
+            }
+            b += n;
+        }
+    }
+}
+
+impl Scorer for ScoringEngine {
+    fn n_features(&self) -> usize {
+        self.forest.n_features
+    }
+
+    fn score_rows(&self, rows: &[RowInput]) -> Result<Vec<f32>> {
+        let nf = self.forest.n_features;
+        // Split the mixed batch into one contiguous matrix per path,
+        // score each blocked, and scatter back into input order.
+        let mut raw = Vec::new();
+        let mut raw_idx = Vec::new();
+        let mut binned = Vec::new();
+        let mut binned_idx = Vec::new();
+        for (i, row) in rows.iter().enumerate() {
+            match row {
+                RowInput::Raw(v) => {
+                    if v.len() != nf {
+                        return Err(Error::data(format!(
+                            "request row {i} has {} features, expected {nf}",
+                            v.len()
+                        )));
+                    }
+                    raw.extend_from_slice(v);
+                    raw_idx.push(i);
+                }
+                RowInput::Binned(s) => {
+                    if s.len() != nf {
+                        return Err(Error::data(format!(
+                            "request row {i} has {} symbols, expected {nf}",
+                            s.len()
+                        )));
+                    }
+                    binned.extend_from_slice(s);
+                    binned_idx.push(i);
+                }
+            }
+        }
+        let mut out = vec![0f32; rows.len()];
+        if !raw.is_empty() {
+            for (i, p) in raw_idx.iter().zip(self.score_raw_batch(&raw)?) {
+                out[*i] = p;
+            }
+        }
+        if !binned.is_empty() {
+            for (i, p) in binned_idx.iter().zip(self.score_binned_batch(&binned)?) {
+                out[*i] = p;
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,149 @@
+//! Serving statistics: per-request latency distribution and engine
+//! throughput, rolled up the way Anghel et al. (arxiv 1809.04559)
+//! report scoring benchmarks — rows/sec plus tail latency.
+//!
+//! The batcher records one entry per dispatched batch: the batch size,
+//! the worker's busy (service) seconds, and every member request's
+//! submit→reply latency.  [`ServeStats::report`] folds them into a
+//! [`ServeReport`].
+
+use std::sync::Mutex;
+
+/// Shared rollup; cloneable across the batcher, workers, and the CLI
+/// via `Arc`.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    rows: u64,
+    batches: u64,
+    /// Worker busy seconds spent scoring (excludes queue wait).
+    service_secs: f64,
+    /// Per-request submit→reply seconds.
+    latencies: Vec<f64>,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats::default()
+    }
+
+    /// Record one scored batch.
+    pub fn record_batch(&self, rows: usize, service_secs: f64, latencies: &[f64]) {
+        let mut g = self.inner.lock().unwrap();
+        g.rows += rows as u64;
+        g.batches += 1;
+        g.service_secs += service_secs;
+        g.latencies.extend_from_slice(latencies);
+    }
+
+    /// Snapshot the rollup.
+    pub fn report(&self) -> ServeReport {
+        let g = self.inner.lock().unwrap();
+        let mut sorted = g.latencies.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if sorted.is_empty() { 0.0 } else { nearest_rank(&sorted, p) }
+        };
+        ServeReport {
+            rows: g.rows,
+            batches: g.batches,
+            mean_batch: if g.batches > 0 { g.rows as f64 / g.batches as f64 } else { 0.0 },
+            rows_per_sec: if g.service_secs > 0.0 {
+                g.rows as f64 / g.service_secs
+            } else {
+                0.0
+            },
+            p50_us: pct(50.0) * 1e6,
+            p99_us: pct(99.0) * 1e6,
+            max_us: sorted.last().copied().unwrap_or(0.0) * 1e6,
+        }
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice: the value at
+/// rank `ceil(p/100 · n)` (1-based), the standard conservative tail
+/// estimator.  Shared by the live rollup and the serving bench's
+/// deterministic latency model (and its Python twin in
+/// `tools/derive_serving_snapshot.py`), so all three agree exactly.
+pub fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    let n = sorted.len();
+    let rank = (p / 100.0 * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// One snapshot of serving performance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeReport {
+    pub rows: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    /// Rows scored per worker-busy second.
+    pub rows_per_sec: f64,
+    /// Submit→reply latency percentiles (microseconds).
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl std::fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "served {} rows in {} batches (mean {:.1} rows/batch), \
+             {:.0} rows/s, latency p50 {:.1}us p99 {:.1}us max {:.1}us",
+            self.rows,
+            self.batches,
+            self.mean_batch,
+            self.rows_per_sec,
+            self.p50_us,
+            self.p99_us,
+            self.max_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(nearest_rank(&v, 50.0), 50.0);
+        assert_eq!(nearest_rank(&v, 99.0), 99.0);
+        assert_eq!(nearest_rank(&v, 100.0), 100.0);
+        assert_eq!(nearest_rank(&v, 1.0), 1.0);
+        assert_eq!(nearest_rank(&[7.0], 50.0), 7.0);
+        // Rank rounds up: p50 of two samples is the first.
+        assert_eq!(nearest_rank(&[1.0, 2.0], 50.0), 1.0);
+        assert_eq!(nearest_rank(&[1.0, 2.0], 51.0), 2.0);
+    }
+
+    #[test]
+    fn report_rolls_up_batches() {
+        let s = ServeStats::new();
+        s.record_batch(3, 0.003, &[0.001, 0.002, 0.003]);
+        s.record_batch(1, 0.001, &[0.004]);
+        let r = s.report();
+        assert_eq!(r.rows, 4);
+        assert_eq!(r.batches, 2);
+        assert!((r.mean_batch - 2.0).abs() < 1e-12);
+        assert!((r.rows_per_sec - 1000.0).abs() < 1e-6);
+        assert!((r.p50_us - 2000.0).abs() < 1e-6);
+        assert!((r.p99_us - 4000.0).abs() < 1e-6);
+        assert!((r.max_us - 4000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_report_is_zero() {
+        let r = ServeStats::new().report();
+        assert_eq!(r.rows, 0);
+        assert_eq!(r.p99_us, 0.0);
+        assert_eq!(r.rows_per_sec, 0.0);
+    }
+}

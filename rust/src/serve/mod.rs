@@ -1,0 +1,21 @@
+//! Serving layer: compile a trained forest into a flat binned-scoring
+//! engine and front it with a batching concurrent request queue.
+//!
+//! * [`compile`] — [`CompiledForest`]: `GbtModel` → SoA node arrays with
+//!   thresholds pre-quantized against the training-time ELLPACK cuts.
+//! * [`engine`] — [`ScoringEngine`]: blocked batch scoring (row-block
+//!   outer, tree inner) with scoped worker sharding; bit-identical to
+//!   `GbtModel::predict` on both the binned and raw paths.
+//! * [`batcher`] — [`Batcher`]: coalesces single-row requests into
+//!   bounded batches under a max-wait deadline over bounded channels.
+//! * [`metrics`] — [`ServeStats`]: rows/sec + p50/p99 latency rollup.
+
+pub mod batcher;
+pub mod compile;
+pub mod engine;
+pub mod metrics;
+
+pub use batcher::{Batcher, Reply};
+pub use compile::{CompiledForest, LEAF};
+pub use engine::{RowInput, Scorer, ScoringEngine};
+pub use metrics::{nearest_rank, ServeReport, ServeStats};

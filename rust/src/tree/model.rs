@@ -76,18 +76,32 @@ impl Tree {
         self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
     }
 
-    /// Predict from raw feature values (dense slice, one value per
-    /// feature; missing = NaN goes left).
-    pub fn predict_raw(&self, features: &[f32]) -> f32 {
+    /// The single traversal core every prediction path shares: descend
+    /// from the root, taking `go_left(node)` at each interior node,
+    /// until a leaf.  [`Self::predict_raw`], [`Self::predict_binned`],
+    /// and the compiled serving layout (`serve/compile.rs`, proved
+    /// equivalent by property test) are all defined in terms of this
+    /// one routing semantics.
+    #[inline]
+    pub fn traverse(&self, mut go_left: impl FnMut(&Node) -> bool) -> &Node {
         let mut i = 0usize;
         loop {
             let n = &self.nodes[i];
             if n.is_leaf() {
-                return n.weight;
+                return n;
             }
-            let v = features[n.split_feature as usize];
-            i = if v.is_nan() || v <= n.split_value { n.left } else { n.right };
+            i = if go_left(n) { n.left } else { n.right };
         }
+    }
+
+    /// Predict from raw feature values (dense slice, one value per
+    /// feature; missing = NaN goes left).
+    pub fn predict_raw(&self, features: &[f32]) -> f32 {
+        self.traverse(|n| {
+            let v = features[n.split_feature as usize];
+            v.is_nan() || v <= n.split_value
+        })
+        .weight
     }
 
     /// Predict from a quantized ELLPACK row of *global* symbols, dense
@@ -99,18 +113,12 @@ impl Tree {
         cuts: &HistogramCuts,
     ) -> f32 {
         let null = page.null_symbol();
-        let mut i = 0usize;
-        loop {
-            let n = &self.nodes[i];
-            if n.is_leaf() {
-                return n.weight;
-            }
+        self.traverse(|n| {
             let f = n.split_feature as usize;
             let sym = page.get(row, f);
-            let go_left =
-                sym == null || (sym - cuts.ptrs[f]) as i32 <= n.split_bin;
-            i = if go_left { n.left } else { n.right };
-        }
+            sym == null || (sym - cuts.ptrs[f]) as i32 <= n.split_bin
+        })
+        .weight
     }
 
     /// XGBoost-style JSON dump (model inspection / examples).
@@ -195,6 +203,16 @@ mod tests {
         assert_eq!(nodes.len(), 3);
         assert_eq!(nodes[0].get("split").unwrap().as_usize(), Some(0));
         assert_eq!(nodes[1].get("leaf").unwrap().as_f64(), Some(-1.0));
+    }
+
+    #[test]
+    fn traverse_reaches_leaf_nodes() {
+        let t = stump();
+        let leaf = t.traverse(|n| 0.4f32 <= n.split_value);
+        assert!(leaf.is_leaf());
+        assert_eq!(leaf.weight, -1.0);
+        let leaf = t.traverse(|_| false);
+        assert_eq!(leaf.weight, 2.0);
     }
 
     #[test]

@@ -80,6 +80,116 @@ fn datagen_train_predict_roundtrip() {
     std::fs::remove_dir_all(&d).ok();
 }
 
+/// datagen → train to a binary bundle → predict/score/serve, asserting
+/// the serving paths write byte-identical prediction files to the naive
+/// `predict` walk (bit-identity end to end, through text formatting).
+#[test]
+fn score_and_serve_match_predict() {
+    let d = tmpdir("serve");
+    let data = d.join("higgs.csv");
+    let model = d.join("model.bin");
+    let preds = d.join("preds.txt");
+    let scored = d.join("scored.txt");
+    let served = d.join("served.txt");
+
+    let out = bin()
+        .args(["datagen", "--kind", "higgs", "--rows", "2000", "--out"])
+        .arg(&data)
+        .args(["--format", "csv", "--seed", "9"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = bin()
+        .args(["train", "--data"])
+        .arg(&data)
+        .args(["--format", "csv", "--model-out"])
+        .arg(&model)
+        .args(["n_rounds=4", "max_depth=4", "max_bin=32", "eta=0.5"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(model.exists());
+
+    let out = bin()
+        .args(["predict", "--model"])
+        .arg(&model)
+        .arg("--data")
+        .arg(&data)
+        .args(["--format", "csv", "--out"])
+        .arg(&preds)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = bin()
+        .args(["score", "--model"])
+        .arg(&model)
+        .arg("--data")
+        .arg(&data)
+        .args(["--format", "csv", "--out"])
+        .arg(&scored)
+        .args(["workers=3", "block_rows=16"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = bin()
+        .args(["serve", "--model"])
+        .arg(&model)
+        .arg("--data")
+        .arg(&data)
+        .args(["--format", "csv", "--out"])
+        .arg(&served)
+        .args(["batch_max=64", "max_wait_us=200", "workers=2"])
+        .output()
+        .unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "{stderr}");
+    assert!(stderr.contains("rows/s"), "serve must report throughput: {stderr}");
+
+    let baseline = std::fs::read_to_string(&preds).unwrap();
+    assert_eq!(baseline.lines().count(), 2000);
+    assert_eq!(std::fs::read_to_string(&scored).unwrap(), baseline);
+    assert_eq!(std::fs::read_to_string(&served).unwrap(), baseline);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+/// `serve` refuses a JSON model (no cuts to compile against).
+#[test]
+fn serve_requires_binary_bundle() {
+    let d = tmpdir("serve-json");
+    let data = d.join("higgs.csv");
+    let model = d.join("model.json");
+    let out = bin()
+        .args(["datagen", "--kind", "higgs", "--rows", "500", "--out"])
+        .arg(&data)
+        .args(["--format", "csv"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = bin()
+        .args(["train", "--data"])
+        .arg(&data)
+        .args(["--format", "csv", "--model-out"])
+        .arg(&model)
+        .args(["n_rounds=2", "max_depth=3", "max_bin=16"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = bin()
+        .args(["serve", "--model"])
+        .arg(&model)
+        .arg("--data")
+        .arg(&data)
+        .args(["--format", "csv"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("model.bin"));
+    std::fs::remove_dir_all(&d).ok();
+}
+
 #[test]
 fn train_with_mvs_sampling_cpu() {
     let d = tmpdir("mvs");

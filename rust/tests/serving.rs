@@ -1,0 +1,560 @@
+//! Serving-layer integration: compiled-forest bit-identity against
+//! `GbtModel::predict` (dense/sparse × missing × n_bins sweep), the
+//! batching request front, and binary model persistence.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use oocgb::boosting::{load_bundle, load_model_auto, save_bundle, GbtModel, Objective};
+use oocgb::config::{ServeConfig, TrainConfig};
+use oocgb::coordinator::TrainSession;
+use oocgb::data::{synthetic, DMatrix, SparsePage};
+use oocgb::ellpack::page::EllpackWriter;
+use oocgb::error::Result;
+use oocgb::serve::{Batcher, CompiledForest, RowInput, Scorer, ScoringEngine};
+use oocgb::sketch::HistogramCuts;
+use oocgb::tree::{Node, Tree};
+use oocgb::util::prop::{run_prop, Gen};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("oocgb-serving-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Random strictly-ascending cuts: every feature gets exactly `bins`
+/// cut values.
+fn random_cuts(g: &mut Gen, n_features: usize, bins: usize) -> HistogramCuts {
+    let mut ptrs = vec![0u32];
+    let mut values = Vec::new();
+    let mut min_vals = Vec::new();
+    for _ in 0..n_features {
+        let mut v = g.f32_in(-2.0..0.0);
+        min_vals.push(v - 1.0);
+        for _ in 0..bins {
+            v += g.f32_in(0.01..0.8);
+            values.push(v);
+        }
+        ptrs.push(values.len() as u32);
+    }
+    HistogramCuts { ptrs, values, min_vals }
+}
+
+/// Random structural tree consistent with `cuts`: every split's
+/// `split_value` is the cut at `(feature, bin)` — the invariant training
+/// establishes and `CompiledForest::compile` checks.  `top_bin` = false
+/// excludes each feature's last bin (trained models never split there:
+/// such a split has an empty right child and non-positive gain).
+fn random_tree(g: &mut Gen, cuts: &HistogramCuts, max_depth: usize, top_bin: bool) -> Tree {
+    fn build(
+        nodes: &mut Vec<Node>,
+        g: &mut Gen,
+        cuts: &HistogramCuts,
+        depth: usize,
+        max_depth: usize,
+        top_bin: bool,
+    ) -> usize {
+        let idx = nodes.len();
+        if depth >= max_depth || g.usize_in(0..4) == 0 {
+            nodes.push(Node::leaf(g.f32_in(-1.0..1.0), 0.0, 1.0, depth));
+            return idx;
+        }
+        let f = g.usize_in(0..cuts.n_features());
+        let bins = cuts.n_bins(f);
+        let hi = if top_bin { bins } else { bins.max(2) - 1 };
+        let bin = g.usize_in(0..hi);
+        nodes.push(Node {
+            split_feature: f as i32,
+            split_bin: bin as i32,
+            split_value: cuts.split_value(f, bin as u32),
+            left: 0,
+            right: 0,
+            weight: 0.0,
+            gain: 1.0,
+            sum_grad: 0.0,
+            sum_hess: 2.0,
+            depth,
+        });
+        let l = build(nodes, g, cuts, depth + 1, max_depth, top_bin);
+        let r = build(nodes, g, cuts, depth + 1, max_depth, top_bin);
+        nodes[idx].left = l;
+        nodes[idx].right = r;
+        idx
+    }
+    let mut nodes = Vec::new();
+    build(&mut nodes, g, cuts, 0, max_depth, top_bin);
+    Tree { nodes }
+}
+
+fn random_model(g: &mut Gen, cuts: &HistogramCuts, top_bin: bool) -> GbtModel {
+    let obj = if g.bool() { Objective::Logistic } else { Objective::Squared };
+    let mut m = GbtModel::new(obj, cuts.n_features());
+    for _ in 0..g.usize_in(1..5) {
+        m.trees.push(random_tree(g, cuts, g.usize_in(1..6), top_bin));
+    }
+    m
+}
+
+/// One random feature value for `f`: mostly in-range, sometimes exactly
+/// a cut (boundary), sometimes NaN (missing), below min, or — when
+/// `beyond` — above the last cut.
+fn random_value(g: &mut Gen, cuts: &HistogramCuts, f: usize, beyond: bool) -> f32 {
+    let fc = cuts.feature_cuts(f);
+    let last = *fc.last().unwrap();
+    match g.usize_in(0..10) {
+        0 => f32::NAN,
+        1 => fc[g.usize_in(0..fc.len())], // exact cut boundary
+        2 => cuts.min_vals[f] - g.f32_in(0.0..2.0),
+        3 if beyond => last + g.f32_in(0.001..3.0),
+        _ => {
+            let lo = cuts.min_vals[f];
+            lo + g.f32_in(0.0..1.0) * (last - lo)
+        }
+    }
+}
+
+/// Random dataset over the cuts' feature space: sparse rows (features
+/// dropped ⇒ missing) or dense rows (all present, NaN ⇒ missing).
+fn random_data(g: &mut Gen, cuts: &HistogramCuts, rows: usize, beyond: bool) -> DMatrix {
+    let nf = cuts.n_features();
+    let mut page = SparsePage::new(nf);
+    let dense = g.bool();
+    for _ in 0..rows {
+        if dense {
+            let vals: Vec<f32> =
+                (0..nf).map(|f| random_value(g, cuts, f, beyond)).collect();
+            page.push_dense_row(&vals);
+        } else {
+            let mut cols = Vec::new();
+            let mut vals = Vec::new();
+            for f in 0..nf {
+                if g.usize_in(0..10) < 7 {
+                    cols.push(f as u32);
+                    vals.push(random_value(g, cuts, f, beyond));
+                }
+            }
+            page.push_row(&cols, &vals);
+        }
+    }
+    let labels = vec![0.0; rows];
+    DMatrix::from_page(page, labels).unwrap()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: row {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// Core equivalence sweep shared by the in-range and beyond-range
+/// properties: engine binned, raw, and mixed request paths must be
+/// bit-identical to the naive model walk.
+fn check_equivalence(g: &mut Gen, bins: usize, beyond: bool) {
+    let nf = g.usize_in(1..7);
+    let cuts = random_cuts(g, nf, bins);
+    let model = random_model(g, &cuts, !beyond);
+    let data = random_data(g, &cuts, g.usize_in(1..40), beyond);
+    let expected = model.predict(&data);
+
+    let forest = Arc::new(CompiledForest::compile(&model, &cuts).unwrap());
+    let block = [1usize, 7, 64][g.usize_in(0..3)];
+    let workers = g.usize_in(1..4);
+    let engine = ScoringEngine::new(Arc::clone(&forest))
+        .with_block_rows(block)
+        .with_workers(workers);
+
+    let binned = engine.score_dmatrix(&data, Some(&cuts)).unwrap();
+    assert_bits_eq(&binned, &expected, "binned path");
+    let raw = engine.score_dmatrix(&data, None).unwrap();
+    assert_bits_eq(&raw, &expected, "raw path");
+
+    // Mixed per-request path (what the batcher drives).
+    let rows: Vec<RowInput> = (0..data.n_rows())
+        .map(|r| {
+            let (cols, vals) = data.row(r);
+            if g.bool() {
+                let mut syms = vec![0u32; nf];
+                forest.quantize_row_into(&cuts, cols, vals, &mut syms);
+                RowInput::Binned(syms)
+            } else {
+                let mut dense = vec![f32::NAN; nf];
+                for (c, v) in cols.iter().zip(vals) {
+                    dense[*c as usize] = *v;
+                }
+                RowInput::Raw(dense)
+            }
+        })
+        .collect();
+    let mixed = engine.score_rows(&rows).unwrap();
+    assert_bits_eq(&mixed, &expected, "mixed request path");
+}
+
+#[test]
+fn compiled_engine_matches_model_in_range() {
+    for bins in [2usize, 64, 256] {
+        run_prop(&format!("serve equivalence bins={bins}"), 40, |g| {
+            // Splits may use any bin; values stay ≤ the last cut.
+            check_equivalence(g, bins, false);
+        });
+    }
+}
+
+#[test]
+fn compiled_engine_matches_model_beyond_sketch_range() {
+    for bins in [2usize, 64, 256] {
+        run_prop(&format!("serve beyond-range bins={bins}"), 40, |g| {
+            // Values may exceed the last cut; splits avoid the top bin,
+            // as trained models do.
+            check_equivalence(g, bins, true);
+        });
+    }
+}
+
+#[test]
+fn score_page_matches_model_dense_and_sparse() {
+    run_prop("score_page equivalence", 40, |g| {
+        let nf = g.usize_in(1..6);
+        let cuts = random_cuts(g, nf, g.usize_in(2..17));
+        let model = random_model(g, &cuts, true);
+        let data = random_data(g, &cuts, g.usize_in(1..30), false);
+        let expected = model.predict(&data);
+        let forest = Arc::new(CompiledForest::compile(&model, &cuts).unwrap());
+        let engine = ScoringEngine::new(Arc::clone(&forest));
+        let n_symbols = forest.total_symbols();
+        let null = forest.null_symbol();
+
+        // Dense page: feature f at position f.
+        let mut w = EllpackWriter::new(data.n_rows(), nf, n_symbols, true);
+        let mut syms = vec![0u32; nf];
+        for r in 0..data.n_rows() {
+            let (cols, vals) = data.row(r);
+            forest.quantize_row_into(&cuts, cols, vals, &mut syms);
+            w.push_row(&syms);
+        }
+        let dense_page = w.finish(0);
+        assert_bits_eq(
+            &engine.score_page(&dense_page).unwrap(),
+            &expected,
+            "dense page",
+        );
+
+        // Sparse page: only present symbols, null-padded to the stride.
+        let mut rows_syms: Vec<Vec<u32>> = Vec::new();
+        for r in 0..data.n_rows() {
+            let (cols, vals) = data.row(r);
+            forest.quantize_row_into(&cuts, cols, vals, &mut syms);
+            rows_syms.push(syms.iter().copied().filter(|&s| s != null).collect());
+        }
+        let stride = rows_syms.iter().map(Vec::len).max().unwrap_or(0).max(1);
+        let mut w = EllpackWriter::new(data.n_rows(), stride, n_symbols, false);
+        for row in &rows_syms {
+            w.push_row(row);
+        }
+        let sparse_page = w.finish(0);
+        assert_bits_eq(
+            &engine.score_page(&sparse_page).unwrap(),
+            &expected,
+            "sparse page",
+        );
+    });
+}
+
+#[test]
+fn compile_rejects_foreign_cuts_and_bad_trees() {
+    run_prop("compile validation", 20, |g| {
+        let cuts = random_cuts(g, 3, 8);
+        let model = random_model(g, &cuts, true);
+        // Identical cuts compile...
+        CompiledForest::compile(&model, &cuts).unwrap();
+        // ...a feature-count mismatch is always caught...
+        let wider = random_cuts(g, 4, 8);
+        assert!(CompiledForest::compile(&model, &wider).is_err());
+        if model.trees.iter().all(|t| t.nodes.len() == 1) {
+            return; // all-leaf forest can't detect same-shape foreign cuts
+        }
+        // ...and perturbing the cut values the model split on is caught
+        // by the strict split_value == cut bit check.
+        let mut foreign = cuts.clone();
+        for v in foreign.values.iter_mut() {
+            *v += 0.001;
+        }
+        assert!(CompiledForest::compile(&model, &foreign).is_err());
+    });
+}
+
+// ---- persistence ----
+
+#[test]
+fn bundle_roundtrip_is_bit_exact() {
+    run_prop("bundle roundtrip", 20, |g| {
+        let d = tmpdir(&format!("rt-{}", g.case_seed));
+        let path = d.join("model.bin");
+        let cuts = random_cuts(g, g.usize_in(1..5), g.usize_in(2..20));
+        let model = random_model(g, &cuts, true);
+        let with_cuts = g.bool();
+        save_bundle(&path, &model, if with_cuts { Some(&cuts) } else { None }).unwrap();
+        let bundle = load_bundle(&path).unwrap();
+        assert_eq!(bundle.model.objective, model.objective);
+        assert_eq!(bundle.model.base_margin.to_bits(), model.base_margin.to_bits());
+        assert_eq!(bundle.model.n_features, model.n_features);
+        assert_eq!(bundle.model.trees, model.trees);
+        match (&bundle.cuts, with_cuts) {
+            (Some(c), true) => {
+                assert_eq!(c.ptrs, cuts.ptrs);
+                let bits =
+                    |v: &Vec<f32>| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&c.values), bits(&cuts.values));
+                assert_eq!(bits(&c.min_vals), bits(&cuts.min_vals));
+                // The strict compile-time cut check survives the round trip.
+                CompiledForest::compile(&bundle.model, c).unwrap();
+            }
+            (None, false) => {}
+            _ => panic!("cuts presence not preserved"),
+        }
+        std::fs::remove_dir_all(&d).ok();
+    });
+}
+
+#[test]
+fn bundle_detects_corruption() {
+    let d = tmpdir("corrupt");
+    let path = d.join("model.bin");
+    run_prop("make model", 1, |g| {
+        let cuts = random_cuts(g, 3, 8);
+        let model = random_model(g, &cuts, true);
+        save_bundle(&path, &model, Some(&cuts)).unwrap();
+    });
+    let good = std::fs::read(&path).unwrap();
+
+    // Flip one payload byte → checksum error.
+    let mut bad = good.clone();
+    bad[50] ^= 0xff;
+    std::fs::write(&path, &bad).unwrap();
+    let err = load_bundle(&path).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "{err}");
+
+    // Truncate → truncation error.
+    std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+    assert!(load_bundle(&path).is_err());
+
+    // Bad magic → "not a bundle".
+    let mut bad = good.clone();
+    bad[0] ^= 0xff;
+    std::fs::write(&path, &bad).unwrap();
+    let err = load_bundle(&path).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+
+    // Future version → unsupported.
+    let mut bad = good.clone();
+    bad[8] = 99;
+    std::fs::write(&path, &bad).unwrap();
+    let err = load_bundle(&path).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+
+    std::fs::remove_dir_all(&d).ok();
+}
+
+/// End-to-end on a really trained model: train → compile → score on all
+/// paths, through a save/load cycle, across worker counts.
+#[test]
+fn trained_model_serves_bit_identically() {
+    let data = synthetic::higgs_like(1500, 11);
+    let mut cfg = TrainConfig::default();
+    cfg.n_rounds = 5;
+    cfg.max_depth = 4;
+    cfg.max_bin = 16;
+    let session = TrainSession::from_memory(data, cfg).unwrap();
+    let outcome = session.train().unwrap();
+    let data = synthetic::higgs_like(1500, 11); // same seed ⇒ same rows
+    let expected = outcome.model.predict(&data);
+    let trained_cuts: &HistogramCuts = &outcome.cuts;
+
+    let forest = Arc::new(CompiledForest::compile(&outcome.model, trained_cuts).unwrap());
+    for workers in [1usize, 4] {
+        let engine = ScoringEngine::new(Arc::clone(&forest)).with_workers(workers);
+        let binned = engine.score_dmatrix(&data, Some(trained_cuts)).unwrap();
+        assert_bits_eq(&binned, &expected, "trained binned");
+        let raw = engine.score_dmatrix(&data, None).unwrap();
+        assert_bits_eq(&raw, &expected, "trained raw");
+    }
+
+    // Through the binary bundle.
+    let d = tmpdir("trained");
+    let path = d.join("model.bin");
+    save_bundle(&path, &outcome.model, Some(trained_cuts)).unwrap();
+    let bundle = load_model_auto(&path).unwrap();
+    let cuts = bundle.cuts.expect("bundle carries cuts");
+    let forest = Arc::new(CompiledForest::compile(&bundle.model, &cuts).unwrap());
+    let engine = ScoringEngine::new(forest);
+    let binned = engine.score_dmatrix(&data, Some(&cuts)).unwrap();
+    assert_bits_eq(&binned, &expected, "reloaded binned");
+
+    // And through the JSON dump (auto-detected, no cuts → naive walk in
+    // the CLI; here we check the model itself survives).
+    let jpath = d.join("model.json");
+    outcome.model.save(&jpath).unwrap();
+    let jbundle = load_model_auto(&jpath).unwrap();
+    assert!(jbundle.cuts.is_none());
+    assert_bits_eq(&jbundle.model.predict(&data), &expected, "json reload");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+// ---- batcher ----
+
+/// Test scorer: blocks every batch behind a gate (closed ⇒ workers
+/// stall, for backpressure/shutdown tests) and records batch sizes.
+struct GatedScorer {
+    nf: usize,
+    open: Mutex<bool>,
+    cv: Condvar,
+    batches: Mutex<Vec<usize>>,
+}
+
+impl GatedScorer {
+    fn new(nf: usize, open: bool) -> GatedScorer {
+        GatedScorer {
+            nf,
+            open: Mutex::new(open),
+            cv: Condvar::new(),
+            batches: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn open_gate(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.batches.lock().unwrap().clone()
+    }
+}
+
+impl Scorer for GatedScorer {
+    fn n_features(&self) -> usize {
+        self.nf
+    }
+
+    fn score_rows(&self, rows: &[RowInput]) -> Result<Vec<f32>> {
+        let mut g = self.open.lock().unwrap();
+        while !*g {
+            g = self.cv.wait(g).unwrap();
+        }
+        drop(g);
+        self.batches.lock().unwrap().push(rows.len());
+        Ok(rows
+            .iter()
+            .map(|r| match r {
+                RowInput::Raw(v) => v[0],
+                RowInput::Binned(s) => s[0] as f32,
+            })
+            .collect())
+    }
+}
+
+fn serve_cfg(batch_max: usize, max_wait_us: usize, queue_depth: usize, workers: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.batch_max = batch_max;
+    cfg.max_wait_us = max_wait_us;
+    cfg.queue_depth = queue_depth;
+    cfg.workers = workers;
+    cfg
+}
+
+#[test]
+fn batcher_flushes_on_deadline() {
+    // batch_max is far above the request count, so only the max-wait
+    // deadline can flush the batch.
+    let scorer = Arc::new(GatedScorer::new(1, true));
+    let batcher = Batcher::new(Arc::clone(&scorer) as Arc<dyn Scorer>, &serve_cfg(1000, 100_000, 64, 1));
+    let replies: Vec<_> = (0..3)
+        .map(|i| batcher.submit(RowInput::Raw(vec![i as f32])).unwrap())
+        .collect();
+    for (i, r) in replies.into_iter().enumerate() {
+        assert_eq!(r.wait().unwrap(), i as f32);
+    }
+    assert_eq!(scorer.batch_sizes(), vec![3], "one deadline-flushed batch");
+    let report = batcher.report();
+    assert_eq!(report.rows, 3);
+    assert_eq!(report.batches, 1);
+    assert!(report.p99_us >= report.p50_us);
+    assert!(report.p50_us > 0.0);
+}
+
+#[test]
+fn batcher_delivers_replies_in_order() {
+    let scorer = Arc::new(GatedScorer::new(1, true));
+    let batcher = Batcher::new(scorer as Arc<dyn Scorer>, &serve_cfg(8, 1000, 16, 2));
+    let replies: Vec<_> = (0..100)
+        .map(|i| batcher.submit(RowInput::Raw(vec![i as f32])).unwrap())
+        .collect();
+    for (i, r) in replies.into_iter().enumerate() {
+        assert_eq!(r.wait().unwrap(), i as f32, "reply {i} crossed wires");
+    }
+    let report = batcher.report();
+    assert_eq!(report.rows, 100);
+    assert!(report.batches >= 13, "batch_max=8 ⇒ at least ceil(100/8) batches");
+}
+
+#[test]
+fn batcher_backpressure_bounds_the_queue() {
+    // Gate closed: the worker stalls, every buffer fills, and
+    // try_submit must eventually reject instead of queueing unboundedly.
+    let scorer = Arc::new(GatedScorer::new(1, false));
+    let batcher = Batcher::new(Arc::clone(&scorer) as Arc<dyn Scorer>, &serve_cfg(1, 100, 1, 1));
+    let mut accepted = Vec::new();
+    let mut saw_full = false;
+    for i in 0..20 {
+        match batcher.try_submit(RowInput::Raw(vec![i as f32])) {
+            Ok(r) => accepted.push((i, r)),
+            Err(e) => {
+                assert!(e.to_string().contains("full"), "{e}");
+                saw_full = true;
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(saw_full, "bounded queues must reject when the engine stalls");
+    assert!(accepted.len() >= 2, "some requests should be in flight");
+    scorer.open_gate();
+    for (i, r) in accepted {
+        assert_eq!(r.wait().unwrap(), i as f32);
+    }
+}
+
+#[test]
+fn batcher_drop_flushes_and_joins() {
+    let scorer = Arc::new(GatedScorer::new(1, false));
+    let batcher = Batcher::new(Arc::clone(&scorer) as Arc<dyn Scorer>, &serve_cfg(16, 2000, 16, 2));
+    let replies: Vec<_> = (0..5)
+        .map(|i| batcher.submit(RowInput::Raw(vec![i as f32])).unwrap())
+        .collect();
+    // Open the gate shortly after drop starts joining the pipeline.
+    let s = Arc::clone(&scorer);
+    let opener = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(50));
+        s.open_gate();
+    });
+    drop(batcher); // must flush pending batches and join every thread
+    opener.join().unwrap();
+    for (i, r) in replies.into_iter().enumerate() {
+        assert_eq!(r.wait().unwrap(), i as f32, "pending request {i} lost at shutdown");
+    }
+}
+
+#[test]
+fn batcher_rejects_malformed_rows() {
+    let scorer = Arc::new(GatedScorer::new(3, true));
+    let batcher = Batcher::new(scorer as Arc<dyn Scorer>, &serve_cfg(4, 100, 8, 1));
+    let err = batcher.submit(RowInput::Raw(vec![1.0])).unwrap_err();
+    assert!(err.to_string().contains("features"), "{err}");
+    let ok = batcher.submit(RowInput::Binned(vec![0, 1, 2])).unwrap();
+    assert_eq!(ok.wait().unwrap(), 0.0);
+}

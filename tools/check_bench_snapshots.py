@@ -18,6 +18,10 @@ Rules enforced:
 3. A snapshot with no matching BENCH line in the provided outputs is an
    error (the bench arm was removed or renamed without updating the
    snapshot), unless no output files were given (provisional-only mode).
+4. The ``serving`` snapshot additionally must be internally coherent:
+   non-empty arms with known layouts, positive throughput/latency,
+   ``p99 >= p50``, the compiled layout strictly beating the naive walk
+   at every batch size, and an overall speedup >= 1.
 
 Keys named ``note`` or starting with ``_`` are documentation and are
 not compared.
@@ -94,6 +98,40 @@ def diff(snap, got, path, where):
         fail(f"{where}: {path}: snapshot {snap!r} != emitted {got!r}")
 
 
+def check_serving(snap, where):
+    """Rule 4: the serving snapshot must tell a coherent story."""
+    arms = snap.get("arms")
+    if not isinstance(arms, list) or not arms:
+        fail(f"{where}: serving snapshot needs a non-empty \"arms\" list")
+    by_batch = {}
+    for i, arm in enumerate(arms):
+        path = f"$.arms[{i}]"
+        layout = arm.get("layout")
+        if layout not in ("naive", "compiled"):
+            fail(f"{where}: {path}.layout {layout!r} is not naive/compiled")
+        batch = arm.get("batch")
+        if not isinstance(batch, int) or batch < 1:
+            fail(f"{where}: {path}.batch {batch!r} must be an int >= 1")
+        for key in ("rows_per_sec", "p50_us", "p99_us"):
+            v = arm.get(key)
+            if not isinstance(v, (int, float)) or v <= 0:
+                fail(f"{where}: {path}.{key} {v!r} must be a positive number")
+        if arm["p99_us"] < arm["p50_us"]:
+            fail(f"{where}: {path}: p99_us {arm['p99_us']} below p50_us {arm['p50_us']}")
+        by_batch.setdefault(batch, {})[layout] = arm["rows_per_sec"]
+    for batch, layouts in sorted(by_batch.items()):
+        if set(layouts) != {"naive", "compiled"}:
+            fail(f"{where}: batch {batch} is missing a naive or compiled arm")
+        if layouts["compiled"] <= layouts["naive"]:
+            fail(
+                f"{where}: batch {batch}: compiled {layouts['compiled']} rows/s "
+                f"does not beat naive {layouts['naive']}"
+            )
+    speedup = snap.get("speedup")
+    if not isinstance(speedup, (int, float)) or speedup < 1.0:
+        fail(f"{where}: speedup {speedup!r} must be >= 1")
+
+
 def main() -> None:
     snapshots = {}
     for f in sorted(SNAP_DIR.glob("BENCH_*.json")):
@@ -105,6 +143,8 @@ def main() -> None:
         name = snap.get("bench")
         if not name:
             fail(f"{where} has no \"bench\" name field")
+        if name == "serving":
+            check_serving(snap, where)
         snapshots[name] = (snap, where)
 
     emitted = {}

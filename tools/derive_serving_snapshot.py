@@ -1,0 +1,271 @@
+#!/usr/bin/env python3
+"""Derive `benches/BENCH_serving.json` without a Rust toolchain.
+
+This is the Python twin of `bench_ablations` arm 9 (`ablate_serving`):
+it replays the exact same xoshiro256** stream (`rust/src/util/rng.rs`),
+builds the same pinned synthetic forest and request batch, runs the same
+node-visit census, and applies the same cache cost + batching latency
+model, so the JSON it writes matches the bench's emitted `BENCH
+{"bench": "serving", ...}` line field-for-field (ints exactly, floats
+well inside `check_bench_snapshots.py`'s 1e-6 relative tolerance).
+
+Usage:
+    python3 tools/derive_serving_snapshot.py          # rewrite snapshot
+    python3 tools/derive_serving_snapshot.py --print  # stdout only
+"""
+
+import json
+import math
+import sys
+from pathlib import Path
+
+MASK64 = (1 << 64) - 1
+
+# ---- RNG: splitmix64-seeded xoshiro256** (rust/src/util/rng.rs) ----
+
+
+def _splitmix64(state):
+    state = (state + 0x9E37_79B9_7F4A_7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & MASK64
+    return state, z ^ (z >> 31)
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Rng:
+    def __init__(self, seed):
+        s = []
+        for _ in range(4):
+            seed, v = _splitmix64(seed)
+            s.append(v)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def next_f64(self):
+        # Exact: a <= 53-bit integer times 2^-53.
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def gen_range(self, n):
+        # Lemire's unbiased method, bit-for-bit (u128 product in Rust is
+        # exact big-int arithmetic here).
+        x = self.next_u64()
+        m = x * n
+        l = m & MASK64
+        if l < n:
+            t = ((1 << 64) - n) % n
+            while l < t:
+                x = self.next_u64()
+                m = x * n
+                l = m & MASK64
+        return m >> 64
+
+
+# ---- pinned shape (keep in lockstep with ablate_serving) ----
+
+N_FEATURES = 50
+BINS = 64
+N_TREES = 100
+TREE_DEPTH = 6
+NODES_PER_TREE = (1 << (TREE_DEPTH + 1)) - 1
+ROWS = 2048
+NULL_DENOM = 66
+NULL_SYMBOL = N_FEATURES * BINS
+
+MISS_NS = 80.0
+HIT_NS = 4.0
+DENSIFY_NS = 50.0
+ARRIVAL_US = 5.0
+DEADLINE_US = 2000.0
+
+
+def build_forest(rng):
+    """Preorder perfect trees; RNG order: interior f then bin, leaf weight.
+
+    Returns per-tree parallel arrays (gthr, feature, left, right); leaves
+    carry gthr = -1.  Node ids are tree-local (the census stamps per
+    (block, tree) pair, so global ids are unnecessary).
+    """
+    trees = []
+    for _ in range(N_TREES):
+        gthr, feat, left, right = [], [], [], []
+
+        def grow(depth):
+            idx = len(gthr)
+            if depth == TREE_DEPTH:
+                rng.next_f64()  # leaf weight draw (value unused here)
+                gthr.append(-1)
+                feat.append(-1)
+                left.append(0)
+                right.append(0)
+                return idx
+            f = rng.gen_range(N_FEATURES)
+            b = rng.gen_range(BINS)
+            gthr.append(f * BINS + b)
+            feat.append(f)
+            left.append(0)
+            right.append(0)
+            l = grow(depth + 1)
+            r = grow(depth + 1)
+            left[idx] = l
+            right[idx] = r
+            return idx
+
+        grow(0)
+        assert len(gthr) == NODES_PER_TREE
+        trees.append((gthr, feat, left, right))
+    return trees
+
+
+def build_batch(rng):
+    rows = []
+    for _ in range(ROWS):
+        row = []
+        for f in range(N_FEATURES):
+            r = rng.gen_range(NULL_DENOM)
+            row.append(NULL_SYMBOL if r >= BINS else f * BINS + r)
+        rows.append(row)
+    return rows
+
+
+def walk(tree, row, visit):
+    gthr, feat, left, right = tree
+    i = 0
+    while True:
+        visit(i)
+        if gthr[i] < 0:
+            return
+        sym = row[feat[i]]
+        i = left[i] if (sym == NULL_SYMBOL or sym <= gthr[i]) else right[i]
+
+
+def census_cold(trees, rows, block):
+    """Distinct nodes touched per (row-block, tree) — compiled cold loads."""
+    cold = 0
+    b = 0
+    while b < ROWS:
+        n = min(ROWS - b, block)
+        for tree in trees:
+            seen = set()
+            for row in rows[b : b + n]:
+                walk(tree, row, seen.add)
+            cold += len(seen)
+        b += n
+    return cold
+
+
+def nearest_rank(sorted_v, p):
+    n = len(sorted_v)
+    rank = math.ceil(p / 100.0 * n)
+    return sorted_v[min(max(rank, 1), n) - 1]
+
+
+def main():
+    rng = Rng(2027)
+    trees = build_forest(rng)
+    rows = build_batch(rng)
+
+    visits_per_row = N_TREES * (TREE_DEPTH + 1)
+    total = [0]
+    for row in rows:
+        for tree in trees:
+            walk(tree, row, lambda _i: total.__setitem__(0, total[0] + 1))
+    assert total[0] == ROWS * visits_per_row
+
+    cold = {blk: census_cold(trees, rows, blk) for blk in (1, 8, 64)}
+    assert cold[1] == total[0], "blocks of 1 must make every visit cold"
+    assert cold[64] < cold[8] < cold[1]
+
+    naive_row_ns = visits_per_row * MISS_NS + DENSIFY_NS
+
+    def compiled_row_ns(c):
+        miss_pr = c / ROWS
+        return miss_pr * MISS_NS + (visits_per_row - miss_pr) * HIT_NS
+
+    speedup = naive_row_ns / compiled_row_ns(cold[64])
+    assert speedup >= 1.0
+
+    arms = []
+    for batch in (1, 8, 64, 256):
+        blk = batch if batch in (1, 8) else 64
+        n_fill = min(batch, int(DEADLINE_US / ARRIVAL_US) + 1)
+        per_batch = {}
+        for layout in ("naive", "compiled"):
+            per_row_ns = naive_row_ns if layout == "naive" else compiled_row_ns(cold[blk])
+            service_us = n_fill * per_row_ns / 1e3
+            lats = sorted(
+                (n_fill - 1 - i) * ARRIVAL_US + service_us for i in range(n_fill)
+            )
+            rows_per_sec = 1e9 / per_row_ns
+            per_batch[layout] = rows_per_sec
+            arms.append(
+                {
+                    "batch": batch,
+                    "layout": layout,
+                    "rows_per_sec": rows_per_sec,
+                    "p50_us": nearest_rank(lats, 50.0),
+                    "p99_us": nearest_rank(lats, 99.0),
+                }
+            )
+        assert per_batch["compiled"] > per_batch["naive"]
+
+    snap = {
+        "bench": "serving",
+        "note": (
+            "Deterministic serving snapshot: node-visit census over a pinned "
+            "synthetic forest (100 perfect depth-6 trees, 50 features x 64 "
+            "bins, 2048 rows, xoshiro256** seed 2027) feeding a cache cost "
+            "model (miss/hit/densify ns constants below) and a 5us-arrival "
+            "batching latency model. Regenerate with "
+            "`python3 tools/derive_serving_snapshot.py` or from the BENCH "
+            "line of `cargo bench --bench bench_ablations` (arm 9)."
+        ),
+        "shape": {
+            "n_trees": N_TREES,
+            "tree_depth": TREE_DEPTH,
+            "nodes_per_tree": NODES_PER_TREE,
+            "n_features": N_FEATURES,
+            "bins_per_feature": BINS,
+            "rows": ROWS,
+            "null_rate_denom": NULL_DENOM,
+        },
+        "visits_per_row": visits_per_row,
+        "census": {
+            "cold_block1": cold[1],
+            "cold_block8": cold[8],
+            "cold_block64": cold[64],
+        },
+        "model_ns": {
+            "miss": MISS_NS,
+            "hit": HIT_NS,
+            "densify_naive": DENSIFY_NS,
+        },
+        "arms": arms,
+        "speedup": speedup,
+    }
+
+    text = json.dumps(snap, indent=2) + "\n"
+    if "--print" in sys.argv[1:]:
+        sys.stdout.write(text)
+        return
+    out = Path(__file__).resolve().parent.parent / "benches" / "BENCH_serving.json"
+    out.write_text(text)
+    print(f"wrote {out} (speedup {speedup:.2f}x, cold64 {cold[64]})")
+
+
+if __name__ == "__main__":
+    main()
