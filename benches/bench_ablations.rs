@@ -26,8 +26,15 @@
 //!    line; `tools/derive_serving_snapshot.py` is its Python twin),
 //!    then measures the real engine and batcher against the naive
 //!    `GbtModel::predict` walk on a trained model.
+//! 10. **Sampled-sweep page skipping** — sampling ratio × page layout
+//!    (uniform vs stratified) × codec: folds pinned Bernoulli masks
+//!    into per-page sample bitmaps, drives the real `DiskStream` skip
+//!    filter, and counts pages/rows/bytes never read (emits a `BENCH
+//!    {...}` json line; `tools/derive_sampling_snapshot.py` is its
+//!    Python twin), then reports the session rollup counters from real
+//!    sampled out-of-core training runs.
 //!
-//! The `BENCH` lines for arms 7–9 contain only *deterministic*
+//! The `BENCH` lines for arms 7–10 contain only *deterministic*
 //! quantities (wire-format byte counts, modeled link/round seconds,
 //! cache counters, tuner trajectories) at a pinned shape independent of
 //! `OOCGB_BENCH_SCALE`, so CI can diff them against the committed
@@ -884,6 +891,181 @@ fn ablate_serving() {
     );
 }
 
+fn ablate_sampling_skip() {
+    header("Ablation 10 — sampled-sweep page skip: ratio × layout × codec");
+    use oocgb::sampling::{SampleBitmap, SkipPlan};
+    use oocgb::util::json::{num, s, Value};
+    use std::collections::BTreeMap;
+
+    // Pinned shape (snapshot-deterministic): 8 pages × 64 rows, 8
+    // features × 64 bins.  Every page cycles each column through all 64
+    // bins, so frames are identical across pages: raw spends
+    // ceil(log2(513)) = 10 bits per entry, the per-column
+    // frame-of-reference codec 6 — the same arithmetic
+    // `tools/derive_sampling_snapshot.py` replays.
+    let n_pages = 8usize;
+    let rows_per_page = 64usize;
+    let stride = 8usize;
+    let n_symbols = stride as u32 * 64 + 1;
+    let n_rows = n_pages * rows_per_page;
+    let dir = std::env::temp_dir().join(format!("oocgb-ablate10-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let write_file = |codec: PageCodec| -> Arc<PageFile<EllpackPage>> {
+        let path = dir.join(format!("skip-{}.bin", codec.name()));
+        let mut w = PageFileWriter::with_codec(&path, codec).unwrap();
+        for p in 0..n_pages {
+            let mut pw = EllpackWriter::new(rows_per_page, stride, n_symbols, true);
+            for r in 0..rows_per_page {
+                let row: Vec<u32> = (0..stride)
+                    .map(|k| k as u32 * 64 + ((r + p) % 64) as u32)
+                    .collect();
+                pw.push_row(&row);
+            }
+            w.write_page(&pw.finish((p * rows_per_page) as u64)).unwrap();
+        }
+        Arc::new(w.finish().unwrap())
+    };
+    let raw = write_file(PageCodec::Raw);
+    let bp = write_file(PageCodec::BitPack);
+    let frame = |f: &Arc<PageFile<EllpackPage>>| -> u64 {
+        let first = f.frame_bytes(0);
+        for i in 1..n_pages {
+            assert_eq!(f.frame_bytes(i), first, "pinned pages must share a frame size");
+        }
+        first
+    };
+    let (raw_frame, bp_frame) = (frame(&raw), frame(&bp));
+    assert!(bp_frame < raw_frame, "bit-packing must shrink the pinned frames");
+
+    let page_rows: Vec<(u64, usize)> =
+        (0..n_pages).map(|i| ((i * rows_per_page) as u64, rows_per_page)).collect();
+    // One filtered sweep through the real read path: the skip filter
+    // runs before any frame is read or decoded, so a dead page costs
+    // zero disk bytes whatever the codec.
+    let sweep = |file: &Arc<PageFile<EllpackPage>>, bm: &Arc<SampleBitmap>| -> SkipPlan {
+        let plan = SkipPlan::new();
+        plan.set(Some(bm.clone()));
+        let stream =
+            DiskStream::with_rows(file.clone(), 2, n_rows).with_skip(plan.clone());
+        let mut delivered = 0u64;
+        for page in stream.open().unwrap() {
+            let pg = page.unwrap();
+            assert!(
+                bm.is_live(pg.base_rowid as usize / rows_per_page),
+                "a dead page was delivered"
+            );
+            delivered += 1;
+        }
+        assert_eq!(delivered, plan.pages_read(), "delivery vs read counter");
+        assert_eq!(plan.pages_read() + plan.pages_skipped(), n_pages as u64);
+        plan
+    };
+
+    println!(
+        "| ratio | layout | selected rows | pages read | pages skipped | \
+         raw bytes avoided | bitpack bytes avoided |"
+    );
+    println!("|---|---|---|---|---|---|---|");
+    let mut arms = BTreeMap::new();
+    for pct in [10u64, 50] {
+        // Uniform layout: Bernoulli(ratio) over the row order as spilled.
+        // Stratified layout: the same selection count packed into the
+        // leading pages — what the stratified store arranges when the
+        // sampler's weight mass clusters by stratum.
+        let mut rng = Rng::new(2020 + pct);
+        let ratio = pct as f64 / 100.0;
+        let uniform: Vec<bool> = (0..n_rows).map(|_| rng.bernoulli(ratio)).collect();
+        let n_sel = uniform.iter().filter(|&&b| b).count();
+        let mut packed = vec![false; n_rows];
+        packed[..n_sel].fill(true);
+        let mut skipped_by_layout = Vec::new();
+        for (layout, mask) in [("uniform", uniform), ("stratified", packed)] {
+            let bm = Arc::new(SampleBitmap::from_mask(&mask, &page_rows));
+            let plan_raw = sweep(&raw, &bm);
+            let plan = sweep(&bp, &bm);
+            // The skip decision is codec-independent.
+            assert_eq!(plan_raw.pages_read(), plan.pages_read());
+            assert_eq!(plan_raw.rows_skipped(), plan.rows_skipped());
+            let (read, skipped) = (plan.pages_read(), plan.pages_skipped());
+            skipped_by_layout.push(skipped);
+            println!(
+                "| {ratio} | {layout} | {n_sel} | {read} | {skipped} | {} | {} |",
+                skipped * raw_frame,
+                skipped * bp_frame
+            );
+            let mut m = BTreeMap::new();
+            m.insert("n_selected".to_string(), num(n_sel as f64));
+            m.insert("pages_read".to_string(), num(read as f64));
+            m.insert("pages_skipped".to_string(), num(skipped as f64));
+            m.insert("rows_skipped".to_string(), num(plan.rows_skipped() as f64));
+            m.insert("raw_bytes_read".to_string(), num((read * raw_frame) as f64));
+            m.insert("raw_bytes_avoided".to_string(), num((skipped * raw_frame) as f64));
+            m.insert("bitpack_bytes_read".to_string(), num((read * bp_frame) as f64));
+            m.insert(
+                "bitpack_bytes_avoided".to_string(),
+                num((skipped * bp_frame) as f64),
+            );
+            arms.insert(format!("ratio{pct}_{layout}"), Value::Object(m));
+        }
+        // Clustering the selection can only help: a scattered mask
+        // touches at least as many pages as a packed one.
+        assert!(
+            skipped_by_layout[1] >= skipped_by_layout[0],
+            "stratified layout skipped fewer pages than uniform at f={ratio}"
+        );
+        assert!(
+            skipped_by_layout[1] > 0,
+            "the packed layout must leave whole pages unsampled at f={ratio}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // End-to-end: real sampled out-of-core training; TrainOutcome rolls
+    // up the session's skip counters.  Scaled — tables only, no BENCH.
+    let rows = scaled(20_000);
+    let rounds = ((8.0 * scale()) as usize).max(3);
+    println!("\n| sampler | f | strata | pages read | pages skipped | rows skipped | auc |");
+    println!("|---------|---|--------|------------|---------------|--------------|-----|");
+    for (f, n_strata) in [(1.0f32, 0usize), (0.1, 0), (0.02, 0), (0.1, 8)] {
+        let mut cfg = table2_cfg(ExecMode::CpuOutOfCore);
+        cfg.n_rounds = rounds;
+        cfg.eval_every = rounds;
+        cfg.page_size_bytes = 2 * 1024;
+        cfg.n_strata = n_strata;
+        cfg = with_sampling(cfg, SamplingMethod::Mvs, f);
+        let (out, _) = run(synthetic::higgs_like(rows, 29), cfg).unwrap();
+        let auc = out.eval_history.last().map(|&(_, m)| m).unwrap_or(f64::NAN);
+        println!(
+            "| MVS | {f} | {n_strata} | {} | {} | {} | {auc:.4} |",
+            out.pages_read, out.pages_skipped, out.rows_skipped
+        );
+        assert!(out.pages_read > 0, "out-of-core sweeps must count page reads");
+        if f == 1.0 {
+            // MVS at f=1 selects every row; nothing may be skipped.
+            assert_eq!(out.pages_skipped, 0, "full sampling skipped pages");
+            assert_eq!(out.rows_skipped, 0);
+        }
+    }
+
+    let mut shape = BTreeMap::new();
+    shape.insert("n_pages".to_string(), num(n_pages as f64));
+    shape.insert("rows_per_page".to_string(), num(rows_per_page as f64));
+    shape.insert("features".to_string(), num(stride as f64));
+    shape.insert("bins_per_feature".to_string(), num(64.0));
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), s("sampling_skip"));
+    top.insert("shape".to_string(), Value::Object(shape));
+    top.insert("raw_frame_bytes".to_string(), num(raw_frame as f64));
+    top.insert("bitpack_frame_bytes".to_string(), num(bp_frame as f64));
+    top.insert("arms".to_string(), Value::Object(arms));
+    println!("\nBENCH {}", Value::Object(top).to_json());
+    println!(
+        "\nscattered low-ratio samples still touch nearly every page; packing \
+         the selection into few pages (the stratified store's job) is what \
+         turns a low sampling ratio into proportionally fewer page reads."
+    );
+}
+
 fn main() {
     println!("# Ablations");
     ablate_sampler();
@@ -895,4 +1077,5 @@ fn main() {
     ablate_page_transport();
     ablate_pipeline_tuning();
     ablate_serving();
+    ablate_sampling_skip();
 }

@@ -155,6 +155,19 @@ pub struct TrainConfig {
     /// device modes (0 = cache disabled).  Carved out of
     /// `device_memory_bytes`, per shard when sharding.
     pub page_cache_bytes: u64,
+    /// Skip reading pages with zero sampled rows during out-of-core
+    /// sweeps (per-page sample bitmaps, `sampling/bitmap.rs`).  Pure
+    /// transport optimization: the trained model is bit-identical with
+    /// it on or off (property-tested); the knob exists for that proof
+    /// and for ablations.
+    pub skip_unsampled_pages: bool,
+    /// Weight strata for the stratified page store (0 or 1 = off).
+    /// `n >= 2` reorders training rows at ingest so rare-label /
+    /// high-weight rows cluster into few pages, raising the page-skip
+    /// rate under gradient sampling on imbalanced data.  Reordering
+    /// changes the page layout, so results are learning-equivalent (not
+    /// bit-equal) to the unstratified layout.  Requires buffered ingest.
+    pub n_strata: usize,
     /// Prefetcher queue depth (pages in flight per read/decode stage).
     pub prefetch_depth: usize,
     /// Bounded-channel depth for the preprocessing pipeline stages
@@ -220,6 +233,8 @@ impl Default for TrainConfig {
             page_size_bytes: 32 * 1024 * 1024,
             page_codec: PageCodec::BitPack,
             page_cache_bytes: 0,
+            skip_unsampled_pages: true,
+            n_strata: 0,
             prefetch_depth: 2,
             pipeline_depth: 2,
             auto_tune: true,
@@ -318,6 +333,8 @@ impl TrainConfig {
             "page_cache_mb" => {
                 self.page_cache_bytes = pf::<u64>(key, v)? * 1024 * 1024
             }
+            "skip_unsampled_pages" => self.skip_unsampled_pages = pf(key, v)?,
+            "n_strata" => self.n_strata = pf(key, v)?,
             "prefetch_depth" => {
                 self.prefetch_depth = pf(key, v)?;
                 self.prefetch_depth_set = true;
@@ -375,6 +392,14 @@ impl TrainConfig {
             && self.goss_top_rate >= self.subsample
         {
             return Err(Error::config("goss_top_rate must be < subsample"));
+        }
+        if self.sampling_method == SamplingMethod::Goss
+            && self.goss_top_rate + self.subsample > 1.0
+        {
+            return Err(Error::config("goss_top_rate + subsample must be <= 1"));
+        }
+        if self.n_strata > 64 {
+            return Err(Error::config("n_strata must be <= 64"));
         }
         if !(0.0..0.9).contains(&self.eval_fraction) {
             return Err(Error::config("eval_fraction must be in [0, 0.9)"));
@@ -439,6 +464,11 @@ impl TrainConfig {
         m.insert("page_size_bytes".into(), num(self.page_size_bytes as f64));
         m.insert("page_codec".into(), s(self.page_codec.name()));
         m.insert("page_cache_bytes".into(), num(self.page_cache_bytes as f64));
+        m.insert(
+            "skip_unsampled_pages".into(),
+            Value::Bool(self.skip_unsampled_pages),
+        );
+        m.insert("n_strata".into(), num(self.n_strata as f64));
         m.insert("prefetch_depth".into(), num(self.prefetch_depth as f64));
         m.insert("pipeline_depth".into(), num(self.pipeline_depth as f64));
         m.insert("auto_tune".into(), Value::Bool(self.auto_tune));
@@ -526,6 +556,28 @@ mod tests {
     #[test]
     fn defaults_are_valid() {
         TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn sampling_skip_and_strata_knobs() {
+        let cfg = TrainConfig::load(
+            None,
+            &["skip_unsampled_pages=false".into(), "n_strata=8".into()],
+        )
+        .unwrap();
+        assert!(!cfg.skip_unsampled_pages);
+        assert_eq!(cfg.n_strata, 8);
+        assert!(TrainConfig::load(None, &["n_strata=65".into()]).is_err());
+        // GOSS knob combinations rejected at the config layer too.
+        assert!(TrainConfig::load(
+            None,
+            &[
+                "sampling_method=goss".into(),
+                "goss_top_rate=0.4".into(),
+                "subsample=0.7".into(),
+            ],
+        )
+        .is_err());
     }
 
     #[test]

@@ -36,7 +36,7 @@ use crate::device::{CacheStats, DeviceAlloc, Dir, ShardPlan};
 use crate::ellpack::{compact::Compactor, EllpackPage};
 use crate::error::{Error, Result};
 use crate::page::tuner::PipelineTuner;
-use crate::sampling::Sampler;
+use crate::sampling::{SampleBitmap, Sampler};
 use crate::tree::{
     builder::HistBackend,
     hist_cpu::CpuHistBackend,
@@ -58,7 +58,7 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
     let n_rows = session.labels.len();
     let n_cols = session.cuts.n_features();
     let params = TreeParams::from_config(&cfg);
-    let sampler = Sampler::from_config(&cfg);
+    let sampler = Sampler::from_config(&cfg)?;
     // Fixed salt keeps the sampling stream independent of other seed
     // consumers (data gen, splits).
     const SAMPLE_SALT: u64 = 0x7A1D_5EED_0C0A_C47E;
@@ -204,8 +204,29 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
         };
         session.timers.add("sample", sw.elapsed_secs());
 
+        // ---- page-skip bitmap (sampled rounds) ----
+        // Fold the row mask against the page layout so every
+        // skip-capable out-of-core sweep this round drops pages with
+        // zero sampled rows at open time.  Unsampled rounds clear the
+        // bitmap (all pages flow).  Bit-identical by the argument in
+        // `sampling/bitmap.rs`; `skip_unsampled_pages=false` keeps the
+        // read-everything path for the property-test comparison.
+        if cfg.skip_unsampled_pages {
+            ctl.skip.set(sample.as_ref().map(|s| {
+                Arc::new(SampleBitmap::from_mask(&s.mask, &session.page_rows))
+            }));
+        }
+
         // ---- grow one tree ----
-        let tree = if cfg.mode == ExecMode::DeviceOutOfCore {
+        let tree = if sample.as_ref().is_some_and(|s| s.n_selected == 0) {
+            // An empty selection (reachable: all-zero gradients make
+            // MVS select nothing) carries zero gradient statistics, so
+            // the round degenerates to a single zero-weight leaf.
+            // Short-circuit before the mode fork so all five exec modes
+            // emit the identical tree instead of flowing a degenerate
+            // empty mask into the compactors/growers.
+            Tree::single_leaf(0.0)
+        } else if cfg.mode == ExecMode::DeviceOutOfCore {
             let mask = sample.as_ref().map(|s| s.mask.as_slice());
             match &plan {
                 Some(plan) => session.build_tree_compacted_sharded(
@@ -357,6 +378,9 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
         },
         final_prefetch_depth: ctl.depth.get(),
         depth_adjustments: tuner.as_ref().map_or(0, |t| t.adjustments()),
+        pages_read: ctl.skip.pages_read(),
+        pages_skipped: ctl.skip.pages_skipped(),
+        rows_skipped: ctl.skip.rows_skipped(),
     })
 }
 
@@ -703,7 +727,8 @@ impl TrainSession {
             )
             .with_page_subset(plan.pages_of(s).to_vec())
             .with_depth_control(ctl.depth.clone())
-            .with_stats(ctl.stats.clone());
+            .with_stats(ctl.stats.clone())
+            .with_skip(ctl.skip.clone());
             let stream = match dev.page_caches.get(s) {
                 Some(cache) => stream
                     .with_cache(cache.clone())

@@ -33,6 +33,7 @@ use crate::page::pipeline::{Pipeline, PipelineStats};
 use crate::page::tuner::DepthControl;
 use crate::page::{read_decode_pipeline, PageFile, PageFileWriter, Prefetcher};
 use crate::runtime::Runtime;
+use crate::sampling::SkipPlan;
 use crate::sketch::{HistogramCuts, SketchBuilder};
 use crate::tree::source::{
     cached_h2d_hook, h2d_staging_hook, load_resident, DiskStream, MemoryStream, PageIter,
@@ -324,6 +325,11 @@ pub(crate) fn build_train_data(
 pub(crate) struct SweepControl {
     pub depth: Arc<DepthControl>,
     pub stats: PipelineStats,
+    /// The round's sample-bitmap page filter.  The loop installs a
+    /// bitmap after each sampled round (when `skip_unsampled_pages`);
+    /// every skip-capable sweep filters its page list through it.  The
+    /// margin/data sweep deliberately never attaches this.
+    pub skip: SkipPlan,
 }
 
 impl SweepControl {
@@ -331,6 +337,7 @@ impl SweepControl {
         SweepControl {
             depth: DepthControl::new(cfg.prefetch_depth),
             stats: PipelineStats::new(),
+            skip: SkipPlan::new(),
         }
     }
 }
@@ -361,14 +368,16 @@ pub(crate) fn open_source(
             Box::new(
                 DiskStream::with_rows(file.clone(), cfg.prefetch_depth, n_rows)
                     .with_depth_control(ctl.depth.clone())
-                    .with_stats(ctl.stats.clone()),
+                    .with_stats(ctl.stats.clone())
+                    .with_skip(ctl.skip.clone()),
             ),
         ))),
         (TrainData::Disk(file), ExecMode::DeviceOutOfCoreNaive) => {
             let dev = device.expect("device mode without device context");
             let stream = DiskStream::with_rows(file.clone(), cfg.prefetch_depth, n_rows)
                 .with_depth_control(ctl.depth.clone())
-                .with_stats(ctl.stats.clone());
+                .with_stats(ctl.stats.clone())
+                .with_skip(ctl.skip.clone());
             let stream = match dev.page_caches.first() {
                 Some(cache) => stream
                     .with_cache(cache.clone())
@@ -430,7 +439,8 @@ pub(crate) fn open_sharded_source(
                     DiskStream::with_rows(file.clone(), cfg.prefetch_depth, plan.rows_in(s))
                         .with_page_subset(plan.pages_of(s).to_vec())
                         .with_depth_control(ctl.depth.clone())
-                        .with_stats(ctl.stats.clone()),
+                        .with_stats(ctl.stats.clone())
+                        .with_skip(ctl.skip.clone()),
                 )));
             }
         }
@@ -441,7 +451,8 @@ pub(crate) fn open_sharded_source(
                     DiskStream::with_rows(file.clone(), cfg.prefetch_depth, plan.rows_in(s))
                         .with_page_subset(plan.pages_of(s).to_vec())
                         .with_depth_control(ctl.depth.clone())
-                        .with_stats(ctl.stats.clone());
+                        .with_stats(ctl.stats.clone())
+                        .with_skip(ctl.skip.clone());
                 let ctx = fleet.ctx(s).clone();
                 let stream = match device.and_then(|d| d.page_caches.get(s)) {
                     Some(cache) => stream
@@ -477,16 +488,25 @@ pub(crate) fn compaction_sweep(
         Some(cache) => cached_h2d_hook(dev.ctx.clone(), cache.clone()),
         None => h2d_staging_hook(dev.ctx.clone()),
     };
-    DiskStream::open_file(file, ctl.depth.get(), Some(&hook), cache, Some(&ctl.stats))
+    DiskStream::open_file(
+        file,
+        ctl.depth.get(),
+        Some(&hook),
+        cache,
+        Some(&ctl.stats),
+        Some(&ctl.skip),
+    )
 }
 
 /// One host-side pass over the prepared data (margin updates): the
 /// in-memory fast path, or a read → decode pipeline for disk pages.
+/// Margin updates touch every row, so this sweep never takes the
+/// sample-bitmap filter.
 pub(crate) fn data_sweep(data: &TrainData, ctl: &SweepControl) -> Result<PageIter> {
     match data {
         TrainData::HostPages(pages) => Ok(PageIter::from_shared(pages.clone())),
         TrainData::Disk(file) => {
-            DiskStream::open_file(file, ctl.depth.get(), None, None, Some(&ctl.stats))
+            DiskStream::open_file(file, ctl.depth.get(), None, None, Some(&ctl.stats), None)
         }
     }
 }

@@ -68,6 +68,16 @@ pub struct TrainOutcome {
     /// Depth changes the pipeline tuner applied over the run (0 when
     /// `auto_tune` is off or the stage profile never justified a move).
     pub depth_adjustments: u64,
+    /// Pages that flowed through skip-capable sweeps (every sweep-open
+    /// counts its surviving page list; per-level sweep modes count each
+    /// level's sweep).  Margin/data sweeps are not counted — they are
+    /// never skip-filtered.
+    pub pages_read: u64,
+    /// Pages (and their rows) dropped before the read stage because the
+    /// round's sample bitmap marked them dead
+    /// (`skip_unsampled_pages`, `sampling/bitmap.rs`).
+    pub pages_skipped: u64,
+    pub rows_skipped: u64,
 }
 
 impl TrainSession {
@@ -109,6 +119,15 @@ impl TrainSession {
             return Self::build(pages, labels, None, cfg);
         }
 
+        if cfg.n_strata >= 2 {
+            // Strata are assigned from global label frequencies, which a
+            // single streaming pass cannot know before spilling — the
+            // buffered ingest path (`from_memory`) reorders instead.
+            return Err(Error::config(
+                "n_strata requires buffered ingest (from_memory); \
+                 streamed out-of-core ingest cannot reorder rows into strata",
+            ));
+        }
         let cache_dir = modes::session_cache_dir(&cfg);
         std::fs::create_dir_all(&cache_dir)?;
         let dir = cache_dir.clone();
@@ -162,10 +181,20 @@ impl TrainSession {
         eval: Option<DMatrix>,
         cfg: TrainConfig,
     ) -> Result<TrainSession> {
-        let csr_pages = if cfg.mode.is_out_of_core() || cfg.n_shards >= 1 {
-            modes::rechunk_pages(csr_pages, cfg.page_size_bytes)
+        // Stratified page store (`sampling/stratify.rs`): reorder the
+        // training rows by label-rarity stratum before pages are laid
+        // out, so high-weight rows cluster into few pages and the
+        // sampled-sweep page skip stays effective at low ratios.  The
+        // permuted rows always go through re-chunking — stratification
+        // is a page-layout policy.
+        let (csr_pages, labels) = if cfg.n_strata >= 2 {
+            let (pages, labels) =
+                crate::sampling::stratify::stratify_rows(csr_pages, labels, cfg.n_strata);
+            (modes::rechunk_pages(pages, cfg.page_size_bytes), labels)
+        } else if cfg.mode.is_out_of_core() || cfg.n_shards >= 1 {
+            (modes::rechunk_pages(csr_pages, cfg.page_size_bytes), labels)
         } else {
-            csr_pages
+            (csr_pages, labels)
         };
         let mut meta = CsrMeta::new();
         for p in &csr_pages {

@@ -38,6 +38,12 @@ impl<'m> Compactor<'m> {
 
     /// Copy the selected rows of `page` into the compacted page
     /// (Algorithm 7: `Compact(sampled_page, ellpack_page)`).
+    ///
+    /// Determinism anchor for sampled-sweep page skipping
+    /// (`sampling/bitmap.rs`): a page whose rows are *all* unselected
+    /// is a complete no-op here — the writer and `row_map` are
+    /// untouched — so never delivering such a page produces a
+    /// byte-identical compacted page and row map.
     pub fn push_page(&mut self, page: &EllpackPage) {
         let base = page.base_rowid as usize;
         for r in 0..page.n_rows() {

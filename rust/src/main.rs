@@ -223,6 +223,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if let (Some(peak), Some(cap)) = (outcome.mem_peak, outcome.mem_capacity) {
         eprintln!("device memory peak: {} / {}", fmt_bytes(peak), fmt_bytes(cap));
     }
+    if outcome.pages_skipped > 0 {
+        eprintln!(
+            "sampled sweeps: {} pages read, {} skipped ({} rows never touched disk)",
+            outcome.pages_read, outcome.pages_skipped, outcome.rows_skipped
+        );
+    }
     if let Some(path) = model_out {
         if path.extension().and_then(|e| e.to_str()) == Some("bin") {
             save_bundle(&path, &outcome.model, Some(&*outcome.cuts))?;

@@ -261,6 +261,12 @@ impl<T: Serializable> PageFile<T> {
         self.index.iter().map(|(_, len, _)| len).sum()
     }
 
+    /// On-disk frame length of page `i` in bytes (codec byte included)
+    /// — what a sweep that skips page `i` avoids reading.
+    pub fn frame_bytes(&self, i: usize) -> u64 {
+        self.index.get(i).map(|&(_, len, _)| len).unwrap_or(0)
+    }
+
     /// Read and decode page `i`, verifying its checksum.
     pub fn read_page(&self, i: usize) -> Result<T> {
         let mut f = File::open(&self.path)?;

@@ -1,0 +1,193 @@
+//! Per-page sample membership: fold a round's row-selection mask
+//! against the page index so out-of-core sweeps can skip pages with no
+//! sampled rows *before* reading them (sparrow-style bitmap loading,
+//! cf. ROADMAP "stratified out-of-core sampling storage").
+//!
+//! Determinism argument (why skipping is bit-identical to
+//! read-then-compact): `ellpack::compact::Compactor::push_page` drops
+//! every row whose mask bit is clear, so a page whose rows are *all*
+//! unselected contributes nothing to the compacted page or the row map
+//! — the writer state after pushing it equals the state before.  For
+//! the persistent per-level sweeps the same holds one layer up: the
+//! sampler zeroes unselected gradient pairs in place (the padding
+//! contract) and the partitioner never assigns them a node, so an
+//! all-unselected page adds exactly nothing to any histogram or split.
+//! Skipping such pages therefore changes which bytes move, never which
+//! trees come out.  Margin-update sweeps see every row and must never
+//! be filtered ([`SkipPlan`] is simply not attached there).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One round's page-granular sample membership.
+#[derive(Debug, Clone)]
+pub struct SampleBitmap {
+    /// `live[p]` — page `p` holds at least one selected row.
+    live: Vec<bool>,
+    /// Rows per page (for skipped-row accounting).
+    rows: Vec<usize>,
+}
+
+impl SampleBitmap {
+    /// Fold a per-row selection mask against the page index
+    /// (`(base_rowid, n_rows)` per page, the layout recorded at spill
+    /// time).  Rows outside every page range are ignored.
+    pub fn from_mask(mask: &[bool], page_rows: &[(u64, usize)]) -> SampleBitmap {
+        let mut live = Vec::with_capacity(page_rows.len());
+        let mut rows = Vec::with_capacity(page_rows.len());
+        for &(base, n) in page_rows {
+            let base = base as usize;
+            let end = (base + n).min(mask.len());
+            let any = base < mask.len() && mask[base..end].iter().any(|&m| m);
+            live.push(any);
+            rows.push(n);
+        }
+        SampleBitmap { live, rows }
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Pages holding at least one sampled row.
+    pub fn n_live(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    pub fn is_live(&self, page: usize) -> bool {
+        self.live.get(page).copied().unwrap_or(true)
+    }
+
+    pub fn rows_in(&self, page: usize) -> usize {
+        self.rows.get(page).copied().unwrap_or(0)
+    }
+}
+
+/// Shared handle threading one round's [`SampleBitmap`] from the
+/// coordinator loop into every skip-capable sweep, plus the session
+/// rollup counters that end up in `TrainOutcome`.
+///
+/// Cloning shares state: the loop `set`s the bitmap once per round and
+/// each [`filter`](SkipPlan::filter) call (one per sweep open) both
+/// partitions the page list and bumps the counters.  With no bitmap
+/// installed (unsampled round, or `skip_unsampled_pages = false`)
+/// `filter` passes everything through and only counts reads.
+#[derive(Debug, Clone, Default)]
+pub struct SkipPlan {
+    bitmap: Arc<Mutex<Option<Arc<SampleBitmap>>>>,
+    pages_read: Arc<AtomicU64>,
+    pages_skipped: Arc<AtomicU64>,
+    rows_skipped: Arc<AtomicU64>,
+}
+
+impl SkipPlan {
+    pub fn new() -> SkipPlan {
+        SkipPlan::default()
+    }
+
+    /// Install (or clear, with `None`) the bitmap for the coming round.
+    pub fn set(&self, bitmap: Option<Arc<SampleBitmap>>) {
+        *self.bitmap.lock().unwrap() = bitmap;
+    }
+
+    /// Partition a sweep's page list: live pages are returned (and
+    /// counted as read), dead pages are dropped (and counted as
+    /// skipped, with their rows).
+    pub fn filter(&self, indices: Vec<usize>) -> Vec<usize> {
+        let guard = self.bitmap.lock().unwrap();
+        let Some(bm) = guard.as_ref() else {
+            self.pages_read.fetch_add(indices.len() as u64, Ordering::Relaxed);
+            return indices;
+        };
+        let mut kept = Vec::with_capacity(indices.len());
+        let (mut read, mut skipped, mut rows) = (0u64, 0u64, 0u64);
+        for i in indices {
+            if bm.is_live(i) {
+                read += 1;
+                kept.push(i);
+            } else {
+                skipped += 1;
+                rows += bm.rows_in(i) as u64;
+            }
+        }
+        drop(guard);
+        self.pages_read.fetch_add(read, Ordering::Relaxed);
+        self.pages_skipped.fetch_add(skipped, Ordering::Relaxed);
+        self.rows_skipped.fetch_add(rows, Ordering::Relaxed);
+        kept
+    }
+
+    pub fn pages_read(&self) -> u64 {
+        self.pages_read.load(Ordering::Relaxed)
+    }
+
+    pub fn pages_skipped(&self) -> u64 {
+        self.pages_skipped.load(Ordering::Relaxed)
+    }
+
+    pub fn rows_skipped(&self) -> u64 {
+        self.rows_skipped.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitmap_folds_mask_per_page() {
+        // 3 pages × 4 rows; only rows 5 and 11 selected.
+        let mut mask = vec![false; 12];
+        mask[5] = true;
+        mask[11] = true;
+        let bm = SampleBitmap::from_mask(&mask, &[(0, 4), (4, 4), (8, 4)]);
+        assert_eq!(bm.n_pages(), 3);
+        assert_eq!(bm.n_live(), 2);
+        assert!(!bm.is_live(0));
+        assert!(bm.is_live(1));
+        assert!(bm.is_live(2));
+        assert_eq!(bm.rows_in(0), 4);
+        // Out-of-range pages default to live (never skip blindly).
+        assert!(bm.is_live(99));
+    }
+
+    #[test]
+    fn bitmap_handles_short_mask_and_empty_pages() {
+        let bm = SampleBitmap::from_mask(&[true, false], &[(0, 2), (2, 2), (4, 0)]);
+        assert!(bm.is_live(0));
+        assert!(!bm.is_live(1)); // beyond the mask → no selected rows
+        assert!(!bm.is_live(2)); // zero-row page
+    }
+
+    #[test]
+    fn plan_filters_and_counts() {
+        let plan = SkipPlan::new();
+        // No bitmap: pass-through, reads counted.
+        assert_eq!(plan.filter(vec![0, 1, 2]), vec![0, 1, 2]);
+        assert_eq!((plan.pages_read(), plan.pages_skipped()), (3, 0));
+
+        let mut mask = vec![false; 8];
+        mask[0] = true; // page 0 live, page 1 dead
+        plan.set(Some(Arc::new(SampleBitmap::from_mask(&mask, &[(0, 4), (4, 4)]))));
+        assert_eq!(plan.filter(vec![0, 1]), vec![0]);
+        assert_eq!(plan.pages_read(), 4);
+        assert_eq!(plan.pages_skipped(), 1);
+        assert_eq!(plan.rows_skipped(), 4);
+
+        // Clearing restores pass-through; counters persist (rollups).
+        plan.set(None);
+        assert_eq!(plan.filter(vec![1]), vec![1]);
+        assert_eq!(plan.pages_read(), 5);
+        assert_eq!(plan.pages_skipped(), 1);
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let plan = SkipPlan::new();
+        let other = plan.clone();
+        let mask = vec![false; 4];
+        plan.set(Some(Arc::new(SampleBitmap::from_mask(&mask, &[(0, 4)]))));
+        assert!(other.filter(vec![0]).is_empty());
+        assert_eq!(plan.pages_skipped(), 1);
+    }
+}

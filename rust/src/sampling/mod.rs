@@ -16,7 +16,13 @@
 //! zeroed — the padding contract the histogram kernels rely on) and
 //! return the selection mask that drives compaction (Algorithm 7).
 
+pub mod bitmap;
+pub mod stratify;
+
+pub use bitmap::{SampleBitmap, SkipPlan};
+
 use crate::config::SamplingMethod;
+use crate::error::{Error, Result};
 use crate::util::rng::Rng;
 
 /// Outcome of one sampling round.
@@ -37,14 +43,60 @@ pub enum Sampler {
 }
 
 impl Sampler {
-    pub fn from_config(cfg: &crate::TrainConfig) -> Sampler {
-        match cfg.sampling_method {
-            SamplingMethod::None => Sampler::None,
-            SamplingMethod::Uniform => Sampler::Uniform { f: cfg.subsample },
-            SamplingMethod::Goss => {
-                Sampler::Goss { top_rate: cfg.goss_top_rate, f: cfg.subsample }
+    /// Build the session sampler, rejecting invalid knobs up front.
+    /// Benches and tests construct `TrainConfig` directly (bypassing
+    /// `TrainConfig::validate`), so clamping or panicking mid-training
+    /// here was the only line of defense — now it's a config error at
+    /// construction.
+    pub fn from_config(cfg: &crate::TrainConfig) -> Result<Sampler> {
+        let f = cfg.subsample;
+        let check_ratio = |what: &str| -> Result<()> {
+            if !(f.is_finite() && 0.0 < f && f <= 1.0) {
+                return Err(Error::config(format!(
+                    "{what} requires subsample in (0, 1], got {f}"
+                )));
             }
-            SamplingMethod::Mvs => Sampler::Mvs { f: cfg.subsample, lambda: cfg.mvs_lambda },
+            Ok(())
+        };
+        match cfg.sampling_method {
+            SamplingMethod::None => Ok(Sampler::None),
+            SamplingMethod::Uniform => {
+                check_ratio("uniform sampling")?;
+                Ok(Sampler::Uniform { f })
+            }
+            SamplingMethod::Goss => {
+                check_ratio("goss")?;
+                let a = cfg.goss_top_rate;
+                if !(a.is_finite() && (0.0..1.0).contains(&a)) {
+                    return Err(Error::config(format!(
+                        "goss_top_rate must be in [0, 1), got {a}"
+                    )));
+                }
+                if a >= f {
+                    return Err(Error::config(format!(
+                        "goss_top_rate ({a}) must be < subsample ({f})"
+                    )));
+                }
+                if a + f > 1.0 {
+                    return Err(Error::config(format!(
+                        "goss requires top_rate + subsample <= 1 (the kept-top \
+                         and sampled-rest fractions partition the data), \
+                         got {a} + {f}"
+                    )));
+                }
+                Ok(Sampler::Goss { top_rate: a, f })
+            }
+            SamplingMethod::Mvs => {
+                check_ratio("mvs")?;
+                if let Some(lam) = cfg.mvs_lambda {
+                    if !(lam.is_finite() && lam >= 0.0) {
+                        return Err(Error::config(format!(
+                            "mvs_lambda must be finite and >= 0, got {lam}"
+                        )));
+                    }
+                }
+                Ok(Sampler::Mvs { f, lambda: cfg.mvs_lambda })
+            }
         }
     }
 
@@ -336,6 +388,51 @@ mod tests {
         assert!((mu - 2.0).abs() < 1e-6, "mu={mu}");
         let sum: f64 = scores.iter().map(|&s| ((s as f64) / mu).min(1.0)).sum();
         assert!((sum - 500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn from_config_rejects_invalid_knobs() {
+        use crate::config::TrainConfig;
+        let base = |m: SamplingMethod, f: f32| {
+            let mut c = TrainConfig::default();
+            c.sampling_method = m;
+            c.subsample = f;
+            c
+        };
+        // Boundary values that must pass.
+        assert!(Sampler::from_config(&base(SamplingMethod::Uniform, 1.0)).is_ok());
+        assert!(Sampler::from_config(&base(SamplingMethod::Mvs, 0.001)).is_ok());
+        let mut g = base(SamplingMethod::Goss, 0.5);
+        g.goss_top_rate = 0.0;
+        assert!(Sampler::from_config(&g).is_ok());
+        g.goss_top_rate = 0.5; // top_rate == subsample
+        assert!(Sampler::from_config(&g).is_err());
+        g.goss_top_rate = 0.2;
+        g.subsample = 0.9; // a + f = 1.1 > 1
+        assert!(Sampler::from_config(&g).is_err());
+        g.subsample = 0.8; // a + f == 1.0: boundary passes
+        assert!(Sampler::from_config(&g).is_ok());
+        g.goss_top_rate = 1.0;
+        g.subsample = 1.0; // top_rate out of [0, 1)
+        assert!(Sampler::from_config(&g).is_err());
+        g.goss_top_rate = -0.1;
+        assert!(Sampler::from_config(&g).is_err());
+        // Ratios outside (0, 1] fail for every ratio sampler.
+        for f in [0.0, -0.1, 1.0 + 1e-6, f32::NAN, f32::INFINITY] {
+            assert!(
+                Sampler::from_config(&base(SamplingMethod::Uniform, f)).is_err(),
+                "uniform accepted f={f}"
+            );
+            assert!(Sampler::from_config(&base(SamplingMethod::Mvs, f)).is_err());
+        }
+        // Sampler::None ignores the ratio knobs entirely.
+        assert!(Sampler::from_config(&base(SamplingMethod::None, 0.0)).is_ok());
+        // MVS lambda must be finite and non-negative when given.
+        let mut m = base(SamplingMethod::Mvs, 0.5);
+        m.mvs_lambda = Some(-1.0);
+        assert!(Sampler::from_config(&m).is_err());
+        m.mvs_lambda = Some(0.0);
+        assert!(Sampler::from_config(&m).is_ok());
     }
 
     #[test]

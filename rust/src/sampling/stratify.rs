@@ -1,0 +1,137 @@
+//! Stratified page store (sparrow's scheme, adapted): at spill time,
+//! group training rows by *weight stratum* so that the rows gradient
+//! sampling keeps round after round — rare-class / high-weight rows,
+//! which MVS scores highly — cluster into few contiguous pages instead
+//! of being smeared across all of them.  Combined with the per-page
+//! [`SampleBitmap`](super::SampleBitmap), that keeps the page-skip rate
+//! high even at low sample ratios on imbalanced workloads.
+//!
+//! Stratum assignment follows sparrow's log-scale bucketing: a row's
+//! weight is the inverse frequency of its label value, and its stratum
+//! is `floor(log2(rarity))` clamped to `n_strata - 1`.  Balanced or
+//! continuous-label data degenerates to a single stratum and the
+//! permutation is the identity.  Reordering rows changes the page
+//! layout (and therefore sampling rng alignment), so a stratified run
+//! is learning-equivalent, **not** bit-equivalent, to an unstratified
+//! one — the bit-identity contract in `coordinator/loop.rs` holds
+//! between skip-on and skip-off at any *fixed* layout.
+
+use std::collections::HashMap;
+
+use crate::data::SparsePage;
+
+/// Assign each row a stratum in `[0, n_strata)` by label-rarity
+/// (stratum 0 = most common label; higher = exponentially rarer).
+fn strata_of(labels: &[f32], n_strata: usize) -> Vec<usize> {
+    let mut counts: HashMap<u32, u64> = HashMap::new();
+    for l in labels {
+        *counts.entry(l.to_bits()).or_insert(0) += 1;
+    }
+    let max_count = counts.values().copied().max().unwrap_or(1) as f64;
+    labels
+        .iter()
+        .map(|l| {
+            let c = counts[&l.to_bits()] as f64;
+            let rarity = (max_count / c).max(1.0);
+            (rarity.log2().floor() as usize).min(n_strata - 1)
+        })
+        .collect()
+}
+
+/// Permute rows (and labels, coherently) so strata are contiguous,
+/// rarest-label strata first, preserving the original row order within
+/// each stratum.  Returns a single concatenated page (base_rowid 0) —
+/// callers re-chunk it to the size-capped page premise afterwards.
+pub fn stratify_rows(
+    pages: Vec<SparsePage>,
+    labels: Vec<f32>,
+    n_strata: usize,
+) -> (Vec<SparsePage>, Vec<f32>) {
+    assert!(n_strata >= 2, "stratify_rows needs n_strata >= 2");
+    let strata = strata_of(&labels, n_strata);
+    let n_cols = pages.first().map(|p| p.n_cols).unwrap_or(0);
+    // Order: stratum high→low (rare first), stable within stratum.
+    let mut order: Vec<usize> = (0..labels.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(strata[i]));
+    // (row, page, local) lookup for re-emission.
+    let mut locate = Vec::with_capacity(labels.len());
+    for (p, page) in pages.iter().enumerate() {
+        for r in 0..page.n_rows() {
+            locate.push((p, r));
+        }
+    }
+    debug_assert_eq!(locate.len(), labels.len());
+    let mut out = SparsePage::new(n_cols);
+    let mut new_labels = Vec::with_capacity(labels.len());
+    for &i in &order {
+        let (p, r) = locate[i];
+        out.push_row(pages[p].row_indices(r), pages[p].row_values(r));
+        new_labels.push(labels[i]);
+    }
+    (vec![out], new_labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_page(labels: &[f32]) -> Vec<SparsePage> {
+        let mut p = SparsePage::new(2);
+        for (i, _) in labels.iter().enumerate() {
+            p.push_row(&[0, 1], &[i as f32, 2.0 * i as f32]);
+        }
+        vec![p]
+    }
+
+    #[test]
+    fn rare_labels_cluster_first() {
+        // 12 common (0.0) + 4 rare (1.0) rows, interleaved.
+        let labels: Vec<f32> =
+            (0..16).map(|i| if i % 4 == 3 { 1.0 } else { 0.0 }).collect();
+        let (pages, new_labels) = stratify_rows(one_page(&labels), labels, 4);
+        assert_eq!(pages.len(), 1);
+        assert_eq!(new_labels.len(), 16);
+        // Rarity 3× → stratum 1 → the four rare rows lead, in order.
+        assert!(new_labels[..4].iter().all(|&l| l == 1.0));
+        assert!(new_labels[4..].iter().all(|&l| l == 0.0));
+        // Feature values moved with their rows (row i carries value i).
+        let p = &pages[0];
+        assert_eq!(p.row_values(0), &[3.0, 6.0]);
+        assert_eq!(p.row_values(4), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn balanced_labels_are_identity() {
+        let labels: Vec<f32> = (0..8).map(|i| (i % 2) as f32).collect();
+        let (pages, new_labels) = stratify_rows(one_page(&labels), labels.clone(), 8);
+        assert_eq!(new_labels, labels);
+        assert_eq!(pages[0].row_values(5), &[5.0, 10.0]);
+    }
+
+    #[test]
+    fn strata_are_clamped() {
+        // One singleton label among 1024 → huge rarity, still < n_strata.
+        let mut labels = vec![0.0f32; 1024];
+        labels[512] = 7.0;
+        let s = strata_of(&labels, 3);
+        assert_eq!(s[512], 2);
+        assert_eq!(s[0], 0);
+    }
+
+    #[test]
+    fn multi_page_input_is_flattened_coherently() {
+        let mut a = SparsePage::new(1);
+        a.push_row(&[0], &[10.0]);
+        a.push_row(&[0], &[11.0]);
+        let mut b = SparsePage::new(1);
+        b.base_rowid = 2;
+        b.push_row(&[0], &[12.0]);
+        let labels = vec![0.0, 5.0, 0.0]; // middle row is rare
+        let (pages, new_labels) = stratify_rows(vec![a, b], labels, 2);
+        assert_eq!(new_labels, vec![5.0, 0.0, 0.0]);
+        assert_eq!(pages[0].row_values(0), &[11.0]);
+        assert_eq!(pages[0].row_values(1), &[10.0]);
+        assert_eq!(pages[0].row_values(2), &[12.0]);
+        assert_eq!(pages[0].base_rowid, 0);
+    }
+}

@@ -35,6 +35,7 @@ use crate::error::Result;
 use crate::page::pipeline::PipelineStats;
 use crate::page::tuner::DepthControl;
 use crate::page::{staged_ellpack_pipeline_in, PageFile, StagedPage};
+use crate::sampling::SkipPlan;
 
 /// A per-page hook applied by a stream's transfer stage.  The hook sees
 /// the staged page plus its transport facts (encoded wire bytes, cache
@@ -235,6 +236,11 @@ pub struct DiskStream {
     /// When set, sweeps accumulate their stage counters here instead of
     /// a per-sweep handle, giving the tuner round-over-round deltas.
     stats: Option<PipelineStats>,
+    /// When set, each sweep filters its page list through the round's
+    /// sample bitmap at open time: pages with zero sampled rows are
+    /// never read, decoded, staged, or charged to the cache
+    /// (`sampling/bitmap.rs` carries the determinism argument).
+    skip: Option<SkipPlan>,
 }
 
 impl DiskStream {
@@ -262,6 +268,7 @@ impl DiskStream {
             cache: None,
             control: None,
             stats: None,
+            skip: None,
         }
     }
 
@@ -302,6 +309,14 @@ impl DiskStream {
         self
     }
 
+    /// Filter every sweep's page list through the shared [`SkipPlan`]
+    /// (no-op until the coordinator installs a round's bitmap).  Never
+    /// attach this to margin/data sweeps — those must see every row.
+    pub fn with_skip(mut self, skip: SkipPlan) -> DiskStream {
+        self.skip = Some(skip);
+        self
+    }
+
     pub fn n_pages(&self) -> usize {
         match &self.pages {
             Some(idx) => idx.len(),
@@ -318,8 +333,13 @@ impl DiskStream {
         hook: Option<&PageHook>,
         cache: Option<&Arc<PageCache>>,
         stats: Option<&PipelineStats>,
+        skip: Option<&SkipPlan>,
     ) -> Result<PageIter> {
-        let indices = (0..file.n_pages()).collect();
+        let indices: Vec<usize> = (0..file.n_pages()).collect();
+        let indices = match skip {
+            Some(plan) => plan.filter(indices),
+            None => indices,
+        };
         let fresh = PipelineStats::default();
         let pipe = staged_ellpack_pipeline_in(
             stats.unwrap_or(&fresh),
@@ -344,6 +364,10 @@ impl PageStream for DiskStream {
         let indices = match &self.pages {
             Some(idx) => idx.clone(),
             None => (0..self.file.n_pages()).collect(),
+        };
+        let indices = match &self.skip {
+            Some(plan) => plan.filter(indices),
+            None => indices,
         };
         let depth = self.control.as_ref().map_or(self.depth, |c| c.get());
         let fresh = PipelineStats::default();

@@ -1,0 +1,368 @@
+//! Sampled-sweep page skipping: bit-identity and empty-selection
+//! integration tests.
+//!
+//! The load-bearing property is that dropping all-unselected pages from
+//! sampled sweeps (`sampling/bitmap.rs`) must not move a single bit of
+//! the trained model: unselected rows carry zeroed gradients (the
+//! sampler's padding contract) and compaction ignores them entirely, so
+//! a page with no sampled rows contributes exactly nothing to any
+//! histogram, split, or compacted page.  These tests train every exec
+//! mode with the filter on and off and compare models bit for bit.
+
+use oocgb::boosting::GbtModel;
+use oocgb::config::{ExecMode, SamplingMethod, TrainConfig};
+use oocgb::coordinator::{TrainOutcome, TrainSession};
+use oocgb::data::{synthetic, DMatrix, SparsePage};
+use oocgb::util::rng::Rng;
+
+/// Stub builds always have a runtime; PJRT builds need built artifacts.
+fn device_runtime_ready() -> bool {
+    if cfg!(not(feature = "xla")) {
+        return true;
+    }
+    let ok = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists();
+    if !ok {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn base_cfg(mode: ExecMode, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.mode = mode;
+    cfg.n_rounds = 4;
+    cfg.max_depth = 4;
+    // Device artifacts are compiled for 64/256 bins; use 64 everywhere
+    // so CPU and device runs share page geometry.
+    cfg.max_bin = 64;
+    cfg.learning_rate = 0.4;
+    cfg.eval_fraction = 0.2;
+    cfg.seed = seed;
+    cfg.device_memory_bytes = 64 * 1024 * 1024;
+    // Small ELLPACK pages (~50 rows at 28 features × 64 bins) so low
+    // sampling ratios leave some pages with zero selected rows.
+    cfg.page_size_bytes = 2 * 1024;
+    cfg
+}
+
+fn train(data: DMatrix, cfg: TrainConfig) -> TrainOutcome {
+    TrainSession::from_memory(data, cfg).unwrap().train().unwrap()
+}
+
+/// Bit-exact model comparison (floats compared via their bits).
+fn assert_models_identical(a: &GbtModel, b: &GbtModel, what: &str) {
+    assert_eq!(a.trees.len(), b.trees.len(), "{what}: tree count");
+    for (ti, (ta, tb)) in a.trees.iter().zip(&b.trees).enumerate() {
+        assert_eq!(ta.nodes.len(), tb.nodes.len(), "{what}: tree {ti} size");
+        for (ni, (na, nb)) in ta.nodes.iter().zip(&tb.nodes).enumerate() {
+            let ka = (
+                na.split_feature,
+                na.split_bin,
+                na.split_value.to_bits(),
+                na.left,
+                na.right,
+                na.weight.to_bits(),
+                na.gain.to_bits(),
+                na.sum_grad.to_bits(),
+                na.sum_hess.to_bits(),
+                na.depth,
+            );
+            let kb = (
+                nb.split_feature,
+                nb.split_bin,
+                nb.split_value.to_bits(),
+                nb.left,
+                nb.right,
+                nb.weight.to_bits(),
+                nb.gain.to_bits(),
+                nb.sum_grad.to_bits(),
+                nb.sum_hess.to_bits(),
+                nb.depth,
+            );
+            assert_eq!(ka, kb, "{what}: tree {ti} node {ni}");
+        }
+    }
+}
+
+fn history_bits(h: &[(usize, f64)]) -> Vec<(usize, u64)> {
+    h.iter().map(|&(r, m)| (r, m.to_bits())).collect()
+}
+
+/// Random sparse binary-classification data (CPU modes only — device
+/// modes reject the null symbol).
+fn sparse_data(rows: usize, seed: u64) -> DMatrix {
+    let mut rng = Rng::new(seed);
+    let mut page = SparsePage::new(6);
+    let mut labels = Vec::new();
+    for _ in 0..rows {
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        let mut signal = 0f32;
+        for c in 0..6u32 {
+            if rng.bernoulli(0.55) {
+                let v = rng.next_f32();
+                if c == 2 {
+                    signal = v;
+                }
+                cols.push(c);
+                vals.push(v);
+            }
+        }
+        page.push_row(&cols, &vals);
+        labels.push(if signal > 0.45 { 1.0 } else { 0.0 });
+    }
+    DMatrix::from_page(page, labels).unwrap()
+}
+
+/// Train the same data/config with the page-skip filter on and off and
+/// assert bit identity; returns the pages the filtered run skipped.
+fn assert_skip_invariant(data: &DMatrix, cfg: &TrainConfig, what: &str) -> u64 {
+    let mut on = cfg.clone();
+    on.skip_unsampled_pages = true;
+    let mut off = cfg.clone();
+    off.skip_unsampled_pages = false;
+    let out_on = train(data.clone(), on);
+    let out_off = train(data.clone(), off);
+    assert_models_identical(&out_on.model, &out_off.model, what);
+    assert_eq!(
+        history_bits(&out_on.eval_history),
+        history_bits(&out_off.eval_history),
+        "{what}: eval history"
+    );
+    // The unfiltered run must never skip, and because the trees (hence
+    // sweep schedules) are identical, the filtered run's read + skipped
+    // pages must exactly account for the unfiltered run's reads.
+    assert_eq!(out_off.pages_skipped, 0, "{what}: skip-off run skipped pages");
+    assert_eq!(out_off.rows_skipped, 0, "{what}: skip-off run skipped rows");
+    assert_eq!(
+        out_on.pages_read + out_on.pages_skipped,
+        out_off.pages_read,
+        "{what}: page accounting"
+    );
+    if cfg.mode.is_out_of_core() {
+        assert!(out_off.pages_read > 0, "{what}: OOC run read no pages");
+    }
+    out_on.pages_skipped
+}
+
+/// Every (sampler, ratio) combo here passes `Sampler::from_config`; the
+/// low-ratio uniform arm exists to make empty pages near-certain.
+fn sampler_grid() -> Vec<(SamplingMethod, f32, f32)> {
+    vec![
+        (SamplingMethod::Uniform, 0.10, 0.0),
+        (SamplingMethod::Uniform, 0.02, 0.0),
+        (SamplingMethod::Goss, 0.20, 0.05),
+        (SamplingMethod::Mvs, 0.15, 0.0),
+    ]
+}
+
+fn with_sampler(mut cfg: TrainConfig, method: SamplingMethod, f: f32, a: f32) -> TrainConfig {
+    cfg.sampling_method = method;
+    cfg.subsample = f;
+    if method == SamplingMethod::Goss {
+        cfg.goss_top_rate = a;
+    }
+    cfg
+}
+
+/// The headline property: dense/sparse × in-core/out-of-core × every
+/// sampler, skip-filter on vs off, bit-identical models — and across
+/// the whole grid the filter actually skipped pages.
+#[test]
+fn page_skip_is_bit_identical_cpu_modes() {
+    let mut total_skipped = 0u64;
+    for mode in [ExecMode::CpuInCore, ExecMode::CpuOutOfCore] {
+        for dense in [true, false] {
+            let data = if dense {
+                synthetic::higgs_like(1000, 61)
+            } else {
+                sparse_data(1000, 61)
+            };
+            for (method, f, a) in sampler_grid() {
+                let cfg = with_sampler(base_cfg(mode, 61), method, f, a);
+                let what =
+                    format!("{mode:?} dense={dense} {method:?} f={f}");
+                total_skipped += assert_skip_invariant(&data, &cfg, &what);
+            }
+        }
+    }
+    // Page geometry (~50-row pages) and the f=0.02 arm guarantee the
+    // out-of-core runs hit empty pages.
+    assert!(total_skipped > 0, "no pages were ever skipped across the grid");
+}
+
+/// Same property through the device pipeline: naive streaming
+/// (Algorithm 6) and compacted sampling (Algorithm 7).
+#[test]
+fn page_skip_is_bit_identical_device_modes() {
+    if !device_runtime_ready() {
+        return;
+    }
+    let data = synthetic::higgs_like(1000, 67);
+    let mut total_skipped = 0u64;
+    for mode in [
+        ExecMode::DeviceInCore,
+        ExecMode::DeviceOutOfCoreNaive,
+        ExecMode::DeviceOutOfCore,
+    ] {
+        for (method, f, a) in sampler_grid() {
+            let cfg = with_sampler(base_cfg(mode, 67), method, f, a);
+            let what = format!("{mode:?} {method:?} f={f}");
+            total_skipped += assert_skip_invariant(&data, &cfg, &what);
+        }
+    }
+    assert!(total_skipped > 0, "no pages were ever skipped across device modes");
+}
+
+/// Skipping composes with sharding: at every fleet size the per-shard
+/// subset paths take the same bitmap, and skip on/off stays
+/// bit-identical.
+#[test]
+fn page_skip_is_bit_identical_across_shard_counts() {
+    let mut total_skipped = 0u64;
+    for n_shards in [1usize, 2, 4] {
+        for dense in [true, false] {
+            let data = if dense {
+                synthetic::higgs_like(900, 71)
+            } else {
+                sparse_data(900, 71)
+            };
+            let mut cfg = base_cfg(ExecMode::CpuOutOfCore, 71);
+            cfg.n_shards = n_shards;
+            cfg = with_sampler(cfg, SamplingMethod::Uniform, 0.05, 0.0);
+            let what = format!("CpuOutOfCore n_shards={n_shards} dense={dense}");
+            total_skipped += assert_skip_invariant(&data, &cfg, &what);
+        }
+    }
+    if device_runtime_ready() {
+        let data = synthetic::higgs_like(900, 71);
+        for mode in [ExecMode::DeviceOutOfCoreNaive, ExecMode::DeviceOutOfCore] {
+            for n_shards in [1usize, 2, 4] {
+                let mut cfg = base_cfg(mode, 71);
+                cfg.n_shards = n_shards;
+                cfg = with_sampler(cfg, SamplingMethod::Mvs, 0.15, 0.0);
+                let what = format!("{mode:?} n_shards={n_shards}");
+                total_skipped += assert_skip_invariant(&data, &cfg, &what);
+            }
+        }
+    }
+    assert!(total_skipped > 0, "no pages were ever skipped across shard counts");
+}
+
+/// Regression: a round where the sampler selects zero rows must emit
+/// the same leaf-only tree in every exec mode instead of diverging (or
+/// crashing) in a mode-specific grow path.  Squared-error with every
+/// label equal to the base margin (0.5) gives all-zero gradients, so
+/// MVS's inclusion probabilities are all zero and `n_selected == 0` in
+/// every round, deterministically.
+#[test]
+fn empty_selection_emits_identical_leaf_only_trees() {
+    let mut page = SparsePage::new(3);
+    let mut rng = Rng::new(29);
+    for _ in 0..600 {
+        page.push_dense_row(&[rng.next_f32(), rng.next_f32(), rng.next_f32()]);
+    }
+    let labels = vec![0.5f32; 600];
+    let data = DMatrix::from_page(page, labels).unwrap();
+
+    let mut modes = vec![ExecMode::CpuInCore, ExecMode::CpuOutOfCore];
+    if device_runtime_ready() {
+        modes.extend([
+            ExecMode::DeviceInCore,
+            ExecMode::DeviceOutOfCoreNaive,
+            ExecMode::DeviceOutOfCore,
+        ]);
+    }
+    let mut reference: Option<GbtModel> = None;
+    for mode in modes {
+        let mut cfg = base_cfg(mode, 29);
+        cfg.objective = "reg:squarederror".into();
+        cfg.sampling_method = SamplingMethod::Mvs;
+        cfg.subsample = 0.3;
+        cfg.eval_fraction = 0.0;
+        cfg.n_rounds = 3;
+        let out = train(data.clone(), cfg);
+        assert_eq!(out.model.trees.len(), 3, "{mode:?}");
+        for (ti, tree) in out.model.trees.iter().enumerate() {
+            assert_eq!(
+                tree.nodes.len(),
+                1,
+                "{mode:?}: tree {ti} should be a single leaf"
+            );
+            assert_eq!(
+                tree.nodes[0].weight.to_bits(),
+                0.0f32.to_bits(),
+                "{mode:?}: tree {ti} leaf must be exactly +0.0"
+            );
+        }
+        match &reference {
+            None => reference = Some(out.model),
+            Some(r) => assert_models_identical(r, &out.model, &format!("{mode:?}")),
+        }
+    }
+}
+
+/// The stratified page store is a layout policy: training still works
+/// (buffered ingest), composes bit-identically with page skipping, and
+/// is rejected on the streamed out-of-core ingest path that cannot
+/// reorder rows.
+#[test]
+fn stratified_store_trains_and_rejects_streamed_ingest() {
+    let data = synthetic::higgs_like(1200, 83);
+    let mut cfg = base_cfg(ExecMode::CpuOutOfCore, 83);
+    cfg.n_strata = 8;
+    cfg = with_sampler(cfg, SamplingMethod::Mvs, 0.3, 0.0);
+    // Stratification reorders rows before page layout, so the model
+    // differs from the unstratified run — but skip on/off over the
+    // *same* layout must still agree bit for bit.
+    assert_skip_invariant(&data, &cfg, "stratified CpuOutOfCore");
+    let out = train(data.clone(), cfg.clone());
+    assert_eq!(out.model.trees.len(), 4);
+    let (_, auc) = *out.eval_history.last().unwrap();
+    assert!(auc > 0.55, "stratified run stopped learning: auc={auc}");
+
+    // Streamed OOC ingest cannot know global label frequencies before
+    // spilling; the config must be rejected up front, not mis-trained.
+    let pages = data.to_sized_pages(2048);
+    let labels = data.labels().to_vec();
+    let mut offset = 0usize;
+    let stream = pages.into_iter().map(|p| {
+        let l = labels[offset..offset + p.n_rows()].to_vec();
+        offset += p.n_rows();
+        (p, l)
+    });
+    let mut stream_cfg = cfg;
+    stream_cfg.eval_fraction = 0.0;
+    let err = TrainSession::from_page_stream(stream, stream_cfg).unwrap_err();
+    assert!(
+        err.to_string().contains("n_strata"),
+        "unexpected error: {err}"
+    );
+}
+
+/// Invalid sampling knobs must fail at session construction with a
+/// config error — not clamp, not panic mid-round.
+#[test]
+fn invalid_sampling_knobs_rejected_at_construction() {
+    let data = synthetic::higgs_like(200, 7);
+    let bad: &[(SamplingMethod, f32, f32)] = &[
+        (SamplingMethod::Uniform, 0.0, 0.0),
+        (SamplingMethod::Uniform, -0.1, 0.0),
+        (SamplingMethod::Uniform, f32::NAN, 0.0),
+        (SamplingMethod::Goss, 0.5, 0.6),  // top_rate >= subsample
+        (SamplingMethod::Goss, 0.7, 0.4),  // top_rate + subsample > 1
+        (SamplingMethod::Mvs, 1.5, 0.0),
+    ];
+    for &(method, f, a) in bad {
+        let cfg = with_sampler(base_cfg(ExecMode::CpuInCore, 7), method, f, a);
+        let res = TrainSession::from_memory(data.clone(), cfg).and_then(|s| s.train());
+        assert!(res.is_err(), "{method:?} f={f} a={a} should be rejected");
+    }
+    // Boundary values that must remain legal.
+    let ok = with_sampler(base_cfg(ExecMode::CpuInCore, 7), SamplingMethod::Uniform, 1.0, 0.0);
+    train(data.clone(), ok);
+    let ok = with_sampler(base_cfg(ExecMode::CpuInCore, 7), SamplingMethod::Goss, 0.6, 0.4);
+    train(data, ok);
+}

@@ -22,6 +22,11 @@ Rules enforced:
    non-empty arms with known layouts, positive throughput/latency,
    ``p99 >= p50``, the compiled layout strictly beating the naive walk
    at every batch size, and an overall speedup >= 1.
+5. The ``sampling_skip`` snapshot must balance its books: every page is
+   either read or skipped, bytes read + bytes avoided equals the total
+   for each codec (skipping never increases bytes moved), row/byte
+   counts follow from page counts, the stratified layout skips at least
+   as many pages as the uniform one, and some arm actually skips.
 
 Keys named ``note`` or starting with ``_`` are documentation and are
 not compared.
@@ -132,6 +137,77 @@ def check_serving(snap, where):
         fail(f"{where}: speedup {speedup!r} must be >= 1")
 
 
+def check_sampling(snap, where):
+    """Rule 5: the sampling snapshot's skip accounting must be coherent —
+    skipped pages can only ever *reduce* bytes moved, and the stratified
+    layout must skip at least as many pages as the uniform one."""
+    shape = snap.get("shape") or {}
+    n_pages = shape.get("n_pages")
+    rows_per_page = shape.get("rows_per_page")
+    if not isinstance(n_pages, int) or n_pages < 1:
+        fail(f"{where}: shape.n_pages {n_pages!r} must be an int >= 1")
+    if not isinstance(rows_per_page, int) or rows_per_page < 1:
+        fail(f"{where}: shape.rows_per_page {rows_per_page!r} must be an int >= 1")
+    frames = {}
+    for codec in ("raw", "bitpack"):
+        v = snap.get(f"{codec}_frame_bytes")
+        if not isinstance(v, int) or v <= 0:
+            fail(f"{where}: {codec}_frame_bytes {v!r} must be a positive int")
+        frames[codec] = v
+    if frames["bitpack"] >= frames["raw"]:
+        fail(
+            f"{where}: bitpack frame {frames['bitpack']} does not beat "
+            f"raw frame {frames['raw']}"
+        )
+    arms = snap.get("arms")
+    if not isinstance(arms, dict) or not arms:
+        fail(f"{where}: sampling snapshot needs a non-empty \"arms\" object")
+    any_skips = False
+    skipped_by_arm = {}
+    for name, arm in sorted(arms.items()):
+        path = f"$.arms.{name}"
+        read, skipped = arm.get("pages_read"), arm.get("pages_skipped")
+        for key, v in (("pages_read", read), ("pages_skipped", skipped)):
+            if not isinstance(v, int) or v < 0:
+                fail(f"{where}: {path}.{key} {v!r} must be an int >= 0")
+        if read + skipped != n_pages:
+            fail(
+                f"{where}: {path}: pages_read {read} + pages_skipped {skipped} "
+                f"!= n_pages {n_pages} — a page was neither read nor skipped"
+            )
+        if arm.get("rows_skipped") != skipped * rows_per_page:
+            fail(
+                f"{where}: {path}.rows_skipped {arm.get('rows_skipped')!r} "
+                f"!= pages_skipped x rows_per_page ({skipped * rows_per_page})"
+            )
+        for codec, frame in frames.items():
+            br = arm.get(f"{codec}_bytes_read")
+            ba = arm.get(f"{codec}_bytes_avoided")
+            if br != read * frame or ba != skipped * frame:
+                fail(
+                    f"{where}: {path}: {codec} byte accounting ({br!r} read, "
+                    f"{ba!r} avoided) is inconsistent with {read} pages read, "
+                    f"{skipped} skipped at {frame} B/frame"
+                )
+            if br + ba != n_pages * frame:
+                fail(
+                    f"{where}: {path}: {codec} read+avoided {br + ba} != total "
+                    f"{n_pages * frame} — skipping may never increase bytes moved"
+                )
+        skipped_by_arm[name] = skipped
+        any_skips = any_skips or skipped > 0
+    for name, skipped in skipped_by_arm.items():
+        if name.endswith("_stratified"):
+            twin = name.replace("_stratified", "_uniform")
+            if twin in skipped_by_arm and skipped < skipped_by_arm[twin]:
+                fail(
+                    f"{where}: {name} skipped {skipped} pages, fewer than "
+                    f"{twin}'s {skipped_by_arm[twin]} — clustering cannot hurt"
+                )
+    if not any_skips:
+        fail(f"{where}: no arm skipped any pages — the snapshot shows no skipping")
+
+
 def main() -> None:
     snapshots = {}
     for f in sorted(SNAP_DIR.glob("BENCH_*.json")):
@@ -145,6 +221,8 @@ def main() -> None:
             fail(f"{where} has no \"bench\" name field")
         if name == "serving":
             check_serving(snap, where)
+        if name == "sampling_skip":
+            check_sampling(snap, where)
         snapshots[name] = (snap, where)
 
     emitted = {}

@@ -1,0 +1,192 @@
+#!/usr/bin/env python3
+"""Derive `benches/BENCH_sampling.json` without a Rust toolchain.
+
+This is the Python twin of `bench_ablations` arm 10
+(`ablate_sampling_skip`): it replays the exact xoshiro256** Bernoulli
+masks (`rust/src/util/rng.rs`), folds them into per-page sample bitmaps
+over the pinned 8-pages x 64-rows layout, and reproduces the page-store
+frame arithmetic for both codecs (`rust/src/page/store.rs`,
+`rust/src/page/bitpack.rs`), so the JSON it writes matches the bench's
+emitted `BENCH {"bench": "sampling_skip", ...}` line field-for-field
+(every value here is an exact integer).
+
+Usage:
+    python3 tools/derive_sampling_snapshot.py          # rewrite snapshot
+    python3 tools/derive_sampling_snapshot.py --print  # stdout only
+"""
+
+import json
+import sys
+from pathlib import Path
+
+MASK64 = (1 << 64) - 1
+
+# ---- RNG: splitmix64-seeded xoshiro256** (rust/src/util/rng.rs) ----
+
+
+def _splitmix64(state):
+    state = (state + 0x9E37_79B9_7F4A_7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & MASK64
+    return state, z ^ (z >> 31)
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Rng:
+    def __init__(self, seed):
+        s = []
+        for _ in range(4):
+            seed, v = _splitmix64(seed)
+            s.append(v)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def next_f64(self):
+        # Exact: a <= 53-bit integer times 2^-53.
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def bernoulli(self, p):
+        return self.next_f64() < p
+
+
+# ---- pinned shape (keep in lockstep with ablate_sampling_skip) ----
+
+N_PAGES = 8
+ROWS_PER_PAGE = 64
+STRIDE = 8
+BINS = 64
+N_SYMBOLS = STRIDE * BINS + 1
+N_ROWS = N_PAGES * ROWS_PER_PAGE
+RATIOS_PCT = (10, 50)
+MASK_SEED_BASE = 2020
+
+
+def page_symbols(p):
+    """ELLPACK symbols of pinned page `p`: sym(r, k) = k*64 + (r+p) % 64."""
+    return [
+        [k * BINS + (r + p) % BINS for k in range(STRIDE)]
+        for r in range(ROWS_PER_PAGE)
+    ]
+
+
+def raw_frame_bytes():
+    """Page-store frame of a raw ELLPACK page: 1 codec byte + the
+    48-byte page header + ceil(rows*stride*bits/64) packed words, where
+    bits = bit_length(n_symbols - 1) (rust/src/ellpack/page.rs)."""
+    bits = (N_SYMBOLS - 1).bit_length()
+    n_words = (ROWS_PER_PAGE * STRIDE * bits + 63) // 64
+    return 1 + 48 + n_words * 8
+
+
+def bitpack_frame_bytes(p):
+    """Page-store frame of a bit-packed page (rust/src/page/bitpack.rs):
+    1 codec byte + 48-byte header + n_runs x 16 (RLE of effective row
+    lengths) + stride x 6 (column headers: min u32, width u8, has_null
+    u8) + 8 (word count) + column-major packed words.  The pinned pages
+    are dense, so every row's effective length is the full stride (one
+    run) and no column has nulls."""
+    syms = page_symbols(p)
+    runs = 1  # all rows share effective length == STRIDE
+    total_bits = 0
+    for k in range(STRIDE):
+        col = [syms[r][k] for r in range(ROWS_PER_PAGE)]
+        width = (max(col) - min(col)).bit_length()  # has_null = 0
+        total_bits += width * len(col)
+    n_words = (total_bits + 63) // 64
+    return 1 + 48 + runs * 16 + STRIDE * 6 + 8 + n_words * 8
+
+
+def fold(mask):
+    """SampleBitmap::from_mask over the pinned page layout → per-arm
+    counters (one filtered sweep of all pages)."""
+    live = [
+        any(mask[p * ROWS_PER_PAGE : (p + 1) * ROWS_PER_PAGE])
+        for p in range(N_PAGES)
+    ]
+    pages_read = sum(live)
+    pages_skipped = N_PAGES - pages_read
+    return pages_read, pages_skipped, pages_skipped * ROWS_PER_PAGE
+
+
+def main():
+    raw_frame = raw_frame_bytes()
+    bp_frames = {bitpack_frame_bytes(p) for p in range(N_PAGES)}
+    assert len(bp_frames) == 1, "pinned pages must share a frame size"
+    bp_frame = bp_frames.pop()
+    assert bp_frame < raw_frame, (bp_frame, raw_frame)
+
+    arms = {}
+    for pct in RATIOS_PCT:
+        rng = Rng(MASK_SEED_BASE + pct)
+        ratio = pct / 100.0
+        uniform = [rng.bernoulli(ratio) for _ in range(N_ROWS)]
+        n_sel = sum(uniform)
+        packed = [i < n_sel for i in range(N_ROWS)]
+        skipped_by_layout = []
+        for layout, mask in (("uniform", uniform), ("stratified", packed)):
+            read, skipped, rows_skipped = fold(mask)
+            skipped_by_layout.append(skipped)
+            arms[f"ratio{pct}_{layout}"] = {
+                "n_selected": n_sel,
+                "pages_read": read,
+                "pages_skipped": skipped,
+                "rows_skipped": rows_skipped,
+                "raw_bytes_read": read * raw_frame,
+                "raw_bytes_avoided": skipped * raw_frame,
+                "bitpack_bytes_read": read * bp_frame,
+                "bitpack_bytes_avoided": skipped * bp_frame,
+            }
+        assert skipped_by_layout[1] >= skipped_by_layout[0], pct
+        assert skipped_by_layout[1] > 0, pct
+
+    snap = {
+        "bench": "sampling_skip",
+        "note": (
+            "Deterministic page-skip snapshot: Bernoulli masks "
+            "(xoshiro256** seed 2020+pct) folded into per-page sample "
+            "bitmaps over a pinned 8-pages x 64-rows x 8-features x "
+            "64-bins layout, with page-store frame sizes for both codecs "
+            "derived from the wire formats. Uniform = mask over spill "
+            "order; stratified = the same selection count packed into "
+            "the leading pages. Regenerate with `python3 "
+            "tools/derive_sampling_snapshot.py` or from the BENCH line "
+            "of `cargo bench --bench bench_ablations` (arm 10)."
+        ),
+        "shape": {
+            "n_pages": N_PAGES,
+            "rows_per_page": ROWS_PER_PAGE,
+            "features": STRIDE,
+            "bins_per_feature": BINS,
+        },
+        "raw_frame_bytes": raw_frame,
+        "bitpack_frame_bytes": bp_frame,
+        "arms": arms,
+    }
+
+    text = json.dumps(snap, indent=2) + "\n"
+    if "--print" in sys.argv[1:]:
+        sys.stdout.write(text)
+        return
+    out = Path(__file__).resolve().parent.parent / "benches" / "BENCH_sampling.json"
+    out.write_text(text)
+    skips = {k: v["pages_skipped"] for k, v in arms.items()}
+    print(f"wrote {out} (frames raw={raw_frame} bitpack={bp_frame}, skips {skips})")
+
+
+if __name__ == "__main__":
+    main()
