@@ -33,8 +33,14 @@
 //!    {...}` json line; `tools/derive_sampling_snapshot.py` is its
 //!    Python twin), then reports the session rollup counters from real
 //!    sampled out-of-core training runs.
+//! 11. **Communicator backend** — local vs threaded vs tcp fleets
+//!    driving a pinned allreduce + broadcast schedule through the real
+//!    transports: the in-process merge moves zero bytes, the wire
+//!    backends pay per-rank partial exchange that grows linearly with
+//!    the shard count (emits a `BENCH {...}` json line;
+//!    `tools/derive_distributed_snapshot.py` is its Python twin).
 //!
-//! The `BENCH` lines for arms 7–10 contain only *deterministic*
+//! The `BENCH` lines for arms 7–11 contain only *deterministic*
 //! quantities (wire-format byte counts, modeled link/round seconds,
 //! cache counters, tuner trajectories) at a pinned shape independent of
 //! `OOCGB_BENCH_SCALE`, so CI can diff them against the committed
@@ -1066,6 +1072,189 @@ fn ablate_sampling_skip() {
     );
 }
 
+fn ablate_comm_backend() {
+    header("Ablation 11 — communicator backend: wire cost per transport");
+    use oocgb::comm::frame::{FrameKind, HEADER_LEN};
+    use oocgb::comm::{
+        local_fleet, threaded_fleet, CommCounters, CommStats, Communicator, TcpFleet,
+        TcpWorkerComm,
+    };
+    use oocgb::util::json::{num, s, Value};
+    use std::collections::BTreeMap;
+    use std::net::TcpListener;
+
+    // Pinned schedule (snapshot-deterministic): per backend × shard
+    // count, ALLREDUCES exact fixed-point allreduces of HIST_LEN i64
+    // lanes — the shape of one chunk of level histograms — plus one
+    // BCAST_BYTES broadcast, through the *production* fleet
+    // constructors.  Byte counters are wire-format arithmetic, not
+    // wall clock, so CI diffs them against BENCH_distributed.json
+    // (Python twin: tools/derive_distributed_snapshot.py).
+    const HIST_LEN: usize = 256;
+    const ALLREDUCES: usize = 3;
+    const BCAST_BYTES: usize = 512;
+    const TIMEOUT_MS: u64 = 10_000;
+
+    fn part(rank: usize, round: usize) -> Vec<i64> {
+        (0..HIST_LEN).map(|i| (rank * 1_000 + round * 10 + i) as i64).collect()
+    }
+    fn reduced_expected(round: usize, n: usize) -> Vec<i64> {
+        (0..HIST_LEN)
+            .map(|i| (0..n).map(|r| (r * 1_000 + round * 10 + i) as i64).sum())
+            .collect()
+    }
+
+    // The in-process merge, exactly as ShardedCpuBackend drives it:
+    // every rank contributes, rank 0 reads the reduction.
+    let run_local = |n: usize| -> CommStats {
+        let counters = Arc::new(CommCounters::default());
+        let fleet = local_fleet(n, Arc::clone(&counters));
+        for round in 0..ALLREDUCES {
+            for (r, comm) in fleet.iter().enumerate() {
+                comm.contribute_i64(&part(r, round)).unwrap();
+            }
+            let mut acc = vec![0i64; HIST_LEN];
+            fleet[0].reduced_i64(&mut acc).unwrap();
+            assert_eq!(acc, reduced_expected(round, n), "local reduction");
+        }
+        let mut payload = vec![7u8; BCAST_BYTES];
+        for comm in &fleet {
+            comm.broadcast(&mut payload).unwrap();
+        }
+        counters.snapshot()
+    };
+
+    // Real OS threads meeting in the rendezvous allreduce.
+    let run_threaded = |n: usize| -> CommStats {
+        let counters = Arc::new(CommCounters::default());
+        let fleet = threaded_fleet(n, TIMEOUT_MS, Arc::clone(&counters));
+        std::thread::scope(|scope| {
+            for (r, comm) in fleet.iter().enumerate() {
+                scope.spawn(move || {
+                    for round in 0..ALLREDUCES {
+                        let mut acc = part(r, round);
+                        comm.allreduce_i64(&mut acc).unwrap();
+                        assert_eq!(acc, reduced_expected(round, n), "threaded reduction");
+                    }
+                    let mut b = if r == 0 { vec![7u8; BCAST_BYTES] } else { Vec::new() };
+                    comm.broadcast(&mut b).unwrap();
+                    assert_eq!(b.len(), BCAST_BYTES);
+                });
+            }
+        });
+        counters.snapshot()
+    };
+
+    // Real sockets: a head-side fleet against one worker thread per
+    // rank on localhost.  Counters are head-side (the worker threads
+    // keep their own), so the snapshot records what the *head* pays.
+    let run_tcp = |n: usize| -> CommStats {
+        let counters = Arc::new(CommCounters::default());
+        let mut addrs = Vec::new();
+        let mut workers = Vec::new();
+        for _ in 0..n {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            addrs.push(listener.local_addr().unwrap().to_string());
+            workers.push(std::thread::spawn(move || {
+                let comm = TcpWorkerComm::accept(
+                    &listener,
+                    TIMEOUT_MS,
+                    Arc::new(CommCounters::default()),
+                )
+                .unwrap();
+                for round in 0..ALLREDUCES {
+                    let mut acc = part(comm.rank(), round);
+                    comm.contribute_i64(&acc).unwrap();
+                    comm.reduced_i64(&mut acc).unwrap();
+                    assert_eq!(acc, reduced_expected(round, comm.n_ranks()), "tcp reduction");
+                }
+                let mut b = Vec::new();
+                comm.broadcast(&mut b).unwrap();
+                assert_eq!(b.len(), BCAST_BYTES);
+                // Stay on the line for the Shutdown frame so the
+                // head's final send is deterministic.
+                comm.expect(FrameKind::Shutdown).unwrap();
+            }));
+        }
+        let mut fleet = TcpFleet::connect(&addrs, TIMEOUT_MS, Arc::clone(&counters)).unwrap();
+        for round in 0..ALLREDUCES {
+            let mut acc = vec![0i64; HIST_LEN];
+            fleet.reduce_round(&mut acc).unwrap();
+            assert_eq!(acc, reduced_expected(round, n), "head-side reduction");
+        }
+        fleet.broadcast_bytes(&[7u8; BCAST_BYTES]).unwrap();
+        fleet.shutdown().unwrap();
+        for w in workers {
+            w.join().unwrap();
+        }
+        counters.snapshot()
+    };
+
+    println!("| n_shards | backend | bytes sent | bytes recv | allreduce rounds |");
+    println!("|---|---|---|---|---|");
+    let mut sweep = Vec::new();
+    let mut prior: Option<[CommStats; 2]> = None;
+    for n in [1usize, 2, 4] {
+        let local = run_local(n);
+        let threaded = run_threaded(n);
+        let tcp = run_tcp(n);
+        for (name, st) in [("local", &local), ("threaded", &threaded), ("tcp", &tcp)] {
+            println!(
+                "| {n} | {name} | {} | {} | {} |",
+                st.bytes_sent, st.bytes_recv, st.allreduce_rounds
+            );
+            assert_eq!(st.allreduce_rounds, ALLREDUCES as u64, "{name} round count");
+            assert_eq!(st.retries, 0, "{name} needed retries on localhost");
+            assert_eq!(st.timeouts, 0, "{name} timed out on localhost");
+        }
+        // The in-process merge is free; the wire backends are not.
+        assert_eq!(local.bytes_sent + local.bytes_recv, 0, "local moved bytes");
+        assert!(threaded.bytes_sent > 0 && tcp.bytes_sent > 0);
+        // Framing overhead: tcp pays the 28-byte header + handshake on
+        // top of the same logical partial exchange.
+        assert!(
+            tcp.bytes_sent + tcp.bytes_recv > threaded.bytes_sent + threaded.bytes_recv,
+            "framed sockets must cost more than shared memory at n={n}"
+        );
+        if let Some([pt, pc]) = prior {
+            assert!(
+                threaded.bytes_sent > pt.bytes_sent && tcp.bytes_sent > pc.bytes_sent,
+                "wire bytes must grow with the shard count"
+            );
+        }
+        prior = Some([threaded, tcp]);
+
+        let stats_obj = |st: &CommStats| -> Value {
+            let mut m = BTreeMap::new();
+            m.insert("sent".to_string(), num(st.bytes_sent as f64));
+            m.insert("recv".to_string(), num(st.bytes_recv as f64));
+            m.insert("rounds".to_string(), num(st.allreduce_rounds as f64));
+            Value::Object(m)
+        };
+        let mut e = BTreeMap::new();
+        e.insert("n_shards".to_string(), num(n as f64));
+        e.insert("local".to_string(), stats_obj(&local));
+        e.insert("threaded".to_string(), stats_obj(&threaded));
+        e.insert("tcp".to_string(), stats_obj(&tcp));
+        sweep.push(Value::Object(e));
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), s("comm_backend"));
+    top.insert("hist_len".to_string(), num(HIST_LEN as f64));
+    top.insert("allreduces".to_string(), num(ALLREDUCES as f64));
+    top.insert("bcast_bytes".to_string(), num(BCAST_BYTES as f64));
+    top.insert("frame_header_bytes".to_string(), num(HEADER_LEN as f64));
+    top.insert("sweep".to_string(), Value::Array(sweep));
+    println!("\nBENCH {}", Value::Object(top).to_json());
+    println!(
+        "\nthe trait boundary is free when the fleet shares an address space; \
+         the socket transport's cost is the per-rank partial exchange itself \
+         (linear in shard count), with framing a rounding error on real \
+         histogram payloads."
+    );
+}
+
 fn main() {
     println!("# Ablations");
     ablate_sampler();
@@ -1078,4 +1267,5 @@ fn main() {
     ablate_pipeline_tuning();
     ablate_serving();
     ablate_sampling_skip();
+    ablate_comm_backend();
 }

@@ -1,0 +1,323 @@
+//! Wire framing for the TCP transport: length-prefixed, checksummed,
+//! versioned frames.
+//!
+//! Every message on a head↔worker connection is one frame:
+//!
+//! ```text
+//! [magic u32][version u16][kind u16][seq u64][payload_len u32][fnv64(payload) u64]
+//! └──────────────────── 28-byte header, little-endian ────────────────────┘
+//! followed by `payload_len` payload bytes
+//! ```
+//!
+//! * **magic** rejects a peer that isn't speaking this protocol at all.
+//! * **version** is checked on every frame (not just the handshake), so
+//!   a mixed-version fleet fails fast instead of mis-decoding payloads.
+//! * **seq** is a per-direction counter checked by the connection layer
+//!   ([`super::tcp::FramedConn`]) — a dropped or duplicated frame
+//!   surfaces as a desync error instead of silent corruption.
+//! * **payload_len** is capped ([`MAX_PAYLOAD`]) so a corrupt header
+//!   cannot drive an unbounded allocation.
+//! * **fnv64** (FNV-1a, the page store's checksum) detects payload
+//!   truncation/corruption before anything is decoded.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+
+/// `OBGF` little-endian.
+pub const MAGIC: u32 = 0x4647_424F;
+/// Protocol version; bumped on any frame/payload layout change.
+pub const VERSION: u16 = 1;
+/// Header bytes on the wire before the payload.
+pub const HEADER_LEN: usize = 28;
+/// Hard payload cap — corrupt headers must not drive huge allocations.
+pub const MAX_PAYLOAD: u32 = 1 << 30;
+
+/// Every message kind the head↔worker protocol exchanges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Head → worker: rank assignment (u32 rank, u32 n_ranks).
+    Hello,
+    /// Worker → head: handshake accepted.
+    HelloAck,
+    /// Head → worker: shard data + cuts + sweep knobs.
+    Setup,
+    /// Head → worker: per-round gradients + optional sample mask.
+    RoundBegin,
+    /// Head → worker: sweep one node chunk (tree, chunk, apply).
+    ChunkSweep,
+    /// Worker → head: fixed-point partial histogram.
+    AllreducePart,
+    /// Head → worker: the completed reduction.
+    AllreduceRed,
+    /// Head → worker: opaque broadcast payload.
+    Broadcast,
+    /// Worker → head: opaque gather contribution.
+    GatherPart,
+    /// Worker → head: barrier arrival.
+    Barrier,
+    /// Head → worker: barrier release.
+    BarrierAck,
+    /// Head → worker: session over, close cleanly.
+    Shutdown,
+}
+
+impl FrameKind {
+    pub fn code(&self) -> u16 {
+        match self {
+            FrameKind::Hello => 1,
+            FrameKind::HelloAck => 2,
+            FrameKind::Setup => 3,
+            FrameKind::RoundBegin => 4,
+            FrameKind::ChunkSweep => 5,
+            FrameKind::AllreducePart => 6,
+            FrameKind::AllreduceRed => 7,
+            FrameKind::Broadcast => 8,
+            FrameKind::GatherPart => 9,
+            FrameKind::Barrier => 10,
+            FrameKind::BarrierAck => 11,
+            FrameKind::Shutdown => 12,
+        }
+    }
+
+    pub fn from_code(code: u16) -> Result<FrameKind> {
+        Ok(match code {
+            1 => FrameKind::Hello,
+            2 => FrameKind::HelloAck,
+            3 => FrameKind::Setup,
+            4 => FrameKind::RoundBegin,
+            5 => FrameKind::ChunkSweep,
+            6 => FrameKind::AllreducePart,
+            7 => FrameKind::AllreduceRed,
+            8 => FrameKind::Broadcast,
+            9 => FrameKind::GatherPart,
+            10 => FrameKind::Barrier,
+            11 => FrameKind::BarrierAck,
+            12 => FrameKind::Shutdown,
+            other => {
+                return Err(Error::comm(format!("unknown frame kind {other}")))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrameKind::Hello => "hello",
+            FrameKind::HelloAck => "hello-ack",
+            FrameKind::Setup => "setup",
+            FrameKind::RoundBegin => "round-begin",
+            FrameKind::ChunkSweep => "chunk-sweep",
+            FrameKind::AllreducePart => "allreduce-part",
+            FrameKind::AllreduceRed => "allreduce-red",
+            FrameKind::Broadcast => "broadcast",
+            FrameKind::GatherPart => "gather-part",
+            FrameKind::Barrier => "barrier",
+            FrameKind::BarrierAck => "barrier-ack",
+            FrameKind::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// FNV-1a 64 — same function as the page store's frame checksum.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One decoded frame.
+#[derive(Debug)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub seq: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Encode header + payload into one buffer (tests use this to craft
+/// tampered frames).
+pub fn encode_frame(kind: FrameKind, seq: u64, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&kind.code().to_le_bytes());
+    buf.extend_from_slice(&seq.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&fnv64(payload).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// Write one frame.
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: FrameKind,
+    seq: u64,
+    payload: &[u8],
+) -> Result<()> {
+    if payload.len() as u64 > MAX_PAYLOAD as u64 {
+        return Err(Error::comm(format!(
+            "frame payload {} B exceeds the {} B cap",
+            payload.len(),
+            MAX_PAYLOAD
+        )));
+    }
+    w.write_all(&encode_frame(kind, seq, payload))?;
+    w.flush()?;
+    Ok(())
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b.try_into().expect("4-byte slice"))
+}
+
+fn le_u16(b: &[u8]) -> u16 {
+    u16::from_le_bytes(b.try_into().expect("2-byte slice"))
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b.try_into().expect("8-byte slice"))
+}
+
+/// Read and validate one frame.  Protocol violations (bad magic,
+/// version, kind, length, checksum) surface as [`Error::Comm`]; socket
+/// failures pass through as [`Error::Io`] for the connection layer to
+/// classify (timeout vs drop).
+pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)?;
+    let magic = le_u32(&header[0..4]);
+    if magic != MAGIC {
+        return Err(Error::comm(format!(
+            "bad frame magic {magic:#010x} (peer is not speaking the oocgb protocol)"
+        )));
+    }
+    let version = le_u16(&header[4..6]);
+    if version != VERSION {
+        return Err(Error::comm(format!(
+            "protocol version mismatch: peer speaks v{version}, this build speaks v{VERSION}"
+        )));
+    }
+    let kind = FrameKind::from_code(le_u16(&header[6..8]))?;
+    let seq = le_u64(&header[8..16]);
+    let len = le_u32(&header[16..20]);
+    if len > MAX_PAYLOAD {
+        return Err(Error::comm(format!(
+            "frame payload length {len} exceeds the {MAX_PAYLOAD} B cap (corrupt header?)"
+        )));
+    }
+    let want_sum = le_u64(&header[20..28]);
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    let got_sum = fnv64(&payload);
+    if got_sum != want_sum {
+        return Err(Error::comm(format!(
+            "frame checksum mismatch on `{}` (want {want_sum:#018x}, got {got_sum:#018x})",
+            kind.name()
+        )));
+    }
+    Ok(Frame { kind, seq, payload })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Hello, 0, &[1, 2, 3]).unwrap();
+        write_frame(&mut buf, FrameKind::AllreducePart, 1, &[]).unwrap();
+        write_frame(&mut buf, FrameKind::Shutdown, 2, &[0xff; 100]).unwrap();
+        let mut c = Cursor::new(buf);
+        let f = read_frame(&mut c).unwrap();
+        assert_eq!((f.kind, f.seq, f.payload.as_slice()), (FrameKind::Hello, 0, &[1u8, 2, 3][..]));
+        let f = read_frame(&mut c).unwrap();
+        assert_eq!((f.kind, f.seq, f.payload.len()), (FrameKind::AllreducePart, 1, 0));
+        let f = read_frame(&mut c).unwrap();
+        assert_eq!((f.kind, f.seq, f.payload.len()), (FrameKind::Shutdown, 2, 100));
+    }
+
+    #[test]
+    fn kind_codes_roundtrip() {
+        for kind in [
+            FrameKind::Hello,
+            FrameKind::HelloAck,
+            FrameKind::Setup,
+            FrameKind::RoundBegin,
+            FrameKind::ChunkSweep,
+            FrameKind::AllreducePart,
+            FrameKind::AllreduceRed,
+            FrameKind::Broadcast,
+            FrameKind::GatherPart,
+            FrameKind::Barrier,
+            FrameKind::BarrierAck,
+            FrameKind::Shutdown,
+        ] {
+            assert_eq!(FrameKind::from_code(kind.code()).unwrap(), kind);
+        }
+        assert!(FrameKind::from_code(0).is_err());
+        assert!(FrameKind::from_code(999).is_err());
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let mut buf = encode_frame(FrameKind::Hello, 0, b"hi");
+        buf[0] ^= 0xff;
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut buf = encode_frame(FrameKind::Hello, 0, b"hi");
+        buf[4] = 0x7f;
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_payload_rejected() {
+        let mut buf = encode_frame(FrameKind::Setup, 3, b"payload-bytes");
+        let last = buf.len() - 1;
+        buf[last] ^= 0x01;
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_checksum_rejected() {
+        let mut buf = encode_frame(FrameKind::Setup, 3, b"payload-bytes");
+        buf[20] ^= 0x01;
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn oversize_length_rejected_before_allocating() {
+        let mut buf = encode_frame(FrameKind::Hello, 0, &[]);
+        buf[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn truncated_frame_is_io_error() {
+        let buf = encode_frame(FrameKind::Hello, 0, &[1, 2, 3, 4]);
+        // Cut mid-payload.
+        let err = read_frame(&mut Cursor::new(&buf[..buf.len() - 2])).unwrap_err();
+        assert!(matches!(err, Error::Io(_)), "{err}");
+        // Cut mid-header.
+        let err = read_frame(&mut Cursor::new(&buf[..10])).unwrap_err();
+        assert!(matches!(err, Error::Io(_)), "{err}");
+    }
+
+    #[test]
+    fn fnv_matches_known_vectors() {
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

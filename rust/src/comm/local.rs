@@ -1,0 +1,307 @@
+//! The in-process communicator: a fleet of rank handles sharing one
+//! mutex-guarded state, driven by a **sequential** caller.
+//!
+//! This backend exists so the pre-trait sharded code path — "for each
+//! shard, sweep and `add_partial` into one accumulator" — can run
+//! unchanged behind [`Communicator`].  The driver loops over shards
+//! calling [`Communicator::contribute_i64`] on each handle, then calls
+//! [`Communicator::reduced_i64`] once (on any handle) to pop the
+//! completed round.  Contributions are summed with
+//! [`crate::tree::allreduce::add_partial`] in arrival order; since the
+//! partials are exact i64 fixed-point, the order cannot change the bits.
+//!
+//! Completed rounds form a FIFO (BTreeMap `pop_first`) so callers that
+//! interleave rounds — the device backend contributes one round per
+//! tile per chunk — drain them in the order they were opened.
+//!
+//! No bytes move (everything is a memcpy within one address space), so
+//! `bytes_sent`/`bytes_recv` stay zero; only `allreduce_rounds` /
+//! `broadcasts` advance.  That zero is asserted by the bench checker:
+//! the Local backend is the "free" baseline the wire backends are
+//! measured against.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::tree::allreduce::add_partial;
+
+use super::{CommCounters, Communicator};
+
+#[derive(Default)]
+struct LocalState {
+    /// Rounds still waiting on contributions: key → (acc, n_contributed).
+    pending: BTreeMap<u64, (Vec<i64>, usize)>,
+    /// Completed rounds not yet consumed, drained FIFO by `reduced_i64`.
+    completed: BTreeMap<u64, Vec<i64>>,
+    /// Next round key each rank's contribution lands in.
+    next_contribute: Vec<u64>,
+    /// Broadcast payload from rank 0 + how many readers still need it.
+    bcast: Option<(Vec<u8>, usize)>,
+    /// Gather contributions keyed by rank.
+    gathered: BTreeMap<usize, Vec<u8>>,
+    /// Ranks arrived at the current barrier.
+    barrier_arrived: usize,
+}
+
+/// One rank's handle into an in-process fleet (see module docs).
+pub struct LocalComm {
+    rank: usize,
+    n_ranks: usize,
+    state: Arc<Mutex<LocalState>>,
+    counters: Arc<CommCounters>,
+}
+
+/// Build an `n`-rank in-process fleet sharing `counters`.
+pub fn local_fleet(n: usize, counters: Arc<CommCounters>) -> Vec<LocalComm> {
+    assert!(n > 0, "fleet needs at least one rank");
+    let state = Arc::new(Mutex::new(LocalState {
+        next_contribute: vec![0; n],
+        ..LocalState::default()
+    }));
+    (0..n)
+        .map(|rank| LocalComm {
+            rank,
+            n_ranks: n,
+            state: Arc::clone(&state),
+            counters: Arc::clone(&counters),
+        })
+        .collect()
+}
+
+impl LocalComm {
+    fn lock(&self) -> std::sync::MutexGuard<'_, LocalState> {
+        // A poisoned mutex means a driver panicked mid-round; the state
+        // is still structurally sound, and propagating the panic via
+        // the caller's join is clearer than a second panic here.
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl Communicator for LocalComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    fn contribute_i64(&self, part: &[i64]) -> Result<()> {
+        let mut st = self.lock();
+        let key = st.next_contribute[self.rank];
+        st.next_contribute[self.rank] += 1;
+        let n_ranks = self.n_ranks;
+        let (acc, seen) = st
+            .pending
+            .entry(key)
+            .or_insert_with(|| (vec![0i64; part.len()], 0));
+        if acc.len() != part.len() {
+            return Err(Error::comm(format!(
+                "rank {} contributed {} values to round {key} opened with {}",
+                self.rank,
+                part.len(),
+                acc.len()
+            )));
+        }
+        add_partial(part, acc);
+        *seen += 1;
+        if *seen == n_ranks {
+            let (acc, _) = st.pending.remove(&key).expect("round just updated");
+            st.completed.insert(key, acc);
+            self.counters.inc_rounds();
+        }
+        Ok(())
+    }
+
+    fn reduced_i64(&self, out: &mut [i64]) -> Result<()> {
+        let mut st = self.lock();
+        let Some((_, acc)) = st.completed.pop_first() else {
+            return Err(Error::comm(
+                "local allreduce read before all ranks contributed",
+            ));
+        };
+        if acc.len() != out.len() {
+            return Err(Error::comm(format!(
+                "local allreduce round holds {} values, caller expected {}",
+                acc.len(),
+                out.len()
+            )));
+        }
+        out.copy_from_slice(&acc);
+        Ok(())
+    }
+
+    fn broadcast(&self, buf: &mut Vec<u8>) -> Result<()> {
+        let mut st = self.lock();
+        if self.rank == 0 {
+            if st.bcast.is_some() {
+                return Err(Error::comm("overlapping local broadcasts"));
+            }
+            if self.n_ranks > 1 {
+                st.bcast = Some((buf.clone(), self.n_ranks - 1));
+            }
+            self.counters.inc_broadcasts();
+            Ok(())
+        } else {
+            let Some((payload, readers_left)) = st.bcast.as_mut() else {
+                return Err(Error::comm(
+                    "local broadcast read before rank 0 published",
+                ));
+            };
+            buf.clear();
+            buf.extend_from_slice(payload);
+            *readers_left -= 1;
+            if *readers_left == 0 {
+                st.bcast = None;
+            }
+            Ok(())
+        }
+    }
+
+    fn gather(&self, part: &[u8]) -> Result<Vec<Vec<u8>>> {
+        let mut st = self.lock();
+        if st.gathered.contains_key(&self.rank) {
+            return Err(Error::comm(format!(
+                "rank {} gathered twice in one round",
+                self.rank
+            )));
+        }
+        st.gathered.insert(self.rank, part.to_vec());
+        if self.rank == 0 {
+            // Sequential driver convention: rank 0 contributes last and
+            // collects the round.
+            if st.gathered.len() != self.n_ranks {
+                st.gathered.remove(&self.rank);
+                return Err(Error::comm(
+                    "local gather collected before all ranks contributed",
+                ));
+            }
+            let gathered = std::mem::take(&mut st.gathered);
+            Ok(gathered.into_values().collect())
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    fn barrier(&self) -> Result<()> {
+        let mut st = self.lock();
+        st.barrier_arrived += 1;
+        if st.barrier_arrived == self.n_ranks {
+            st.barrier_arrived = 0;
+        }
+        Ok(())
+    }
+
+    fn counters(&self) -> &CommCounters {
+        &self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: usize) -> (Vec<LocalComm>, Arc<CommCounters>) {
+        let counters = Arc::new(CommCounters::default());
+        (local_fleet(n, Arc::clone(&counters)), counters)
+    }
+
+    #[test]
+    fn sequential_allreduce_sums() {
+        let (fleet, counters) = fleet(3);
+        for (i, c) in fleet.iter().enumerate() {
+            c.contribute_i64(&[(i + 1) as i64, 10 * (i + 1) as i64]).unwrap();
+        }
+        let mut out = [0i64; 2];
+        fleet[0].reduced_i64(&mut out).unwrap();
+        assert_eq!(out, [6, 60]);
+        let s = counters.snapshot();
+        assert_eq!((s.allreduce_rounds, s.bytes_sent, s.bytes_recv), (1, 0, 0));
+    }
+
+    #[test]
+    fn interleaved_rounds_drain_fifo() {
+        // Device-backend pattern: each rank contributes tile 0 then
+        // tile 1 before any read; reads must pop tile 0 first.
+        let (fleet, _) = fleet(2);
+        for c in &fleet {
+            c.contribute_i64(&[1]).unwrap();
+            c.contribute_i64(&[100]).unwrap();
+        }
+        let mut out = [0i64; 1];
+        fleet[0].reduced_i64(&mut out).unwrap();
+        assert_eq!(out, [2]);
+        fleet[0].reduced_i64(&mut out).unwrap();
+        assert_eq!(out, [200]);
+    }
+
+    #[test]
+    fn premature_read_is_an_error() {
+        let (fleet, _) = fleet(2);
+        fleet[0].contribute_i64(&[1]).unwrap();
+        let mut out = [0i64; 1];
+        let err = fleet[1].reduced_i64(&mut out).unwrap_err();
+        assert!(err.to_string().contains("before all ranks"), "{err}");
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let (fleet, _) = fleet(2);
+        fleet[0].contribute_i64(&[1, 2]).unwrap();
+        let err = fleet[1].contribute_i64(&[1]).unwrap_err();
+        assert!(err.to_string().contains("values"), "{err}");
+    }
+
+    #[test]
+    fn broadcast_root_first() {
+        let (fleet, counters) = fleet(3);
+        let mut buf = vec![7u8, 8, 9];
+        fleet[0].broadcast(&mut buf).unwrap();
+        for c in &fleet[1..] {
+            let mut got = Vec::new();
+            c.broadcast(&mut got).unwrap();
+            assert_eq!(got, [7, 8, 9]);
+        }
+        assert_eq!(counters.snapshot().broadcasts, 1);
+        // A second broadcast works after the first fully drained.
+        let mut buf = vec![1u8];
+        fleet[0].broadcast(&mut buf).unwrap();
+    }
+
+    #[test]
+    fn broadcast_before_root_is_an_error() {
+        let (fleet, _) = fleet(2);
+        let mut buf = Vec::new();
+        assert!(fleet[1].broadcast(&mut buf).is_err());
+    }
+
+    #[test]
+    fn gather_rank_zero_last() {
+        let (fleet, _) = fleet(3);
+        assert!(fleet[1].gather(b"one").unwrap().is_empty());
+        assert!(fleet[2].gather(b"two").unwrap().is_empty());
+        let all = fleet[0].gather(b"zero").unwrap();
+        assert_eq!(all, vec![b"zero".to_vec(), b"one".to_vec(), b"two".to_vec()]);
+    }
+
+    #[test]
+    fn barrier_counts_and_resets() {
+        let (fleet, _) = fleet(2);
+        for _ in 0..3 {
+            fleet[0].barrier().unwrap();
+            fleet[1].barrier().unwrap();
+        }
+    }
+
+    #[test]
+    fn single_rank_fleet_roundtrips() {
+        let (fleet, _) = fleet(1);
+        let mut buf = vec![5i64, -3];
+        fleet[0].allreduce_i64(&mut buf).unwrap();
+        assert_eq!(buf, [5, -3]);
+        let mut b = vec![1u8];
+        fleet[0].broadcast(&mut b).unwrap();
+        assert_eq!(fleet[0].gather(b"x").unwrap(), vec![b"x".to_vec()]);
+    }
+}

@@ -1,0 +1,190 @@
+//! The communicator abstraction behind sharded training.
+//!
+//! PR 2's fleet merged per-shard level histograms with a hand-rolled
+//! loop over simulated devices in one process.  This module lifts that
+//! merge behind a [`Communicator`] trait with three interchangeable
+//! backends:
+//!
+//! * [`LocalComm`](local::LocalComm) — the in-process sequential merge,
+//!   default, bit-path-identical to the pre-trait code (and free: it
+//!   moves zero bytes).
+//! * [`ThreadComm`](threaded::ThreadComm) — one OS thread per shard
+//!   sweeping disjoint row ranges concurrently, rendezvousing on a
+//!   shared accumulator.
+//! * [`TcpWorkerComm`](tcp::TcpWorkerComm) — real socket workers: a
+//!   head process owns the model/sampler and N worker processes own the
+//!   per-shard page streams, exchanging length-prefixed, checksummed,
+//!   versioned frames ([`frame`]) over localhost with read timeouts and
+//!   bounded reconnect/retry ([`tcp`]).
+//!
+//! The collective every backend must get right is the histogram
+//! allreduce, split into two halves so both a sequential driver and a
+//! true rendezvous can implement it: [`Communicator::contribute_i64`]
+//! submits a rank's partial, [`Communicator::reduced_i64`] obtains the
+//! completed sum.  Because partials are 32.32 fixed-point integers
+//! (`tree/allreduce.rs`), i64 addition is exact and associative — **any
+//! arrival order produces the same bits** — which is the invariant that
+//! makes all three backends train bit-identical models
+//! (`rust/tests/comm.rs`).
+
+pub mod frame;
+pub mod local;
+pub mod tcp;
+pub mod threaded;
+pub mod wire;
+pub mod worker;
+
+pub use local::{local_fleet, LocalComm};
+pub use tcp::{NullSource, TcpFleet, TcpHeadBackend, TcpWorkerComm};
+pub use threaded::{threaded_fleet, ThreadComm};
+pub use worker::run_worker;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+
+/// Which communicator backend drives sharded CPU training
+/// (`comm_backend` config knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommBackend {
+    /// In-process sequential merge (default; zero wire bytes).
+    Local,
+    /// One OS thread per shard, rendezvous allreduce.
+    Threaded,
+    /// Head + socket worker processes, framed TCP transport.
+    Tcp,
+}
+
+impl CommBackend {
+    pub fn parse(s: &str) -> Result<CommBackend> {
+        match s {
+            "local" => Ok(CommBackend::Local),
+            "threaded" | "threads" => Ok(CommBackend::Threaded),
+            "tcp" | "sockets" => Ok(CommBackend::Tcp),
+            _ => Err(Error::config(format!("unknown comm backend `{s}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommBackend::Local => "local",
+            CommBackend::Threaded => "threaded",
+            CommBackend::Tcp => "tcp",
+        }
+    }
+}
+
+/// Shared comm accounting, updated by every backend and rolled up into
+/// `TrainOutcome::comm_stats` (mirroring the cache/skip rollups).
+#[derive(Debug, Default)]
+pub struct CommCounters {
+    bytes_sent: AtomicU64,
+    bytes_recv: AtomicU64,
+    allreduce_rounds: AtomicU64,
+    broadcasts: AtomicU64,
+    retries: AtomicU64,
+    timeouts: AtomicU64,
+}
+
+impl CommCounters {
+    pub fn add_sent(&self, n: u64) {
+        self.bytes_sent.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_recv(&self, n: u64) {
+        self.bytes_recv.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc_rounds(&self) {
+        self.allreduce_rounds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_broadcasts(&self) {
+        self.broadcasts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_retries(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_timeouts(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CommStats {
+        CommStats {
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            bytes_recv: self.bytes_recv.load(Ordering::Relaxed),
+            allreduce_rounds: self.allreduce_rounds.load(Ordering::Relaxed),
+            broadcasts: self.broadcasts.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`CommCounters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommStats {
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    pub allreduce_rounds: u64,
+    pub broadcasts: u64,
+    pub retries: u64,
+    pub timeouts: u64,
+}
+
+impl CommStats {
+    pub fn add(&mut self, o: &CommStats) {
+        self.bytes_sent += o.bytes_sent;
+        self.bytes_recv += o.bytes_recv;
+        self.allreduce_rounds += o.allreduce_rounds;
+        self.broadcasts += o.broadcasts;
+        self.retries += o.retries;
+        self.timeouts += o.timeouts;
+    }
+}
+
+/// One rank's handle into a collective fleet.
+///
+/// Methods take `&self` (interior mutability) so concurrent backends can
+/// share handles across scoped threads.  The allreduce is split in two:
+/// a sequential driver (Local) contributes every rank's partial and then
+/// dequeues each completed round once, while concurrent backends
+/// (Threaded, Tcp) have every rank call both halves — the default
+/// [`allreduce_i64`](Communicator::allreduce_i64) — and block in
+/// `reduced_i64` until the round completes.  Rounds are keyed by
+/// per-rank call order, so tile-interleaved callers (the device backend
+/// contributes `n_tiles` partials per chunk) compose without extra
+/// bookkeeping.
+pub trait Communicator: Send + Sync {
+    fn rank(&self) -> usize;
+
+    fn n_ranks(&self) -> usize;
+
+    /// Submit this rank's partial for its next allreduce round.
+    fn contribute_i64(&self, part: &[i64]) -> Result<()>;
+
+    /// Obtain the completed reduction for this rank's next unread round
+    /// (blocking on concurrent backends until all ranks contributed).
+    fn reduced_i64(&self, out: &mut [i64]) -> Result<()>;
+
+    /// Exact fixed-point allreduce: contribute `buf`, replace it with
+    /// the fleet-wide sum.
+    fn allreduce_i64(&self, buf: &mut [i64]) -> Result<()> {
+        self.contribute_i64(buf)?;
+        self.reduced_i64(buf)
+    }
+
+    /// Rank 0's `buf` replaces every other rank's.
+    fn broadcast(&self, buf: &mut Vec<u8>) -> Result<()>;
+
+    /// Collect every rank's `part` on rank 0 (rank order); other ranks
+    /// get an empty vec.
+    fn gather(&self, part: &[u8]) -> Result<Vec<Vec<u8>>>;
+
+    /// Block until every rank arrives.
+    fn barrier(&self) -> Result<()>;
+
+    fn counters(&self) -> &CommCounters;
+}

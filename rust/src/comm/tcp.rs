@@ -1,0 +1,689 @@
+//! The TCP transport: a head process owning the model/sampler driving
+//! N socket workers that own the per-shard page sets.
+//!
+//! Topology — the head is the *coordinator*, not a rank:
+//!
+//! ```text
+//!  head ──TcpFleet──┬── FramedConn ──> worker rank 0 (TcpWorkerComm)
+//!                   ├── FramedConn ──> worker rank 1
+//!                   └── FramedConn ──> worker rank 2
+//! ```
+//!
+//! Per connection: `Hello`/`HelloAck` (rank assignment + implicit
+//! version check — every frame header carries the protocol version),
+//! one `Setup` (shard pages, cuts, knobs), then per tree one
+//! `RoundBegin` (gradients + sample mask) and per node chunk one
+//! `ChunkSweep` → `AllreducePart` → `AllreduceRed` exchange.  The head
+//! sums worker partials with [`crate::tree::allreduce::add_partial`] in
+//! rank order — exact i64 addition, so the result is bit-identical to
+//! the Local and Threaded merges.
+//!
+//! Failure discipline: every read has a deadline (`comm_timeout_ms`),
+//! every frame is checksummed and sequence-checked, connect retries are
+//! bounded with linear backoff, and any [`Error`] unwinds the head's
+//! training loop — a dropped, slow, or corrupting worker surfaces as a
+//! clean error, never a hang or a partial model (fault-injected in
+//! `rust/tests/comm.rs`).
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::sketch::HistogramCuts;
+use crate::tree::allreduce::{add_partial, dequantize_into};
+use crate::tree::builder::HistBackend;
+use crate::tree::evaluator::{evaluate_node, SplitCandidate};
+use crate::tree::model::Tree;
+use crate::tree::param::TreeParams;
+use crate::tree::partitioner::RowPartitioner;
+use crate::tree::source::{EllpackSource, ShardedSource};
+
+use super::frame::{read_frame, write_frame, Frame, FrameKind, HEADER_LEN};
+use super::wire::{
+    decode_i64s_into, encode_i64s, encode_round_begin, ChunkSweepMsg, Dec, Enc,
+};
+use super::{CommCounters, Communicator};
+
+/// Bounded reconnect: attempts × linear backoff (capped).
+const CONNECT_ATTEMPTS: usize = 10;
+const CONNECT_BACKOFF_MS: u64 = 100;
+const CONNECT_BACKOFF_CAP_MS: u64 = 1000;
+
+/// One framed, sequence-checked, deadline-guarded connection.
+pub struct FramedConn {
+    stream: TcpStream,
+    timeout_ms: u64,
+    seq_out: u64,
+    seq_in: u64,
+    counters: Arc<CommCounters>,
+}
+
+impl FramedConn {
+    pub fn new(
+        stream: TcpStream,
+        timeout_ms: u64,
+        counters: Arc<CommCounters>,
+    ) -> Result<FramedConn> {
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_millis(timeout_ms.max(1))))?;
+        Ok(FramedConn { stream, timeout_ms, seq_out: 0, seq_in: 0, counters })
+    }
+
+    pub fn send(&mut self, kind: FrameKind, payload: &[u8]) -> Result<()> {
+        write_frame(&mut self.stream, kind, self.seq_out, payload)?;
+        self.seq_out += 1;
+        self.counters.add_sent((HEADER_LEN + payload.len()) as u64);
+        Ok(())
+    }
+
+    /// Read one frame, classifying socket failures: a read deadline
+    /// becomes a comm timeout (counted), a closed peer becomes a clean
+    /// comm error, and a skipped/duplicated frame is a desync.
+    pub fn recv(&mut self) -> Result<Frame> {
+        let frame = match read_frame(&mut self.stream) {
+            Ok(f) => f,
+            Err(Error::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                self.counters.inc_timeouts();
+                return Err(Error::comm(format!(
+                    "timed out after {}ms waiting for a frame",
+                    self.timeout_ms
+                )));
+            }
+            Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                return Err(Error::comm(
+                    "peer closed the connection mid-protocol (worker dropped?)",
+                ));
+            }
+            Err(e) => return Err(e),
+        };
+        if frame.seq != self.seq_in {
+            return Err(Error::comm(format!(
+                "sequence desync: expected frame {} but peer sent {} (`{}`)",
+                self.seq_in,
+                frame.seq,
+                frame.kind.name()
+            )));
+        }
+        self.seq_in += 1;
+        self.counters.add_recv((HEADER_LEN + frame.payload.len()) as u64);
+        Ok(frame)
+    }
+
+    /// Receive and require a specific frame kind.
+    pub fn expect(&mut self, kind: FrameKind) -> Result<Vec<u8>> {
+        let f = self.recv()?;
+        if f.kind != kind {
+            return Err(Error::comm(format!(
+                "protocol violation: expected `{}`, peer sent `{}`",
+                kind.name(),
+                f.kind.name()
+            )));
+        }
+        Ok(f.payload)
+    }
+}
+
+fn connect_with_schedule(
+    addr: &str,
+    timeout_ms: u64,
+    counters: &CommCounters,
+    attempts: usize,
+    backoff_ms: u64,
+) -> Result<TcpStream> {
+    let mut last = String::from("no address resolved");
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            counters.inc_retries();
+            std::thread::sleep(Duration::from_millis(
+                (backoff_ms * attempt as u64).min(CONNECT_BACKOFF_CAP_MS),
+            ));
+        }
+        match addr.to_socket_addrs() {
+            Err(e) => last = e.to_string(),
+            Ok(addrs) => {
+                for a in addrs {
+                    match TcpStream::connect_timeout(
+                        &a,
+                        Duration::from_millis(timeout_ms.max(1)),
+                    ) {
+                        Ok(s) => return Ok(s),
+                        Err(e) => last = e.to_string(),
+                    }
+                }
+            }
+        }
+    }
+    Err(Error::comm(format!(
+        "failed to connect to {addr} after {attempts} attempts: {last}"
+    )))
+}
+
+/// Connect with the standard bounded-retry schedule (workers may still
+/// be binding their listeners when the head starts).
+pub fn connect_with_retry(
+    addr: &str,
+    timeout_ms: u64,
+    counters: &CommCounters,
+) -> Result<TcpStream> {
+    connect_with_schedule(addr, timeout_ms, counters, CONNECT_ATTEMPTS, CONNECT_BACKOFF_MS)
+}
+
+/// Head-side handle over the whole worker fleet, in rank order.
+pub struct TcpFleet {
+    conns: Vec<FramedConn>,
+    counters: Arc<CommCounters>,
+    scratch: Vec<i64>,
+}
+
+impl TcpFleet {
+    /// Connect to every worker and run the `Hello`/`HelloAck` handshake
+    /// (rank = position in `addrs`).
+    pub fn connect(
+        addrs: &[String],
+        timeout_ms: u64,
+        counters: Arc<CommCounters>,
+    ) -> Result<TcpFleet> {
+        let n = addrs.len();
+        let mut conns = Vec::with_capacity(n);
+        for (rank, addr) in addrs.iter().enumerate() {
+            let stream = connect_with_retry(addr, timeout_ms, &counters)?;
+            let mut conn = FramedConn::new(stream, timeout_ms, Arc::clone(&counters))?;
+            let mut e = Enc::new();
+            e.u32(rank as u32);
+            e.u32(n as u32);
+            conn.send(FrameKind::Hello, &e.finish())?;
+            let ack = conn.expect(FrameKind::HelloAck)?;
+            if !ack.is_empty() {
+                return Err(Error::comm("malformed hello-ack"));
+            }
+            conns.push(conn);
+        }
+        Ok(TcpFleet { conns, counters, scratch: Vec::new() })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.conns.len()
+    }
+
+    pub fn counters(&self) -> &CommCounters {
+        &self.counters
+    }
+
+    /// Ship each worker its (distinct) setup payload, in rank order.
+    pub fn setup(&mut self, payloads: &[Vec<u8>]) -> Result<()> {
+        if payloads.len() != self.conns.len() {
+            return Err(Error::comm(format!(
+                "{} setup payloads for {} workers",
+                payloads.len(),
+                self.conns.len()
+            )));
+        }
+        for (conn, payload) in self.conns.iter_mut().zip(payloads) {
+            conn.send(FrameKind::Setup, payload)?;
+        }
+        Ok(())
+    }
+
+    /// Broadcast a round begin (gradients + mask) to every worker.
+    pub fn round_begin(&mut self, payload: &[u8]) -> Result<()> {
+        for conn in &mut self.conns {
+            conn.send(FrameKind::RoundBegin, payload)?;
+        }
+        Ok(())
+    }
+
+    /// Serve one allreduce round: collect every worker's fixed-point
+    /// partial, sum in rank order (exact i64 addition — rank order is a
+    /// convention, not a correctness requirement), ship the reduction
+    /// back.  `reduced` must arrive zeroed at the chunk's histogram
+    /// length.
+    pub fn reduce_round(&mut self, reduced: &mut [i64]) -> Result<()> {
+        self.scratch.clear();
+        self.scratch.resize(reduced.len(), 0);
+        for conn in &mut self.conns {
+            let payload = conn.expect(FrameKind::AllreducePart)?;
+            decode_i64s_into(&payload, &mut self.scratch)?;
+            add_partial(&self.scratch, reduced);
+        }
+        self.counters.inc_rounds();
+        let red = encode_i64s(reduced);
+        for conn in &mut self.conns {
+            conn.send(FrameKind::AllreduceRed, &red)?;
+        }
+        Ok(())
+    }
+
+    /// One sweep order + its allreduce: `ChunkSweep` to every worker,
+    /// then [`reduce_round`](TcpFleet::reduce_round).
+    pub fn sweep_allreduce(&mut self, sweep: &[u8], reduced: &mut [i64]) -> Result<()> {
+        for conn in &mut self.conns {
+            conn.send(FrameKind::ChunkSweep, sweep)?;
+        }
+        self.reduce_round(reduced)
+    }
+
+    /// Broadcast an opaque payload to every worker.
+    pub fn broadcast_bytes(&mut self, payload: &[u8]) -> Result<()> {
+        for conn in &mut self.conns {
+            conn.send(FrameKind::Broadcast, payload)?;
+        }
+        self.counters.inc_broadcasts();
+        Ok(())
+    }
+
+    /// Collect one opaque payload from every worker, in rank order.
+    pub fn gather_bytes(&mut self) -> Result<Vec<Vec<u8>>> {
+        let mut out = Vec::with_capacity(self.conns.len());
+        for conn in &mut self.conns {
+            out.push(conn.expect(FrameKind::GatherPart)?);
+        }
+        Ok(out)
+    }
+
+    /// Fleet-wide barrier: wait for every worker's arrival, then
+    /// release them all.
+    pub fn barrier(&mut self) -> Result<()> {
+        for conn in &mut self.conns {
+            let payload = conn.expect(FrameKind::Barrier)?;
+            if !payload.is_empty() {
+                return Err(Error::comm("malformed barrier frame"));
+            }
+        }
+        for conn in &mut self.conns {
+            conn.send(FrameKind::BarrierAck, &[])?;
+        }
+        Ok(())
+    }
+
+    /// Tell every worker the session is over.  Best-effort by design:
+    /// callers on error paths invoke it as `let _ = fleet.shutdown()`.
+    pub fn shutdown(&mut self) -> Result<()> {
+        for conn in &mut self.conns {
+            conn.send(FrameKind::Shutdown, &[])?;
+        }
+        Ok(())
+    }
+}
+
+/// [`HistBackend`] for the head: never touches pages itself — every
+/// level histogram is computed by the worker fleet and allreduced over
+/// the wire.  Mirrors `ShardedCpuBackend`'s chunk loop exactly (same
+/// chunk width, same fixed-point evaluation tail) so the grown trees
+/// are bit-identical to the in-process backends.
+pub struct TcpHeadBackend {
+    fleet: Arc<Mutex<TcpFleet>>,
+    chunk_nodes: usize,
+    reduced: Vec<i64>,
+    level_hist: Vec<f32>,
+    mask_buf: Vec<bool>,
+}
+
+impl TcpHeadBackend {
+    pub fn new(fleet: Arc<Mutex<TcpFleet>>) -> TcpHeadBackend {
+        TcpHeadBackend {
+            fleet,
+            // Matches ShardedCpuBackend::new (the identity baseline).
+            chunk_nodes: 64,
+            reduced: Vec::new(),
+            level_hist: Vec::new(),
+            mask_buf: Vec::new(),
+        }
+    }
+}
+
+impl HistBackend for TcpHeadBackend {
+    fn best_splits(
+        &mut self,
+        _source: &mut dyn EllpackSource,
+        grads: &[[f32; 2]],
+        partitioner: &mut RowPartitioner,
+        tree: &Tree,
+        cuts: &HistogramCuts,
+        params: &TreeParams,
+        active: &[u32],
+        level: usize,
+        apply_level: Option<usize>,
+        totals: &[(f64, f64)],
+    ) -> Result<Vec<SplitCandidate>> {
+        let mut fleet = self
+            .fleet
+            .lock()
+            .map_err(|_| Error::comm("tcp fleet mutex poisoned"))?;
+        // A fresh tree starts at level 0: ship the round's gradients +
+        // sample mask so every worker resets its positions to the
+        // head's partitioner state.  (The head's own positions go stale
+        // after this — harmless, the builder only reads them for root
+        // totals, and each tree gets a fresh partitioner.)
+        if level == 0 {
+            self.mask_buf.clear();
+            let mut all_active = true;
+            for r in 0..grads.len() {
+                let live = partitioner.position(r) != RowPartitioner::INACTIVE;
+                all_active &= live;
+                self.mask_buf.push(live);
+            }
+            let mask = if all_active { None } else { Some(self.mask_buf.as_slice()) };
+            let payload = encode_round_begin(grads, mask);
+            fleet.round_begin(&payload)?;
+        }
+
+        let total_bins = *cuts.ptrs.last().unwrap() as usize;
+        let hist_len_per_node = total_bins * 2;
+        let min_node = *active.iter().min().unwrap() as usize;
+        let max_node = *active.iter().max().unwrap() as usize;
+        let mut out = Vec::with_capacity(active.len());
+
+        let mut first_sweep = true;
+        for (chunk_idx, chunk) in active.chunks(self.chunk_nodes).enumerate() {
+            let hist_len = chunk.len() * hist_len_per_node;
+            self.reduced.clear();
+            self.reduced.resize(hist_len, 0);
+            let apply = if first_sweep { apply_level } else { None };
+            let sweep =
+                ChunkSweepMsg::encode_parts(tree, chunk, min_node, max_node, apply);
+            fleet.sweep_allreduce(&sweep, &mut self.reduced)?;
+            first_sweep = false;
+
+            dequantize_into(&self.reduced, &mut self.level_hist);
+            let chunk_total_base = chunk_idx * self.chunk_nodes;
+            for (slot, _node) in chunk.iter().enumerate() {
+                let hist = &self.level_hist
+                    [slot * hist_len_per_node..(slot + 1) * hist_len_per_node];
+                let total = totals[chunk_total_base + slot];
+                out.push(evaluate_node(
+                    hist,
+                    cuts,
+                    total,
+                    params.lambda,
+                    params.gamma,
+                    params.min_child_weight,
+                ));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// The head's stand-in data source: the workers own the pages, so the
+/// head's persistent source has rows but yields no pages.
+pub struct NullSource {
+    n_rows: usize,
+    sweeps: usize,
+}
+
+impl NullSource {
+    pub fn new(n_rows: usize) -> NullSource {
+        NullSource { n_rows, sweeps: 0 }
+    }
+}
+
+impl EllpackSource for NullSource {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn for_each_page(
+        &mut self,
+        _f: &mut dyn FnMut(&crate::ellpack::EllpackPage) -> Result<()>,
+    ) -> Result<()> {
+        self.sweeps += 1;
+        Ok(())
+    }
+
+    fn sweeps(&self) -> usize {
+        self.sweeps
+    }
+
+    fn as_sharded(&mut self) -> Option<&mut ShardedSource> {
+        None
+    }
+}
+
+/// Worker-side [`Communicator`]: every collective is one frame exchange
+/// with the head (contribute → `AllreducePart`, reduced →
+/// `AllreduceRed`, …).  The head coordinates but is not a rank.
+pub struct TcpWorkerComm {
+    rank: usize,
+    n_ranks: usize,
+    conn: Mutex<FramedConn>,
+    counters: Arc<CommCounters>,
+}
+
+impl TcpWorkerComm {
+    /// Accept one head connection and run the worker side of the
+    /// handshake.
+    pub fn accept(
+        listener: &TcpListener,
+        timeout_ms: u64,
+        counters: Arc<CommCounters>,
+    ) -> Result<TcpWorkerComm> {
+        let (stream, _) = listener.accept()?;
+        let mut conn = FramedConn::new(stream, timeout_ms, Arc::clone(&counters))?;
+        let hello = conn.expect(FrameKind::Hello)?;
+        let mut d = Dec::new(&hello);
+        let rank = d.u32()? as usize;
+        let n_ranks = d.u32()? as usize;
+        d.done()?;
+        if n_ranks == 0 || rank >= n_ranks {
+            return Err(Error::comm(format!(
+                "malformed hello: rank {rank} of {n_ranks}"
+            )));
+        }
+        conn.send(FrameKind::HelloAck, &[])?;
+        Ok(TcpWorkerComm { rank, n_ranks, conn: Mutex::new(conn), counters })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, FramedConn> {
+        self.conn.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Receive the next protocol frame (worker state machine).
+    pub fn recv(&self) -> Result<Frame> {
+        self.lock().recv()
+    }
+
+    /// Send one protocol frame (worker state machine).
+    pub fn send(&self, kind: FrameKind, payload: &[u8]) -> Result<()> {
+        self.lock().send(kind, payload)
+    }
+
+    /// Receive and require a specific frame kind.
+    pub fn expect(&self, kind: FrameKind) -> Result<Vec<u8>> {
+        self.lock().expect(kind)
+    }
+}
+
+impl Communicator for TcpWorkerComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    fn contribute_i64(&self, part: &[i64]) -> Result<()> {
+        self.send(FrameKind::AllreducePart, &encode_i64s(part))
+    }
+
+    fn reduced_i64(&self, out: &mut [i64]) -> Result<()> {
+        let payload = self.expect(FrameKind::AllreduceRed)?;
+        decode_i64s_into(&payload, out)?;
+        self.counters.inc_rounds();
+        Ok(())
+    }
+
+    fn broadcast(&self, buf: &mut Vec<u8>) -> Result<()> {
+        let payload = self.expect(FrameKind::Broadcast)?;
+        *buf = payload;
+        self.counters.inc_broadcasts();
+        Ok(())
+    }
+
+    fn gather(&self, part: &[u8]) -> Result<Vec<Vec<u8>>> {
+        self.send(FrameKind::GatherPart, part)?;
+        Ok(Vec::new())
+    }
+
+    fn barrier(&self) -> Result<()> {
+        let mut conn = self.lock();
+        conn.send(FrameKind::Barrier, &[])?;
+        conn.expect(FrameKind::BarrierAck)?;
+        Ok(())
+    }
+
+    fn counters(&self) -> &CommCounters {
+        &self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn pair(timeout_ms: u64) -> (FramedConn, FramedConn) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let c = Arc::new(CommCounters::default());
+        (
+            FramedConn::new(client, timeout_ms, Arc::clone(&c)).unwrap(),
+            FramedConn::new(server, timeout_ms, c).unwrap(),
+        )
+    }
+
+    #[test]
+    fn framed_roundtrip_counts_bytes() {
+        let (mut a, mut b) = pair(2_000);
+        a.send(FrameKind::Broadcast, b"abc").unwrap();
+        a.send(FrameKind::Barrier, &[]).unwrap();
+        let f = b.recv().unwrap();
+        assert_eq!((f.kind, f.seq, f.payload.as_slice()), (FrameKind::Broadcast, 0, &b"abc"[..]));
+        let f = b.recv().unwrap();
+        assert_eq!((f.kind, f.seq), (FrameKind::Barrier, 1));
+        let stats = b.counters.snapshot();
+        // Shared counters: a's sends + b's recvs.
+        assert_eq!(stats.bytes_sent, (28 + 3) + 28);
+        assert_eq!(stats.bytes_recv, (28 + 3) + 28);
+    }
+
+    #[test]
+    fn read_deadline_is_a_comm_timeout() {
+        let (mut a, _b) = pair(150);
+        let t0 = std::time::Instant::now();
+        let err = a.recv().unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(a.counters.snapshot().timeouts, 1);
+    }
+
+    #[test]
+    fn dropped_peer_is_a_clean_error() {
+        let (mut a, b) = pair(2_000);
+        drop(b);
+        let err = a.recv().unwrap_err();
+        assert!(err.to_string().contains("closed"), "{err}");
+    }
+
+    #[test]
+    fn sequence_desync_detected() {
+        let (mut a, b) = pair(2_000);
+        // Write a raw frame with seq 5 behind the connection's back.
+        let mut raw = b.stream.try_clone().unwrap();
+        raw.write_all(&super::super::frame::encode_frame(
+            FrameKind::Barrier,
+            5,
+            &[],
+        ))
+        .unwrap();
+        let err = a.recv().unwrap_err();
+        assert!(err.to_string().contains("desync"), "{err}");
+    }
+
+    #[test]
+    fn connect_retries_until_listener_appears() {
+        // Reserve a port, release it, and bind it again ~200ms later;
+        // the connector must ride its retry schedule to success.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(200));
+            let listener = TcpListener::bind(addr).unwrap();
+            let _ = listener.accept();
+        });
+        let counters = CommCounters::default();
+        let stream =
+            connect_with_schedule(&addr.to_string(), 1_000, &counters, 50, 20);
+        t.join().unwrap();
+        let stream = stream.unwrap();
+        drop(stream);
+        assert!(counters.snapshot().retries > 0);
+    }
+
+    #[test]
+    fn connect_exhaustion_reports_attempts() {
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe); // nothing listening here any more
+        let counters = CommCounters::default();
+        let err = connect_with_schedule(&addr.to_string(), 200, &counters, 3, 10)
+            .unwrap_err();
+        assert!(err.to_string().contains("3 attempts"), "{err}");
+        assert_eq!(counters.snapshot().retries, 2);
+    }
+
+    #[test]
+    fn fleet_and_worker_collectives() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let worker = std::thread::spawn(move || {
+            let counters = Arc::new(CommCounters::default());
+            let comm = TcpWorkerComm::accept(&listener, 5_000, counters).unwrap();
+            assert_eq!((comm.rank(), comm.n_ranks()), (0, 1));
+            let mut buf = vec![3i64, -4];
+            comm.allreduce_i64(&mut buf).unwrap();
+            assert_eq!(buf, [3, -4]);
+            let mut b = Vec::new();
+            comm.broadcast(&mut b).unwrap();
+            assert_eq!(b, b"hello".to_vec());
+            assert!(comm.gather(b"mine").unwrap().is_empty());
+            comm.barrier().unwrap();
+            comm.expect(FrameKind::Shutdown).unwrap();
+        });
+        let counters = Arc::new(CommCounters::default());
+        let mut fleet = TcpFleet::connect(&[addr], 5_000, counters).unwrap();
+        assert_eq!(fleet.n_workers(), 1);
+        let mut reduced = vec![0i64; 2];
+        fleet.reduce_round(&mut reduced).unwrap();
+        assert_eq!(reduced, [3, -4]);
+        fleet.broadcast_bytes(b"hello").unwrap();
+        assert_eq!(fleet.gather_bytes().unwrap(), vec![b"mine".to_vec()]);
+        fleet.barrier().unwrap();
+        fleet.shutdown().unwrap();
+        worker.join().unwrap();
+        assert_eq!(fleet.counters().snapshot().allreduce_rounds, 1);
+    }
+
+    #[test]
+    fn null_source_yields_nothing() {
+        let mut s = NullSource::new(42);
+        assert_eq!(EllpackSource::n_rows(&s), 42);
+        let mut calls = 0;
+        s.for_each_page(&mut |_| {
+            calls += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(calls, 0);
+        assert_eq!(s.sweeps(), 1);
+    }
+}

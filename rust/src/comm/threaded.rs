@@ -1,0 +1,476 @@
+//! The threaded communicator: one OS thread per shard, rendezvousing on
+//! a shared accumulator through a `Mutex` + `Condvar`.
+//!
+//! Unlike [`super::local::LocalComm`], every rank here calls the full
+//! [`Communicator::allreduce_i64`] — `contribute_i64` folds the rank's
+//! partial into the round's accumulator under the lock, `reduced_i64`
+//! **blocks** until all ranks have contributed, then copies the sum out.
+//! The fold is [`crate::tree::allreduce::add_partial`] on exact i64
+//! fixed-point values, so whichever thread arrives first cannot change
+//! the resulting bits.
+//!
+//! ## No-hang discipline
+//!
+//! Two mechanisms keep a failed fleet from deadlocking:
+//!
+//! * **Abort poisoning** — a rank whose sweep fails calls
+//!   [`ThreadComm::abort`], which stamps the shared state with the error
+//!   and `notify_all`s; every blocked or future call on any handle then
+//!   returns `Err` immediately.
+//! * **Wait timeout** — every blocking wait uses `wait_timeout` with the
+//!   fleet's `timeout_ms` (the `comm_timeout_ms` knob); a rank that
+//!   never shows up trips a `timed out` comm error instead of hanging
+//!   the process.
+//!
+//! Bytes are accounted as the logical payload each rank moves through
+//! the rendezvous (8 bytes per i64; broadcast/gather payload lengths) —
+//! there is no frame overhead because there are no frames.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::tree::allreduce::add_partial;
+
+use super::{CommCounters, Communicator};
+
+struct Round {
+    acc: Vec<i64>,
+    contributed: usize,
+    readers_left: usize,
+    complete: bool,
+}
+
+struct Bcast {
+    payload: Vec<u8>,
+    readers_left: usize,
+}
+
+struct Gather {
+    parts: BTreeMap<usize, Vec<u8>>,
+}
+
+struct Barrier {
+    arrived: usize,
+    released: bool,
+    departed: usize,
+}
+
+#[derive(Default)]
+struct ThreadState {
+    rounds: BTreeMap<u64, Round>,
+    bcasts: BTreeMap<u64, Bcast>,
+    gathers: BTreeMap<u64, Gather>,
+    barriers: BTreeMap<u64, Barrier>,
+    aborted: Option<String>,
+}
+
+struct Shared {
+    state: Mutex<ThreadState>,
+    cv: Condvar,
+}
+
+/// One rank's handle into a thread fleet (see module docs).
+pub struct ThreadComm {
+    rank: usize,
+    n_ranks: usize,
+    timeout_ms: u64,
+    shared: Arc<Shared>,
+    counters: Arc<CommCounters>,
+    // Per-handle sequence counters keying this rank's next collective of
+    // each kind.  Atomics (not `&mut self`) because the trait takes
+    // `&self` so handles can be shared with scoped threads.
+    next_contribute: AtomicU64,
+    next_read: AtomicU64,
+    next_bcast: AtomicU64,
+    next_gather: AtomicU64,
+    next_barrier: AtomicU64,
+}
+
+/// Build an `n`-rank thread fleet sharing `counters`; blocking waits
+/// give up after `timeout_ms`.
+pub fn threaded_fleet(
+    n: usize,
+    timeout_ms: u64,
+    counters: Arc<CommCounters>,
+) -> Vec<ThreadComm> {
+    assert!(n > 0, "fleet needs at least one rank");
+    let shared = Arc::new(Shared {
+        state: Mutex::new(ThreadState::default()),
+        cv: Condvar::new(),
+    });
+    (0..n)
+        .map(|rank| ThreadComm {
+            rank,
+            n_ranks: n,
+            timeout_ms,
+            shared: Arc::clone(&shared),
+            counters: Arc::clone(&counters),
+            next_contribute: AtomicU64::new(0),
+            next_read: AtomicU64::new(0),
+            next_bcast: AtomicU64::new(0),
+            next_gather: AtomicU64::new(0),
+            next_barrier: AtomicU64::new(0),
+        })
+        .collect()
+}
+
+impl ThreadComm {
+    /// Poison the fleet: every blocked or future collective call on any
+    /// handle returns `Err(msg)`.  Called by a rank whose sweep failed
+    /// so its peers don't wait forever for a contribution that will
+    /// never arrive.
+    pub fn abort(&self, msg: &str) {
+        let mut st = self.lock();
+        if st.aborted.is_none() {
+            st.aborted = Some(msg.to_string());
+        }
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+
+    fn lock(&self) -> MutexGuard<'_, ThreadState> {
+        // A poisoned mutex means a peer thread panicked while holding
+        // it; the scoped-thread join surfaces that panic, and the state
+        // itself is still structurally usable for the abort check.
+        self.shared.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Block until `ready` says go (or abort / timeout).  `ready` runs
+    /// under the lock; spurious wakeups just re-check.
+    fn wait_for<F>(&self, what: &str, mut ready: F) -> Result<MutexGuard<'_, ThreadState>>
+    where
+        F: FnMut(&mut ThreadState) -> bool,
+    {
+        let mut st = self.lock();
+        let timeout = Duration::from_millis(self.timeout_ms);
+        loop {
+            if let Some(msg) = &st.aborted {
+                return Err(Error::comm(format!("fleet aborted: {msg}")));
+            }
+            if ready(&mut st) {
+                return Ok(st);
+            }
+            let (guard, waited) = self
+                .shared
+                .cv
+                .wait_timeout(st, timeout)
+                .unwrap_or_else(|e| e.into_inner());
+            st = guard;
+            if waited.timed_out() {
+                // One last look under the lock — the wake and the
+                // deadline can race.
+                if let Some(msg) = &st.aborted {
+                    return Err(Error::comm(format!("fleet aborted: {msg}")));
+                }
+                if ready(&mut st) {
+                    return Ok(st);
+                }
+                self.counters.inc_timeouts();
+                return Err(Error::comm(format!(
+                    "rank {} timed out after {}ms waiting for {what}",
+                    self.rank, self.timeout_ms
+                )));
+            }
+        }
+    }
+}
+
+impl Communicator for ThreadComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    fn contribute_i64(&self, part: &[i64]) -> Result<()> {
+        let key = self.next_contribute.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.lock();
+        if let Some(msg) = &st.aborted {
+            return Err(Error::comm(format!("fleet aborted: {msg}")));
+        }
+        let n_ranks = self.n_ranks;
+        let round = st.rounds.entry(key).or_insert_with(|| Round {
+            acc: vec![0i64; part.len()],
+            contributed: 0,
+            readers_left: n_ranks,
+            complete: false,
+        });
+        if round.acc.len() != part.len() {
+            return Err(Error::comm(format!(
+                "rank {} contributed {} values to round {key} opened with {}",
+                self.rank,
+                part.len(),
+                round.acc.len()
+            )));
+        }
+        add_partial(part, &mut round.acc);
+        round.contributed += 1;
+        self.counters.add_sent(8 * part.len() as u64);
+        if round.contributed == n_ranks {
+            round.complete = true;
+            self.counters.inc_rounds();
+            drop(st);
+            self.shared.cv.notify_all();
+        }
+        Ok(())
+    }
+
+    fn reduced_i64(&self, out: &mut [i64]) -> Result<()> {
+        let key = self.next_read.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.wait_for("allreduce peers", |st| {
+            st.rounds.get(&key).is_some_and(|r| r.complete)
+        })?;
+        let round = st.rounds.get_mut(&key).expect("round checked ready");
+        if round.acc.len() != out.len() {
+            return Err(Error::comm(format!(
+                "allreduce round {key} holds {} values, caller expected {}",
+                round.acc.len(),
+                out.len()
+            )));
+        }
+        out.copy_from_slice(&round.acc);
+        round.readers_left -= 1;
+        if round.readers_left == 0 {
+            st.rounds.remove(&key);
+        }
+        self.counters.add_recv(8 * out.len() as u64);
+        Ok(())
+    }
+
+    fn broadcast(&self, buf: &mut Vec<u8>) -> Result<()> {
+        let key = self.next_bcast.fetch_add(1, Ordering::Relaxed);
+        if self.n_ranks == 1 {
+            let mut st = self.lock();
+            if let Some(msg) = &st.aborted {
+                return Err(Error::comm(format!("fleet aborted: {msg}")));
+            }
+            drop(st);
+            self.counters.add_sent(buf.len() as u64);
+            self.counters.inc_broadcasts();
+            return Ok(());
+        }
+        if self.rank == 0 {
+            let mut st = self.lock();
+            if let Some(msg) = &st.aborted {
+                return Err(Error::comm(format!("fleet aborted: {msg}")));
+            }
+            st.bcasts.insert(
+                key,
+                Bcast { payload: buf.clone(), readers_left: self.n_ranks - 1 },
+            );
+            self.counters.add_sent(buf.len() as u64);
+            self.counters.inc_broadcasts();
+            drop(st);
+            self.shared.cv.notify_all();
+            Ok(())
+        } else {
+            let mut st =
+                self.wait_for("broadcast root", |st| st.bcasts.contains_key(&key))?;
+            let bc = st.bcasts.get_mut(&key).expect("bcast checked ready");
+            buf.clear();
+            buf.extend_from_slice(&bc.payload);
+            bc.readers_left -= 1;
+            if bc.readers_left == 0 {
+                st.bcasts.remove(&key);
+            }
+            self.counters.add_recv(buf.len() as u64);
+            Ok(())
+        }
+    }
+
+    fn gather(&self, part: &[u8]) -> Result<Vec<Vec<u8>>> {
+        let key = self.next_gather.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut st = self.lock();
+            if let Some(msg) = &st.aborted {
+                return Err(Error::comm(format!("fleet aborted: {msg}")));
+            }
+            let g = st
+                .gathers
+                .entry(key)
+                .or_insert_with(|| Gather { parts: BTreeMap::new() });
+            if g.parts.insert(self.rank, part.to_vec()).is_some() {
+                return Err(Error::comm(format!(
+                    "rank {} gathered twice in round {key}",
+                    self.rank
+                )));
+            }
+        }
+        self.shared.cv.notify_all();
+        if self.rank != 0 {
+            self.counters.add_sent(part.len() as u64);
+            return Ok(Vec::new());
+        }
+        let mut st = self.wait_for("gather peers", |st| {
+            st.gathers.get(&key).is_some_and(|g| g.parts.len() == self.n_ranks)
+        })?;
+        let g = st.gathers.remove(&key).expect("gather checked ready");
+        let parts: Vec<Vec<u8>> = g.parts.into_values().collect();
+        let recv: usize = parts.iter().skip(1).map(|p| p.len()).sum();
+        self.counters.add_recv(recv as u64);
+        Ok(parts)
+    }
+
+    fn barrier(&self) -> Result<()> {
+        let key = self.next_barrier.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut st = self.lock();
+            if let Some(msg) = &st.aborted {
+                return Err(Error::comm(format!("fleet aborted: {msg}")));
+            }
+            let b = st.barriers.entry(key).or_insert_with(|| Barrier {
+                arrived: 0,
+                released: false,
+                departed: 0,
+            });
+            b.arrived += 1;
+            if b.arrived == self.n_ranks {
+                b.released = true;
+            }
+        }
+        self.shared.cv.notify_all();
+        let mut st = self.wait_for("barrier peers", |st| {
+            st.barriers.get(&key).is_some_and(|b| b.released)
+        })?;
+        let b = st.barriers.get_mut(&key).expect("barrier checked ready");
+        b.departed += 1;
+        if b.departed == self.n_ranks {
+            st.barriers.remove(&key);
+        }
+        Ok(())
+    }
+
+    fn counters(&self) -> &CommCounters {
+        &self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn cross_thread_allreduce_sums() {
+        let counters = Arc::new(CommCounters::default());
+        let fleet = threaded_fleet(4, 5_000, Arc::clone(&counters));
+        let results: Vec<Vec<i64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = fleet
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    s.spawn(move || {
+                        let mut buf = vec![i as i64 + 1, 100 * (i as i64 + 1)];
+                        c.allreduce_i64(&mut buf).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in &results {
+            assert_eq!(r, &[10, 1000]);
+        }
+        let s = counters.snapshot();
+        assert_eq!(s.allreduce_rounds, 1);
+        assert_eq!(s.bytes_sent, 4 * 2 * 8);
+        assert_eq!(s.bytes_recv, 4 * 2 * 8);
+    }
+
+    #[test]
+    fn multiple_rounds_keep_order() {
+        let fleet = threaded_fleet(2, 5_000, Arc::new(CommCounters::default()));
+        let sums: Vec<(i64, i64)> = std::thread::scope(|s| {
+            fleet
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut a = vec![1i64];
+                        c.allreduce_i64(&mut a).unwrap();
+                        let mut b = vec![100i64];
+                        c.allreduce_i64(&mut b).unwrap();
+                        (a[0], b[0])
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        assert_eq!(sums, vec![(2, 200), (2, 200)]);
+    }
+
+    #[test]
+    fn abort_wakes_blocked_ranks() {
+        let fleet = threaded_fleet(2, 60_000, Arc::new(CommCounters::default()));
+        let err = std::thread::scope(|s| {
+            let blocked = {
+                let c = &fleet[0];
+                s.spawn(move || {
+                    let mut buf = vec![1i64];
+                    c.allreduce_i64(&mut buf).unwrap_err()
+                })
+            };
+            // Rank 1 fails instead of contributing.
+            fleet[1].abort("sweep exploded");
+            blocked.join().unwrap()
+        });
+        assert!(err.to_string().contains("sweep exploded"), "{err}");
+        // Every later call fails fast too.
+        assert!(fleet[1].contribute_i64(&[1]).is_err());
+        assert!(fleet[0].barrier().is_err());
+    }
+
+    #[test]
+    fn missing_rank_trips_timeout() {
+        let counters = Arc::new(CommCounters::default());
+        let fleet = threaded_fleet(2, 150, Arc::clone(&counters));
+        let t0 = Instant::now();
+        let mut buf = vec![1i64];
+        let err = fleet[0].allreduce_i64(&mut buf).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(counters.snapshot().timeouts, 1);
+    }
+
+    #[test]
+    fn broadcast_and_gather_cross_thread() {
+        let counters = Arc::new(CommCounters::default());
+        let fleet = threaded_fleet(3, 5_000, Arc::clone(&counters));
+        let out: Vec<(Vec<u8>, Vec<Vec<u8>>)> = std::thread::scope(|s| {
+            fleet
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    s.spawn(move || {
+                        let mut b =
+                            if i == 0 { vec![42u8, 43] } else { Vec::new() };
+                        c.broadcast(&mut b).unwrap();
+                        let mine = vec![i as u8; i + 1];
+                        let all = c.gather(&mine).unwrap();
+                        c.barrier().unwrap();
+                        (b, all)
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for (b, _) in &out {
+            assert_eq!(b, &[42, 43]);
+        }
+        assert_eq!(
+            out[0].1,
+            vec![vec![0u8], vec![1, 1], vec![2, 2, 2]],
+            "rank 0 gathers in rank order"
+        );
+        assert!(out[1].1.is_empty() && out[2].1.is_empty());
+        assert_eq!(counters.snapshot().broadcasts, 1);
+    }
+}

@@ -1,0 +1,555 @@
+//! Payload codecs for the head↔worker protocol — what goes *inside*
+//! the frames of [`super::frame`].
+//!
+//! Everything is little-endian and bounds-checked: a truncated or
+//! trailing-garbage payload decodes to [`Error::Comm`], never a panic
+//! or a silently wrong value (fault-injection tests feed these decoders
+//! hostile bytes through a real socket).
+//!
+//! The messages mirror the sharded sweep exactly:
+//!
+//! * [`SetupMsg`] — once per connection: the worker's shard pages, the
+//!   histogram cuts, the global row count, and the skip knob.
+//! * round-begin (`encode_round_begin`) — once per tree: the full
+//!   gradient-pair array plus the optional sample mask (bit-packed).
+//! * [`ChunkSweepMsg`] — once per node chunk per level: the tree so
+//!   far, the chunk's node ids, the active range, and the fused
+//!   position-update level.
+//! * i64 arrays (`encode_i64s`) — the fixed-point allreduce payloads in
+//!   both directions.
+
+use crate::ellpack::EllpackPage;
+use crate::error::{Error, Result};
+use crate::sketch::HistogramCuts;
+use crate::tree::model::{Node, Tree};
+
+/// Bounds-checked little-endian writer.
+pub(crate) struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed byte run.
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian reader.
+pub(crate) struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        let Some(end) = end else {
+            return Err(Error::comm(format!(
+                "truncated payload: wanted {n} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            )));
+        };
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    /// Bounds-checked element count for a `count × elem_bytes` array —
+    /// rejects counts the remaining payload cannot hold, so a corrupt
+    /// count can't drive a huge allocation.
+    pub fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let need = n.checked_mul(elem_bytes).unwrap_or(usize::MAX);
+        if need > self.buf.len() - self.pos {
+            return Err(Error::comm(format!(
+                "corrupt element count {n} (payload has {} bytes left)",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(n)
+    }
+
+    pub fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::comm(format!(
+                "trailing garbage: {} of {} payload bytes unconsumed",
+                self.buf.len() - self.pos,
+                self.buf.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn encode_cuts(e: &mut Enc, cuts: &HistogramCuts) {
+    e.u32(cuts.ptrs.len() as u32);
+    for &p in &cuts.ptrs {
+        e.u32(p);
+    }
+    e.u32(cuts.values.len() as u32);
+    for &v in &cuts.values {
+        e.f32(v);
+    }
+    e.u32(cuts.min_vals.len() as u32);
+    for &v in &cuts.min_vals {
+        e.f32(v);
+    }
+}
+
+fn decode_cuts(d: &mut Dec) -> Result<HistogramCuts> {
+    let n = d.count(4)?;
+    let mut ptrs = Vec::with_capacity(n);
+    for _ in 0..n {
+        ptrs.push(d.u32()?);
+    }
+    let n = d.count(4)?;
+    let mut values = Vec::with_capacity(n);
+    for _ in 0..n {
+        values.push(d.f32()?);
+    }
+    let n = d.count(4)?;
+    let mut min_vals = Vec::with_capacity(n);
+    for _ in 0..n {
+        min_vals.push(d.f32()?);
+    }
+    Ok(HistogramCuts { ptrs, values, min_vals })
+}
+
+/// Per-connection setup: everything one worker needs to sweep its shard.
+pub struct SetupMsg {
+    /// Global training row count (positions/gradients length).
+    pub n_rows: usize,
+    pub cuts: HistogramCuts,
+    /// Fold the round's sample mask into a page-skip bitmap?
+    pub skip_unsampled: bool,
+    /// The worker's shard pages (global `base_rowid`s preserved).
+    pub pages: Vec<EllpackPage>,
+}
+
+impl SetupMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.n_rows as u64);
+        e.u8(self.skip_unsampled as u8);
+        encode_cuts(&mut e, &self.cuts);
+        e.u32(self.pages.len() as u32);
+        for p in &self.pages {
+            e.bytes(&p.to_bytes());
+        }
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<SetupMsg> {
+        let mut d = Dec::new(buf);
+        let n_rows = d.u64()? as usize;
+        let skip_unsampled = d.u8()? != 0;
+        let cuts = decode_cuts(&mut d)?;
+        let n = d.count(1)?;
+        let mut pages = Vec::with_capacity(n);
+        for _ in 0..n {
+            pages.push(EllpackPage::from_bytes(d.bytes()?)?);
+        }
+        d.done()?;
+        Ok(SetupMsg { n_rows, cuts, skip_unsampled, pages })
+    }
+}
+
+/// Round begin: full gradient pairs + optional bit-packed sample mask.
+/// Encoding borrows the loop's buffers — no clone of the gradient array.
+pub fn encode_round_begin(grads: &[[f32; 2]], mask: Option<&[bool]>) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u32(grads.len() as u32);
+    for g in grads {
+        e.f32(g[0]);
+        e.f32(g[1]);
+    }
+    match mask {
+        None => e.u8(0),
+        Some(m) => {
+            e.u8(1);
+            e.u32(m.len() as u32);
+            let mut byte = 0u8;
+            for (i, &b) in m.iter().enumerate() {
+                if b {
+                    byte |= 1 << (i % 8);
+                }
+                if i % 8 == 7 {
+                    e.u8(byte);
+                    byte = 0;
+                }
+            }
+            if m.len() % 8 != 0 {
+                e.u8(byte);
+            }
+        }
+    }
+    e.finish()
+}
+
+pub fn decode_round_begin(buf: &[u8]) -> Result<(Vec<[f32; 2]>, Option<Vec<bool>>)> {
+    let mut d = Dec::new(buf);
+    let n = d.count(8)?;
+    let mut grads = Vec::with_capacity(n);
+    for _ in 0..n {
+        grads.push([d.f32()?, d.f32()?]);
+    }
+    let mask = match d.u8()? {
+        0 => None,
+        1 => {
+            let bits = d.u32()? as usize;
+            let bytes = d.take((bits + 7) / 8)?;
+            let mut m = Vec::with_capacity(bits);
+            for i in 0..bits {
+                m.push(bytes[i / 8] >> (i % 8) & 1 == 1);
+            }
+            Some(m)
+        }
+        other => {
+            return Err(Error::comm(format!("bad mask tag {other} in round begin")))
+        }
+    };
+    d.done()?;
+    Ok((grads, mask))
+}
+
+fn encode_node(e: &mut Enc, n: &Node) {
+    e.i32(n.split_feature);
+    e.i32(n.split_bin);
+    e.f32(n.split_value);
+    e.u64(n.left as u64);
+    e.u64(n.right as u64);
+    e.f32(n.weight);
+    e.f32(n.gain);
+    e.f64(n.sum_grad);
+    e.f64(n.sum_hess);
+    e.u64(n.depth as u64);
+}
+
+const NODE_BYTES: usize = 4 + 4 + 4 + 8 + 8 + 4 + 4 + 8 + 8 + 8;
+
+fn decode_node(d: &mut Dec) -> Result<Node> {
+    Ok(Node {
+        split_feature: d.i32()?,
+        split_bin: d.i32()?,
+        split_value: d.f32()?,
+        left: d.u64()? as usize,
+        right: d.u64()? as usize,
+        weight: d.f32()?,
+        gain: d.f32()?,
+        sum_grad: d.f64()?,
+        sum_hess: d.f64()?,
+        depth: d.u64()? as usize,
+    })
+}
+
+/// One node-chunk sweep order: the tree grown so far, the chunk's node
+/// ids, the level's full active range (for `slot_of` indexing), and the
+/// fused position-update level (`u64::MAX` ⇒ `None`).
+pub struct ChunkSweepMsg {
+    pub nodes: Vec<Node>,
+    pub chunk: Vec<u32>,
+    pub min_node: usize,
+    pub max_node: usize,
+    pub apply: Option<usize>,
+}
+
+impl ChunkSweepMsg {
+    /// Encode from borrowed parts (no tree/chunk clone on the head).
+    pub fn encode_parts(
+        tree: &Tree,
+        chunk: &[u32],
+        min_node: usize,
+        max_node: usize,
+        apply: Option<usize>,
+    ) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u32(tree.nodes.len() as u32);
+        for n in &tree.nodes {
+            encode_node(&mut e, n);
+        }
+        e.u32(chunk.len() as u32);
+        for &c in chunk {
+            e.u32(c);
+        }
+        e.u64(min_node as u64);
+        e.u64(max_node as u64);
+        e.u64(apply.map_or(u64::MAX, |a| a as u64));
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ChunkSweepMsg> {
+        let mut d = Dec::new(buf);
+        let n = d.count(NODE_BYTES)?;
+        let mut nodes = Vec::with_capacity(n);
+        for _ in 0..n {
+            nodes.push(decode_node(&mut d)?);
+        }
+        let n = d.count(4)?;
+        let mut chunk = Vec::with_capacity(n);
+        for _ in 0..n {
+            chunk.push(d.u32()?);
+        }
+        let min_node = d.u64()? as usize;
+        let max_node = d.u64()? as usize;
+        let apply = match d.u64()? {
+            u64::MAX => None,
+            a => Some(a as usize),
+        };
+        d.done()?;
+        if max_node < min_node {
+            return Err(Error::comm(format!(
+                "chunk sweep with inverted active range [{min_node}, {max_node}]"
+            )));
+        }
+        Ok(ChunkSweepMsg { nodes, chunk, min_node, max_node, apply })
+    }
+}
+
+/// Fixed-point allreduce payload (both directions).
+pub fn encode_i64s(vals: &[i64]) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u32(vals.len() as u32);
+    for &v in vals {
+        e.i64(v);
+    }
+    e.finish()
+}
+
+pub fn decode_i64s(buf: &[u8]) -> Result<Vec<i64>> {
+    let mut d = Dec::new(buf);
+    let n = d.count(8)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(d.i64()?);
+    }
+    d.done()?;
+    Ok(out)
+}
+
+/// Decode into a caller-sized buffer; the lengths must agree exactly
+/// (the head/worker both know the chunk's histogram length).
+pub fn decode_i64s_into(buf: &[u8], out: &mut [i64]) -> Result<()> {
+    let mut d = Dec::new(buf);
+    let n = d.count(8)?;
+    if n != out.len() {
+        return Err(Error::comm(format!(
+            "allreduce payload holds {n} values, expected {}",
+            out.len()
+        )));
+    }
+    for o in out.iter_mut() {
+        *o = d.i64()?;
+    }
+    d.done()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_roundtrip_and_bounds_check() {
+        let mut e = Enc::new();
+        e.u8(7);
+        e.u32(0xDEAD_BEEF);
+        e.i64(-42);
+        e.f64(3.5);
+        e.bytes(b"hi");
+        let buf = e.finish();
+        let mut d = Dec::new(&buf);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.i64().unwrap(), -42);
+        assert_eq!(d.f64().unwrap(), 3.5);
+        assert_eq!(d.bytes().unwrap(), b"hi");
+        d.done().unwrap();
+        // Reading past the end errors instead of panicking.
+        let mut d = Dec::new(&buf[..3]);
+        d.u8().unwrap();
+        assert!(d.u32().is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut e = Enc::new();
+        e.u32(1);
+        e.u8(0xCC);
+        let mut d = Dec::new(&e.finish());
+        d.u32().unwrap();
+        assert!(d.done().is_err());
+    }
+
+    fn test_cuts() -> HistogramCuts {
+        HistogramCuts {
+            ptrs: vec![0, 3, 5],
+            values: vec![0.1, 0.5, 0.9, -1.0, 2.0],
+            min_vals: vec![0.0, -2.0],
+        }
+    }
+
+    fn test_page() -> EllpackPage {
+        let mut w = crate::ellpack::page::EllpackWriter::new(3, 2, 6, true);
+        w.push_row(&[0, 3]);
+        w.push_row(&[1, 4]);
+        w.push_row(&[2, 5]);
+        w.finish(7)
+    }
+
+    #[test]
+    fn setup_roundtrip() {
+        let msg = SetupMsg {
+            n_rows: 123,
+            cuts: test_cuts(),
+            skip_unsampled: true,
+            pages: vec![test_page()],
+        };
+        let got = SetupMsg::decode(&msg.encode()).unwrap();
+        assert_eq!(got.n_rows, 123);
+        assert!(got.skip_unsampled);
+        assert_eq!(got.cuts.ptrs, msg.cuts.ptrs);
+        assert_eq!(got.cuts.values, msg.cuts.values);
+        assert_eq!(got.cuts.min_vals, msg.cuts.min_vals);
+        assert_eq!(got.pages.len(), 1);
+        assert_eq!(got.pages[0].base_rowid, 7);
+        assert_eq!(got.pages[0].n_rows(), 3);
+    }
+
+    #[test]
+    fn round_begin_roundtrip_with_mask() {
+        let grads = vec![[1.0f32, 2.0], [-0.5, 1.0], [0.0, 0.0]];
+        for mask_len in [0usize, 3, 8, 9, 17] {
+            let mask: Vec<bool> = (0..mask_len).map(|i| i % 3 == 0).collect();
+            let buf = encode_round_begin(&grads, Some(&mask));
+            let (g, m) = decode_round_begin(&buf).unwrap();
+            assert_eq!(g, grads);
+            assert_eq!(m.unwrap(), mask, "mask_len={mask_len}");
+        }
+        let buf = encode_round_begin(&grads, None);
+        let (g, m) = decode_round_begin(&buf).unwrap();
+        assert_eq!(g, grads);
+        assert!(m.is_none());
+    }
+
+    #[test]
+    fn chunk_sweep_roundtrip() {
+        let mut tree = Tree::single_leaf(0.0);
+        tree.nodes[0].split_feature = 1;
+        tree.nodes[0].split_bin = 4;
+        tree.nodes[0].left = 1;
+        tree.nodes[0].right = 2;
+        tree.nodes.push(Node::leaf(0.25, 1.5, 3.0, 1));
+        tree.nodes.push(Node::leaf(-0.25, -1.5, 2.0, 1));
+        let buf = ChunkSweepMsg::encode_parts(&tree, &[1, 2], 1, 2, Some(0));
+        let msg = ChunkSweepMsg::decode(&buf).unwrap();
+        assert_eq!(msg.nodes.len(), 3);
+        assert_eq!(msg.nodes[0].left, 1);
+        assert_eq!(msg.nodes[1].weight, 0.25);
+        assert_eq!(msg.nodes[2].sum_grad, -1.5);
+        assert_eq!(msg.chunk, vec![1, 2]);
+        assert_eq!((msg.min_node, msg.max_node), (1, 2));
+        assert_eq!(msg.apply, Some(0));
+
+        let buf = ChunkSweepMsg::encode_parts(&tree, &[0], 0, 0, None);
+        assert_eq!(ChunkSweepMsg::decode(&buf).unwrap().apply, None);
+    }
+
+    #[test]
+    fn i64_roundtrip_and_length_check() {
+        let vals = vec![i64::MIN, -1, 0, 1, i64::MAX];
+        let buf = encode_i64s(&vals);
+        assert_eq!(decode_i64s(&buf).unwrap(), vals);
+        let mut out = vec![0i64; 5];
+        decode_i64s_into(&buf, &mut out).unwrap();
+        assert_eq!(out, vals);
+        let mut short = vec![0i64; 4];
+        assert!(decode_i64s_into(&buf, &mut short).is_err());
+    }
+
+    #[test]
+    fn corrupt_count_rejected_without_allocation() {
+        // A count far beyond the payload length must error cleanly.
+        let mut e = Enc::new();
+        e.u32(u32::MAX);
+        let buf = e.finish();
+        assert!(decode_i64s(&buf).is_err());
+        assert!(SetupMsg::decode(&buf).is_err());
+        assert!(ChunkSweepMsg::decode(&buf).is_err());
+        assert!(decode_round_begin(&buf).is_err());
+    }
+}

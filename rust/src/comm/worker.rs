@@ -1,0 +1,292 @@
+//! The socket worker: owns one shard's pages, serves histogram sweeps.
+//!
+//! A worker is purely reactive.  After `Hello`/`Setup` it sits in a
+//! frame loop: `RoundBegin` resets its row positions to the head's
+//! sample mask, each `ChunkSweep` replays the exact per-page
+//! sweep-and-quantize of `ShardedCpuBackend` over its own pages and
+//! answers with an `AllreducePart`, and `Shutdown` ends the session.
+//! Rounds the head skips entirely (empty sample selections grow a
+//! single-leaf tree without any sweep) simply never reach the worker —
+//! it keeps waiting on its read deadline for the next order.
+//!
+//! Determinism: the worker quantizes partials at page granularity with
+//! the same fixed-point scale as every other backend, and dead pages
+//! (no sampled rows) contribute nothing whether swept or skipped — so
+//! honoring `skip_unsampled` here is a pure perf knob, never a bits
+//! knob.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::sampling::SampleBitmap;
+use crate::tree::allreduce::quantize_add;
+use crate::tree::hist_cpu::process_rows;
+use crate::tree::model::Tree;
+use crate::tree::partitioner::RowPartitioner;
+
+use super::frame::FrameKind;
+use super::tcp::TcpWorkerComm;
+use super::wire::{decode_round_begin, ChunkSweepMsg, SetupMsg};
+use super::{CommCounters, Communicator};
+
+/// Serve one head session on `listener`: accept, handshake, stream
+/// sweeps until `Shutdown`.  Returns the worker's comm counters so the
+/// process front can report traffic.
+pub fn run_worker(listener: &TcpListener, timeout_ms: u64) -> Result<Arc<CommCounters>> {
+    let counters = Arc::new(CommCounters::default());
+    let comm = TcpWorkerComm::accept(listener, timeout_ms, Arc::clone(&counters))?;
+    let setup = SetupMsg::decode(&comm.expect(FrameKind::Setup)?)?;
+    serve(&comm, setup)?;
+    Ok(counters)
+}
+
+fn serve(comm: &TcpWorkerComm, setup: SetupMsg) -> Result<()> {
+    let SetupMsg { n_rows, cuts, skip_unsampled, pages } = setup;
+    let page_rows: Vec<(u64, usize)> =
+        pages.iter().map(|p| (p.base_rowid, p.n_rows())).collect();
+    for &(base, n) in &page_rows {
+        if base as usize + n > n_rows {
+            return Err(Error::comm(format!(
+                "setup page [{base}, {base}+{n}) exceeds {n_rows} rows"
+            )));
+        }
+    }
+    let total_bins = *cuts
+        .ptrs
+        .last()
+        .ok_or_else(|| Error::comm("setup carried empty cuts"))?
+        as usize;
+    let hist_len_per_node = total_bins * 2;
+
+    // Positions are globally indexed (page `base_rowid`s are global row
+    // ids) so one full-size vector serves whatever subset of rows this
+    // shard actually holds; foreign rows just never get touched.
+    let mut positions = vec![0u32; n_rows];
+    let mut grads: Vec<[f32; 2]> = Vec::new();
+    let mut bitmap: Option<SampleBitmap> = None;
+    let mut tree = Tree::default();
+    let mut slot_of: Vec<i32> = Vec::new();
+    let mut page_hist: Vec<f32> = Vec::new();
+    let mut acc: Vec<i64> = Vec::new();
+
+    loop {
+        let frame = comm.recv()?;
+        match frame.kind {
+            FrameKind::RoundBegin => {
+                let (g, mask) = decode_round_begin(&frame.payload)?;
+                if g.len() != n_rows {
+                    return Err(Error::comm(format!(
+                        "round carried {} gradients for {n_rows} rows",
+                        g.len()
+                    )));
+                }
+                match &mask {
+                    Some(m) => {
+                        for (p, live) in positions.iter_mut().zip(m) {
+                            *p = if *live { 0 } else { RowPartitioner::INACTIVE };
+                        }
+                    }
+                    None => positions.iter_mut().for_each(|p| *p = 0),
+                }
+                bitmap = match &mask {
+                    Some(m) if skip_unsampled => {
+                        Some(SampleBitmap::from_mask(m, &page_rows))
+                    }
+                    _ => None,
+                };
+                grads = g;
+            }
+            FrameKind::ChunkSweep => {
+                if grads.len() != n_rows {
+                    return Err(Error::comm("chunk sweep before any round begin"));
+                }
+                let msg = ChunkSweepMsg::decode(&frame.payload)?;
+                slot_of.clear();
+                slot_of.resize(msg.max_node - msg.min_node + 1, -1);
+                for (slot, node) in msg.chunk.iter().enumerate() {
+                    let i = (*node as usize)
+                        .checked_sub(msg.min_node)
+                        .filter(|i| *i < slot_of.len())
+                        .ok_or_else(|| {
+                            Error::comm(format!(
+                                "chunk node {node} outside active range [{}, {}]",
+                                msg.min_node, msg.max_node
+                            ))
+                        })?;
+                    slot_of[i] = slot as i32;
+                }
+                tree.nodes = msg.nodes;
+                let hist_len = msg.chunk.len() * hist_len_per_node;
+                acc.clear();
+                acc.resize(hist_len, 0);
+                for (idx, page) in pages.iter().enumerate() {
+                    // Dead pages hold only INACTIVE rows: sweeping them
+                    // is a no-op, so skipping is bit-free (see module
+                    // docs).
+                    if let Some(b) = &bitmap {
+                        if !b.is_live(idx) {
+                            continue;
+                        }
+                    }
+                    page_hist.clear();
+                    page_hist.resize(hist_len, 0.0);
+                    let base = page.base_rowid as usize;
+                    let n = page.n_rows();
+                    process_rows(
+                        page,
+                        &mut positions[base..base + n],
+                        0,
+                        base,
+                        &grads,
+                        &tree,
+                        &cuts,
+                        msg.apply,
+                        msg.min_node,
+                        msg.max_node,
+                        &slot_of,
+                        hist_len_per_node,
+                        &mut page_hist,
+                    );
+                    quantize_add(&page_hist, &mut acc);
+                }
+                comm.contribute_i64(&acc)?;
+                // The head evaluates splits; the reduced histogram is
+                // read back only to keep the frame sequence in lockstep.
+                comm.reduced_i64(&mut acc)?;
+            }
+            FrameKind::Shutdown => return Ok(()),
+            other => {
+                return Err(Error::comm(format!(
+                    "unexpected `{}` frame in worker serve loop",
+                    other.name()
+                )))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::tcp::TcpFleet;
+    use crate::comm::wire::encode_round_begin;
+    use crate::ellpack::EllpackPage;
+    use crate::sketch::HistogramCuts;
+    use crate::tree::allreduce::dequantize_into;
+    use crate::tree::evaluator::evaluate_node;
+    use crate::tree::model::Node;
+    use crate::tree::param::TreeParams;
+
+    /// One 8-row, 1-feature page with 4 cut bins (values 0..=3 cycling).
+    fn tiny_setup() -> SetupMsg {
+        let cuts = HistogramCuts {
+            ptrs: vec![0, 4],
+            values: vec![0.5, 1.5, 2.5, 3.5],
+            min_vals: vec![-1.0],
+        };
+        // n_symbols = 5: symbols 0..=3 are the cut bins, 4 is null.
+        let mut w = crate::ellpack::page::EllpackWriter::new(8, 1, 5, true);
+        for r in 0..8u32 {
+            w.push_row(&[r % 4]);
+        }
+        SetupMsg { n_rows: 8, cuts, skip_unsampled: true, pages: vec![w.finish(0)] }
+    }
+
+    fn root_tree() -> Tree {
+        let mut t = Tree::default();
+        t.nodes.push(Node::leaf(0.0, 8.0, 8.0, 0));
+        t
+    }
+
+    #[test]
+    fn worker_serves_a_root_sweep() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let worker = std::thread::spawn(move || run_worker(&listener, 5_000));
+
+        let counters = Arc::new(CommCounters::default());
+        let mut fleet = TcpFleet::connect(&[addr], 5_000, counters).unwrap();
+        let setup = tiny_setup();
+        let cuts = setup.cuts.clone();
+        fleet.setup(&[setup.encode()]).unwrap();
+
+        let grads: Vec<[f32; 2]> = (0..8).map(|r| [(r % 4) as f32 - 1.5, 1.0]).collect();
+        fleet.round_begin(&encode_round_begin(&grads, None)).unwrap();
+        let tree = root_tree();
+        let sweep = ChunkSweepMsg::encode_parts(&tree, &[0], 0, 0, None);
+        let mut reduced = vec![0i64; 8];
+        fleet.sweep_allreduce(&sweep, &mut reduced).unwrap();
+        fleet.shutdown().unwrap();
+        let wc = worker.join().unwrap().unwrap();
+        assert!(wc.snapshot().bytes_sent > 0);
+
+        let mut hist = Vec::new();
+        dequantize_into(&reduced, &mut hist);
+        // Two rows per bin: (g, h) pairs per cut bin.
+        assert_eq!(hist, vec![-3.0, 2.0, -1.0, 2.0, 1.0, 2.0, 3.0, 2.0]);
+        // And the histogram evaluates like any in-process one.
+        let params = TreeParams::default();
+        let cand = evaluate_node(
+            &hist,
+            &cuts,
+            (0.0, 8.0),
+            params.lambda,
+            params.gamma,
+            params.min_child_weight,
+        );
+        assert!(cand.gain > 0.0);
+    }
+
+    #[test]
+    fn masked_round_only_counts_live_rows() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let worker = std::thread::spawn(move || run_worker(&listener, 5_000));
+
+        let counters = Arc::new(CommCounters::default());
+        let mut fleet = TcpFleet::connect(&[addr], 5_000, counters).unwrap();
+        fleet.setup(&[tiny_setup().encode()]).unwrap();
+
+        let grads: Vec<[f32; 2]> = (0..8).map(|_| [1.0, 1.0]).collect();
+        let mask: Vec<bool> = (0..8).map(|r| r < 2).collect();
+        fleet
+            .round_begin(&encode_round_begin(&grads, Some(&mask)))
+            .unwrap();
+        let tree = root_tree();
+        let sweep = ChunkSweepMsg::encode_parts(&tree, &[0], 0, 0, None);
+        let mut reduced = vec![0i64; 8];
+        fleet.sweep_allreduce(&sweep, &mut reduced).unwrap();
+        fleet.shutdown().unwrap();
+        worker.join().unwrap().unwrap();
+
+        let mut hist = Vec::new();
+        dequantize_into(&reduced, &mut hist);
+        // Only rows 0 and 1 (bins 0 and 1) are live.
+        assert_eq!(hist, vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn sweep_before_round_is_an_error_not_a_hang() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let worker = std::thread::spawn(move || run_worker(&listener, 2_000));
+
+        let counters = Arc::new(CommCounters::default());
+        let mut fleet = TcpFleet::connect(&[addr], 2_000, counters).unwrap();
+        fleet.setup(&[tiny_setup().encode()]).unwrap();
+        let tree = root_tree();
+        let sweep = ChunkSweepMsg::encode_parts(&tree, &[0], 0, 0, None);
+        let mut reduced = vec![0i64; 8];
+        // The worker rejects the orphan sweep and exits with an error;
+        // the head sees its connection die instead of hanging.
+        let err = fleet.sweep_allreduce(&sweep, &mut reduced).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("closed") || msg.contains("timed out"),
+            "unexpected error: {msg}"
+        );
+        let werr = worker.join().unwrap().unwrap_err();
+        assert!(werr.to_string().contains("before any round"), "{werr}");
+    }
+}

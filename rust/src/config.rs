@@ -9,6 +9,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::comm::CommBackend;
 use crate::error::{Error, Result};
 use crate::page::codec::PageCodec;
 use crate::util::json::Value;
@@ -141,6 +142,20 @@ pub struct TrainConfig {
     /// follow the fleet size, so that mode is learning-equivalent
     /// across shard counts, not bit-equivalent.
     pub n_shards: usize,
+    /// How the sharded fleet communicates: `local` (sequential,
+    /// in-process — the default), `threaded` (one OS thread per
+    /// shard), or `tcp` (head + socket worker processes; requires
+    /// `worker_addrs`).  All three produce bit-identical models — the
+    /// histogram allreduce is exact fixed-point (`tree/allreduce.rs`),
+    /// so the transport cannot show up in the bits.
+    pub comm_backend: CommBackend,
+    /// Worker addresses (`host:port`), one per shard, for
+    /// `comm_backend=tcp`.  Rank = position in the list.
+    pub worker_addrs: Vec<String>,
+    /// Read deadline and connect timeout for comm backends, in
+    /// milliseconds.  A slow or dead peer surfaces as a comm error
+    /// after this long instead of a hang.
+    pub comm_timeout_ms: u64,
     /// Simulated device memory budget in bytes (per shard when
     /// sharding).
     pub device_memory_bytes: u64,
@@ -229,6 +244,9 @@ impl Default for TrainConfig {
             mvs_lambda: None,
             mode: ExecMode::CpuInCore,
             n_shards: 0,
+            comm_backend: CommBackend::Local,
+            worker_addrs: Vec::new(),
+            comm_timeout_ms: 30_000,
             device_memory_bytes: 256 * 1024 * 1024,
             page_size_bytes: 32 * 1024 * 1024,
             page_codec: PageCodec::BitPack,
@@ -320,6 +338,16 @@ impl TrainConfig {
             }
             "mode" => self.mode = ExecMode::parse(v)?,
             "n_shards" => self.n_shards = pf(key, v)?,
+            "comm_backend" => self.comm_backend = CommBackend::parse(v)?,
+            "worker_addrs" => {
+                self.worker_addrs = v
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|a| !a.is_empty())
+                    .map(String::from)
+                    .collect()
+            }
+            "comm_timeout_ms" => self.comm_timeout_ms = pf(key, v)?,
             "device_memory_bytes" => self.device_memory_bytes = pf(key, v)?,
             "device_memory_mb" => {
                 self.device_memory_bytes = pf::<u64>(key, v)? * 1024 * 1024
@@ -407,6 +435,37 @@ impl TrainConfig {
         if self.n_shards > 256 {
             return Err(Error::config("n_shards must be <= 256"));
         }
+        if self.comm_backend != CommBackend::Local {
+            if self.n_shards == 0 {
+                return Err(Error::config(
+                    "comm_backend=threaded/tcp requires n_shards >= 1",
+                ));
+            }
+            if self.mode.is_device() {
+                return Err(Error::config(
+                    "comm_backend=threaded/tcp drives the CPU sharded sweep; \
+                     device modes use comm_backend=local",
+                ));
+            }
+        }
+        if self.comm_backend == CommBackend::Tcp
+            && self.worker_addrs.len() != self.n_shards
+        {
+            return Err(Error::config(format!(
+                "comm_backend=tcp needs one worker address per shard \
+                 ({} addrs for {} shards)",
+                self.worker_addrs.len(),
+                self.n_shards
+            )));
+        }
+        if self.comm_backend != CommBackend::Tcp && !self.worker_addrs.is_empty() {
+            return Err(Error::config(
+                "worker_addrs is only meaningful with comm_backend=tcp",
+            ));
+        }
+        if self.comm_timeout_ms == 0 {
+            return Err(Error::config("comm_timeout_ms must be >= 1"));
+        }
         if self.page_cache_bytes > 0 && self.page_cache_bytes >= self.device_memory_bytes
         {
             return Err(Error::config(
@@ -457,6 +516,9 @@ impl TrainConfig {
         m.insert("subsample".into(), num(self.subsample as f64));
         m.insert("mode".into(), s(self.mode.name()));
         m.insert("n_shards".into(), num(self.n_shards as f64));
+        m.insert("comm_backend".into(), s(self.comm_backend.name()));
+        m.insert("worker_addrs".into(), s(&self.worker_addrs.join(",")));
+        m.insert("comm_timeout_ms".into(), num(self.comm_timeout_ms as f64));
         m.insert(
             "device_memory_bytes".into(),
             num(self.device_memory_bytes as f64),
@@ -641,6 +703,60 @@ mod tests {
         assert_eq!(cfg.sampling_method, SamplingMethod::Mvs);
         assert_eq!(cfg.subsample, 0.3);
         assert_eq!(cfg.device_memory_bytes, 64 * 1024 * 1024);
+    }
+
+    #[test]
+    fn comm_backend_keys_parse_and_gate() {
+        let cfg = TrainConfig::load(
+            None,
+            &[
+                "comm_backend=threaded".into(),
+                "n_shards=2".into(),
+                "comm_timeout_ms=500".into(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.comm_backend, CommBackend::Threaded);
+        assert_eq!(cfg.comm_timeout_ms, 500);
+
+        let cfg = TrainConfig::load(
+            None,
+            &[
+                "comm_backend=tcp".into(),
+                "n_shards=2".into(),
+                "worker_addrs=127.0.0.1:7001, 127.0.0.1:7002".into(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.worker_addrs, ["127.0.0.1:7001", "127.0.0.1:7002"]);
+
+        // threaded/tcp need shards…
+        assert!(TrainConfig::load(None, &["comm_backend=threaded".into()]).is_err());
+        // …tcp needs one address per shard…
+        assert!(TrainConfig::load(
+            None,
+            &["comm_backend=tcp".into(), "n_shards=2".into()]
+        )
+        .is_err());
+        // …addresses without tcp are a mistake…
+        assert!(TrainConfig::load(
+            None,
+            &["worker_addrs=127.0.0.1:7001".into(), "n_shards=1".into()]
+        )
+        .is_err());
+        // …device modes keep the local transport…
+        assert!(TrainConfig::load(
+            None,
+            &[
+                "comm_backend=threaded".into(),
+                "n_shards=2".into(),
+                "mode=device".into()
+            ]
+        )
+        .is_err());
+        // …and nonsense names are rejected.
+        assert!(TrainConfig::load(None, &["comm_backend=carrier-pigeon".into()])
+            .is_err());
     }
 
     #[test]

@@ -24,10 +24,11 @@
 //!   exact f32 accumulation order, one tree at a time).
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::boosting::{GbtModel, Metric, Objective};
+use crate::comm::{CommBackend, CommCounters, NullSource, TcpFleet, TcpHeadBackend};
 use crate::config::ExecMode;
 use crate::coordinator::modes::{self, SweepControl, TrainData};
 use crate::coordinator::session::{TrainOutcome, TrainSession};
@@ -42,7 +43,7 @@ use crate::tree::{
     hist_cpu::CpuHistBackend,
     hist_device::DeviceHistBackend,
     partitioner::RowPartitioner,
-    sharded::{ShardedCpuBackend, ShardedDeviceBackend},
+    sharded::{ShardedCpuBackend, ShardedDeviceBackend, ThreadedCpuBackend},
     source::{
         cached_h2d_hook, h2d_staging_hook, DiskStream, InMemorySource, MemoryStream,
         StreamSource,
@@ -92,18 +93,55 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
         }
     }
     let _shard_row_buffers = shard_row_buffers;
+    // Every sharded reduction funnels through one counter block,
+    // whichever transport carries it (surfaced as `comm_stats`).
+    let comm_counters = Arc::new(CommCounters::default());
+    // The TCP fleet outlives the backend borrow: the loop shuts it
+    // down (best-effort) after the last round.
+    let mut tcp_fleet: Option<Arc<Mutex<TcpFleet>>> = None;
     let mut backend: Box<dyn HistBackend> = match (&session.device, &plan) {
-        (Some(dev), Some(_)) => Box::new(ShardedDeviceBackend::new(
-            dev.rt.clone(),
-            dev.shards.clone().expect("sharded device setup"),
-            cfg.max_bin,
-        )?),
+        (Some(dev), Some(_)) => Box::new(
+            ShardedDeviceBackend::new(
+                dev.rt.clone(),
+                dev.shards.clone().expect("sharded device setup"),
+                cfg.max_bin,
+            )?
+            .with_counters(Arc::clone(&comm_counters)),
+        ),
         (Some(dev), None) => Box::new(DeviceHistBackend::new(
             dev.rt.clone(),
             dev.ctx.clone(),
             cfg.max_bin,
         )?),
-        (None, Some(_)) => Box::new(ShardedCpuBackend::new()),
+        (None, Some(plan)) => match cfg.comm_backend {
+            CommBackend::Local => Box::new(
+                ShardedCpuBackend::new().with_counters(Arc::clone(&comm_counters)),
+            ),
+            CommBackend::Threaded => Box::new(
+                ThreadedCpuBackend::new(cfg.comm_timeout_ms)
+                    .with_counters(Arc::clone(&comm_counters)),
+            ),
+            CommBackend::Tcp => {
+                // Connect + handshake the worker fleet, then ship each
+                // worker its shard's pages once.  The head keeps model,
+                // sampler, margins, and eval; workers keep the data.
+                let mut fleet = TcpFleet::connect(
+                    &cfg.worker_addrs,
+                    cfg.comm_timeout_ms,
+                    Arc::clone(&comm_counters),
+                )?;
+                fleet.setup(&modes::tcp_setup_msgs(
+                    &session.data,
+                    plan,
+                    &session.cuts,
+                    &cfg,
+                    n_rows,
+                )?)?;
+                let fleet = Arc::new(Mutex::new(fleet));
+                tcp_fleet = Some(Arc::clone(&fleet));
+                Box::new(TcpHeadBackend::new(fleet))
+            }
+        },
         (None, None) => Box::new(CpuHistBackend::new(cfg.threads())),
     };
     // One control block for every sweep this run opens: a shared depth
@@ -120,18 +158,27 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
     } else {
         None
     };
-    let mut persistent_source: Option<Box<dyn EllpackSource>> = match &plan {
-        Some(plan) => modes::open_sharded_source(
-            &session.data,
-            plan,
-            session.device.as_ref(),
-            &cfg,
-            &ctl,
-        )?
-        .map(|s| Box::new(s) as Box<dyn EllpackSource>),
-        None => {
-            modes::open_source(&session.data, session.device.as_ref(), &cfg, n_rows, &ctl)?
-                .map(|s| Box::new(s) as Box<dyn EllpackSource>)
+    let mut persistent_source: Option<Box<dyn EllpackSource>> = if tcp_fleet.is_some() {
+        // The workers own the pages; the head's source yields none.
+        Some(Box::new(NullSource::new(n_rows)))
+    } else {
+        match &plan {
+            Some(plan) => modes::open_sharded_source(
+                &session.data,
+                plan,
+                session.device.as_ref(),
+                &cfg,
+                &ctl,
+            )?
+            .map(|s| Box::new(s) as Box<dyn EllpackSource>),
+            None => modes::open_source(
+                &session.data,
+                session.device.as_ref(),
+                &cfg,
+                n_rows,
+                &ctl,
+            )?
+            .map(|s| Box::new(s) as Box<dyn EllpackSource>),
         }
     };
 
@@ -321,6 +368,12 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
         );
     }
     drop(eval_worker);
+    // Release the worker fleet.  Best-effort: a worker that already
+    // died mid-run shouldn't turn a finished model into an error.
+    if let Some(fleet) = &tcp_fleet {
+        let mut fleet = fleet.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = fleet.shutdown();
+    }
     let train_seconds = sw_total.elapsed_secs();
 
     let (link_stats, compute_stats, mem_peak, mem_capacity) = match &session.device {
@@ -381,6 +434,7 @@ pub(crate) fn run(mut session: TrainSession) -> Result<TrainOutcome> {
         pages_read: ctl.skip.pages_read(),
         pages_skipped: ctl.skip.pages_skipped(),
         rows_skipped: ctl.skip.rows_skipped(),
+        comm_stats: plan.as_ref().map(|_| comm_counters.snapshot()),
     })
 }
 

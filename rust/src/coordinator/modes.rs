@@ -471,7 +471,61 @@ pub(crate) fn open_sharded_source(
             )))
         }
     }
-    Ok(Some(ShardedSource::new(shards)))
+    Ok(Some(
+        ShardedSource::new(shards)
+            .with_ranges((0..n).map(|s| plan.range(s)).collect()),
+    ))
+}
+
+/// Per-shard `Setup` payloads for the TCP fleet: worker `s` receives
+/// its shard's pages (global `base_rowid`s intact), the shared cut set,
+/// and the page-skip knob.  In-core runs clone from the shared host
+/// pages; out-of-core runs drain the page file once through a
+/// prefetcher, routing each page to its plan shard.
+pub(crate) fn tcp_setup_msgs(
+    data: &TrainData,
+    plan: &ShardPlan,
+    cuts: &crate::sketch::HistogramCuts,
+    cfg: &TrainConfig,
+    n_rows: usize,
+) -> Result<Vec<Vec<u8>>> {
+    let n = plan.n_shards();
+    let mut per_shard: Vec<Vec<EllpackPage>> = (0..n).map(|_| Vec::new()).collect();
+    match data {
+        TrainData::HostPages(pages) => {
+            for s in 0..n {
+                per_shard[s] = plan
+                    .pages_of(s)
+                    .iter()
+                    .map(|&i| (*pages[i]).clone())
+                    .collect();
+            }
+        }
+        TrainData::Disk(file) => {
+            let mut shard_of_page = vec![0usize; file.n_pages()];
+            for s in 0..n {
+                for &p in plan.pages_of(s) {
+                    shard_of_page[p] = s;
+                }
+            }
+            let rx = Prefetcher::start(file.as_ref(), cfg.prefetch_depth)?;
+            for (idx, page) in rx.enumerate() {
+                per_shard[shard_of_page[idx]].push(page?);
+            }
+        }
+    }
+    Ok(per_shard
+        .into_iter()
+        .map(|pages| {
+            crate::comm::wire::SetupMsg {
+                n_rows,
+                cuts: cuts.clone(),
+                skip_unsampled: cfg.skip_unsampled_pages,
+                pages,
+            }
+            .encode()
+        })
+        .collect())
 }
 
 /// One hooked sweep for Algorithm 7's per-round compaction: every page

@@ -78,6 +78,11 @@ pub struct TrainOutcome {
     /// (`skip_unsampled_pages`, `sampling/bitmap.rs`).
     pub pages_skipped: u64,
     pub rows_skipped: u64,
+    /// Fleet communication accounting (bytes moved, allreduce rounds,
+    /// retries, timeouts), when the run used a sharded sweep.  The
+    /// Local transport legitimately reports zero bytes — nothing
+    /// crosses an address space.
+    pub comm_stats: Option<crate::comm::CommStats>,
 }
 
 impl TrainSession {

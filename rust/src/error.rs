@@ -50,6 +50,10 @@ pub enum Error {
 
     /// Corrupt or truncated page file.
     PageStore(String),
+
+    /// Distributed-training transport failure (framing, handshake,
+    /// timeout, desync) — see [`crate::comm`].
+    Comm(String),
 }
 
 impl fmt::Display for Error {
@@ -68,6 +72,7 @@ impl fmt::Display for Error {
                 write!(f, "json error at byte {offset}: {msg}")
             }
             Error::PageStore(msg) => write!(f, "page store error: {msg}"),
+            Error::Comm(msg) => write!(f, "comm error: {msg}"),
         }
     }
 }
@@ -108,6 +113,11 @@ impl Error {
     /// Shorthand constructor for config errors.
     pub fn config(msg: impl Into<String>) -> Self {
         Error::Config(msg.into())
+    }
+
+    /// Shorthand constructor for comm/transport errors.
+    pub fn comm(msg: impl Into<String>) -> Self {
+        Error::Comm(msg.into())
     }
 }
 

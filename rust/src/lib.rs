@@ -37,6 +37,7 @@
 //! ```
 
 pub mod boosting;
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;

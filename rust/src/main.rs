@@ -51,6 +51,8 @@ fn main() -> ExitCode {
 fn run(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
         Some("train") => cmd_train(&args[1..]),
+        Some("head") => cmd_head(&args[1..]),
+        Some("worker") => cmd_worker(&args[1..]),
         Some("datagen") => cmd_datagen(&args[1..]),
         Some("predict") => cmd_predict(&args[1..]),
         Some("score") => cmd_score(&args[1..]),
@@ -73,6 +75,8 @@ USAGE:
   oocgb train   [--config cfg.json] [--data FILE --format libsvm|csv]
                 [--synthetic higgs|classification --rows N --cols N]
                 [--model-out model.json] [key=value ...]
+  oocgb head    --workers host:port,host:port [train args ...]
+  oocgb worker  [--listen 127.0.0.1:0] [--timeout-ms 30000] [--once]
   oocgb datagen --kind higgs|classification --rows N [--cols N]
                 --out FILE [--format libsvm|csv] [--seed N]
   oocgb predict --model model.json|model.bin --data FILE
@@ -92,8 +96,13 @@ Common train keys: mode=cpu|cpu-ooc|device|naive-ooc|device-ooc,
   sampling_method=none|uniform|goss|mvs, f=0.3, n_rounds=100, max_depth=8,
   eta=0.1, max_bin=64, device_memory_mb=256, eval_fraction=0.05,
   n_shards=4 (0 = unsharded; >=1 shards pages across simulated devices
-  with histogram allreduce), verbose=true.  See DESIGN.md for the full
-  list.
+  with histogram allreduce), comm_backend=local|threaded|tcp,
+  verbose=true.  See DESIGN.md for the full list.
+
+`head` is `train` over a real socket fleet: start one `worker` per
+shard (each prints the address it listens on), then point `head
+--workers` at them.  All three comm backends train bit-identical
+models.
 ";
 
 /// Tiny flag parser: `--key value` pairs + positional `key=value`
@@ -199,6 +208,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.subsample,
     );
     let model_out = flags.get("model-out").map(PathBuf::from);
+    let comm_backend = cfg.comm_backend.name();
     let session = TrainSession::from_memory(data, cfg)?;
     let outcome = session.train()?;
 
@@ -229,6 +239,19 @@ fn cmd_train(args: &[String]) -> Result<()> {
             outcome.pages_read, outcome.pages_skipped, outcome.rows_skipped
         );
     }
+    if let Some(c) = &outcome.comm_stats {
+        eprintln!(
+            "comm[{}]: {} sent, {} recv, {} allreduce rounds, {} broadcasts, \
+             {} retries, {} timeouts",
+            comm_backend,
+            fmt_bytes(c.bytes_sent),
+            fmt_bytes(c.bytes_recv),
+            c.allreduce_rounds,
+            c.broadcasts,
+            c.retries,
+            c.timeouts
+        );
+    }
     if let Some(path) = model_out {
         if path.extension().and_then(|e| e.to_str()) == Some("bin") {
             save_bundle(&path, &outcome.model, Some(&*outcome.cuts))?;
@@ -238,6 +261,87 @@ fn cmd_train(args: &[String]) -> Result<()> {
         eprintln!("model written to {}", path.display());
     }
     Ok(())
+}
+
+/// `head` — `train` against a real socket fleet: strips `--workers`,
+/// re-enters `cmd_train` with the tcp comm overrides appended (rank =
+/// position in the worker list).
+fn cmd_head(args: &[String]) -> Result<()> {
+    let mut rest: Vec<String> = Vec::with_capacity(args.len());
+    let mut workers: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--workers" {
+            let v = args
+                .get(i + 1)
+                .ok_or_else(|| Error::config("--workers needs a value"))?;
+            workers = Some(v.clone());
+            i += 2;
+        } else {
+            rest.push(args[i].clone());
+            i += 1;
+        }
+    }
+    let workers =
+        workers.ok_or_else(|| Error::config("head requires --workers host:port,..."))?;
+    let n_shards = workers.split(',').filter(|a| !a.trim().is_empty()).count();
+    if n_shards == 0 {
+        return Err(Error::config("--workers needs at least one address"));
+    }
+    rest.push("comm_backend=tcp".into());
+    rest.push(format!("worker_addrs={workers}"));
+    rest.push(format!("n_shards={n_shards}"));
+    cmd_train(&rest)
+}
+
+/// `worker` — serve one shard of a tcp fleet.  Prints the bound
+/// address on stdout (so scripts can collect ephemeral ports), then
+/// accepts head sessions until killed, or exactly one with `--once`.
+fn cmd_worker(args: &[String]) -> Result<()> {
+    use std::io::Write;
+    // `--once` is a bare flag; everything else is `--key value`.
+    let mut once = false;
+    let filtered: Vec<String> = args
+        .iter()
+        .filter(|a| {
+            if *a == "--once" {
+                once = true;
+                false
+            } else {
+                true
+            }
+        })
+        .cloned()
+        .collect();
+    let flags = Flags::parse(&filtered)?;
+    let listen = flags.get("listen").unwrap_or("127.0.0.1:0");
+    let timeout_ms: u64 = flags
+        .get("timeout-ms")
+        .unwrap_or("30000")
+        .parse()
+        .map_err(|_| Error::config("bad --timeout-ms"))?;
+    let listener = std::net::TcpListener::bind(listen)
+        .map_err(|e| Error::comm(format!("cannot listen on {listen}: {e}")))?;
+    let addr = listener.local_addr()?;
+    println!("worker listening on {addr}");
+    std::io::stdout().flush().ok();
+    loop {
+        match oocgb::comm::run_worker(&listener, timeout_ms) {
+            Ok(counters) => {
+                let c = counters.snapshot();
+                eprintln!(
+                    "session done: {} sent, {} recv, {} allreduce rounds",
+                    fmt_bytes(c.bytes_sent),
+                    fmt_bytes(c.bytes_recv),
+                    c.allreduce_rounds
+                );
+            }
+            Err(e) => eprintln!("session failed: {e}"),
+        }
+        if once {
+            return Ok(());
+        }
+    }
 }
 
 fn cmd_datagen(args: &[String]) -> Result<()> {

@@ -39,5 +39,5 @@ pub use builder::TreeBuilder;
 pub use evaluator::SplitCandidate;
 pub use model::{Node, Tree};
 pub use param::TreeParams;
-pub use sharded::{ShardedCpuBackend, ShardedDeviceBackend};
+pub use sharded::{ShardedCpuBackend, ShardedDeviceBackend, ThreadedCpuBackend};
 pub use source::{EllpackSource, InMemorySource, PageStream, ShardedSource, StreamSource};

@@ -12,9 +12,18 @@
 //! cross-page/cross-shard reduction is exact integer addition, the
 //! grown model is bit-identical for every shard count over the same
 //! page set (`rust/tests/sharding.rs` proves N ∈ {1, 2, 4} identity).
+//!
+//! All reductions flow through a [`Communicator`]: the sequential
+//! backends drive an in-process [`LocalComm`](crate::comm::LocalComm)
+//! fleet, and
+//! [`ThreadedCpuBackend`] runs one OS thread per shard rendezvousing
+//! through [`ThreadComm`](crate::comm::ThreadComm).  Exactness of the
+//! i64 reduction is what makes the choice of transport invisible in
+//! the bits (`rust/tests/comm.rs` proves cross-backend identity).
 
 use std::sync::Arc;
 
+use crate::comm::{local_fleet, threaded_fleet, CommCounters, Communicator};
 use crate::device::ShardedDevice;
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
@@ -37,12 +46,97 @@ fn require_sharded<'a>(
     })
 }
 
+/// One shard's chunk sweep: every page's partial histogram quantized
+/// into the shard's fixed-point accumulator `acc`, positions updated in
+/// place.  `positions` may be the full row-position array
+/// (`shard_start` 0) or just this shard's disjoint slice
+/// (`shard_start` = the shard's first global row); page `base_rowid`s
+/// are global either way.  This is the unit of work a [`Communicator`]
+/// rank contributes — the CPU backends all funnel through it so the
+/// swept bits cannot drift between transports.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sweep_shard_chunk(
+    source: &mut crate::tree::source::StreamSource,
+    shard_start: u64,
+    positions: &mut [u32],
+    grads: &[[f32; 2]],
+    tree: &Tree,
+    cuts: &HistogramCuts,
+    apply: Option<usize>,
+    min_node: usize,
+    max_node: usize,
+    slot_of: &[i32],
+    hist_len_per_node: usize,
+    page_hist: &mut Vec<f32>,
+    acc: &mut [i64],
+) -> Result<()> {
+    let hist_len = acc.len();
+    source.for_each_page(&mut |page| {
+        // Page-granular partials: pages don't change with the shard
+        // count, so quantizing here makes the reduction
+        // sharding-invariant (see allreduce.rs).
+        page_hist.clear();
+        page_hist.resize(hist_len, 0.0);
+        let base = page.base_rowid as usize;
+        let local = (page.base_rowid - shard_start) as usize;
+        let n = page.n_rows();
+        process_rows(
+            page,
+            &mut positions[local..local + n],
+            0,
+            base,
+            grads,
+            tree,
+            cuts,
+            apply,
+            min_node,
+            max_node,
+            slot_of,
+            hist_len_per_node,
+            page_hist,
+        );
+        allreduce::quantize_add(page_hist, acc);
+        Ok(())
+    })
+}
+
+/// Shared split-evaluation tail: dequantize the reduced chunk histogram
+/// and score every chunk node.
+#[allow(clippy::too_many_arguments)]
+fn evaluate_chunk_slots(
+    reduced: &[i64],
+    level_hist: &mut Vec<f32>,
+    chunk: &[u32],
+    chunk_total_base: usize,
+    totals: &[(f64, f64)],
+    cuts: &HistogramCuts,
+    params: &TreeParams,
+    hist_len_per_node: usize,
+    out: &mut Vec<SplitCandidate>,
+) {
+    allreduce::dequantize_into(reduced, level_hist);
+    for (slot, _node) in chunk.iter().enumerate() {
+        let hist =
+            &level_hist[slot * hist_len_per_node..(slot + 1) * hist_len_per_node];
+        let total = totals[chunk_total_base + slot];
+        out.push(evaluate_node(
+            hist,
+            cuts,
+            total,
+            params.lambda,
+            params.gamma,
+            params.min_child_weight,
+        ));
+    }
+}
+
 /// CPU fan-out backend: one single-threaded partial-histogram pass per
 /// shard (sharding, not threads, is the parallel axis), exact
 /// allreduce, host split evaluation.
 pub struct ShardedCpuBackend {
     /// Max nodes per histogram allocation (wide levels are chunked).
     chunk_nodes: usize,
+    counters: Arc<CommCounters>,
     // Reused buffers.
     page_hist: Vec<f32>,
     shard_acc: Vec<i64>,
@@ -54,6 +148,7 @@ impl ShardedCpuBackend {
     pub fn new() -> ShardedCpuBackend {
         ShardedCpuBackend {
             chunk_nodes: 64,
+            counters: Arc::new(CommCounters::default()),
             page_hist: Vec::new(),
             shard_acc: Vec::new(),
             reduced: Vec::new(),
@@ -64,6 +159,13 @@ impl ShardedCpuBackend {
     /// Override the node-chunk width (ablation).
     pub fn with_chunk_nodes(mut self, chunk: usize) -> Self {
         self.chunk_nodes = chunk.max(1);
+        self
+    }
+
+    /// Share the training run's comm counters (surfaced in
+    /// `TrainOutcome::comm_stats`).
+    pub fn with_counters(mut self, counters: Arc<CommCounters>) -> Self {
+        self.counters = counters;
         self
     }
 }
@@ -89,6 +191,9 @@ impl HistBackend for ShardedCpuBackend {
         totals: &[(f64, f64)],
     ) -> Result<Vec<SplitCandidate>> {
         let sharded = require_sharded(source)?;
+        // Sequential driver: shard s contributes round after round on
+        // its own fleet handle, and any handle pops the completed FIFO.
+        let fleet = local_fleet(sharded.n_shards(), Arc::clone(&self.counters));
         let total_bins = *cuts.ptrs.last().unwrap() as usize;
         let hist_len_per_node = total_bins * 2;
         let mut out = Vec::with_capacity(active.len());
@@ -111,60 +216,215 @@ impl HistBackend for ShardedCpuBackend {
             // applying on every shard's first sweep touches each row
             // exactly once.
             let apply = if first_sweep { apply_level } else { None };
-            let slot_ref = &slot_of;
 
             for s in 0..sharded.n_shards() {
                 self.shard_acc.clear();
                 self.shard_acc.resize(hist_len, 0);
-                let page_hist = &mut self.page_hist;
-                let shard_acc = &mut self.shard_acc;
-                sharded.shard_sources_mut()[s].for_each_page(&mut |page| {
-                    // Page-granular partials: pages don't change with
-                    // the shard count, so quantizing here makes the
-                    // reduction sharding-invariant (see allreduce.rs).
-                    page_hist.clear();
-                    page_hist.resize(hist_len, 0.0);
-                    let base = page.base_rowid as usize;
-                    let n = page.n_rows();
-                    let positions = partitioner.positions_mut();
-                    process_rows(
-                        page,
-                        &mut positions[base..base + n],
-                        0,
-                        base,
-                        grads,
-                        tree,
-                        cuts,
-                        apply,
-                        min_node,
-                        max_node,
-                        slot_ref,
-                        hist_len_per_node,
-                        page_hist,
-                    );
-                    allreduce::quantize_add(page_hist, shard_acc);
-                    Ok(())
-                })?;
-                // Allreduce: exact, shard-order-stable reduction.
-                allreduce::add_partial(&self.shard_acc, &mut self.reduced);
+                sweep_shard_chunk(
+                    &mut sharded.shard_sources_mut()[s],
+                    0,
+                    partitioner.positions_mut(),
+                    grads,
+                    tree,
+                    cuts,
+                    apply,
+                    min_node,
+                    max_node,
+                    &slot_of,
+                    hist_len_per_node,
+                    &mut self.page_hist,
+                    &mut self.shard_acc,
+                )?;
+                // Allreduce: exact, order-stable reduction behind the
+                // Communicator trait.
+                fleet[s].contribute_i64(&self.shard_acc)?;
             }
+            fleet[0].reduced_i64(&mut self.reduced)?;
             first_sweep = false;
 
-            allreduce::dequantize_into(&self.reduced, &mut self.level_hist);
-            let chunk_total_base = chunk_idx * self.chunk_nodes;
-            for (slot, _node) in chunk.iter().enumerate() {
-                let hist = &self.level_hist
-                    [slot * hist_len_per_node..(slot + 1) * hist_len_per_node];
-                let total = totals[chunk_total_base + slot];
-                out.push(evaluate_node(
-                    hist,
-                    cuts,
-                    total,
-                    params.lambda,
-                    params.gamma,
-                    params.min_child_weight,
-                ));
+            evaluate_chunk_slots(
+                &self.reduced,
+                &mut self.level_hist,
+                chunk,
+                chunk_idx * self.chunk_nodes,
+                totals,
+                cuts,
+                params,
+                hist_len_per_node,
+                &mut out,
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// Thread fan-out backend: one OS thread per shard, each sweeping its
+/// own pages over its own disjoint slice of the row-position array,
+/// rendezvousing through a [`ThreadComm`](crate::comm::ThreadComm)
+/// fleet per node chunk.  Per-page quantization and the exact i64
+/// allreduce make the result bit-identical to [`ShardedCpuBackend`]
+/// regardless of which thread finishes first.
+pub struct ThreadedCpuBackend {
+    chunk_nodes: usize,
+    timeout_ms: u64,
+    counters: Arc<CommCounters>,
+    reduced: Vec<i64>,
+    level_hist: Vec<f32>,
+}
+
+impl ThreadedCpuBackend {
+    pub fn new(timeout_ms: u64) -> ThreadedCpuBackend {
+        ThreadedCpuBackend {
+            chunk_nodes: 64,
+            timeout_ms,
+            counters: Arc::new(CommCounters::default()),
+            reduced: Vec::new(),
+            level_hist: Vec::new(),
+        }
+    }
+
+    /// Share the training run's comm counters.
+    pub fn with_counters(mut self, counters: Arc<CommCounters>) -> Self {
+        self.counters = counters;
+        self
+    }
+}
+
+impl HistBackend for ThreadedCpuBackend {
+    fn best_splits(
+        &mut self,
+        source: &mut dyn EllpackSource,
+        grads: &[[f32; 2]],
+        partitioner: &mut RowPartitioner,
+        tree: &Tree,
+        cuts: &HistogramCuts,
+        params: &TreeParams,
+        active: &[u32],
+        _level: usize,
+        apply_level: Option<usize>,
+        totals: &[(f64, f64)],
+    ) -> Result<Vec<SplitCandidate>> {
+        let sharded = require_sharded(source)?;
+        let n_shards = sharded.n_shards();
+        let ranges: Vec<(u64, u64)> = sharded
+            .ranges()
+            .ok_or_else(|| {
+                Error::config(
+                    "threaded backend requires a sharded source with shard row \
+                     ranges (built from a shard plan)",
+                )
+            })?
+            .to_vec();
+
+        // Carve the position array into per-shard disjoint slices so
+        // threads can update row positions without synchronization.
+        let positions = partitioner.positions_mut();
+        let n_rows = positions.len();
+        let mut slices: Vec<&mut [u32]> = Vec::with_capacity(n_shards);
+        let mut rest = positions;
+        let mut cursor = 0u64;
+        for &(start, end) in &ranges {
+            if start < cursor || end < start || end as usize > n_rows {
+                return Err(Error::config(format!(
+                    "shard range [{start}, {end}) is not ascending/disjoint \
+                     within {n_rows} rows"
+                )));
             }
+            // Move `rest` out before splitting so the borrow checker
+            // lets the carved slice outlive this iteration.
+            let chunk = std::mem::take(&mut rest);
+            let (head, tail) = chunk.split_at_mut((end - cursor) as usize);
+            let mine = head.split_at_mut((start - cursor) as usize).1;
+            slices.push(mine);
+            rest = tail;
+            cursor = end;
+        }
+
+        let fleet = threaded_fleet(n_shards, self.timeout_ms, Arc::clone(&self.counters));
+        let total_bins = *cuts.ptrs.last().unwrap() as usize;
+        let hist_len_per_node = total_bins * 2;
+        let mut out = Vec::with_capacity(active.len());
+
+        let min_node = *active.iter().min().unwrap() as usize;
+        let max_node = *active.iter().max().unwrap() as usize;
+        let mut slot_of = vec![-1i32; max_node - min_node + 1];
+
+        let mut first_sweep = true;
+        for (chunk_idx, chunk) in active.chunks(self.chunk_nodes).enumerate() {
+            slot_of.iter_mut().for_each(|s| *s = -1);
+            for (slot, node) in chunk.iter().enumerate() {
+                slot_of[*node as usize - min_node] = slot as i32;
+            }
+            let hist_len = chunk.len() * hist_len_per_node;
+            let apply = if first_sweep { apply_level } else { None };
+            let slot_ref = &slot_of;
+
+            let results: Vec<Result<Vec<i64>>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = sharded
+                    .shard_sources_mut()
+                    .iter_mut()
+                    .zip(slices.iter_mut())
+                    .zip(fleet.iter().zip(ranges.iter()))
+                    .map(|((src, pos), (comm, &(start, _)))| {
+                        scope.spawn(move || {
+                            let mut page_hist = Vec::new();
+                            let mut acc = vec![0i64; hist_len];
+                            let r = sweep_shard_chunk(
+                                src,
+                                start,
+                                pos,
+                                grads,
+                                tree,
+                                cuts,
+                                apply,
+                                min_node,
+                                max_node,
+                                slot_ref,
+                                hist_len_per_node,
+                                &mut page_hist,
+                                &mut acc,
+                            )
+                            .and_then(|()| comm.allreduce_i64(&mut acc));
+                            if let Err(e) = &r {
+                                // Wake the other ranks out of their
+                                // rendezvous instead of letting them
+                                // ride out the timeout.
+                                comm.abort(&e.to_string());
+                            }
+                            r.map(|()| acc)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join()
+                            .map_err(|_| Error::comm("shard sweep thread panicked"))
+                            .and_then(|r| r)
+                    })
+                    .collect()
+            });
+            let mut reduced = None;
+            for r in results {
+                let acc = r?;
+                if reduced.is_none() {
+                    reduced = Some(acc);
+                }
+            }
+            self.reduced = reduced.expect("fleet has at least one rank");
+            first_sweep = false;
+
+            evaluate_chunk_slots(
+                &self.reduced,
+                &mut self.level_hist,
+                chunk,
+                chunk_idx * self.chunk_nodes,
+                totals,
+                cuts,
+                params,
+                hist_len_per_node,
+                &mut out,
+            );
         }
         Ok(out)
     }
@@ -178,6 +438,7 @@ impl HistBackend for ShardedCpuBackend {
 pub struct ShardedDeviceBackend {
     core: DeviceHistCore,
     devices: ShardedDevice,
+    counters: Arc<CommCounters>,
     // Reused per-tile accumulators (multi-MiB at max_bin=64 — reallocating
     // them per chunk × shard × level would dominate the sweep).
     shard_acc: Vec<Vec<i64>>,
@@ -194,10 +455,17 @@ impl ShardedDeviceBackend {
         Ok(ShardedDeviceBackend {
             core: DeviceHistCore::new(rt, n_bins)?,
             devices,
+            counters: Arc::new(CommCounters::default()),
             shard_acc: Vec::new(),
             reduced: Vec::new(),
             acc_f32: Vec::new(),
         })
+    }
+
+    /// Share the training run's comm counters.
+    pub fn with_counters(mut self, counters: Arc<CommCounters>) -> Self {
+        self.counters = counters;
+        self
     }
 }
 
@@ -226,7 +494,8 @@ impl HistBackend for ShardedDeviceBackend {
         totals: &[(f64, f64)],
     ) -> Result<Vec<SplitCandidate>> {
         let sharded = require_sharded(source)?;
-        let ShardedDeviceBackend { core, devices, shard_acc, reduced, acc_f32 } = self;
+        let ShardedDeviceBackend { core, devices, counters, shard_acc, reduced, acc_f32 } =
+            self;
         if sharded.n_shards() != devices.n_shards() {
             return Err(Error::config(format!(
                 "source has {} shards but the device fleet has {}",
@@ -234,6 +503,10 @@ impl HistBackend for ShardedDeviceBackend {
                 devices.n_shards()
             )));
         }
+        // One in-process rank per simulated device; each rank
+        // contributes its tiles in order and the completed tile rounds
+        // drain FIFO — the same add order the hand-rolled merge used.
+        let fleet = local_fleet(devices.n_shards(), Arc::clone(counters));
         let nf = cuts.n_features();
         let n_tiles = core.n_tiles(nf);
         let tile_len = core.tile_len();
@@ -262,9 +535,12 @@ impl HistBackend for ShardedDeviceBackend {
                     &mut |t, part| allreduce::quantize_add(part, &mut shard_acc[t]),
                 )?;
                 for t in 0..n_tiles {
-                    allreduce::add_partial(&shard_acc[t], &mut reduced[t]);
+                    fleet[s].contribute_i64(&shard_acc[t])?;
                 }
                 drop(allocs);
+            }
+            for t in reduced.iter_mut() {
+                fleet[0].reduced_i64(t)?;
             }
             first_sweep = false;
 
@@ -351,6 +627,7 @@ mod tests {
             shards.push(StreamSource::new(Box::new(MemoryStream::from_shared(ps))));
         }
         ShardedSource::new(shards)
+            .with_ranges((0..n_shards).map(|s| plan.range(s)).collect())
     }
 
     fn root_split(
@@ -411,6 +688,54 @@ mod tests {
         // Same decision; gains agree to quantization noise.
         assert_eq!((c_sh.feature, c_sh.split_bin), (c_pl.feature, c_pl.split_bin));
         assert!((c_sh.gain - c_pl.gain).abs() < 1e-4 * c_pl.gain.abs().max(1.0));
+    }
+
+    #[test]
+    fn threaded_backend_matches_sequential_bits() {
+        let (pages, grads, cuts) = setup(60, 6);
+        let rows = 360;
+        for n_shards in [1usize, 2, 3] {
+            let mut src = sharded_over(&pages, n_shards);
+            let mut seq = ShardedCpuBackend::new();
+            let c_seq = root_split(&mut seq, &mut src, &grads, &cuts, rows);
+
+            let mut src = sharded_over(&pages, n_shards);
+            let counters = Arc::new(CommCounters::default());
+            let mut thr =
+                ThreadedCpuBackend::new(10_000).with_counters(Arc::clone(&counters));
+            let c_thr = root_split(&mut thr, &mut src, &grads, &cuts, rows);
+
+            assert_eq!(
+                (c_seq.feature, c_seq.split_bin, c_seq.gain.to_bits()),
+                (c_thr.feature, c_thr.split_bin, c_thr.gain.to_bits()),
+                "n_shards={n_shards}"
+            );
+            let s = counters.snapshot();
+            assert_eq!(s.allreduce_rounds, 1);
+            assert!(n_shards == 1 || s.bytes_sent > 0);
+        }
+    }
+
+    #[test]
+    fn threaded_backend_requires_ranges() {
+        let (pages, grads, cuts) = setup(10, 2);
+        // Hand-built sharded source with no plan ranges attached.
+        let shared: Vec<std::sync::Arc<crate::ellpack::EllpackPage>> =
+            pages.iter().cloned().map(std::sync::Arc::new).collect();
+        let mut src = ShardedSource::new(vec![StreamSource::new(Box::new(
+            MemoryStream::from_shared(shared),
+        ))]);
+        let mut be = ThreadedCpuBackend::new(1_000);
+        let mut part = RowPartitioner::new(20);
+        let tree = Tree::single_leaf(0.0);
+        let params = TreeParams::default();
+        let err = be
+            .best_splits(
+                &mut src, &grads, &mut part, &tree, &cuts, &params, &[0], 0, None,
+                &[(0.0, 20.0)],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("ranges"), "{err}");
     }
 
     #[test]

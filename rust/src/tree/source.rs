@@ -462,16 +462,35 @@ impl EllpackSource for StreamSource {
 pub struct ShardedSource {
     shards: Vec<StreamSource>,
     sweeps: usize,
+    /// Per-shard global row ranges `[start, end)` from the shard plan,
+    /// when known.  Parallel backends need them to hand each shard a
+    /// disjoint slice of the row-position array; the sequential backend
+    /// works without them.
+    ranges: Option<Vec<(u64, u64)>>,
 }
 
 impl ShardedSource {
     pub fn new(shards: Vec<StreamSource>) -> ShardedSource {
         assert!(!shards.is_empty(), "sharded source needs at least one shard");
-        ShardedSource { shards, sweeps: 0 }
+        ShardedSource { shards, sweeps: 0, ranges: None }
+    }
+
+    /// Attach the shard plan's per-shard row ranges (one `[start, end)`
+    /// per shard, ascending and disjoint).
+    pub fn with_ranges(mut self, ranges: Vec<(u64, u64)>) -> ShardedSource {
+        assert_eq!(ranges.len(), self.shards.len(), "one range per shard");
+        self.ranges = Some(ranges);
+        self
     }
 
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Per-shard global row ranges, when attached via
+    /// [`with_ranges`](ShardedSource::with_ranges).
+    pub fn ranges(&self) -> Option<&[(u64, u64)]> {
+        self.ranges.as_deref()
     }
 
     /// Per-shard sources, in shard order (backends sweep these).

@@ -1,0 +1,339 @@
+//! Communicator transports: cross-backend bit identity + TCP fault
+//! injection.
+//!
+//! The tentpole property: `local`, `threaded`, and `tcp` fleets train
+//! **bit-identical** models (and eval histories) for every shard count
+//! and CPU exec mode, because every transport carries the same exact
+//! fixed-point page partials and i64 addition is associative — see
+//! `tree/allreduce.rs` and `ARCHITECTURE.md`.  The fault-injection
+//! half proves the TCP head fails *closed*: a dropped, corrupting,
+//! stale-versioned, or stalled worker surfaces as a clean error within
+//! the configured deadline — never a hang, never a partial model.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use oocgb::comm::frame::{encode_frame, FrameKind, HEADER_LEN};
+use oocgb::comm::{run_worker, CommBackend};
+use oocgb::config::{ExecMode, SamplingMethod, TrainConfig};
+use oocgb::coordinator::{TrainOutcome, TrainSession};
+use oocgb::data::{synthetic, DMatrix, SparsePage};
+use oocgb::error::Result;
+use oocgb::util::prop::run_prop;
+use oocgb::util::rng::Rng;
+
+fn comm_cfg(mode: ExecMode, n_shards: usize, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.mode = mode;
+    cfg.n_shards = n_shards;
+    cfg.n_rounds = 4;
+    cfg.max_depth = 4;
+    cfg.max_bin = 16;
+    cfg.learning_rate = 0.4;
+    // Eval history rides along so its bits are compared too; sampling
+    // exercises the RoundBegin mask + page-skip path (auto_tune,
+    // async_eval, and skip_unsampled_pages stay at their defaults: on).
+    cfg.eval_fraction = 0.1;
+    cfg.sampling_method = SamplingMethod::Uniform;
+    cfg.subsample = 0.6;
+    cfg.seed = seed;
+    // Force several pages in OOC modes so shards get real subsets.
+    cfg.page_size_bytes = 4 * 1024;
+    cfg
+}
+
+fn train(data: DMatrix, cfg: TrainConfig) -> TrainOutcome {
+    TrainSession::from_memory(data, cfg).unwrap().train().unwrap()
+}
+
+/// Train over a fleet of real socket workers (one thread per rank,
+/// each serving one session), joining the fleet afterwards.
+fn train_tcp(data: DMatrix, mut cfg: TrainConfig) -> TrainOutcome {
+    let (addrs, handles) = spawn_workers(cfg.n_shards, 15_000);
+    cfg.comm_backend = CommBackend::Tcp;
+    cfg.worker_addrs = addrs;
+    let out = train(data, cfg);
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    out
+}
+
+fn spawn_workers(
+    n: usize,
+    timeout_ms: u64,
+) -> (Vec<String>, Vec<JoinHandle<Result<std::sync::Arc<oocgb::comm::CommCounters>>>>) {
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        handles.push(std::thread::spawn(move || run_worker(&listener, timeout_ms)));
+    }
+    (addrs, handles)
+}
+
+/// Bit-exact model + eval-history comparison.
+fn assert_outcomes_identical(a: &TrainOutcome, b: &TrainOutcome, what: &str) {
+    assert_eq!(a.model.trees.len(), b.model.trees.len(), "{what}: tree count");
+    for (ti, (ta, tb)) in a.model.trees.iter().zip(&b.model.trees).enumerate() {
+        assert_eq!(ta.nodes.len(), tb.nodes.len(), "{what}: tree {ti} size");
+        for (ni, (na, nb)) in ta.nodes.iter().zip(&tb.nodes).enumerate() {
+            let ka = (
+                na.split_feature,
+                na.split_bin,
+                na.split_value.to_bits(),
+                na.left,
+                na.right,
+                na.weight.to_bits(),
+                na.gain.to_bits(),
+            );
+            let kb = (
+                nb.split_feature,
+                nb.split_bin,
+                nb.split_value.to_bits(),
+                nb.left,
+                nb.right,
+                nb.weight.to_bits(),
+                nb.gain.to_bits(),
+            );
+            assert_eq!(ka, kb, "{what}: tree {ti} node {ni}");
+        }
+    }
+    let ha: Vec<(usize, u64)> =
+        a.eval_history.iter().map(|(r, m)| (*r, m.to_bits())).collect();
+    let hb: Vec<(usize, u64)> =
+        b.eval_history.iter().map(|(r, m)| (*r, m.to_bits())).collect();
+    assert_eq!(ha, hb, "{what}: eval history");
+}
+
+/// Sparse rows exercise the null-symbol path over the wire.
+fn sparse_data(rows: usize, seed: u64) -> DMatrix {
+    let mut rng = Rng::new(seed);
+    let mut page = SparsePage::new(6);
+    let mut labels = Vec::new();
+    for _ in 0..rows {
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        let mut signal = 0f32;
+        for c in 0..6u32 {
+            if rng.bernoulli(0.55) {
+                let v = rng.next_f32();
+                if c == 2 {
+                    signal = v;
+                }
+                cols.push(c);
+                vals.push(v);
+            }
+        }
+        page.push_row(&cols, &vals);
+        labels.push(if signal > 0.45 { 1.0 } else { 0.0 });
+    }
+    DMatrix::from_page(page, labels).unwrap()
+}
+
+/// The headline acceptance test: local vs threaded vs tcp identity
+/// over dense/sparse × in-core/out-of-core × shard counts.
+#[test]
+fn prop_backend_equivalence() {
+    run_prop("comm-backend invariance", 2, |g| {
+        let rows = g.usize_in(400..900);
+        let seed = g.u64();
+        for mode in [ExecMode::CpuInCore, ExecMode::CpuOutOfCore] {
+            for dense in [true, false] {
+                let data = if dense {
+                    synthetic::higgs_like(rows, seed)
+                } else {
+                    sparse_data(rows, seed)
+                };
+                for n_shards in [1usize, 2, 4] {
+                    let what = format!("{mode:?} dense={dense} n={n_shards}");
+                    let local = train(data.clone(), comm_cfg(mode, n_shards, seed));
+
+                    let mut cfg = comm_cfg(mode, n_shards, seed);
+                    cfg.comm_backend = CommBackend::Threaded;
+                    let threaded = train(data.clone(), cfg);
+                    assert_outcomes_identical(&local, &threaded, &format!("{what} threaded"));
+
+                    let tcp =
+                        train_tcp(data.clone(), comm_cfg(mode, n_shards, seed));
+                    assert_outcomes_identical(&local, &tcp, &format!("{what} tcp"));
+                }
+            }
+        }
+    });
+}
+
+/// Satellite: comm accounting lands in the outcome with the right
+/// shape per transport — local moves zero bytes, the wire backends
+/// don't.
+#[test]
+fn comm_stats_reflect_transport() {
+    let data = synthetic::higgs_like(500, 3);
+
+    let local = train(data.clone(), comm_cfg(ExecMode::CpuInCore, 2, 3));
+    let s = local.comm_stats.expect("sharded run reports comm stats");
+    assert_eq!((s.bytes_sent, s.bytes_recv), (0, 0), "local is in-process");
+    assert!(s.allreduce_rounds > 0);
+
+    let mut cfg = comm_cfg(ExecMode::CpuInCore, 2, 3);
+    cfg.comm_backend = CommBackend::Threaded;
+    let threaded = train(data.clone(), cfg);
+    let s = threaded.comm_stats.unwrap();
+    assert!(s.bytes_sent > 0 && s.bytes_recv > 0, "threads move bytes");
+
+    let tcp = train_tcp(data.clone(), comm_cfg(ExecMode::CpuInCore, 2, 3));
+    let s = tcp.comm_stats.unwrap();
+    assert!(s.bytes_sent > 0 && s.bytes_recv > 0, "sockets move bytes");
+    assert!(s.allreduce_rounds > 0);
+    assert_eq!(s.timeouts, 0);
+
+    let unsharded = train(data, comm_cfg(ExecMode::CpuInCore, 0, 3));
+    assert!(unsharded.comm_stats.is_none(), "no fleet, no comm stats");
+}
+
+fn tcp_cfg(addrs: Vec<String>, timeout_ms: u64) -> TrainConfig {
+    let mut cfg = comm_cfg(ExecMode::CpuInCore, addrs.len(), 7);
+    cfg.comm_backend = CommBackend::Tcp;
+    cfg.worker_addrs = addrs;
+    cfg.comm_timeout_ms = timeout_ms;
+    cfg
+}
+
+/// A scripted peer that plays the worker side of the handshake and
+/// then misbehaves according to `script`.
+fn rogue_worker(
+    script: impl FnOnce(&mut TcpStream) + Send + 'static,
+) -> (String, JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        // Consume Hello (header + 8-byte payload), ack it, consume the
+        // Setup frame, then hand over to the script.
+        read_exact_frame(&mut s);
+        s.write_all(&encode_frame(FrameKind::HelloAck, 0, &[])).unwrap();
+        read_exact_frame(&mut s);
+        script(&mut s);
+    });
+    (addr, handle)
+}
+
+/// Read one whole frame off the socket without validating it.
+fn read_exact_frame(s: &mut TcpStream) -> Vec<u8> {
+    let mut header = [0u8; HEADER_LEN];
+    s.read_exact(&mut header).unwrap();
+    let len = u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
+    let mut payload = vec![0u8; len];
+    s.read_exact(&mut payload).unwrap();
+    payload
+}
+
+#[test]
+fn worker_drop_mid_round_fails_clean() {
+    let (addr, handle) = rogue_worker(|s| {
+        // Swallow RoundBegin + the first ChunkSweep, then vanish.
+        read_exact_frame(s);
+        read_exact_frame(s);
+        s.shutdown(std::net::Shutdown::Both).ok();
+    });
+    let data = synthetic::higgs_like(300, 7);
+    let t0 = Instant::now();
+    let err = TrainSession::from_memory(data, tcp_cfg(vec![addr], 2_000))
+        .unwrap()
+        .train()
+        .unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(20), "no hang on drop");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("closed") || msg.contains("timed out"),
+        "unexpected error: {msg}"
+    );
+    handle.join().unwrap();
+}
+
+#[test]
+fn corrupt_frame_fails_clean() {
+    let (addr, handle) = rogue_worker(|s| {
+        read_exact_frame(s); // RoundBegin
+        read_exact_frame(s); // ChunkSweep
+        // Answer with a checksum-corrupted AllreducePart (seq 1 — the
+        // HelloAck was this peer's frame 0).
+        let mut frame = encode_frame(FrameKind::AllreducePart, 1, &[1u8; 64]);
+        let last = frame.len() - 1;
+        frame[last] ^= 0xFF;
+        s.write_all(&frame).unwrap();
+    });
+    let data = synthetic::higgs_like(300, 7);
+    let err = TrainSession::from_memory(data, tcp_cfg(vec![addr], 2_000))
+        .unwrap()
+        .train()
+        .unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err}");
+    handle.join().unwrap();
+}
+
+#[test]
+fn version_mismatch_fails_clean() {
+    let (addr, handle) = rogue_worker(|s| {
+        read_exact_frame(s); // RoundBegin
+        read_exact_frame(s); // ChunkSweep
+        // A frame stamped with a future protocol version.
+        let mut frame = encode_frame(FrameKind::AllreducePart, 1, &[0u8; 16]);
+        frame[4..6].copy_from_slice(&99u16.to_le_bytes());
+        s.write_all(&frame).unwrap();
+    });
+    let data = synthetic::higgs_like(300, 7);
+    let err = TrainSession::from_memory(data, tcp_cfg(vec![addr], 2_000))
+        .unwrap()
+        .train()
+        .unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+    handle.join().unwrap();
+}
+
+#[test]
+fn slow_worker_trips_deadline() {
+    let (addr, handle) = rogue_worker(|s| {
+        // Accept orders but never answer: the head's read deadline
+        // must fire.
+        read_exact_frame(s);
+        read_exact_frame(s);
+        std::thread::sleep(Duration::from_millis(2_500));
+    });
+    let data = synthetic::higgs_like(300, 7);
+    let t0 = Instant::now();
+    let err = TrainSession::from_memory(data, tcp_cfg(vec![addr], 300))
+        .unwrap()
+        .train()
+        .unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(5), "deadline, not a hang");
+    assert!(err.to_string().contains("timed out"), "{err}");
+    handle.join().unwrap();
+}
+
+/// A real worker killed by a truncated frame: the worker must reject
+/// it (Io error) rather than hang, and the head of a *real* fleet
+/// learns via its own read deadline.
+#[test]
+fn real_worker_rejects_truncated_frame() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let worker = std::thread::spawn(move || run_worker(&listener, 1_000));
+    let mut s = TcpStream::connect(addr).unwrap();
+    // Valid Hello so the handshake completes…
+    let mut hello = Vec::new();
+    hello.extend_from_slice(&0u32.to_le_bytes());
+    hello.extend_from_slice(&1u32.to_le_bytes());
+    s.write_all(&encode_frame(FrameKind::Hello, 0, &hello)).unwrap();
+    read_exact_frame(&mut s); // HelloAck
+    // …then a Setup frame chopped mid-payload.
+    let setup = encode_frame(FrameKind::Setup, 1, &[0u8; 256]);
+    s.write_all(&setup[..setup.len() / 2]).unwrap();
+    s.shutdown(std::net::Shutdown::Write).ok();
+    let err = worker.join().unwrap().unwrap_err();
+    // Truncation surfaces as an Io/comm error — never a partial parse.
+    assert!(!err.to_string().is_empty());
+}

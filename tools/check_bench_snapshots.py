@@ -27,6 +27,12 @@ Rules enforced:
    for each codec (skipping never increases bytes moved), row/byte
    counts follow from page counts, the stratified layout skips at least
    as many pages as the uniform one, and some arm actually skips.
+6. The ``comm_backend`` snapshot must respect the transport hierarchy:
+   the local (in-process) backend moves zero bytes at every shard
+   count, the threaded and tcp backends move a strictly positive and
+   strictly growing number of bytes as the shard count grows, framed
+   sockets cost strictly more than shared memory, and every backend
+   completes the same number of allreduce rounds.
 
 Keys named ``note`` or starting with ``_`` are documentation and are
 not compared.
@@ -208,6 +214,61 @@ def check_sampling(snap, where):
         fail(f"{where}: no arm skipped any pages — the snapshot shows no skipping")
 
 
+def check_comm(snap, where):
+    """Rule 6: local is free, wire backends pay linearly in the fleet."""
+    for key in ("hist_len", "allreduces", "bcast_bytes", "frame_header_bytes"):
+        v = snap.get(key)
+        if not isinstance(v, int) or v < 1:
+            fail(f"{where}: {key} {v!r} must be an int >= 1")
+    rounds_expected = snap["allreduces"]
+    sweep = snap.get("sweep")
+    if not isinstance(sweep, list) or not sweep:
+        fail(f"{where}: comm snapshot needs a non-empty \"sweep\" list")
+    prev_shards = 0
+    prev_wire = {"threaded": -1, "tcp": -1}
+    for i, entry in enumerate(sweep):
+        path = f"$.sweep[{i}]"
+        n = entry.get("n_shards")
+        if not isinstance(n, int) or n <= prev_shards:
+            fail(f"{where}: {path}.n_shards {n!r} must be an int > {prev_shards}")
+        prev_shards = n
+        moved = {}
+        for backend in ("local", "threaded", "tcp"):
+            arm = entry.get(backend)
+            if not isinstance(arm, dict):
+                fail(f"{where}: {path}.{backend} missing")
+            for key in ("sent", "recv", "rounds"):
+                v = arm.get(key)
+                if not isinstance(v, int) or v < 0:
+                    fail(f"{where}: {path}.{backend}.{key} {v!r} must be an int >= 0")
+            if arm["rounds"] != rounds_expected:
+                fail(
+                    f"{where}: {path}.{backend}.rounds {arm['rounds']} != the "
+                    f"schedule's {rounds_expected} — backends must run the same rounds"
+                )
+            moved[backend] = arm["sent"] + arm["recv"]
+        if moved["local"] != 0:
+            fail(
+                f"{where}: {path}: local moved {moved['local']} bytes — the "
+                f"in-process merge must be free"
+            )
+        for backend in ("threaded", "tcp"):
+            if moved[backend] <= 0:
+                fail(f"{where}: {path}.{backend} moved no bytes — not a wire transport")
+            if moved[backend] <= prev_wire[backend]:
+                fail(
+                    f"{where}: {path}.{backend} moved {moved[backend]} bytes, not "
+                    f"more than {prev_wire[backend]} at the previous shard count — "
+                    f"wire bytes must grow with the fleet"
+                )
+            prev_wire[backend] = moved[backend]
+        if moved["tcp"] <= moved["threaded"]:
+            fail(
+                f"{where}: {path}: tcp moved {moved['tcp']} bytes, not more than "
+                f"threaded's {moved['threaded']} — framing + handshake can't be free"
+            )
+
+
 def main() -> None:
     snapshots = {}
     for f in sorted(SNAP_DIR.glob("BENCH_*.json")):
@@ -223,6 +284,8 @@ def main() -> None:
             check_serving(snap, where)
         if name == "sampling_skip":
             check_sampling(snap, where)
+        if name == "comm_backend":
+            check_comm(snap, where)
         snapshots[name] = (snap, where)
 
     emitted = {}

@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Derive `benches/BENCH_distributed.json` without a Rust toolchain.
+
+This is the Python twin of `bench_ablations` arm 11
+(`ablate_comm_backend`): it reproduces, from the wire format alone, the
+byte counters each communicator backend accumulates while running the
+pinned schedule — ALLREDUCES exact fixed-point allreduces of HIST_LEN
+i64 lanes plus one BCAST_BYTES broadcast, at n_shards in {1, 2, 4}.
+
+Every number is exact integer arithmetic over the frame layout in
+`rust/src/comm/frame.rs` (28-byte header: magic u32, version u16, kind
+u16, seq u64, payload_len u32, fnv64 u64) and the payload encodings in
+`rust/src/comm/wire.rs` (i64 vectors are a u32 count + 8 bytes per
+lane), mirroring the counter call sites:
+
+* ``local`` (`comm/local.rs`) — the in-process merge never touches the
+  byte counters: zero sent, zero recv, one round per completed
+  allreduce.
+* ``threaded`` (`comm/threaded.rs`) — each rank counts its contributed
+  partial as sent (8·HIST_LEN) and the reduction it reads back as recv
+  (8·HIST_LEN); the broadcast root counts the payload as sent once and
+  each of the other n−1 ranks counts it as recv.  No framing — the
+  fleet shares an address space.
+* ``tcp`` (`comm/tcp.rs`) — head-side `FramedConn` counters: every
+  frame costs 28 + payload_len in the direction it travels.  Per
+  worker connection the head sends Hello (8-byte payload), one
+  AllreduceRed per round, the Broadcast, and the Shutdown, and
+  receives HelloAck (empty) plus one AllreducePart per round.
+
+Usage:
+    python3 tools/derive_distributed_snapshot.py          # rewrite snapshot
+    python3 tools/derive_distributed_snapshot.py --print  # stdout only
+"""
+
+import json
+import sys
+from pathlib import Path
+
+HIST_LEN = 256
+ALLREDUCES = 3
+BCAST_BYTES = 512
+HEADER = 28  # comm/frame.rs HEADER_LEN
+SHARD_COUNTS = (1, 2, 4)
+
+
+def i64s_payload(n_lanes: int) -> int:
+    """wire.rs encode_i64s: u32 count + 8 bytes per lane."""
+    return 4 + 8 * n_lanes
+
+
+def local_stats(n: int) -> dict:
+    del n  # the in-process merge is free at every fleet size
+    return {"sent": 0, "recv": 0, "rounds": ALLREDUCES}
+
+
+def threaded_stats(n: int) -> dict:
+    partial = 8 * HIST_LEN
+    sent = ALLREDUCES * partial * n + BCAST_BYTES
+    recv = ALLREDUCES * partial * n + BCAST_BYTES * (n - 1)
+    return {"sent": sent, "recv": recv, "rounds": ALLREDUCES}
+
+
+def tcp_stats(n: int) -> dict:
+    reduce_frame = HEADER + i64s_payload(HIST_LEN)
+    sent_per_conn = (
+        (HEADER + 8)  # Hello: rank u32 + n_ranks u32
+        + ALLREDUCES * reduce_frame  # AllreduceRed back to the worker
+        + (HEADER + BCAST_BYTES)  # Broadcast
+        + HEADER  # Shutdown (empty)
+    )
+    recv_per_conn = (
+        HEADER  # HelloAck (empty)
+        + ALLREDUCES * reduce_frame  # AllreducePart from the worker
+    )
+    return {
+        "sent": sent_per_conn * n,
+        "recv": recv_per_conn * n,
+        "rounds": ALLREDUCES,
+    }
+
+
+def build() -> dict:
+    sweep = []
+    for n in SHARD_COUNTS:
+        sweep.append(
+            {
+                "n_shards": n,
+                "local": local_stats(n),
+                "threaded": threaded_stats(n),
+                "tcp": tcp_stats(n),
+            }
+        )
+    return {
+        "bench": "comm_backend",
+        "hist_len": HIST_LEN,
+        "allreduces": ALLREDUCES,
+        "bcast_bytes": BCAST_BYTES,
+        "frame_header_bytes": HEADER,
+        "sweep": sweep,
+    }
+
+
+def main() -> None:
+    snap = build()
+    text = json.dumps(snap, indent=2, sort_keys=True) + "\n"
+    if "--print" in sys.argv[1:]:
+        sys.stdout.write(text)
+        return
+    out = Path(__file__).resolve().parent.parent / "benches" / "BENCH_distributed.json"
+    out.write_text(text)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()
